@@ -1,0 +1,59 @@
+//! Experiment S52 scaling: the paper's 0.224 GOPS single-core and
+//! 4.48 GOPS 20-core claims, measured end-to-end through the
+//! coordinator's core pool (not just multiplied out).
+//!
+//! ```bash
+//! cargo run --release --example multicore_scaling -- [--requests N]
+//! ```
+//!
+//! Each core count serves the same S52-heavy trace; simulated GOPS is
+//! computed from per-core cycle totals. Expect near-linear scaling —
+//! cores are independent (separate BRAM sets), as in the paper.
+
+use repro::coordinator::{CoordinatorConfig, Server};
+use repro::model::trace::{generate, TraceConfig};
+use repro::paper::{GOPS_20, GOPS_SINGLE, MAX_CORES_Z2};
+use repro::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[]).map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.get_usize("requests", 40).map_err(|e| anyhow::anyhow!(e))?;
+
+    let trace = generate(&TraceConfig {
+        n,
+        mean_gap_us: 0,
+        s52_fraction: 1.0, // pure §5.2 workload
+        seed: 52,
+    });
+
+    println!("S52 trace: {n} requests of 224x224x8 (x) 8x3x3x8\n");
+    println!(
+        "{:>5} {:>14} {:>12} {:>10} {:>12}",
+        "cores", "sim GOPS", "vs paper", "host RPS", "p99 (us)"
+    );
+    let mut results = Vec::new();
+    for cores in [1usize, 2, 4, 8, 16, MAX_CORES_Z2] {
+        let mut server = Server::new(CoordinatorConfig::default().with_cores(cores));
+        let report = server.run_trace(&trace);
+        server.shutdown();
+        let expected = GOPS_SINGLE * cores as f64;
+        println!(
+            "{:>5} {:>14.4} {:>11.1}% {:>10.1} {:>12}",
+            cores,
+            report.sim_gops_psum,
+            report.sim_gops_psum / expected * 100.0,
+            report.host_rps,
+            report.p99_us
+        );
+        results.push((cores, report.sim_gops_psum));
+    }
+
+    let single = results[0].1;
+    let twenty = results.last().unwrap().1;
+    println!("\npaper: single core {GOPS_SINGLE} GOPS, 20 cores {GOPS_20} GOPS");
+    println!("ours:  single core {single:.4} GOPS, 20 cores {twenty:.4} GOPS");
+    let lin = twenty / (single * MAX_CORES_Z2 as f64);
+    println!("scaling efficiency at 20 cores: {:.1}%", lin * 100.0);
+    Ok(())
+}

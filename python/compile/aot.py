@@ -1,0 +1,106 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts + manifest for rust.
+
+Run once at build time (`make artifacts`). Emits, into ``artifacts/``:
+
+* ``<variant>.hlo.txt`` — one per layer shape in ``model.VARIANTS``;
+* ``edge_cnn.hlo.txt``  — the whole edge CNN as a single fused module;
+* ``manifest.json``     — shapes/flags for every artifact, the rust
+  runtime's registry (`runtime::artifacts`);
+* ``model.hlo.txt``     — the quickstart variant, doubling as the
+  Makefile's freshness sentinel.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_layer(spec: model.ConvSpec) -> str:
+    img = jax.ShapeDtypeStruct((spec.c, spec.h, spec.w), jnp.float32)
+    w = jax.ShapeDtypeStruct((spec.k, spec.c, 3, 3), jnp.float32)
+    b = jax.ShapeDtypeStruct((spec.k,), jnp.float32)
+    return to_hlo_text(jax.jit(model.layer_fn(spec)).lower(img, w, b))
+
+
+def lower_edge_cnn() -> str:
+    first = model.EDGE_CNN[0]
+    img = jax.ShapeDtypeStruct((first.c, first.h, first.w), jnp.float32)
+    params = model.edge_cnn_params_specs()
+    return to_hlo_text(jax.jit(model.cnn_forward).lower(img, *params))
+
+
+def manifest_entry(spec: model.ConvSpec) -> dict:
+    return {
+        "kind": "conv_layer",
+        "file": f"{spec.name}.hlo.txt",
+        "inputs": [[spec.c, spec.h, spec.w], [spec.k, spec.c, 3, 3], [spec.k]],
+        "output": [spec.k, spec.oh, spec.ow],
+        "c": spec.c,
+        "h": spec.h,
+        "w": spec.w,
+        "k": spec.k,
+        "relu": spec.relu,
+        "pool": spec.pool,
+        "macs": spec.macs,
+        "psums": spec.psums,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel path; artifacts land in its directory")
+    args = ap.parse_args()
+    sentinel = pathlib.Path(args.out)
+    outdir = sentinel.parent
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text", "dtype": "f32", "variants": {}}
+    for spec in model.VARIANTS:
+        text = lower_layer(spec)
+        (outdir / f"{spec.name}.hlo.txt").write_text(text)
+        manifest["variants"][spec.name] = manifest_entry(spec)
+        print(f"  {spec.name}: {len(text)} chars")
+
+    cnn_text = lower_edge_cnn()
+    (outdir / "edge_cnn.hlo.txt").write_text(cnn_text)
+    first = model.EDGE_CNN[0]
+    manifest["variants"]["edge_cnn"] = {
+        "kind": "cnn",
+        "file": "edge_cnn.hlo.txt",
+        "inputs": [[first.c, first.h, first.w]]
+        + [list(s.shape) for s in model.edge_cnn_params_specs()],
+        "output": [model.EDGE_CNN[-1].k],
+        "layers": [s.name for s in model.EDGE_CNN],
+    }
+    print(f"  edge_cnn: {len(cnn_text)} chars")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    # Sentinel: quickstart variant under the Makefile's expected name.
+    sentinel.write_text((outdir / f"{model.QUICKSTART.name}.hlo.txt").read_text())
+    print(f"wrote {len(manifest['variants'])} variants + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""L1 Pallas kernel: weight-stationary 3x3 convolution.
+
+TPU adaptation of the paper's IP core (DESIGN.md §Hardware-Adaptation):
+
+* the paper splits input channels across **4 computing cores** and
+  kernels across **4 PCOREs** — here that is the Pallas grid
+  ``(K/kblk, C/cblk)``: one grid step owns one (kernel-block,
+  channel-block) tile pair;
+* the paper's **weight loader** keeps weights resident next to the MACs
+  while the image loader streams 3x3 windows — here the weight tile
+  ``(kblk, cblk, 3, 3)`` is staged into VMEM by its BlockSpec and reused
+  across the whole spatial extent of the grid step (weight-stationary);
+* the paper's **PCORE** (9 MACs + adder tree) becomes an im2col matmul
+  ``(OH·OW, 9·cblk) @ (9·cblk, kblk)`` that the MXU executes — the
+  systolic array replaces the adder tree;
+* the paper's **accumulating output BRAM** (which also absorbs the bias,
+  §4.2 "Bias Handling") is the revisited output block: channel-block
+  grid steps accumulate into the same ``o_ref``, and step 0 initialises
+  it with the bias exactly like the PS pre-loading the output BMGs.
+
+The kernel is lowered with ``interpret=True`` — CPU PJRT cannot run
+Mosaic custom-calls; real-TPU efficiency is estimated from the VMEM
+footprint of these tiles in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KH = KW = 3
+TAPS = tuple((dy, dx) for dy in range(KH) for dx in range(KW))
+
+
+def _conv_block(x, w):
+    """One grid step's compute: (cblk,H,W) image tile x (kblk,cblk,3,3) weights.
+
+    Returns the (kblk, OH, OW) partial feature map for this channel block.
+    """
+    cblk, h, width = x.shape
+    kblk = w.shape[0]
+    oh, ow = h - KH + 1, width - KW + 1
+    # im2col gather: 9 shifted slabs -> (OH*OW, cblk*9) patch matrix.
+    slabs = [x[:, dy : dy + oh, dx : dx + ow] for (dy, dx) in TAPS]
+    patches = jnp.stack(slabs, axis=-1)  # (cblk, OH, OW, 9)
+    patches = patches.transpose(1, 2, 0, 3).reshape(oh * ow, cblk * KH * KW)
+    # Weight tile flattens to the same (cblk*9) contraction order.
+    wmat = w.reshape(kblk, cblk * KH * KW).T
+    acc = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    return acc.T.reshape(kblk, oh, ow)
+
+
+def _kernel(img_ref, w_ref, b_ref, o_ref, *, ncblk: int, relu: bool):
+    cc = pl.program_id(1)
+    psum = _conv_block(img_ref[...], w_ref[...])
+
+    @pl.when(cc == 0)
+    def _init():  # bias pre-load, as the PS initialises the output BMGs
+        o_ref[...] = psum + b_ref[...][:, None, None]
+
+    @pl.when(cc > 0)
+    def _accumulate():  # PSUM accumulation into the output BRAM
+        o_ref[...] = o_ref[...] + psum
+
+    if relu:
+
+        @pl.when(cc == ncblk - 1)
+        def _activate():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def conv3x3(img, w, bias, *, kblk: int = 4, cblk: int | None = None, relu: bool = False):
+    """Weight-stationary 3x3 valid convolution via Pallas.
+
+    Args:
+      img:  ``(C, H, W)`` feature map (f32 carrying exact small ints).
+      w:    ``(K, C, 3, 3)`` kernels.
+      bias: ``(K,)`` bias.
+      kblk: kernels per grid step (the paper's PCORE group: 4).
+      cblk: channels per grid step; defaults to ``C // 4`` (the paper's
+            4 computing cores), falling back to ``C`` when ``C < 4``.
+      relu: fuse a ReLU into the last channel-block step.
+
+    Returns:
+      ``(K, H-2, W-2)`` feature map, f32.
+    """
+    c, h, width = img.shape
+    k = w.shape[0]
+    assert w.shape == (k, c, KH, KW), w.shape
+    assert bias.shape == (k,), bias.shape
+    if cblk is None:
+        cblk = c // 4 if c % 4 == 0 and c >= 4 else c
+    kblk = min(kblk, k)
+    assert k % kblk == 0, f"K={k} not divisible by kblk={kblk} (paper: K % 4 == 0)"
+    assert c % cblk == 0, f"C={c} not divisible by cblk={cblk} (paper: C % 4 == 0)"
+    nkblk, ncblk = k // kblk, c // cblk
+    oh, ow = h - KH + 1, width - KW + 1
+
+    kernel = functools.partial(_kernel, ncblk=ncblk, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(nkblk, ncblk),
+        in_specs=[
+            pl.BlockSpec((cblk, h, width), lambda kk, cc: (cc, 0, 0)),
+            pl.BlockSpec((kblk, cblk, KH, KW), lambda kk, cc: (kk, cc, 0, 0)),
+            pl.BlockSpec((kblk,), lambda kk, cc: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((kblk, oh, ow), lambda kk, cc: (kk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, oh, ow), jnp.float32),
+        interpret=True,
+    )(img.astype(jnp.float32), w.astype(jnp.float32), bias.astype(jnp.float32))
+
+
+def block_candidates(c: int, k: int):
+    """All legal (kblk, cblk) decompositions for a (C, K) layer.
+
+    kblk divides K (PCORE group), cblk divides C (computing-core split).
+    """
+    kblks = [b for b in (1, 2, 4, 8, 16) if b <= k and k % b == 0]
+    cblks = [b for b in range(1, c + 1) if c % b == 0]
+    return [(kb, cb) for kb in kblks for cb in cblks]
+
+
+def choose_blocks(c: int, h: int, w: int, k: int, vmem_budget: int = 16 * 2**20):
+    """§Perf L1: pick the (kblk, cblk) with the best MXU fill whose grid
+    step fits the VMEM budget; ties break toward fewer grid steps (fewer
+    HBM refetches of the image block).
+
+    This is the TPU analogue of the paper's fixed 4×4 decomposition —
+    where the FPGA freezes the split in silicon, the kernel re-derives
+    it per layer shape.
+    """
+    best = None
+    for kb, cb in block_candidates(c, k):
+        fp = vmem_footprint_bytes(c, h, w, k, kblk=kb, cblk=cb)
+        if fp["total_bytes"] > vmem_budget:
+            continue
+        steps = (k // kb) * (c // cb)
+        key = (fp["mxu_fill"], -steps)
+        if best is None or key > best[0]:
+            best = (key, (kb, cb), fp)
+    assert best is not None, "even (1,1) blocks exceed VMEM — strip the image first"
+    return {"kblk": best[1][0], "cblk": best[1][1], **best[2]}
+
+
+def vmem_footprint_bytes(c: int, h: int, w: int, k: int, kblk: int = 4, cblk: int | None = None) -> dict:
+    """Estimate the VMEM working set of one grid step (DESIGN.md §Perf).
+
+    Mirrors the BlockSpec tiles above: image block + weight block + bias
+    block + output block, f32. Used by the perf pass to keep tiles under
+    the ~16 MiB VMEM budget and by EXPERIMENTS.md §Perf.
+    """
+    if cblk is None:
+        cblk = c // 4 if c % 4 == 0 and c >= 4 else c
+    kblk = min(kblk, k)
+    oh, ow = h - KH + 1, w - KW + 1
+    img_b = 4 * cblk * h * w
+    w_b = 4 * kblk * cblk * KH * KW
+    out_b = 4 * kblk * oh * ow
+    total = img_b + w_b + 4 * kblk + out_b
+    # MXU utilisation proxy: contraction dim (9*cblk) and output dims
+    # (oh*ow, kblk) vs the 128x128 systolic array.
+    mxu_m = min(oh * ow, 128) / 128
+    mxu_k = min(9 * cblk, 128) / 128
+    mxu_n = min(kblk, 128) / 128
+    return {
+        "image_bytes": img_b,
+        "weight_bytes": w_b,
+        "output_bytes": out_b,
+        "total_bytes": total,
+        "fits_vmem_16MiB": total <= 16 * 2**20,
+        "mxu_fill": mxu_m * mxu_k * mxu_n,
+    }

@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy correctness oracles for the convolution kernels.
+
+Two oracles, matching the two accumulator modes of the hardware
+(DESIGN.md §5):
+
+* :func:`conv3x3_ref` — the *mathematical* convolution the Pallas kernel
+  must match: wide (f32/i32) accumulation, valid padding, NCHW layout.
+  Written with explicit window slicing (no ``lax.conv``) so it is an
+  independent oracle, not a re-statement of the implementation.
+* :func:`conv3x3_wrap8` — the *silicon* semantics of the paper's Fig. 6
+  waveform: uint8 data, PSUMs wrap modulo 256. numpy, bit-exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+KH = KW = 3  # the paper's core is fixed-function 3x3
+
+
+def conv3x3_ref(img, w, bias=None, relu=False):
+    """Valid 3x3 convolution, wide accumulation.
+
+    Args:
+      img:  ``(C, H, W)`` input feature map.
+      w:    ``(K, C, 3, 3)`` kernels.
+      bias: optional ``(K,)`` bias, pre-added exactly like the paper's
+            output-BRAM initialisation.
+      relu: apply ReLU to the result.
+
+    Returns:
+      ``(K, H-2, W-2)`` feature map.
+    """
+    c, h, width = img.shape
+    k, wc, kh, kw = w.shape
+    assert wc == c and kh == KH and kw == KW, (img.shape, w.shape)
+    oh, ow = h - KH + 1, width - KW + 1
+    out = jnp.zeros((k, oh, ow), dtype=jnp.promote_types(img.dtype, w.dtype))
+    for dy in range(KH):
+        for dx in range(KW):
+            # (C, OH, OW) window slab for this tap.
+            slab = img[:, dy : dy + oh, dx : dx + ow]
+            # (K, C) tap weights contract against the channel axis.
+            out = out + jnp.einsum("kc,cij->kij", w[:, :, dy, dx], slab)
+    if bias is not None:
+        out = out + bias[:, None, None]
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def conv3x3_wrap8(img: np.ndarray, w: np.ndarray, bias=None) -> np.ndarray:
+    """Bit-exact Fig. 6 semantics: uint8 inputs, PSUM wraps mod 256.
+
+    This is what the synthesised Verilog computes (the waveform's 8-bit
+    ``psum_*`` signals prove the accumulator is 8 bits wide).
+    """
+    img = np.asarray(img, dtype=np.uint8)
+    w = np.asarray(w, dtype=np.uint8)
+    c, h, width = img.shape
+    k = w.shape[0]
+    oh, ow = h - KH + 1, width - KW + 1
+    out = np.zeros((k, oh, ow), dtype=np.uint8)
+    if bias is not None:
+        out = out + np.asarray(bias, dtype=np.uint8)[:, None, None]
+    for ki in range(k):
+        for ci in range(c):
+            for y in range(oh):
+                for x in range(ow):
+                    acc = int(out[ki, y, x])
+                    for dy in range(KH):
+                        for dx in range(KW):
+                            acc = (acc + int(img[ci, y + dy, x + dx]) * int(w[ki, ci, dy, dx])) & 0xFF
+                    out[ki, y, x] = acc
+    return out
+
+
+def maxpool2x2_ref(img):
+    """2x2/stride-2 max pool, NCHW, floor semantics (odd trailing row/col dropped)."""
+    c, h, w = img.shape
+    img = img[:, : h // 2 * 2, : w // 2 * 2]
+    return jnp.max(
+        jnp.stack(
+            [
+                img[:, 0::2, 0::2],
+                img[:, 0::2, 1::2],
+                img[:, 1::2, 0::2],
+                img[:, 1::2, 1::2],
+            ]
+        ),
+        axis=0,
+    )

@@ -1,0 +1,130 @@
+"""L2: JAX compute graphs for one convolutional layer and the edge CNN.
+
+The paper's IP core processes *one convolutional layer at a time* (§3);
+the L3 rust coordinator schedules layers. So the primary AOT unit is
+:func:`conv_layer` — conv3x3 (Pallas, L1) + bias + optional fused ReLU —
+exported once per distinct layer shape. :func:`cnn_forward` additionally
+exports the whole edge CNN as a single fused HLO, which the ablation
+bench compares against per-layer dispatch (fusion the FPGA core cannot
+do is exactly what a compiler-backed runtime gets for free).
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text and the rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .kernels.conv3x3 import conv3x3
+from .kernels.ref import maxpool2x2_ref
+
+
+def conv_layer(img, w, bias, *, relu: bool = True):
+    """One IP-core invocation: 3x3 valid conv + bias + optional ReLU."""
+    return conv3x3(img, w, bias, relu=relu)
+
+
+def maxpool2x2(img):
+    """2x2/s2 max pool (runs as plain XLA ops between conv layers)."""
+    return maxpool2x2_ref(img)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static shape of one conv layer (the coordinator's lookup key)."""
+
+    c: int  # input channels
+    h: int  # input height
+    w: int  # input width
+    k: int  # kernels / output channels
+    relu: bool = True
+    pool: bool = False  # 2x2 maxpool after the conv
+
+    @property
+    def oh(self) -> int:
+        oh = self.h - 2
+        return oh // 2 if self.pool else oh
+
+    @property
+    def ow(self) -> int:
+        ow = self.w - 2
+        return ow // 2 if self.pool else ow
+
+    @property
+    def name(self) -> str:
+        tag = "p" if self.pool else ("r" if self.relu else "n")
+        return f"conv3x3_c{self.c}h{self.h}w{self.w}k{self.k}{tag}"
+
+    @property
+    def macs(self) -> int:
+        return (self.h - 2) * (self.w - 2) * 9 * self.c * self.k
+
+    @property
+    def psums(self) -> int:
+        """PSUM count in the paper's accounting (§5.2): one per
+        (output pixel, kernel, input channel)."""
+        return (self.h - 2) * (self.w - 2) * self.k * self.c
+
+
+def layer_fn(spec: ConvSpec):
+    """Return the jit-able f(img, w, bias) for one layer spec."""
+
+    def fn(img, w, bias):
+        out = conv_layer(img, w, bias, relu=spec.relu)
+        if spec.pool:
+            out = maxpool2x2(out)
+        return (out,)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# The edge CNN (DESIGN.md E2E): a small AlexNet-shaped net whose every
+# channel count is divisible by 4 — the property §4.1 of the paper builds
+# the whole BRAM layout around (first layer excepted, as in the paper).
+# Input: 32x32, 4 channels (RGB + border plane, as edge boards often pack).
+# ---------------------------------------------------------------------------
+
+EDGE_CNN: tuple[ConvSpec, ...] = (
+    ConvSpec(c=4, h=32, w=32, k=8, relu=True, pool=True),  # -> 8 x 15 x 15
+    ConvSpec(c=8, h=15, w=15, k=16, relu=True),  # -> 16 x 13 x 13
+    ConvSpec(c=16, h=13, w=13, k=16, relu=True, pool=True),  # -> 16 x 5 x 5
+    ConvSpec(c=16, h=5, w=5, k=32, relu=True),  # -> 32 x 3 x 3
+    ConvSpec(c=32, h=3, w=3, k=32, relu=False),  # -> 32 x 1 x 1 logits
+)
+
+
+def cnn_forward(img, *params):
+    """Whole edge CNN as one fused graph. ``params`` is (w0, b0, w1, b1, ...)."""
+    x = img
+    for i, spec in enumerate(EDGE_CNN):
+        w, b = params[2 * i], params[2 * i + 1]
+        x = conv_layer(x, w, b, relu=spec.relu)
+        if spec.pool:
+            x = maxpool2x2(x)
+    return (x.reshape(-1),)  # (32,) logits
+
+
+def edge_cnn_params_specs():
+    """ShapeDtypeStructs for cnn_forward's parameter list, in order."""
+    import jax
+
+    specs = []
+    for spec in EDGE_CNN:
+        specs.append(jax.ShapeDtypeStruct((spec.k, spec.c, 3, 3), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((spec.k,), jnp.float32))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Exported AOT variants: every distinct layer shape the system serves.
+# ---------------------------------------------------------------------------
+
+QUICKSTART = ConvSpec(c=8, h=16, w=16, k=8, relu=False)
+# §5.2's headline workload: 224x224x8 image, 8 kernels of 8 channels.
+S52 = ConvSpec(c=8, h=224, w=224, k=8, relu=False)
+
+VARIANTS: tuple[ConvSpec, ...] = (QUICKSTART, S52) + EDGE_CNN

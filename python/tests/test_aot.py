@@ -1,0 +1,109 @@
+"""AOT pipeline tests: lowering, manifest integrity, and the §Perf L1
+block-selection model (VMEM fit + MXU fill across all served shapes)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels.conv3x3 import (
+    block_candidates,
+    choose_blocks,
+    conv3x3,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import conv3x3_ref
+
+
+# --- lowering ---------------------------------------------------------------
+
+
+def test_lowered_hlo_has_entry_and_output_shape():
+    spec = model.ConvSpec(c=4, h=8, w=8, k=4, relu=False)
+    text = aot.lower_layer(spec)
+    assert text.lstrip().startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[4,6,6]" in text  # output (K, OH, OW)
+
+
+def test_lowered_pooled_layer_halves_spatial():
+    spec = model.ConvSpec(c=4, h=10, w=10, k=4, relu=True, pool=True)
+    text = aot.lower_layer(spec)
+    assert "f32[4,4,4]" in text  # (10-2)//2 = 4
+
+
+def test_manifest_entry_fields():
+    spec = model.QUICKSTART
+    e = aot.manifest_entry(spec)
+    assert e["file"] == f"{spec.name}.hlo.txt"
+    assert e["psums"] == spec.psums
+    assert e["macs"] == spec.macs == spec.psums * 9
+    assert e["inputs"][1] == [spec.k, spec.c, 3, 3]
+
+
+# --- §Perf L1: block selection ----------------------------------------------
+
+
+def test_block_candidates_are_legal():
+    for c, k in [(8, 8), (3, 4), (16, 32), (1, 4)]:
+        for kb, cb in block_candidates(c, k):
+            assert k % kb == 0 and c % cb == 0
+
+
+@pytest.mark.parametrize("spec", model.VARIANTS, ids=lambda s: s.name)
+def test_chosen_blocks_fit_vmem_for_every_served_shape(spec):
+    choice = choose_blocks(spec.c, spec.h, spec.w, spec.k)
+    assert choice["fits_vmem_16MiB"]
+    assert 0 < choice["mxu_fill"] <= 1
+    # The chosen decomposition can't fill the MXU worse than the paper's
+    # fixed 4 x C/4 split (it considers that split among the candidates).
+    paper_fp = vmem_footprint_bytes(spec.c, spec.h, spec.w, spec.k)
+    if paper_fp["fits_vmem_16MiB"]:
+        assert choice["mxu_fill"] >= paper_fp["mxu_fill"] - 1e-12
+
+
+def test_chosen_blocks_compute_correctly():
+    rng = np.random.default_rng(5)
+    c, h, w, k = 8, 12, 10, 8
+    choice = choose_blocks(c, h, w, k)
+    img = jnp.array(rng.integers(0, 100, (c, h, w)).astype(np.float32))
+    wts = jnp.array(rng.integers(-20, 20, (k, c, 3, 3)).astype(np.float32))
+    bias = jnp.array(rng.integers(-5, 5, (k,)).astype(np.float32))
+    out = conv3x3(img, wts, bias, kblk=choice["kblk"], cblk=choice["cblk"])
+    ref = conv3x3_ref(img, wts, bias)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    k=st.sampled_from([4, 8, 16, 32]),
+    hw=st.integers(3, 64),
+)
+def test_footprint_model_consistency(c, k, hw):
+    fp = vmem_footprint_bytes(c, hw, hw, k)
+    assert fp["total_bytes"] == fp["image_bytes"] + fp["weight_bytes"] + fp["output_bytes"] + 4 * min(4, k)
+    assert fp["total_bytes"] > 0
+    choice = choose_blocks(c, hw, hw, k)
+    # Chosen blocks never use more VMEM than the budget.
+    chosen_fp = vmem_footprint_bytes(c, hw, hw, k, kblk=choice["kblk"], cblk=choice["cblk"])
+    assert chosen_fp["total_bytes"] <= 16 * 2**20
+
+
+def test_s52_block_report_for_experiments_md():
+    """Prints the §Perf L1 numbers EXPERIMENTS.md quotes."""
+    s = model.S52
+    paper_split = vmem_footprint_bytes(s.c, s.h, s.w, s.k)
+    chosen = choose_blocks(s.c, s.h, s.w, s.k)
+    print(
+        f"\nS52 paper-split footprint: {paper_split['total_bytes']/2**20:.2f} MiB, "
+        f"mxu_fill={paper_split['mxu_fill']:.3f}"
+    )
+    print(
+        f"S52 chosen blocks kblk={chosen['kblk']} cblk={chosen['cblk']}: "
+        f"{chosen['total_bytes']/2**20:.2f} MiB, mxu_fill={chosen['mxu_fill']:.3f}"
+    )
+    assert chosen["mxu_fill"] >= paper_split["mxu_fill"]

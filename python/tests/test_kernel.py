@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas conv3x3 vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, dtypes-of-origin and flags;
+``assert_allclose`` with rtol=0 — the inputs are exact small integers in
+f32, so the kernel must match the oracle *bit-exactly* (any deviation
+means the contraction order lost integer exactness, which would break
+parity with the int8 hardware simulator on the rust side).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv3x3 import conv3x3, vmem_footprint_bytes
+from compile.kernels.ref import conv3x3_ref, conv3x3_wrap8, maxpool2x2_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand_case(c, h, w, k, lo=-64, hi=64):
+    img = RNG.integers(0, 128, (c, h, w)).astype(np.float32)
+    wts = RNG.integers(lo, hi, (k, c, 3, 3)).astype(np.float32)
+    bias = RNG.integers(-32, 32, (k,)).astype(np.float32)
+    return jnp.array(img), jnp.array(wts), jnp.array(bias)
+
+
+# --- fixed-shape smoke cases -------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "c,h,w,k",
+    [
+        (4, 8, 8, 4),  # minimal paper-shaped layer (everything /4)
+        (8, 16, 16, 8),  # quickstart artifact shape
+        (8, 15, 15, 16),  # edge CNN layer 2
+        (16, 5, 5, 32),  # edge CNN layer 4 (tiny spatial)
+        (1, 3, 3, 4),  # degenerate: one window, C not /4
+        (3, 9, 7, 4),  # first-layer RGB (C=3, the paper's exception)
+    ],
+)
+def test_conv_matches_ref(c, h, w, k, relu):
+    img, wts, bias = _rand_case(c, h, w, k)
+    out = conv3x3(img, wts, bias, relu=relu)
+    ref = conv3x3_ref(img, wts, bias, relu=relu)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0, atol=0)
+    assert out.shape == (k, h - 2, w - 2)
+
+
+def test_bias_is_output_bram_preload():
+    """Paper §4.2: bias pre-loaded into output BRAMs == added to the sum."""
+    img, wts, bias = _rand_case(4, 6, 6, 4)
+    with_bias = conv3x3(img, wts, bias)
+    without = conv3x3(img, wts, jnp.zeros_like(bias))
+    np.testing.assert_allclose(
+        np.array(with_bias), np.array(without) + np.array(bias)[:, None, None]
+    )
+
+
+def test_block_partition_invariance():
+    """Result must not depend on the (kblk, cblk) decomposition — the
+    paper's 4x4 split is a schedule, not a semantics change."""
+    img, wts, bias = _rand_case(8, 10, 10, 8)
+    base = conv3x3(img, wts, bias, kblk=4, cblk=2)
+    for kblk, cblk in [(2, 2), (8, 8), (4, 4), (1, 1), (8, 1), (2, 8)]:
+        out = conv3x3(img, wts, bias, kblk=kblk, cblk=cblk)
+        np.testing.assert_allclose(np.array(out), np.array(base), rtol=0, atol=0)
+
+
+def test_rejects_indivisible_kernel_count():
+    img, wts, bias = _rand_case(4, 6, 6, 6)
+    with pytest.raises(AssertionError, match="divisible"):
+        conv3x3(img, wts, bias, kblk=4)
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 3, 4, 8, 12, 16]),
+    hw=st.tuples(st.integers(3, 14), st.integers(3, 14)),
+    k=st.sampled_from([4, 8, 12]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_sweep(c, hw, k, relu, seed):
+    h, w = hw
+    rng = np.random.default_rng(seed)
+    img = jnp.array(rng.integers(0, 128, (c, h, w)).astype(np.float32))
+    wts = jnp.array(rng.integers(-64, 64, (k, c, 3, 3)).astype(np.float32))
+    bias = jnp.array(rng.integers(-32, 32, (k,)).astype(np.float32))
+    out = conv3x3(img, wts, bias, relu=relu)
+    ref = conv3x3_ref(img, wts, bias, relu=relu)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dtype=st.sampled_from([np.int8, np.uint8, np.int16, np.float32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_dtypes(dtype, seed):
+    """Inputs arriving as any integer/float dtype must produce the same
+    exact result once promoted (the runtime always ships f32 carriers)."""
+    rng = np.random.default_rng(seed)
+    info_hi = 127 if dtype != np.uint8 else 255
+    lo = 0 if dtype == np.uint8 else -64
+    img = rng.integers(0, min(info_hi, 127), (4, 7, 7)).astype(dtype)
+    wts = rng.integers(lo, 64, (4, 4, 3, 3)).astype(dtype)
+    bias = rng.integers(lo, 64, (4,)).astype(dtype)
+    out = conv3x3(jnp.array(img), jnp.array(wts), jnp.array(bias))
+    ref = conv3x3_ref(
+        jnp.array(img, jnp.float32), jnp.array(wts, jnp.float32), jnp.array(bias, jnp.float32)
+    )
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0, atol=0)
+
+
+# --- Fig. 6 wrap-8 oracle ----------------------------------------------------
+
+FIG6_WEIGHTS = np.array(
+    [
+        [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09],
+        [0x91, 0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98, 0x99],
+        [0x21, 0x22, 0x23, 0x24, 0x25, 0x26, 0x27, 0x28, 0x29],
+        [0xB1, 0xB2, 0xB3, 0xB4, 0xB5, 0xB6, 0xB7, 0xB8, 0xB9],
+    ],
+    dtype=np.uint8,
+).reshape(4, 1, 3, 3)
+
+# psum columns read straight off the paper's Fig. 6 (first 9 windows).
+FIG6_PSUMS = np.array(
+    [
+        [0x9B, 0xC8, 0xF5, 0x7C, 0xA9, 0xD6, 0x5D, 0x8A, 0xB7],
+        [0x0B, 0x48, 0x85, 0x3C, 0x79, 0xB6, 0x6D, 0xAA, 0xE7],
+        [0x7B, 0xC8, 0x15, 0xFC, 0x49, 0x96, 0x7D, 0xCA, 0x17],
+        [0xEB, 0x48, 0xA5, 0xBC, 0x19, 0x76, 0x8D, 0xEA, 0x47],
+    ],
+    dtype=np.uint8,
+)
+
+
+def fig6_feature(height: int = 5, width: int = 5) -> np.ndarray:
+    """The testbench feature implied by Fig. 6: a byte ramp, row stride 5."""
+    return (np.arange(1, height * width + 1, dtype=np.uint16) & 0xFF).astype(
+        np.uint8
+    ).reshape(1, height, width)
+
+
+def test_wrap8_oracle_reproduces_fig6():
+    feat = fig6_feature()
+    out = conv3x3_wrap8(feat, FIG6_WEIGHTS)  # (4, 3, 3)
+    got = out.reshape(4, 9)
+    np.testing.assert_array_equal(got, FIG6_PSUMS)
+
+
+def test_wrap8_matches_wide_conv_mod_256():
+    rng = np.random.default_rng(7)
+    img = rng.integers(0, 256, (4, 6, 6)).astype(np.uint8)
+    wts = rng.integers(0, 256, (4, 4, 3, 3)).astype(np.uint8)
+    wrap = conv3x3_wrap8(img, wts)
+    wide = np.array(
+        conv3x3_ref(jnp.array(img, jnp.float32), jnp.array(wts, jnp.float32))
+    ).astype(np.int64)
+    np.testing.assert_array_equal(wrap, (wide % 256).astype(np.uint8))
+
+
+# --- pooling oracle ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,w", [(4, 4), (5, 5), (13, 13), (3, 8)])
+def test_maxpool_shapes_and_values(h, w):
+    rng = np.random.default_rng(h * 100 + w)
+    img = rng.standard_normal((4, h, w)).astype(np.float32)
+    out = np.array(maxpool2x2_ref(jnp.array(img)))
+    assert out.shape == (4, h // 2, w // 2)
+    for c in range(4):
+        for y in range(h // 2):
+            for x in range(w // 2):
+                assert out[c, y, x] == img[c, 2 * y : 2 * y + 2, 2 * x : 2 * x + 2].max()
+
+
+# --- perf-model sanity -------------------------------------------------------
+
+
+def test_vmem_footprint_monotone_and_small():
+    small = vmem_footprint_bytes(8, 16, 16, 8)
+    big = vmem_footprint_bytes(8, 224, 224, 8)
+    assert small["total_bytes"] < big["total_bytes"]
+    assert big["fits_vmem_16MiB"]  # the paper's own workload tiles into VMEM
+    assert 0 < small["mxu_fill"] <= 1

@@ -1,0 +1,114 @@
+"""L2 correctness: layer functions, the edge CNN graph, and the AOT manifest."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import conv3x3_ref, maxpool2x2_ref
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def _params_for(spec: model.ConvSpec, rng):
+    img = jnp.array(rng.integers(0, 100, (spec.c, spec.h, spec.w)).astype(np.float32))
+    w = jnp.array(rng.integers(-30, 30, (spec.k, spec.c, 3, 3)).astype(np.float32))
+    b = jnp.array(rng.integers(-10, 10, (spec.k,)).astype(np.float32))
+    return img, w, b
+
+
+@pytest.mark.parametrize("spec", model.VARIANTS[:1] + model.EDGE_CNN, ids=lambda s: s.name)
+def test_layer_fn_matches_ref(spec):
+    rng = np.random.default_rng(hash(spec.name) % 2**32)
+    img, w, b = _params_for(spec, rng)
+    (out,) = model.layer_fn(spec)(img, w, b)
+    ref = conv3x3_ref(img, w, b, relu=spec.relu)
+    if spec.pool:
+        ref = maxpool2x2_ref(ref)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=0, atol=0)
+    assert out.shape == (spec.k, spec.oh, spec.ow)
+
+
+def test_edge_cnn_shapes_chain():
+    """Each layer's output shape must equal the next layer's input shape —
+    the divisible-by-4 BRAM handoff of §4.1."""
+    layers = model.EDGE_CNN
+    for prev, nxt in zip(layers, layers[1:]):
+        assert (prev.k, prev.oh, prev.ow) == (nxt.c, nxt.h, nxt.w)
+        assert nxt.c % 4 == 0, "paper §4.1: all intermediate channel counts /4"
+        assert nxt.k % 4 == 0
+
+
+def test_cnn_forward_equals_per_layer_composition():
+    rng = np.random.default_rng(99)
+    first = model.EDGE_CNN[0]
+    img = jnp.array(rng.integers(0, 50, (first.c, first.h, first.w)).astype(np.float32))
+    params = []
+    for spec in model.EDGE_CNN:
+        params.append(jnp.array(rng.integers(-8, 8, (spec.k, spec.c, 3, 3)).astype(np.float32)))
+        params.append(jnp.array(rng.integers(-4, 4, (spec.k,)).astype(np.float32)))
+    (fused,) = model.cnn_forward(img, *params)
+
+    x = img
+    for i, spec in enumerate(model.EDGE_CNN):
+        x = conv3x3_ref(x, params[2 * i], params[2 * i + 1], relu=spec.relu)
+        if spec.pool:
+            x = maxpool2x2_ref(x)
+    # The fused graph compounds 5 layers without the inter-layer
+    # requantisation the serving path applies, so magnitudes exceed the
+    # f32 exact-integer range (DESIGN.md §5) — compare with rtol instead.
+    np.testing.assert_allclose(
+        np.array(fused), np.array(x).reshape(-1), rtol=1e-3, atol=1e-2
+    )
+    assert fused.shape == (32,)
+
+
+def test_s52_psum_count_matches_paper():
+    """§5.2: the 224x224x8 (x) 8x3x3x8 workload is exactly 3,154,176 PSUMs."""
+    assert model.S52.psums == 3_154_176
+    assert model.S52.macs == 3_154_176 * 9
+
+
+def test_psum_accounting():
+    spec = model.ConvSpec(c=8, h=10, w=12, k=4)
+    assert spec.psums == 8 * 10 * 8 * 4  # OHxOW = 8x10
+    assert spec.macs == spec.psums * 9
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_variants():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    for spec in model.VARIANTS:
+        entry = manifest["variants"][spec.name]
+        assert entry["inputs"][0] == [spec.c, spec.h, spec.w]
+        assert entry["output"] == [spec.k, spec.oh, spec.ow]
+        assert (ART / entry["file"]).exists(), entry["file"]
+        # f32 exactness guard (DESIGN.md §5): 9*C*127^2 within 2^24.
+        assert 9 * spec.c * 127 * 127 < 2**24, spec.name
+    assert "edge_cnn" in manifest["variants"]
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_hlo_artifacts_are_text_modules():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for name, entry in manifest["variants"].items():
+        text = (ART / entry["file"]).read_text()
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_lowering_quickstart_roundtrip():
+    """Lower the quickstart layer here and check the HLO text parses back
+    through jax's own parser entry count (smoke; rust does the real load)."""
+    from compile import aot
+
+    text = aot.lower_layer(model.QUICKSTART)
+    assert text.lstrip().startswith("HloModule")
+    assert f"f32[{model.QUICKSTART.k},{model.QUICKSTART.h - 2},{model.QUICKSTART.w - 2}]" in text

@@ -1,0 +1,70 @@
+//! Bench: end-to-end serving — full CNN inference through the layer
+//! scheduler, and mixed-trace throughput through the coordinator's core
+//! pool at 1 / 4 / 20 cores (the §5.2 scaling story, measured through
+//! the real dispatch path rather than multiplied out).
+
+use repro::bench_util::{black_box, Bencher};
+use repro::coordinator::{CnnScheduler, CoordinatorConfig, Server};
+use repro::hw::IpCoreConfig;
+use repro::model::network::EdgeCnn;
+use repro::model::trace::{generate, TraceConfig};
+use repro::paper::FREQ_Z2_HZ;
+
+fn main() {
+    println!("=== bench: e2e (edge CNN + coordinator) ===");
+    let b = Bencher::default();
+
+    // --- single inference through the scheduler.
+    {
+        let net = EdgeCnn::new(42);
+        let first = net.specs()[0];
+        let img = EdgeCnn::sample_input(1, &first);
+        let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+        let run = sched.infer(&img).unwrap();
+        println!(
+            "sim latency/inference: {} cycles = {:.3} ms @112MHz (chaining; {} with DMA round-trips)",
+            run.total_cycles,
+            run.total_cycles as f64 / FREQ_Z2_HZ as f64 * 1e3,
+            run.total_cycles_dma_roundtrip
+        );
+        b.run("edge_cnn inference (hw-sim, host time)", || {
+            black_box(sched.infer(&img).unwrap())
+        });
+    }
+
+    // --- coordinator trace throughput at increasing core counts.
+    let trace = generate(&TraceConfig {
+        n: 32,
+        mean_gap_us: 0,
+        s52_fraction: 0.0,
+        seed: 7,
+    });
+    for cores in [1usize, 4, 20] {
+        let mut server = Server::new(CoordinatorConfig::default().with_cores(cores));
+        let report = server.run_trace(&trace);
+        println!(
+            "coordinator {:>2} cores: sim_gops={:.4} host_rps={:.1} p50={}us p99={}us wdma_skip={:.0}%",
+            cores,
+            report.sim_gops_psum,
+            report.host_rps,
+            report.p50_us,
+            report.p99_us,
+            report.weight_dma_skip_rate * 100.0
+        );
+        server.shutdown();
+    }
+
+    // --- host cost of one dispatch round trip (scheduling overhead).
+    {
+        let mut server = Server::new(CoordinatorConfig::default());
+        let single = generate(&TraceConfig {
+            n: 1,
+            s52_fraction: 0.0,
+            ..Default::default()
+        });
+        b.run("coordinator 1-request round trip", || {
+            black_box(server.run_trace(&single))
+        });
+        server.shutdown();
+    }
+}

@@ -1,0 +1,97 @@
+//! Bench: experiment S52 + F6 — the IP-core simulator itself.
+//!
+//! Reports (a) simulated-hardware figures (cycles, GOPS at 112 MHz) for
+//! the paper's §5.2 workload and the Fig. 6 testbench, and (b) the
+//! host-side speed of the simulator (simulated MACs per host second),
+//! which is what the §Perf pass optimises.
+
+use repro::bench_util::{black_box, Bencher};
+use repro::hw::ip_core::{gops_mac, gops_psum};
+use repro::hw::waveform::fig6_stimulus;
+use repro::hw::{AccumMode, IpCore, IpCoreConfig};
+use repro::model::{LayerSpec, Tensor, QUICKSTART, S52};
+use repro::paper::FREQ_Z2_HZ;
+use repro::util::prng::Prng;
+
+fn inputs(spec: &LayerSpec, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+    let mut rng = Prng::new(seed);
+    (
+        Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        ),
+        Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 256)),
+        vec![0i32; spec.k],
+    )
+}
+
+fn main() {
+    println!("=== bench: ipcore (experiments S52, F6) ===");
+    let b = Bencher::default();
+
+    // --- Fig. 6 testbench (tiny; shows per-layer overhead floor).
+    {
+        let (spec, img, wts, bias) = fig6_stimulus();
+        let mut core = IpCore::new(IpCoreConfig {
+            mode: AccumMode::Wrap8,
+            ..Default::default()
+        });
+        b.run_throughput("fig6_testbench (36 psums)", spec.psums() as f64, || {
+            black_box(core.run_layer(&spec, &img, &wts, &bias, None).unwrap())
+        });
+    }
+
+    // --- quickstart layer.
+    {
+        let spec = QUICKSTART;
+        let (img, wts, bias) = inputs(&spec, 1);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        println!(
+            "  sim: {} compute cycles -> {:.4} GOPS(psum) @112MHz",
+            run.cycles.compute,
+            gops_psum(spec.psums(), run.cycles.compute, FREQ_Z2_HZ)
+        );
+        b.run_throughput(
+            "quickstart 8x16x16 k8 (sim MACs/s)",
+            spec.macs() as f64,
+            || black_box(core.run_layer(&spec, &img, &wts, &bias, None).unwrap()),
+        );
+    }
+
+    // --- the §5.2 headline workload.
+    {
+        let spec = S52;
+        let (img, wts, bias) = inputs(&spec, 52);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        println!(
+            "  sim: {} compute cycles = {:.5}s @112MHz -> {:.4} GOPS(psum) {:.3} GOPS(mac) [paper: 1,577,088 / 0.01408s / 0.224]",
+            run.cycles.compute,
+            run.cycles.compute as f64 / FREQ_Z2_HZ as f64,
+            gops_psum(spec.psums(), run.cycles.compute, FREQ_Z2_HZ),
+            gops_mac(spec.psums(), run.cycles.compute, FREQ_Z2_HZ)
+        );
+        let slow = Bencher {
+            budget: std::time::Duration::from_secs(4),
+            warmup: std::time::Duration::from_millis(200),
+            max_iters: 20,
+        };
+        slow.run_throughput("s52 224x224x8 k8 (sim MACs/s)", spec.macs() as f64, || {
+            black_box(core.run_layer(&spec, &img, &wts, &bias, None).unwrap())
+        });
+    }
+
+    // --- wrap8 vs i32 accumulator cost on the host.
+    {
+        let spec = QUICKSTART;
+        let (img, wts, bias) = inputs(&spec, 3);
+        let mut w8 = IpCore::new(IpCoreConfig {
+            mode: AccumMode::Wrap8,
+            ..Default::default()
+        });
+        b.run("quickstart wrap8 accumulator", || {
+            black_box(w8.run_layer(&spec, &img, &wts, &bias, None).unwrap())
+        });
+    }
+}

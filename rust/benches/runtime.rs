@@ -1,0 +1,80 @@
+//! Bench: the XLA/PJRT runtime path — per-layer execution latency of
+//! the AOT Pallas artifacts, compile-cache behaviour, and the fused
+//! edge-CNN graph. This is the software baseline the simulated
+//! accelerator is compared against in EXPERIMENTS.md.
+
+use repro::bench_util::{black_box, Bencher};
+use repro::model::network::EdgeCnn;
+use repro::model::{LayerSpec, Tensor, QUICKSTART, S52};
+use repro::runtime::XlaRuntime;
+use repro::util::prng::Prng;
+use std::time::Instant;
+
+fn inputs(spec: &LayerSpec, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+    let mut rng = Prng::new(seed);
+    (
+        Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 128),
+        ),
+        Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 32)),
+        vec![0i32; spec.k],
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== bench: runtime (XLA/PJRT software path) ===");
+    let mut rt = match XlaRuntime::with_default_registry() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIPPED: {e}");
+            return Ok(());
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let b = Bencher::default();
+
+    // Cold compile cost (measured once — cache makes repeats free).
+    {
+        let t = Instant::now();
+        let (img, wts, bias) = inputs(&QUICKSTART, 1);
+        rt.run_layer(&QUICKSTART, &img, &wts, &bias)?;
+        println!("cold compile+run quickstart: {:?}", t.elapsed());
+    }
+
+    // Warm per-layer latency.
+    {
+        let (img, wts, bias) = inputs(&QUICKSTART, 1);
+        b.run_throughput("xla quickstart (MACs/s)", QUICKSTART.macs() as f64, || {
+            black_box(rt.run_layer(&QUICKSTART, &img, &wts, &bias).unwrap())
+        });
+    }
+    {
+        let (img, wts, bias) = inputs(&S52, 52);
+        let t = Instant::now();
+        rt.run_layer(&S52, &img, &wts, &bias)?; // compile
+        println!("cold compile+run s52: {:?}", t.elapsed());
+        b.run_throughput("xla s52 224x224 (MACs/s)", S52.macs() as f64, || {
+            black_box(rt.run_layer(&S52, &img, &wts, &bias).unwrap())
+        });
+    }
+
+    // Fused CNN graph.
+    {
+        let net = EdgeCnn::new(42);
+        let first = net.specs()[0];
+        let img = EdgeCnn::sample_input(1, &first);
+        let params: Vec<(Tensor<u8>, Vec<i32>)> = net
+            .params
+            .layers
+            .iter()
+            .map(|l| (l.weights.clone(), l.bias.clone()))
+            .collect();
+        let macs: u64 = net.specs().iter().map(|s| s.macs()).sum();
+        b.run_throughput("xla fused edge-CNN (MACs/s)", macs as f64, || {
+            black_box(rt.run_edge_cnn(&img, &params).unwrap())
+        });
+    }
+    println!("compiled executables cached: {}", rt.compiled_count());
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench: experiment T1 — regenerates the paper's Table 1 from the
+//! resource model and times the model itself (it sits on the serving
+//! path when the coordinator plans deployments).
+
+use repro::bench_util::{black_box, Bencher};
+use repro::hw::device::TABLE1_DEVICES;
+use repro::hw::resource::{estimate, max_cores, render_table1, PAPER_TABLE1};
+
+fn main() {
+    println!("=== bench: table1 (experiment T1) ===");
+    print!("{}", render_table1());
+    println!("paper:");
+    for r in PAPER_TABLE1 {
+        println!(
+            "{:<22} {:>7}          {:>7}          {:>6.0} MHz",
+            r.device, r.luts, r.ffs, r.fmax_mhz
+        );
+    }
+    for d in TABLE1_DEVICES {
+        let m = max_cores(&d);
+        println!(
+            "max IP cores on {:<22} by_lut={:<3} by_ff={:<3} binding={}",
+            d.name, m.by_lut, m.by_ff, m.binding
+        );
+    }
+
+    let b = Bencher::quick();
+    b.run("estimate(xc7z020clg400)", || {
+        black_box(estimate(&TABLE1_DEVICES[0]))
+    });
+    b.run("render_table1", || black_box(render_table1()));
+}

@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` runs each `rust/benches/*.rs` with `harness = false`;
+//! those binaries use [`Bencher`] for warmup + timed iterations and
+//! report median / mean / p95 wall time plus a derived throughput line.
+//! Output is stable, grep-able text — EXPERIMENTS.md quotes it directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn per_iter_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    /// Target wall time to spend measuring each benchmark.
+    pub budget: Duration,
+    /// Warmup time before measurement.
+    pub warmup: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(500),
+            warmup: Duration::from_millis(100),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Time `f` repeatedly; returns stats over per-iteration durations.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup, also estimates the per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let est = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+        let target_iters = if est.is_zero() {
+            self.max_iters
+        } else {
+            ((self.budget.as_secs_f64() / est.as_secs_f64()).ceil() as usize)
+                .clamp(5, self.max_iters)
+        };
+
+        let mut samples = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: samples[samples.len() / 2],
+            mean: total / samples.len() as u32,
+            p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+            min: samples[0],
+        };
+        stats
+    }
+
+    /// Bench and print one standard report line.
+    pub fn run<T>(&self, name: &str, f: impl FnMut() -> T) -> BenchStats {
+        let s = self.bench(name, f);
+        println!(
+            "bench {:<40} iters={:<6} median={:>12?} mean={:>12?} p95={:>12?} min={:>12?}",
+            s.name, s.iters, s.median, s.mean, s.p95, s.min
+        );
+        s
+    }
+
+    /// Bench and print with a derived items/second throughput figure
+    /// (`items` = work units per iteration, e.g. MACs or requests).
+    pub fn run_throughput<T>(&self, name: &str, items: f64, f: impl FnMut() -> T) -> BenchStats {
+        let s = self.bench(name, f);
+        let per_sec = items / s.per_iter_secs();
+        println!(
+            "bench {:<40} iters={:<6} median={:>12?} throughput={:.4e} items/s",
+            s.name, s.iters, s.median, per_sec
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let b = Bencher {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            max_iters: 100,
+        };
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.median.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Admission control / backpressure for the serving path.
+//!
+//! The simulated IP cores are a fixed-capacity resource; an open-loop
+//! client can queue unbounded work and blow latency through the roof.
+//! The admission controller bounds *in-flight simulated work* (measured
+//! in PSUMs, the same unit the dispatcher balances by) and offers the
+//! two standard policies: reject-on-full (load shedding, the serving
+//! answer) and block-until-drained (batch/offline answer).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// What to do when the in-flight budget is exhausted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Refuse new work immediately (caller sees `Rejected`).
+    Reject,
+    /// Block the submitting thread until capacity frees up.
+    Block,
+}
+
+/// Admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    Rejected,
+}
+
+/// Bounded in-flight work counter.
+#[derive(Debug)]
+pub struct AdmissionController {
+    max_inflight_psums: u64,
+    inflight: Mutex<u64>,
+    freed: Condvar,
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(max_inflight_psums: u64) -> Self {
+        AdmissionController {
+            max_inflight_psums,
+            inflight: Mutex::new(0),
+            freed: Condvar::new(),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit `psums` of work under `policy`.
+    pub fn admit(&self, psums: u64, policy: Policy) -> Admission {
+        let mut inflight = self.inflight.lock().expect("admission lock");
+        loop {
+            // A single oversized job is admitted when idle rather than
+            // deadlocking forever.
+            let fits = *inflight + psums <= self.max_inflight_psums
+                || (*inflight == 0 && psums > self.max_inflight_psums);
+            if fits {
+                *inflight += psums;
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                return Admission::Admitted;
+            }
+            match policy {
+                Policy::Reject => {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Admission::Rejected;
+                }
+                Policy::Block => {
+                    inflight = self.freed.wait(inflight).expect("admission wait");
+                }
+            }
+        }
+    }
+
+    /// Mark `psums` of admitted work complete.
+    pub fn complete(&self, psums: u64) {
+        let mut inflight = self.inflight.lock().expect("admission lock");
+        *inflight = inflight.saturating_sub(psums);
+        drop(inflight);
+        self.freed.notify_all();
+    }
+
+    pub fn inflight(&self) -> u64 {
+        *self.inflight.lock().expect("admission lock")
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.max_inflight_psums
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn admits_within_budget() {
+        let ac = AdmissionController::new(100);
+        assert_eq!(ac.admit(60, Policy::Reject), Admission::Admitted);
+        assert_eq!(ac.admit(40, Policy::Reject), Admission::Admitted);
+        assert_eq!(ac.inflight(), 100);
+    }
+
+    #[test]
+    fn rejects_over_budget() {
+        let ac = AdmissionController::new(100);
+        assert_eq!(ac.admit(80, Policy::Reject), Admission::Admitted);
+        assert_eq!(ac.admit(30, Policy::Reject), Admission::Rejected);
+        assert_eq!(ac.rejected.load(Ordering::Relaxed), 1);
+        ac.complete(80);
+        assert_eq!(ac.admit(30, Policy::Reject), Admission::Admitted);
+    }
+
+    #[test]
+    fn oversized_job_admitted_when_idle() {
+        let ac = AdmissionController::new(10);
+        assert_eq!(ac.admit(1000, Policy::Reject), Admission::Admitted);
+        assert_eq!(ac.admit(1, Policy::Reject), Admission::Rejected);
+        ac.complete(1000);
+        assert_eq!(ac.admit(1, Policy::Reject), Admission::Admitted);
+    }
+
+    #[test]
+    fn block_policy_waits_for_completion() {
+        let ac = Arc::new(AdmissionController::new(50));
+        assert_eq!(ac.admit(50, Policy::Block), Admission::Admitted);
+        let ac2 = Arc::clone(&ac);
+        let waiter = std::thread::spawn(move || ac2.admit(20, Policy::Block));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!waiter.is_finished(), "submitter must be blocked");
+        ac.complete(50);
+        assert_eq!(waiter.join().unwrap(), Admission::Admitted);
+        assert_eq!(ac.inflight(), 20);
+    }
+
+    #[test]
+    fn complete_never_underflows() {
+        let ac = AdmissionController::new(10);
+        ac.complete(99);
+        assert_eq!(ac.inflight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admissions_respect_budget() {
+        let ac = Arc::new(AdmissionController::new(100));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let ac = Arc::clone(&ac);
+            handles.push(std::thread::spawn(move || {
+                let mut admitted = 0;
+                for _ in 0..50 {
+                    if ac.admit(10, Policy::Reject) == Admission::Admitted {
+                        admitted += 1;
+                        std::thread::yield_now();
+                        ac.complete(10);
+                    }
+                }
+                admitted
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(ac.inflight(), 0);
+    }
+}

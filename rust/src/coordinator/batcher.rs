@@ -1,0 +1,162 @@
+//! Shape batcher: groups pending jobs by layer spec + weight set.
+//!
+//! Why batch at all? The IP core is weight-stationary *within* a sweep;
+//! consecutive jobs that share a weight set also share the weight BRAM
+//! contents, so the dispatcher can skip the weight DMA for all but the
+//! first job of a batch. Same-shape grouping additionally keeps the
+//! controller's configure phase trivial (no dimension reprogramming).
+//!
+//! The policy is deliberately simple and *fair*: FIFO across batches,
+//! a batch closes at `max_batch`, and a partial batch cannot be
+//! overtaken more than `max_skips` times (no starvation).
+
+use super::config::BatchConfig;
+use super::request::Submission;
+use crate::model::LayerSpec;
+use std::collections::VecDeque;
+
+/// A closed batch, ready for dispatch.
+#[derive(Debug)]
+pub struct Batch {
+    pub spec: LayerSpec,
+    pub weights_id: u64,
+    pub jobs: Vec<Submission>,
+}
+
+/// Accumulates submissions into batches.
+#[derive(Debug)]
+pub struct Batcher {
+    config: BatchConfig,
+    /// Open batches in arrival order of their first job.
+    open: VecDeque<(Batch, usize)>, // (batch, times_skipped)
+}
+
+impl Batcher {
+    pub fn new(config: BatchConfig) -> Self {
+        Batcher {
+            config,
+            open: VecDeque::new(),
+        }
+    }
+
+    /// Add a submission; returns any batch that closed as a result.
+    pub fn push(&mut self, sub: Submission) -> Vec<Batch> {
+        let key = (sub.job.spec, sub.job.weights_id);
+        let mut closed = Vec::new();
+
+        // Try to join an open batch; count skips on the ones passed over.
+        let mut sub = Some(sub);
+        for (batch, skips) in self.open.iter_mut() {
+            if (batch.spec, batch.weights_id) == key && batch.jobs.len() < self.config.max_batch {
+                batch.jobs.push(sub.take().expect("joined at most once"));
+                break;
+            } else {
+                *skips += 1;
+            }
+        }
+        if let Some(sub) = sub {
+            self.open.push_back((
+                Batch {
+                    spec: key.0,
+                    weights_id: key.1,
+                    jobs: vec![sub],
+                },
+                0,
+            ));
+        }
+
+        // Close: full batches, and starved partial batches.
+        let max_batch = self.config.max_batch;
+        let max_skips = self.config.max_skips;
+        while let Some(pos) = self
+            .open
+            .iter()
+            .position(|(b, s)| b.jobs.len() >= max_batch || *s >= max_skips)
+        {
+            let (batch, _) = self.open.remove(pos).unwrap();
+            closed.push(batch);
+        }
+        closed
+    }
+
+    /// Flush everything (idle timeout / shutdown).
+    pub fn flush(&mut self) -> Vec<Batch> {
+        self.open.drain(..).map(|(b, _)| b).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.open.iter().map(|(b, _)| b.jobs.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ConvJob;
+    use crate::model::{LayerSpec, QUICKSTART, S52};
+    use std::sync::mpsc::channel;
+
+    fn sub(id: u64, spec: LayerSpec) -> Submission {
+        let (tx, _rx) = channel();
+        Submission {
+            job: ConvJob::synthetic(id, spec, id),
+            reply: tx,
+            enqueued: std::time::Instant::now(),
+        }
+    }
+
+    fn cfg(max_batch: usize, max_skips: usize) -> BatchConfig {
+        BatchConfig {
+            max_batch,
+            max_skips,
+        }
+    }
+
+    #[test]
+    fn same_shape_fills_one_batch() {
+        let mut b = Batcher::new(cfg(3, 100));
+        assert!(b.push(sub(1, QUICKSTART)).is_empty());
+        assert!(b.push(sub(2, QUICKSTART)).is_empty());
+        let closed = b.push(sub(3, QUICKSTART));
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].jobs.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn mixed_shapes_open_separate_batches() {
+        let mut b = Batcher::new(cfg(4, 100));
+        b.push(sub(1, QUICKSTART));
+        b.push(sub(2, S52));
+        assert_eq!(b.pending(), 2);
+        let flushed = b.flush();
+        assert_eq!(flushed.len(), 2);
+        assert!(flushed.iter().all(|batch| batch.jobs.len() == 1));
+    }
+
+    #[test]
+    fn starved_partial_batch_closes() {
+        let mut b = Batcher::new(cfg(8, 2));
+        b.push(sub(1, QUICKSTART)); // partial batch
+        b.push(sub(2, S52)); // skip 1
+        let closed = b.push(sub(3, S52)); // skip 2 -> quickstart batch must close
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].spec, QUICKSTART);
+    }
+
+    #[test]
+    fn batch_never_mixes_specs() {
+        let mut b = Batcher::new(cfg(2, 100));
+        let mut all = Vec::new();
+        for i in 0..10 {
+            let spec = if i % 2 == 0 { QUICKSTART } else { S52 };
+            all.extend(b.push(sub(i, spec)));
+        }
+        all.extend(b.flush());
+        for batch in &all {
+            assert!(batch.jobs.iter().all(|s| s.job.spec == batch.spec));
+        }
+        let total: usize = all.iter().map(|b| b.jobs.len()).sum();
+        assert_eq!(total, 10, "every request in exactly one batch");
+    }
+}

@@ -1,0 +1,81 @@
+//! Coordinator configuration.
+
+use crate::hw::IpCoreConfig;
+use crate::paper::MAX_CORES_Z2;
+
+/// Batching policy (see [`super::batcher`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Flush a partial batch after this many enqueued requests of other
+    /// shapes have passed it (prevents starvation of rare shapes).
+    pub max_skips: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 8,
+            max_skips: 16,
+        }
+    }
+}
+
+/// Top-level coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Simulated IP cores (the paper deploys 1..=20 on a Pynq Z2).
+    pub n_cores: usize,
+    pub ip: IpCoreConfig,
+    pub batch: BatchConfig,
+    /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
+    /// Submissions beyond it block until the cores drain (Block policy;
+    /// see `coordinator::backpressure` for Reject-style load shedding).
+    pub max_inflight_psums: Option<u64>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_cores: 1,
+            ip: IpCoreConfig::default(),
+            batch: BatchConfig::default(),
+            max_inflight_psums: None,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn with_cores(mut self, n: usize) -> Self {
+        assert!(
+            (1..=MAX_CORES_Z2).contains(&n),
+            "core count {n} outside the paper's 1..=20 deployment range"
+        );
+        self.n_cores = n;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_single_core_paper_config() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.n_cores, 1);
+        assert_eq!(c.ip.freq_hz, crate::paper::FREQ_Z2_HZ);
+    }
+
+    #[test]
+    fn with_cores_accepts_paper_range() {
+        assert_eq!(CoordinatorConfig::default().with_cores(20).n_cores, 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn with_cores_rejects_21() {
+        let _ = CoordinatorConfig::default().with_cores(21);
+    }
+}

@@ -1,0 +1,140 @@
+//! Coordinator metrics: counters, simulated-cycle roll-up and a
+//! log-bucketed latency histogram (std-only, lock-free counters).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram, 1 µs .. ~1 s.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i µs, 2^(i+1) µs).
+    buckets: Vec<AtomicU64>,
+}
+
+const N_BUCKETS: usize = 21; // 2^20 µs ≈ 1 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q` (0..1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << N_BUCKETS
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub psums: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub weight_dma_skipped: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_completion(&self, psums: u64, cycles: u64, latency: Duration, reused: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.psums.fetch_add(psums, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        if reused {
+            self.weight_dma_skipped.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.record(latency);
+    }
+
+    /// Simulated GOPS in the paper's PSUM accounting, given the board
+    /// frequency and the number of parallel cores that produced the
+    /// cycles (per-core cycles accumulate into `sim_cycles`).
+    pub fn sim_gops_psum(&self, freq_hz: u64, n_cores: usize) -> f64 {
+        let cycles = self.sim_cycles.load(Ordering::Relaxed);
+        if cycles == 0 {
+            return 0.0;
+        }
+        // Wall time = per-core cycles; with even load, per-core ≈ total/n.
+        let wall_cycles = cycles as f64 / n_cores as f64;
+        self.psums.load(Ordering::Relaxed) as f64 / (wall_cycles / freq_hz as f64) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(Duration::from_micros(10));
+        }
+        h.record(Duration::from_millis(100));
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile_us(0.5) <= 16);
+        assert!(h.quantile_us(1.0) >= 100_000 / 2);
+    }
+
+    #[test]
+    fn zero_latency_lands_in_first_bucket() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_us(1.0) <= 2);
+    }
+
+    #[test]
+    fn gops_accounting_single_core() {
+        let m = Metrics::new();
+        // 2 psums per cycle at 112 MHz -> 0.224 GOPS (paper).
+        m.record_completion(2 * 1000, 1000, Duration::from_micros(5), false);
+        let gops = m.sim_gops_psum(112_000_000, 1);
+        assert!((gops - 0.224).abs() < 1e-9, "{gops}");
+    }
+
+    #[test]
+    fn gops_scales_with_cores() {
+        let m = Metrics::new();
+        // Two cores each did 1000 cycles of 2-psum/cycle work.
+        m.record_completion(2000, 1000, Duration::from_micros(5), false);
+        m.record_completion(2000, 1000, Duration::from_micros(5), false);
+        let one = m.sim_gops_psum(112_000_000, 1);
+        let two = m.sim_gops_psum(112_000_000, 2);
+        assert!((two / one - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,37 @@
+//! L3 coordinator: the serving layer over the accelerator substrate.
+//!
+//! The paper ships an IP core and leaves the system around it to "the
+//! PS". This module is that system, built the way a deployable runtime
+//! (vLLM-router-style) would be:
+//!
+//! * [`request`] — typed conv / inference requests and responses;
+//! * [`batcher`] — groups same-shape requests so a core keeps its
+//!   weight BRAM layout (weight-stationary across a batch, amortising
+//!   the weight DMA);
+//! * [`dispatch`] — a pool of 1..=20 simulated IP cores, each a worker
+//!   thread (the paper's "20 cores on a fully-utilised Pynq Z2");
+//! * [`scheduler`] — chains CNN layers on one core the way §4.1 chains
+//!   output BRAMs into the next layer's input (no DMA round-trip),
+//!   applying inter-layer requantisation;
+//! * [`metrics`] — request counters, simulated-cycle accounting, and a
+//!   latency histogram;
+//! * [`server`] — the closed-loop trace driver used by the benches and
+//!   the end-to-end example.
+//!
+//! Everything is std-only (threads + mpsc): the offline build has no
+//! tokio, and the workloads here are CPU-bound simulation, not I/O.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod config;
+pub mod dispatch;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod tcp;
+
+pub use config::CoordinatorConfig;
+pub use dispatch::CorePool;
+pub use scheduler::CnnScheduler;
+pub use server::Server;

@@ -1,0 +1,99 @@
+//! Request/response types flowing through the coordinator.
+
+use crate::hw::ip_core::CycleStats;
+use crate::model::{LayerSpec, Tensor};
+use std::sync::mpsc::Sender;
+use std::time::Duration;
+
+/// Monotonically assigned request id.
+pub type RequestId = u64;
+
+/// One convolution-layer job (the unit the IP core accepts).
+#[derive(Clone, Debug)]
+pub struct ConvJob {
+    pub id: RequestId,
+    pub spec: LayerSpec,
+    pub img: Tensor<u8>,
+    pub weights: Tensor<u8>,
+    pub bias: Vec<i32>,
+    /// Identifies the weight set: consecutive jobs sharing it on one
+    /// core skip the weight DMA (weight-stationary across the batch).
+    pub weights_id: u64,
+}
+
+impl ConvJob {
+    /// Deterministically generate a job from a seed (trace replay).
+    pub fn synthetic(id: RequestId, spec: LayerSpec, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Prng::new(seed);
+        ConvJob {
+            id,
+            spec,
+            img: Tensor::from_vec(
+                &[spec.c, spec.h, spec.w],
+                rng.bytes_below(spec.c * spec.h * spec.w, 256),
+            ),
+            weights: Tensor::from_vec(
+                &[spec.k, spec.c, 3, 3],
+                rng.bytes_below(spec.k * spec.c * 9, 16),
+            ),
+            bias: (0..spec.k).map(|_| rng.range_i64(0, 32) as i32).collect(),
+            // Synthetic traces share one weight set per spec, like a
+            // deployed model's fixed parameters.
+            weights_id: spec.psums() ^ 0x5EED,
+        }
+    }
+}
+
+/// Completed job.
+#[derive(Clone, Debug)]
+pub struct ConvResult {
+    pub id: RequestId,
+    pub spec: LayerSpec,
+    pub output: Tensor<i32>,
+    /// Simulated hardware cycles for this job.
+    pub cycles: CycleStats,
+    /// Which simulated core ran it.
+    pub core: usize,
+    /// Host wall-clock latency from enqueue to completion.
+    pub latency: Duration,
+    /// Whether the weight DMA was skipped (batch reuse).
+    pub weights_reused: bool,
+}
+
+/// Envelope handed to the dispatcher: job + reply channel + enqueue time.
+#[derive(Debug)]
+pub struct Submission {
+    pub job: ConvJob,
+    pub reply: Sender<ConvResult>,
+    pub enqueued: std::time::Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QUICKSTART;
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = ConvJob::synthetic(1, QUICKSTART, 9);
+        let b = ConvJob::synthetic(1, QUICKSTART, 9);
+        assert_eq!(a.img.data(), b.img.data());
+        assert_eq!(a.weights.data(), b.weights.data());
+        assert_eq!(a.bias, b.bias);
+    }
+
+    #[test]
+    fn synthetic_shapes_match_spec() {
+        let j = ConvJob::synthetic(2, QUICKSTART, 10);
+        assert_eq!(j.img.shape(), &[8, 16, 16]);
+        assert_eq!(j.weights.shape(), &[8, 8, 3, 3]);
+        assert_eq!(j.bias.len(), 8);
+    }
+
+    #[test]
+    fn same_spec_shares_weights_id() {
+        let a = ConvJob::synthetic(1, QUICKSTART, 1);
+        let b = ConvJob::synthetic(2, QUICKSTART, 2);
+        assert_eq!(a.weights_id, b.weights_id);
+    }
+}

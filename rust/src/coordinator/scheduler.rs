@@ -1,0 +1,185 @@
+//! CNN layer scheduler: runs a whole network through one simulated IP
+//! core, chaining layers the way §4.1 intends — each layer's output
+//! BMGs become the next layer's input BMGs, so intermediate feature
+//! maps never cross the DMA. Only the first image in and the final
+//! logits out pay transfer cycles.
+//!
+//! Between layers the scheduler applies the activation + requantisation
+//! the PS owns in a real deployment (ReLU folds into the requant clamp;
+//! see `model::quant`).
+
+use crate::hw::ip_core::CycleStats;
+use crate::hw::{IpCore, IpCoreConfig};
+use crate::model::network::EdgeCnn;
+use crate::model::{golden, maxpool2x2, Tensor};
+
+/// Per-layer record of a scheduled inference.
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub name: String,
+    pub cycles: CycleStats,
+    pub psums: u64,
+}
+
+/// Whole-inference result.
+#[derive(Clone, Debug)]
+pub struct InferenceRun {
+    pub logits: Vec<i32>,
+    pub class: usize,
+    pub layers: Vec<LayerRecord>,
+    /// Total simulated cycles including the boundary DMAs.
+    pub total_cycles: u64,
+    /// What the same inference would cost with a DMA round-trip per
+    /// layer (the ablation §4.1's output-BRAM chaining avoids).
+    pub total_cycles_dma_roundtrip: u64,
+}
+
+/// Scheduler owning one IP core and one network's parameters.
+pub struct CnnScheduler {
+    pub core: IpCore,
+    pub net: EdgeCnn,
+}
+
+impl CnnScheduler {
+    pub fn new(config: IpCoreConfig, net: EdgeCnn) -> Self {
+        CnnScheduler {
+            core: IpCore::new(config),
+            net,
+        }
+    }
+
+    /// Run one image through the network on the simulated core.
+    pub fn infer(&mut self, img: &Tensor<u8>) -> anyhow::Result<InferenceRun> {
+        let n = self.net.params.layers.len();
+        let mut x = img.clone();
+        let mut layers = Vec::with_capacity(n);
+        let mut total = 0u64;
+        let mut total_roundtrip = 0u64;
+
+        for i in 0..n {
+            let lp = self.net.params.layers[i].clone();
+            let run = self
+                .core
+                .run_layer(&lp.spec, &x, &lp.weights, &lp.bias, None)?;
+            let mut out = run.output.as_i32();
+            if lp.spec.relu {
+                for v in out.data_mut() {
+                    if *v < 0 {
+                        *v = 0;
+                    }
+                }
+            }
+            if lp.spec.pool {
+                out = maxpool2x2(&out);
+            }
+
+            // §4.1 chaining: inner boundaries skip DMA entirely; the
+            // round-trip ablation pays both directions every layer.
+            let compute_latency = run.cycles.compute + run.cycles.load_visible;
+            let boundary_dma = match i {
+                0 => run.cycles.dma_in,
+                _ => 0,
+            } + if i == n - 1 { run.cycles.dma_out } else { 0 };
+            total += compute_latency + boundary_dma;
+            total_roundtrip += compute_latency + run.cycles.dma_in + run.cycles.dma_out;
+
+            layers.push(LayerRecord {
+                name: lp.spec.name(),
+                cycles: run.cycles,
+                psums: lp.spec.psums(),
+            });
+
+            if i + 1 < n {
+                x = self.net.params.requants[i].apply(&out);
+            } else {
+                let logits = out.into_data();
+                let class = crate::model::network::argmax(&logits);
+                return Ok(InferenceRun {
+                    logits,
+                    class,
+                    layers,
+                    total_cycles: total,
+                    total_cycles_dma_roundtrip: total_roundtrip,
+                });
+            }
+        }
+        unreachable!("network has at least one layer")
+    }
+
+    /// Golden-path parity check: the scheduled (simulated-hardware)
+    /// logits must equal the pure-software reference.
+    pub fn verify_against_golden(&mut self, img: &Tensor<u8>) -> anyhow::Result<bool> {
+        let hw = self.infer(img)?;
+        let sw = self.net.forward_golden(img);
+        Ok(hw.logits == sw)
+    }
+}
+
+/// Software-only reference timing: what the PS alone would do (naive
+/// golden conv per layer) — used by benches for the speedup narrative.
+pub fn golden_inference_logits(net: &EdgeCnn, img: &Tensor<u8>) -> Vec<i32> {
+    net.forward_golden(img)
+}
+
+/// Convenience: golden conv as a closure target for benches.
+pub fn golden_layer(
+    spec: &crate::model::LayerSpec,
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+) -> Tensor<i32> {
+    let mut out = golden::conv3x3_i32(img, w, bias, spec.relu);
+    if spec.pool {
+        out = maxpool2x2(&out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduled_inference_matches_golden() {
+        let net = EdgeCnn::new(11);
+        let img = EdgeCnn::sample_input(3, &net.specs()[0]);
+        let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+        assert!(sched.verify_against_golden(&img).unwrap());
+    }
+
+    #[test]
+    fn chaining_beats_dma_roundtrip() {
+        let net = EdgeCnn::new(12);
+        let img = EdgeCnn::sample_input(4, &net.specs()[0]);
+        let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+        let run = sched.infer(&img).unwrap();
+        assert!(run.total_cycles < run.total_cycles_dma_roundtrip);
+        assert_eq!(run.layers.len(), 5);
+    }
+
+    #[test]
+    fn per_layer_records_are_complete() {
+        let net = EdgeCnn::new(13);
+        let img = EdgeCnn::sample_input(5, &net.specs()[0]);
+        let specs = net.specs();
+        let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+        let run = sched.infer(&img).unwrap();
+        for (rec, spec) in run.layers.iter().zip(&specs) {
+            assert_eq!(rec.name, spec.name());
+            assert_eq!(rec.psums, spec.psums());
+            assert!(rec.cycles.compute > 0);
+        }
+        assert!(run.class < 32);
+    }
+
+    #[test]
+    fn repeated_inference_is_deterministic() {
+        let net = EdgeCnn::new(14);
+        let img = EdgeCnn::sample_input(6, &net.specs()[0]);
+        let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+        let a = sched.infer(&img).unwrap();
+        let b = sched.infer(&img).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_cycles, b.total_cycles);
+    }
+}

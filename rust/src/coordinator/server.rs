@@ -1,0 +1,216 @@
+//! Closed-loop trace server: the front door the benches and the
+//! end-to-end example drive. Submissions flow request → batcher →
+//! core pool → reply channel; the server owns the batcher and collects
+//! a report (latency quantiles, simulated GOPS, batching efficiency).
+
+use super::batcher::Batcher;
+use super::config::CoordinatorConfig;
+use super::dispatch::CorePool;
+use super::request::{ConvJob, ConvResult, Submission};
+use crate::model::trace::TraceEntry;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+/// Serving report for one trace run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub n_requests: usize,
+    pub n_cores: usize,
+    pub wall: Duration,
+    /// Simulated hardware time (max over cores would need per-core
+    /// tracking; we report aggregate cycles / n_cores as the even-load
+    /// estimate, which trace tests validate).
+    pub sim_gops_psum: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub total_psums: u64,
+    pub weight_dma_skip_rate: f64,
+    /// Host-side throughput (requests/s) — the simulator's own speed.
+    pub host_rps: f64,
+}
+
+/// The server: config + core pool.
+pub struct Server {
+    pub config: CoordinatorConfig,
+    pool: CorePool,
+}
+
+impl Server {
+    pub fn new(config: CoordinatorConfig) -> Self {
+        Server {
+            config,
+            pool: CorePool::new(config.n_cores, config.ip),
+        }
+    }
+
+    /// Run a whole trace closed-loop (submit all, await all). When
+    /// `max_inflight_psums` is set, submission blocks on backpressure
+    /// while a collector thread drains completions.
+    pub fn run_trace(&mut self, trace: &[TraceEntry]) -> Report {
+        use super::backpressure::{AdmissionController, Policy};
+        use std::sync::Arc;
+
+        let mut batcher = Batcher::new(self.config.batch);
+        let (tx, rx) = channel::<ConvResult>();
+        let start = Instant::now();
+
+        let admission = self
+            .config
+            .max_inflight_psums
+            .map(|cap| Arc::new(AdmissionController::new(cap)));
+        // Collector drains results (and releases admission budget) while
+        // the main thread keeps submitting — mandatory under Block policy.
+        let collector = {
+            let admission = admission.clone();
+            std::thread::spawn(move || {
+                let mut results = Vec::new();
+                while let Ok(r) = rx.recv() {
+                    if let Some(ac) = &admission {
+                        ac.complete(r.spec.psums());
+                    }
+                    results.push(r);
+                }
+                results
+            })
+        };
+
+        for (i, entry) in trace.iter().enumerate() {
+            if let Some(ac) = &admission {
+                // Admitted-but-unbatched work can't complete; flush open
+                // batches before blocking or the budget never frees.
+                if ac.admit(entry.spec.psums(), Policy::Reject) == super::backpressure::Admission::Rejected {
+                    for open in batcher.flush() {
+                        self.pool.dispatch(open);
+                    }
+                    ac.admit(entry.spec.psums(), Policy::Block);
+                }
+            }
+            let job = ConvJob::synthetic(i as u64, entry.spec, entry.seed);
+            let sub = Submission {
+                job,
+                reply: tx.clone(),
+                enqueued: Instant::now(),
+            };
+            for closed in batcher.push(sub) {
+                self.pool.dispatch(closed);
+            }
+        }
+        for leftover in batcher.flush() {
+            self.pool.dispatch(leftover);
+        }
+        drop(tx);
+
+        let results = collector.join().expect("collector thread");
+        let wall = start.elapsed();
+        assert_eq!(results.len(), trace.len(), "every request answered");
+
+        let m = &self.pool.metrics;
+        let completed = m.completed.load(Ordering::Relaxed);
+        let skipped = m.weight_dma_skipped.load(Ordering::Relaxed);
+        Report {
+            n_requests: results.len(),
+            n_cores: self.pool.n_cores(),
+            wall,
+            sim_gops_psum: m.sim_gops_psum(self.config.ip.freq_hz, self.pool.n_cores()),
+            p50_us: m.latency.quantile_us(0.5),
+            p99_us: m.latency.quantile_us(0.99),
+            total_psums: m.psums.load(Ordering::Relaxed),
+            weight_dma_skip_rate: if completed == 0 {
+                0.0
+            } else {
+                skipped as f64 / completed as f64
+            },
+            host_rps: results.len() as f64 / wall.as_secs_f64().max(1e-9),
+        }
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} cores={} wall={:?} host_rps={:.1}\n\
+             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}%",
+            self.n_requests,
+            self.n_cores,
+            self.wall,
+            self.host_rps,
+            self.sim_gops_psum,
+            self.total_psums,
+            self.p50_us,
+            self.p99_us,
+            self.weight_dma_skip_rate * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::trace::{generate, total_psums, TraceConfig};
+
+    fn small_trace(n: usize) -> Vec<TraceEntry> {
+        generate(&TraceConfig {
+            n,
+            mean_gap_us: 0,
+            s52_fraction: 0.0, // keep tests fast: edge-CNN shapes only
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn trace_run_answers_everything() {
+        let mut server = Server::new(CoordinatorConfig::default().with_cores(2));
+        let trace = small_trace(16);
+        let report = server.run_trace(&trace);
+        assert_eq!(report.n_requests, 16);
+        assert_eq!(report.total_psums, total_psums(&trace));
+        assert!(report.sim_gops_psum > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_skips_weight_dma() {
+        let mut server = Server::new(CoordinatorConfig::default());
+        // Same-shape burst -> most jobs reuse resident weights.
+        let trace: Vec<TraceEntry> = small_trace(1)
+            .into_iter()
+            .cycle()
+            .take(12)
+            .collect();
+        let report = server.run_trace(&trace);
+        assert!(
+            report.weight_dma_skip_rate > 0.5,
+            "skip rate {}",
+            report.weight_dma_skip_rate
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_bounded_run_completes() {
+        let mut server = Server::new(CoordinatorConfig {
+            // Budget ~ two small layers: forces constant blocking.
+            max_inflight_psums: Some(20_000),
+            ..CoordinatorConfig::default().with_cores(2)
+        });
+        let trace = small_trace(24);
+        let report = server.run_trace(&trace);
+        assert_eq!(report.n_requests, 24);
+        assert_eq!(report.total_psums, total_psums(&trace));
+        server.shutdown();
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut server = Server::new(CoordinatorConfig::default());
+        let report = server.run_trace(&small_trace(4));
+        let text = report.render();
+        assert!(text.contains("requests=4"));
+        server.shutdown();
+    }
+}

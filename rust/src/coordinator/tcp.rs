@@ -1,0 +1,359 @@
+//! TCP front-end: newline-delimited JSON over a socket — the network
+//! face an edge gateway actually talks to, in front of the same
+//! batcher + core pool the in-process server uses.
+//!
+//! Wire protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"id":1,"spec":{"c":8,"h":16,"w":16,"k":8},"seed":42}
+//! -> {"id":2,"spec":{...},"img":[...C*H*W u8...],
+//!     "weights":[...K*C*9 u8...],"bias":[...K i32...]}
+//! <- {"id":1,"ok":true,"core":0,"compute_cycles":6272,
+//!     "sim_us":56,"output_head":[...,8],"checksum":1234567}
+//! <- {"id":9,"ok":false,"error":"..."}
+//! ```
+//!
+//! `seed` requests synthesise deterministic tensors server-side (good
+//! for load generation); explicit-tensor requests carry real data. The
+//! checksum (sum of output words mod 2^31) lets load generators verify
+//! numerics without shipping whole feature maps back.
+
+use super::dispatch::CorePool;
+use super::request::{ConvJob, ConvResult, Submission};
+use crate::model::{LayerSpec, Tensor};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Running TCP server handle.
+pub struct TcpServer {
+    pub addr: std::net::SocketAddr,
+    listener_thread: std::thread::JoinHandle<()>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+fn parse_spec(j: &Json) -> Result<LayerSpec, String> {
+    let g = |k: &str| {
+        j.get(&[k])
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("spec.{k} missing"))
+    };
+    let mut spec = LayerSpec::new(g("c")?, g("h")?, g("w")?, g("k")?);
+    if j.get(&["relu"]).and_then(Json::as_bool).unwrap_or(false) {
+        spec = spec.with_relu();
+    }
+    Ok(spec)
+}
+
+fn parse_u8_array(j: &Json, want_len: usize, name: &str) -> Result<Vec<u8>, String> {
+    let arr = j.as_arr().ok_or_else(|| format!("{name} must be an array"))?;
+    if arr.len() != want_len {
+        return Err(format!("{name} length {} != {want_len}", arr.len()));
+    }
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|n| (0.0..=255.0).contains(n))
+                .map(|n| n as u8)
+                .ok_or_else(|| format!("{name} element out of u8 range"))
+        })
+        .collect()
+}
+
+/// Build a ConvJob from one request line.
+fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
+    let spec = parse_spec(req.get(&["spec"]).ok_or("missing spec")?)?;
+    if !spec.paper_compatible() {
+        return Err(format!("spec violates §4.1 (K%4!=0 or too small): {spec:?}"));
+    }
+    if let Some(img_j) = req.get(&["img"]) {
+        let img = parse_u8_array(img_j, spec.c * spec.h * spec.w, "img")?;
+        let wts = parse_u8_array(
+            req.get(&["weights"]).ok_or("missing weights")?,
+            spec.k * spec.c * 9,
+            "weights",
+        )?;
+        let bias_arr = req
+            .get(&["bias"])
+            .and_then(Json::as_arr)
+            .ok_or("missing bias")?;
+        if bias_arr.len() != spec.k {
+            return Err(format!("bias length {} != {}", bias_arr.len(), spec.k));
+        }
+        let bias: Vec<i32> = bias_arr
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as i32).ok_or("bias element"))
+            .collect::<Result<_, _>>()?;
+        Ok(ConvJob {
+            id,
+            spec,
+            img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
+            weights: Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
+            bias,
+            weights_id: id ^ 0xF00D, // explicit tensors: unique weight set
+        })
+    } else {
+        let seed = req
+            .get(&["seed"])
+            .and_then(Json::as_f64)
+            .ok_or("need seed or img/weights/bias")? as u64;
+        Ok(ConvJob::synthetic(id, spec, seed))
+    }
+}
+
+fn response_json(r: &ConvResult, freq_hz: u64) -> Json {
+    let head: Vec<i64> = r.output.data().iter().take(8).map(|&v| v as i64).collect();
+    let checksum = r
+        .output
+        .data()
+        .iter()
+        .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("ok", Json::Bool(true)),
+        ("core", Json::num(r.core as f64)),
+        ("compute_cycles", Json::num(r.cycles.compute as f64)),
+        (
+            "sim_us",
+            Json::num((r.cycles.total as f64 / freq_hz as f64 * 1e6).round()),
+        ),
+        ("weights_reused", Json::Bool(r.weights_reused)),
+        ("output_head", Json::arr_i64(head)),
+        ("checksum", Json::num(checksum as f64)),
+    ])
+}
+
+fn error_json(id: u64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+fn handle_connection(stream: TcpStream, pool: Arc<CorePool>, next_id: Arc<AtomicU64>) {
+    let freq = pool.ip_config().freq_hz;
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        let reply = match Json::parse(&line) {
+            Err(e) => error_json(id, &format!("bad json: {e}")),
+            Ok(req) => {
+                let req_id = req
+                    .get(&["id"])
+                    .and_then(Json::as_f64)
+                    .map(|n| n as u64)
+                    .unwrap_or(id);
+                match job_from_request(req_id, &req) {
+                    Err(e) => error_json(req_id, &e),
+                    Ok(job) => {
+                        let (tx, rx) = channel();
+                        let spec = job.spec;
+                        let weights_id = job.weights_id;
+                        pool.dispatch(super::batcher::Batch {
+                            spec,
+                            weights_id,
+                            jobs: vec![Submission {
+                                job,
+                                reply: tx,
+                                enqueued: std::time::Instant::now(),
+                            }],
+                        });
+                        match rx.recv() {
+                            Ok(result) => response_json(&result, freq),
+                            Err(_) => error_json(req_id, "worker dropped"),
+                        }
+                    }
+                }
+            }
+        };
+        if writeln!(writer, "{}", reply.to_json()).is_err() {
+            break;
+        }
+    }
+    let _ = peer; // connection closed
+}
+
+impl TcpServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(addr: &str, n_cores: usize, ip: crate::hw::IpCoreConfig) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let pool = Arc::new(CorePool::new(n_cores, ip));
+        let next_id = Arc::new(AtomicU64::new(1));
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown_flag = Arc::clone(&shutdown);
+        listener.set_nonblocking(true)?;
+        let listener_thread = std::thread::Builder::new()
+            .name("repro-tcp".into())
+            .spawn(move || {
+                loop {
+                    if shutdown_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            let pool = Arc::clone(&pool);
+                            let next_id = Arc::clone(&next_id);
+                            std::thread::spawn(move || handle_connection(stream, pool, next_id));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(TcpServer {
+            addr: local,
+            listener_thread,
+            shutdown,
+        })
+    }
+
+    /// Stop accepting connections (in-flight requests drain).
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = self.listener_thread.join();
+    }
+}
+
+/// Blocking one-shot client (used by tests, examples and `repro client`).
+pub fn request_once(addr: &std::net::SocketAddr, body: &Json) -> anyhow::Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{}", body.to_json())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::IpCoreConfig;
+    use crate::model::{golden, QUICKSTART};
+
+    fn start() -> TcpServer {
+        TcpServer::start("127.0.0.1:0", 2, IpCoreConfig::default()).expect("bind")
+    }
+
+    #[test]
+    fn seed_request_round_trips() {
+        let server = start();
+        let req = Json::parse(
+            r#"{"id":7,"spec":{"c":8,"h":16,"w":16,"k":8},"seed":42}"#,
+        )
+        .unwrap();
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get(&["id"]).unwrap().as_usize(), Some(7));
+        assert_eq!(
+            resp.get(&["compute_cycles"]).unwrap().as_usize(),
+            Some(6272)
+        );
+        // Checksum matches a local recomputation of the same seed.
+        let job = ConvJob::synthetic(7, QUICKSTART, 42);
+        let want = golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false);
+        let checksum = want
+            .data()
+            .iter()
+            .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
+        assert_eq!(
+            resp.get(&["checksum"]).unwrap().as_f64(),
+            Some(checksum as f64)
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn explicit_tensor_request_computes() {
+        let server = start();
+        // 1-channel 4x4 image, 4 kernels: small enough to inline.
+        let img: Vec<u64> = (0..16).collect();
+        let wts: Vec<u64> = (0..36).map(|i| i % 5).collect();
+        let req = Json::obj(vec![
+            ("id", Json::num(1u32)),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("c", Json::num(1u32)),
+                    ("h", Json::num(4u32)),
+                    ("w", Json::num(4u32)),
+                    ("k", Json::num(4u32)),
+                ]),
+            ),
+            ("img", Json::arr_u64(img.clone())),
+            ("weights", Json::arr_u64(wts.clone())),
+            ("bias", Json::arr_i64([0, 0, 0, 0])),
+        ]);
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        // Verify output head against golden.
+        let img_t = Tensor::from_vec(&[1, 4, 4], img.iter().map(|&v| v as u8).collect());
+        let wts_t = Tensor::from_vec(&[4, 1, 3, 3], wts.iter().map(|&v| v as u8).collect());
+        let want = golden::conv3x3_i32(&img_t, &wts_t, &[0; 4], false);
+        let head = resp.get(&["output_head"]).unwrap().as_arr().unwrap();
+        for (a, b) in head.iter().zip(want.data()) {
+            assert_eq!(a.as_f64().unwrap() as i32, *b);
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_disconnects() {
+        let server = start();
+        for bad in [
+            "not json at all",
+            r#"{"id":1}"#,
+            r#"{"id":2,"spec":{"c":4,"h":8,"w":8,"k":6},"seed":1}"#, // K%4
+            r#"{"id":3,"spec":{"c":1,"h":4,"w":4,"k":4},"img":[1,2,3]}"#, // short
+        ] {
+            let mut stream = TcpStream::connect(server.addr).unwrap();
+            writeln!(stream, "{bad}").unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{bad}");
+            assert!(resp.get(&["error"]).is_some());
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_requests_per_connection() {
+        let server = start();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        for i in 0..3 {
+            writeln!(
+                stream,
+                r#"{{"id":{i},"spec":{{"c":4,"h":8,"w":8,"k":4}},"seed":{i}}}"#
+            )
+            .unwrap();
+        }
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let mut seen = Vec::new();
+        for line in reader.lines().take(3) {
+            let resp = Json::parse(&line.unwrap()).unwrap();
+            assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true));
+            seen.push(resp.get(&["id"]).unwrap().as_usize().unwrap());
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2]);
+        drop(stream);
+        server.stop();
+    }
+}

@@ -1,0 +1,500 @@
+//! BMG (Block Memory Generator) models and the §4.1 BRAM organisation.
+//!
+//! A [`Bmg`] is a dual-port RAM: two concurrent accesses per cycle, which
+//! is exactly why the architecture spreads data over *multiple* BMGs —
+//! four image BMGs (one per channel quarter), 4×4 weight BMGs (channel
+//! quarter × interleaved kernel quarter) and four output BMGs (output
+//! channel quarter, kernel `k` lives in BMG `k % 4` so the four PSUMs of
+//! one kernel group land in four different BMGs and never fight for a
+//! port).
+
+use crate::model::Tensor;
+use crate::paper::{KH, KW, N_CORES, N_PCORES};
+
+/// Dual-port block RAM of `DEPTH` words of `T`.
+///
+/// The model tracks port activity per cycle so the simulator can assert
+/// the §4.1 claim that the BMG split makes all concurrent accesses
+/// conflict-free (2 ports per BMG are never exceeded).
+#[derive(Clone, Debug)]
+pub struct Bmg<T> {
+    name: String,
+    data: Vec<T>,
+    /// Highest address ever touched (utilisation reporting: §4.1 notes
+    /// small images leave "redundant slots"). `None` until first access.
+    high_water: Option<usize>,
+    /// Total reads/writes (for bandwidth accounting).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl<T: Copy + Default> Bmg<T> {
+    pub fn new(name: impl Into<String>, depth: usize) -> Self {
+        Bmg {
+            name: name.into(),
+            data: vec![T::default(); depth],
+            high_water: None,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn depth(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Fraction of the BMG ever used — §4.1's "redundant slots" metric.
+    pub fn utilisation(&self) -> f64 {
+        match (self.high_water, self.data.len()) {
+            (None, _) | (_, 0) => 0.0,
+            (Some(hw), len) => (hw + 1).min(len) as f64 / len as f64,
+        }
+    }
+
+    #[inline]
+    fn touch(&mut self, addr: usize) {
+        self.high_water = Some(self.high_water.map_or(addr, |h| h.max(addr)));
+    }
+
+    #[inline]
+    pub fn read(&mut self, addr: usize) -> T {
+        self.reads += 1;
+        self.touch(addr);
+        self.data[addr]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: usize, v: T) {
+        self.writes += 1;
+        self.touch(addr);
+        self.data[addr] = v;
+    }
+
+    /// Peek without counting a port access (testbench/DMA-view only).
+    #[inline]
+    pub fn peek(&self, addr: usize) -> T {
+        self.data[addr]
+    }
+
+    /// Fast-path bulk read: borrow `[start, start+len)` directly while
+    /// charging `reads` port accesses in one update. Semantically a
+    /// sequence of `read()` calls — the §Perf pass uses this to keep the
+    /// per-byte model out of the simulator's hot loop without losing
+    /// the port accounting (EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn read_bulk(&mut self, start: usize, len: usize, reads: u64) -> &[T] {
+        self.reads += reads;
+        if len > 0 {
+            self.touch(start + len - 1);
+        }
+        &self.data[start..start + len]
+    }
+}
+
+impl<T: AccumWord> Bmg<T> {
+    /// Fast-path bulk read-modify-write: `data[start+i] += vals[i]`,
+    /// charging one read + one write per element.
+    #[inline]
+    pub fn accum_bulk(&mut self, start: usize, vals: &[T]) {
+        self.reads += vals.len() as u64;
+        self.writes += vals.len() as u64;
+        if !vals.is_empty() {
+            self.touch(start + vals.len() - 1);
+        }
+        for (slot, v) in self.data[start..start + vals.len()].iter_mut().zip(vals) {
+            *slot = slot.accum(*v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §4.1 Input BRAMs: 4 BMGs, each one-fourth of the image channels.
+// ---------------------------------------------------------------------------
+
+/// The set of four image BMGs. BMG `i` stores channels
+/// `[i*C/4, (i+1)*C/4)` (contiguous quarters, so each computing core
+/// reads only its own BMG). When `C` is not divisible by 4 (the
+/// first-layer exception the paper notes) channels are distributed
+/// round-robin-by-quarter with the remainder in the low quarters.
+#[derive(Clone, Debug)]
+pub struct ImageBrams {
+    pub banks: Vec<Bmg<u8>>,
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+/// How many channels quarter `q` owns for `c` total channels.
+pub fn quarter_span(c: usize, q: usize) -> (usize, usize) {
+    // Contiguous split with remainder spread over the first quarters.
+    let base = c / N_CORES;
+    let rem = c % N_CORES;
+    let start = q * base + q.min(rem);
+    let len = base + usize::from(q < rem);
+    (start, len)
+}
+
+impl ImageBrams {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        let banks = (0..N_CORES)
+            .map(|q| {
+                let (_, len) = quarter_span(c, q);
+                Bmg::new(format!("img_bmg{q}"), len.max(1) * h * w)
+            })
+            .collect();
+        ImageBrams { banks, c, h, w }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    /// (bank, address) for channel `c`, row `y`, col `x`.
+    #[inline]
+    pub fn locate(&self, ch: usize, y: usize, x: usize) -> (usize, usize) {
+        let (bank, local) = self.bank_of(ch);
+        (bank, (local * self.h + y) * self.w + x)
+    }
+
+    #[inline]
+    fn bank_of(&self, ch: usize) -> (usize, usize) {
+        for q in 0..N_CORES {
+            let (start, len) = quarter_span(self.c, q);
+            if ch >= start && ch < start + len {
+                return (q, ch - start);
+            }
+        }
+        unreachable!("channel {ch} out of range {}", self.c)
+    }
+
+    /// DMA-side bulk load of a whole (C,H,W) image.
+    pub fn load_image(&mut self, img: &Tensor<u8>) {
+        assert_eq!(img.shape(), &[self.c, self.h, self.w]);
+        for ch in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let (b, a) = self.locate(ch, y, x);
+                    self.banks[b].write(a, img.at3(ch, y, x));
+                }
+            }
+        }
+    }
+
+    /// Core-side read.
+    #[inline]
+    pub fn read(&mut self, ch: usize, y: usize, x: usize) -> u8 {
+        let (b, a) = self.locate(ch, y, x);
+        self.banks[b].read(a)
+    }
+
+    /// Fast path: borrow channel `ch`'s whole H×W plane, charging
+    /// `reads` port accesses in bulk (the loader's closed-form count).
+    #[inline]
+    pub fn plane_bulk(&mut self, ch: usize, reads: u64) -> &[u8] {
+        let (b, base) = self.locate(ch, 0, 0);
+        let len = self.h * self.w;
+        self.banks[b].read_bulk(base, len, reads)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §4.1 Weight BRAMs: 4 groups x 4 BMGs (channel quarter x kernel quarter).
+// ---------------------------------------------------------------------------
+
+/// Weight BMG grid. BMG `(q, j)` holds, for channels of quarter `q`, the
+/// weights of kernels `k` with `k % 4 == j` — the interleaved kernel
+/// split that lets one kernel *group* (4 consecutive kernels) stream
+/// from 4 distinct BMGs at once.
+#[derive(Clone, Debug)]
+pub struct WeightBrams {
+    pub banks: Vec<Vec<Bmg<u8>>>, // [channel quarter][kernel quarter]
+    k: usize,
+    c: usize,
+}
+
+impl WeightBrams {
+    pub fn new(k: usize, c: usize) -> Self {
+        assert!(k % N_PCORES == 0, "paper §4.1: kernel count divisible by 4");
+        let banks = (0..N_CORES)
+            .map(|q| {
+                let (_, clen) = quarter_span(c, q);
+                (0..N_PCORES)
+                    .map(|j| {
+                        Bmg::new(
+                            format!("wgt_bmg{q}_{j}"),
+                            (k / N_PCORES) * clen.max(1) * KH * KW,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        WeightBrams { banks, k, c }
+    }
+
+    /// (channel-quarter bank, kernel bank, address) for weight
+    /// `W[k][ch][dy][dx]`.
+    #[inline]
+    pub fn locate(&self, k: usize, ch: usize, dy: usize, dx: usize) -> (usize, usize, usize) {
+        let j = k % N_PCORES;
+        let kslot = k / N_PCORES;
+        let (q, local) = self.bank_of_channel(ch);
+        let addr = ((kslot * self.quarter_len(q) + local) * KH + dy) * KW + dx;
+        (q, j, addr)
+    }
+
+    fn quarter_len(&self, q: usize) -> usize {
+        quarter_span(self.c, q).1.max(1)
+    }
+
+    fn bank_of_channel(&self, ch: usize) -> (usize, usize) {
+        for q in 0..N_CORES {
+            let (start, len) = quarter_span(self.c, q);
+            if ch >= start && ch < start + len {
+                return (q, ch - start);
+            }
+        }
+        unreachable!("channel {ch} out of range {}", self.c)
+    }
+
+    /// DMA-side bulk load of a whole (K,C,3,3) weight tensor.
+    pub fn load_weights(&mut self, w: &Tensor<u8>) {
+        assert_eq!(w.shape(), &[self.k, self.c, KH, KW]);
+        for k in 0..self.k {
+            for ch in 0..self.c {
+                for dy in 0..KH {
+                    for dx in 0..KW {
+                        let (q, j, a) = self.locate(k, ch, dy, dx);
+                        self.banks[q][j].write(a, w.at4(k, ch, dy, dx));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Core-side read of one 9-weight channel slice of kernel `k`.
+    pub fn read_kernel_channel(&mut self, k: usize, ch: usize) -> [u8; 9] {
+        let mut out = [0u8; 9];
+        for dy in 0..KH {
+            for dx in 0..KW {
+                let (q, j, a) = self.locate(k, ch, dy, dx);
+                out[dy * KW + dx] = self.banks[q][j].read(a);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §4.1 Output BRAMs: 4 BMGs by output-channel (kernel) quarter,
+// interleaved (k % 4), with an accumulating write port.
+// ---------------------------------------------------------------------------
+
+/// Output BMG set, generic over the accumulator word ([`u8`] for Wrap8,
+/// [`i32`] for production). Kernel `k`'s feature map lives in BMG
+/// `k % 4`; the "accumulate" op models the read-modify-write the paper
+/// uses to fold PSUMs (and the pre-loaded bias) together in BRAM.
+#[derive(Clone, Debug)]
+pub struct OutputBrams<T> {
+    pub banks: Vec<Bmg<T>>,
+    k: usize,
+    oh: usize,
+    ow: usize,
+}
+
+pub trait AccumWord: Copy + Default {
+    fn accum(self, rhs: Self) -> Self;
+}
+
+impl AccumWord for u8 {
+    #[inline]
+    fn accum(self, rhs: u8) -> u8 {
+        self.wrapping_add(rhs)
+    }
+}
+
+impl AccumWord for i32 {
+    #[inline]
+    fn accum(self, rhs: i32) -> i32 {
+        self + rhs
+    }
+}
+
+impl<T: AccumWord> OutputBrams<T> {
+    pub fn new(k: usize, oh: usize, ow: usize) -> Self {
+        let per_bank = k.div_ceil(N_PCORES);
+        let banks = (0..N_PCORES)
+            .map(|j| Bmg::new(format!("out_bmg{j}"), per_bank.max(1) * oh * ow))
+            .collect();
+        OutputBrams { banks, k, oh, ow }
+    }
+
+    #[inline]
+    pub fn locate(&self, k: usize, y: usize, x: usize) -> (usize, usize) {
+        let j = k % N_PCORES;
+        let slot = k / N_PCORES;
+        (j, (slot * self.oh + y) * self.ow + x)
+    }
+
+    /// The PS-side bias preload (§4.2 "Bias Handling").
+    pub fn preload_bias(&mut self, bias: &[T]) {
+        assert_eq!(bias.len(), self.k);
+        for k in 0..self.k {
+            for y in 0..self.oh {
+                for x in 0..self.ow {
+                    let (j, a) = self.locate(k, y, x);
+                    self.banks[j].write(a, bias[k]);
+                }
+            }
+        }
+    }
+
+    /// Accumulating write: `mem[k,y,x] += v` (one read + one write port).
+    #[inline]
+    pub fn accumulate(&mut self, k: usize, y: usize, x: usize, v: T) {
+        let (j, a) = self.locate(k, y, x);
+        let cur = self.banks[j].read(a);
+        self.banks[j].write(a, cur.accum(v));
+    }
+
+    /// Fast path: accumulate one whole output row of kernel `k`
+    /// (`vals.len() == OW`), identical semantics/port counts to `OW`
+    /// calls of [`Self::accumulate`].
+    #[inline]
+    pub fn accumulate_row(&mut self, k: usize, y: usize, vals: &[T]) {
+        let (j, base) = self.locate(k, y, 0);
+        self.banks[j].accum_bulk(base, vals);
+    }
+
+    /// DMA-side readout into a tensor.
+    pub fn readout(&mut self) -> Tensor<T> {
+        let mut out = Tensor::<T>::zeros(&[self.k, self.oh, self.ow]);
+        for k in 0..self.k {
+            for y in 0..self.oh {
+                for x in 0..self.ow {
+                    let (j, a) = self.locate(k, y, x);
+                    let v = self.banks[j].read(a);
+                    out.set3(k, y, x, v);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn quarter_span_partitions() {
+        for c in [1, 2, 3, 4, 5, 8, 9, 16, 64] {
+            let mut covered = 0;
+            let mut next = 0;
+            for q in 0..N_CORES {
+                let (start, len) = quarter_span(c, q);
+                assert_eq!(start, next, "quarters contiguous for c={c}");
+                next += len;
+                covered += len;
+            }
+            assert_eq!(covered, c, "quarters partition c={c}");
+        }
+    }
+
+    #[test]
+    fn divisible_by_4_gives_equal_quarters() {
+        for q in 0..4 {
+            assert_eq!(quarter_span(8, q).1, 2);
+            assert_eq!(quarter_span(16, q).1, 4);
+        }
+    }
+
+    #[test]
+    fn image_round_trip() {
+        let mut rng = Prng::new(1);
+        let img = Tensor::from_vec(&[8, 5, 6], rng.bytes_below(8 * 5 * 6, 256));
+        let mut brams = ImageBrams::new(8, 5, 6);
+        brams.load_image(&img);
+        for ch in 0..8 {
+            for y in 0..5 {
+                for x in 0..6 {
+                    assert_eq!(brams.read(ch, y, x), img.at3(ch, y, x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn image_channels_land_in_their_quarter_bank() {
+        let mut brams = ImageBrams::new(8, 4, 4);
+        // channel 0,1 -> bank 0; 2,3 -> bank 1; etc.
+        assert_eq!(brams.locate(0, 0, 0).0, 0);
+        assert_eq!(brams.locate(1, 0, 0).0, 0);
+        assert_eq!(brams.locate(2, 0, 0).0, 1);
+        assert_eq!(brams.locate(7, 3, 3).0, 3);
+        let _ = &mut brams; // silence unused-mut lint paths
+    }
+
+    #[test]
+    fn weight_round_trip_and_kernel_interleave() {
+        let mut rng = Prng::new(2);
+        let w = Tensor::from_vec(&[8, 8, 3, 3], rng.bytes_below(8 * 8 * 9, 256));
+        let mut brams = WeightBrams::new(8, 8);
+        brams.load_weights(&w);
+        for k in 0..8 {
+            for ch in 0..8 {
+                let got = brams.read_kernel_channel(k, ch);
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        assert_eq!(got[dy * 3 + dx], w.at4(k, ch, dy, dx));
+                    }
+                }
+                // interleaved: kernel k lives in kernel-bank k % 4
+                assert_eq!(brams.locate(k, ch, 0, 0).1, k % 4);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_group_streams_from_four_distinct_banks() {
+        let brams = WeightBrams::new(8, 8);
+        // group 1 = kernels 4..8 -> banks {0,1,2,3}
+        let banks: Vec<usize> = (4..8).map(|k| brams.locate(k, 0, 0, 0).1).collect();
+        let mut sorted = banks.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn output_accumulate_and_bias() {
+        let mut out = OutputBrams::<i32>::new(4, 2, 2);
+        out.preload_bias(&[10, 20, 30, 40]);
+        out.accumulate(2, 1, 1, 5);
+        out.accumulate(2, 1, 1, 7);
+        let t = out.readout();
+        assert_eq!(t.at3(2, 1, 1), 42);
+        assert_eq!(t.at3(0, 0, 0), 10);
+    }
+
+    #[test]
+    fn output_wrap8_accumulates_mod_256() {
+        let mut out = OutputBrams::<u8>::new(4, 1, 1);
+        out.preload_bias(&[250, 0, 0, 0]);
+        out.accumulate(0, 0, 0, 10);
+        assert_eq!(out.readout().at3(0, 0, 0), 4);
+    }
+
+    #[test]
+    fn bmg_utilisation_tracks_high_water() {
+        let mut b = Bmg::<u8>::new("t", 100);
+        assert_eq!(b.utilisation(), 0.0);
+        b.write(49, 1);
+        assert!((b.utilisation() - 0.5).abs() < 1e-9);
+        assert_eq!(b.reads, 0);
+        assert_eq!(b.writes, 1);
+    }
+}

@@ -1,0 +1,304 @@
+//! BRAM capacity planning and strip tiling.
+//!
+//! §4.1 sizes every image BMG for "the largest possible image", which
+//! silently caps the layer shapes the core can accept. This module
+//! makes the cap explicit — a per-device BRAM budget check — and lifts
+//! it: layers whose feature maps exceed the budget are split into
+//! horizontal **strips with a 2-row halo** (3×3 valid conv loses 2
+//! rows), each strip small enough for the BMGs. Strip outputs
+//! concatenate to exactly the untiled result; the cost is re-fetching
+//! the halo rows over the DMA, which the planner accounts.
+
+use super::device::Device;
+use super::ip_core::{CycleStats, IpCore, LayerOutput};
+use super::AccumMode;
+use crate::model::{LayerSpec, Tensor};
+use crate::paper::{KH, N_CORES, N_PCORES};
+
+/// Bytes per 36Kb BRAM block.
+pub const BRAM36_BYTES: u64 = 36 * 1024 / 8;
+
+/// BRAM demand of one layer on the IP core's memory organisation.
+#[derive(Clone, Copy, Debug)]
+pub struct BramDemand {
+    pub image_bytes: u64,
+    pub weight_bytes: u64,
+    pub output_bytes: u64,
+    /// 36Kb blocks, respecting the 4 + 16 + 4 BMG granularity (each BMG
+    /// rounds up to whole blocks).
+    pub blocks: u64,
+}
+
+/// Compute the demand for a layer in a given accumulator mode.
+pub fn demand(spec: &LayerSpec, mode: AccumMode) -> BramDemand {
+    let out_word: u64 = match mode {
+        AccumMode::Wrap8 => 1,
+        AccumMode::I32 => 4,
+    };
+    let img_per_bmg = (spec.c.div_ceil(N_CORES) * spec.h * spec.w) as u64;
+    let wgt_per_bmg =
+        (spec.k.div_ceil(N_PCORES) * spec.c.div_ceil(N_CORES) * 9) as u64;
+    let out_per_bmg =
+        (spec.k.div_ceil(N_PCORES) * spec.conv_oh() * spec.conv_ow()) as u64 * out_word;
+    let blocks = N_CORES as u64 * img_per_bmg.div_ceil(BRAM36_BYTES)
+        + (N_CORES * N_PCORES) as u64 * wgt_per_bmg.div_ceil(BRAM36_BYTES)
+        + N_PCORES as u64 * out_per_bmg.div_ceil(BRAM36_BYTES);
+    BramDemand {
+        image_bytes: N_CORES as u64 * img_per_bmg,
+        weight_bytes: (N_CORES * N_PCORES) as u64 * wgt_per_bmg,
+        output_bytes: N_PCORES as u64 * out_per_bmg,
+        blocks,
+    }
+}
+
+/// Fit verdict for one layer on one device.
+#[derive(Clone, Copy, Debug)]
+pub struct FitReport {
+    pub demand: BramDemand,
+    pub device_blocks: u64,
+    pub fits: bool,
+    /// If it doesn't fit: max input rows per strip that do.
+    pub max_strip_rows: Option<usize>,
+}
+
+/// Check whether `spec` fits a device's BRAM (one IP core instance,
+/// leaving `reserve_frac` of the blocks for the rest of the design).
+pub fn fits(spec: &LayerSpec, device: &Device, mode: AccumMode, reserve_frac: f64) -> FitReport {
+    let budget = (device.bram36 as f64 * (1.0 - reserve_frac)) as u64;
+    let d = demand(spec, mode);
+    let fits = d.blocks <= budget;
+    let max_strip_rows = if fits {
+        None
+    } else {
+        // Largest strip height whose demand fits the budget.
+        let mut lo = KH; // minimum useful strip
+        let mut best = None;
+        let mut hi = spec.h;
+        while lo <= hi {
+            let mid = (lo + hi) / 2;
+            let strip = LayerSpec {
+                h: mid,
+                ..*spec
+            };
+            if demand(&strip, mode).blocks <= budget {
+                best = Some(mid);
+                lo = mid + 1;
+            } else {
+                if mid == 0 {
+                    break;
+                }
+                hi = mid - 1;
+            }
+        }
+        best
+    };
+    FitReport {
+        demand: d,
+        device_blocks: device.bram36,
+        fits,
+        max_strip_rows,
+    }
+}
+
+/// Result of a tiled layer run.
+#[derive(Debug)]
+pub struct TiledRun {
+    pub output: Tensor<i32>,
+    pub strips: usize,
+    /// Sum of per-strip cycle stats.
+    pub cycles: CycleStats,
+    /// Extra input bytes moved because halo rows are fetched twice.
+    pub halo_bytes: u64,
+}
+
+/// Run a layer in horizontal strips of at most `max_rows` input rows
+/// (each strip overlaps the next by `KH - 1` halo rows). Output equals
+/// the untiled conv exactly. I32 mode only (tiling a wrapping
+/// accumulator is equally valid but nobody should).
+pub fn run_layer_tiled(
+    core: &mut IpCore,
+    spec: &LayerSpec,
+    img: &Tensor<u8>,
+    weights: &Tensor<u8>,
+    bias: &[i32],
+    max_rows: usize,
+) -> anyhow::Result<TiledRun> {
+    anyhow::ensure!(max_rows >= KH, "strip must hold at least one window row");
+    anyhow::ensure!(
+        core.config.mode == AccumMode::I32,
+        "tiling supported in I32 mode"
+    );
+    let (oh, ow) = (spec.conv_oh(), spec.conv_ow());
+    let mut output = Tensor::<i32>::zeros(&[spec.k, oh, ow]);
+    let mut cycles = CycleStats::default();
+    let mut strips = 0;
+    let mut halo_bytes = 0u64;
+
+    let mut out_row = 0usize;
+    let mut in_row = 0usize;
+    while out_row < oh {
+        // Strip covers output rows [out_row, out_row + strip_oh).
+        let strip_h = max_rows.min(spec.h - in_row);
+        let strip_oh = strip_h - KH + 1;
+        let strip_spec = LayerSpec {
+            h: strip_h,
+            ..*spec
+        };
+        // Slice input rows [in_row, in_row + strip_h).
+        let mut strip_data = Vec::with_capacity(spec.c * strip_h * spec.w);
+        for c in 0..spec.c {
+            for y in in_row..in_row + strip_h {
+                for x in 0..spec.w {
+                    strip_data.push(img.at3(c, y, x));
+                }
+            }
+        }
+        let strip_img = Tensor::from_vec(&[spec.c, strip_h, spec.w], strip_data);
+        if strips > 0 {
+            halo_bytes += (spec.c * (KH - 1) * spec.w) as u64;
+        }
+
+        let run = core.run_layer(&strip_spec, &strip_img, weights, bias, None)?;
+        let strip_out = match run.output {
+            LayerOutput::I32(t) => t,
+            LayerOutput::Wrap8(t) => t.map(|v| v as i32),
+        };
+        let copy_rows = strip_oh.min(oh - out_row);
+        for k in 0..spec.k {
+            for y in 0..copy_rows {
+                for x in 0..ow {
+                    output.set3(k, out_row + y, x, strip_out.at3(k, y, x));
+                }
+            }
+        }
+
+        cycles.compute += run.cycles.compute;
+        cycles.load_visible += run.cycles.load_visible;
+        cycles.load_hidden += run.cycles.load_hidden;
+        cycles.dma_in += run.cycles.dma_in;
+        cycles.dma_out += run.cycles.dma_out;
+        cycles.total += run.cycles.total;
+
+        strips += 1;
+        out_row += copy_rows;
+        in_row += copy_rows; // next strip starts KH-1 rows before the
+                             // first unproduced output row = in_row.
+    }
+
+    Ok(TiledRun {
+        output,
+        strips,
+        cycles,
+        halo_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{XC7Z020_CLG400, XZCU3EG_SBVA484};
+    use crate::hw::IpCoreConfig;
+    use crate::model::{golden, S52};
+    use crate::util::prng::Prng;
+
+    fn case(spec: &LayerSpec, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        (
+            Tensor::from_vec(
+                &[spec.c, spec.h, spec.w],
+                rng.bytes_below(spec.c * spec.h * spec.w, 256),
+            ),
+            Tensor::from_vec(
+                &[spec.k, spec.c, 3, 3],
+                rng.bytes_below(spec.k * spec.c * 9, 256),
+            ),
+            (0..spec.k).map(|_| rng.range_i64(-9, 9) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn small_layers_fit_z7020() {
+        let spec = LayerSpec::new(8, 16, 16, 8);
+        let r = fits(&spec, &XC7Z020_CLG400, AccumMode::I32, 0.2);
+        assert!(r.fits, "{r:?}");
+        assert!(r.max_strip_rows.is_none());
+    }
+
+    #[test]
+    fn s52_image_fits_but_i32_output_is_the_pressure() {
+        // 224x224x8 image = 401KB image + 1.6MB i32 output.
+        let r = fits(&S52, &XC7Z020_CLG400, AccumMode::I32, 0.2);
+        // The Z-7020 has 140 x 4.5KB = 630KB of BRAM: S52 in I32 does NOT fit.
+        assert!(!r.fits, "{r:?}");
+        assert!(r.max_strip_rows.is_some());
+        // In wrap8 (1-byte outputs, the paper's silicon) pressure is ~852KB:
+        // still over budget -> the paper's own workload needs strips too.
+        let r8 = fits(&S52, &XC7Z020_CLG400, AccumMode::Wrap8, 0.2);
+        assert!(!r8.fits);
+        // The bigger ZU3EG (216 blocks) in wrap8 gets closer.
+        let rz = fits(&S52, &XZCU3EG_SBVA484, AccumMode::Wrap8, 0.2);
+        assert!(rz.demand.blocks < r.demand.blocks * 2);
+    }
+
+    #[test]
+    fn tiled_equals_untiled_exactly() {
+        let spec = LayerSpec::new(4, 20, 9, 4);
+        let (img, wts, bias) = case(&spec, 41);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let untiled = golden::conv3x3_i32(&img, &wts, &bias, false);
+        for max_rows in [3, 4, 5, 7, 11, 20] {
+            let tiled =
+                run_layer_tiled(&mut core, &spec, &img, &wts, &bias, max_rows).unwrap();
+            assert_eq!(
+                tiled.output.data(),
+                untiled.data(),
+                "max_rows={max_rows}, strips={}",
+                tiled.strips
+            );
+        }
+    }
+
+    #[test]
+    fn strip_count_and_halo_accounting() {
+        let spec = LayerSpec::new(4, 20, 9, 4);
+        let (img, wts, bias) = case(&spec, 42);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let tiled = run_layer_tiled(&mut core, &spec, &img, &wts, &bias, 5).unwrap();
+        // 18 output rows, 3 per strip -> 6 strips; 5 halos x 2 rows.
+        assert_eq!(tiled.strips, 6);
+        assert_eq!(tiled.halo_bytes, (4 * 2 * 9 * 5) as u64);
+    }
+
+    #[test]
+    fn tiling_compute_overhead_is_zero() {
+        // Strips recompute nothing: total compute cycles equal untiled.
+        let spec = LayerSpec::new(4, 26, 11, 8);
+        let (img, wts, bias) = case(&spec, 43);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let whole = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let tiled = run_layer_tiled(&mut core, &spec, &img, &wts, &bias, 6).unwrap();
+        assert_eq!(tiled.cycles.compute, whole.cycles.compute);
+        // ... the cost is DMA: halo rows move twice.
+        assert!(tiled.cycles.dma_in > whole.cycles.dma_in);
+    }
+
+    #[test]
+    fn planner_strip_rows_actually_fit() {
+        let r = fits(&S52, &XC7Z020_CLG400, AccumMode::I32, 0.2);
+        let rows = r.max_strip_rows.unwrap();
+        let strip = LayerSpec { h: rows, ..S52 };
+        let budget = (XC7Z020_CLG400.bram36 as f64 * 0.8) as u64;
+        assert!(demand(&strip, AccumMode::I32).blocks <= budget);
+        // And one more row would not fit.
+        let over = LayerSpec { h: rows + 1, ..S52 };
+        assert!(demand(&over, AccumMode::I32).blocks > budget);
+    }
+
+    #[test]
+    fn rejects_too_small_strips() {
+        let spec = LayerSpec::new(4, 10, 10, 4);
+        let (img, wts, bias) = case(&spec, 44);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        assert!(run_layer_tiled(&mut core, &spec, &img, &wts, &bias, 2).is_err());
+    }
+}

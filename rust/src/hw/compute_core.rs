@@ -1,0 +1,339 @@
+//! Computing core (§4.2 "Multi-Kernel Computing Core"): four PCOREs fed
+//! by one Image Loader (window broadcast) and one Weight Loader (four
+//! kernel-channels staged in parallel from the interleaved weight BMGs).
+//!
+//! One *sweep* = one (kernel group, channel) pass over every 3×3 window
+//! of the image: the paper's 8-cycle step produces the 4 PSUMs of one
+//! window, which the core accumulates into the output BMGs (kernel
+//! `4*group + j` → output BMG `j`, conflict-free).
+
+use super::bram::{AccumWord, ImageBrams, OutputBrams, WeightBrams};
+use super::loader::{ImageLoader, WeightLoader};
+use super::pcore::{PCore, Psum};
+use super::waveform::WaveTrace;
+use super::AccumMode;
+use crate::paper::{CYCLES_PER_PSUM_GROUP, KH, KW, N_PCORES};
+
+/// Output word that knows which accumulator mode produces it.
+pub trait PsumWord: AccumWord {
+    const MODE: AccumMode;
+    fn from_psum(p: Psum) -> Self;
+}
+
+impl PsumWord for u8 {
+    const MODE: AccumMode = AccumMode::Wrap8;
+    fn from_psum(p: Psum) -> Self {
+        match p {
+            Psum::Wrap8(v) => v,
+            Psum::I32(v) => (v & 0xFF) as u8,
+        }
+    }
+}
+
+impl PsumWord for i32 {
+    const MODE: AccumMode = AccumMode::I32;
+    fn from_psum(p: Psum) -> Self {
+        match p {
+            Psum::I32(v) => v,
+            Psum::Wrap8(v) => v as i32,
+        }
+    }
+}
+
+/// Per-sweep cycle accounting (stage-1 load vs stage-2 compute; the
+/// pipeline model in [`super::pipeline`] combines them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepCycles {
+    /// Stage-2: 8 cycles per window (the §5.2 schedule).
+    pub compute: u64,
+    /// Stage-1: image-window fetches (5 for a fresh window, 2 per slide).
+    pub image_load: u64,
+    /// Stage-1: weight staging for this (group, channel).
+    pub weight_load: u64,
+    /// Windows processed.
+    pub windows: u64,
+}
+
+/// One computing core.
+#[derive(Clone, Debug)]
+pub struct ComputeCore {
+    /// Which channel quarter this core owns (§4.2 multi-channel).
+    pub id: usize,
+    pub pcores: [PCore; N_PCORES],
+    pub image_loader: ImageLoader,
+    pub weight_loader: WeightLoader,
+}
+
+impl ComputeCore {
+    pub fn new(id: usize) -> Self {
+        ComputeCore {
+            id,
+            pcores: std::array::from_fn(|_| PCore::new()),
+            image_loader: ImageLoader::new(),
+            weight_loader: WeightLoader::new(),
+        }
+    }
+
+    /// One (kernel group, channel) sweep over all output windows,
+    /// accumulating PSUMs into the output BMGs. Optionally records the
+    /// Fig. 6 waveform signals per window step.
+    ///
+    /// Untraced sweeps take the bulk fast path (`sweep_fast`): identical
+    /// results, cycle figures and port counts, ~6× less host time
+    /// (EXPERIMENTS.md §Perf) — equivalence is asserted by
+    /// `fast_path_equals_stepping_path` below and the property suite.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep<T: PsumWord>(
+        &mut self,
+        img: &mut ImageBrams,
+        wgt: &mut WeightBrams,
+        out: &mut OutputBrams<T>,
+        group: usize,
+        ch: usize,
+        mut trace: Option<&mut WaveTrace>,
+    ) -> SweepCycles {
+        if trace.is_none() {
+            return self.sweep_fast(img, wgt, out, group, ch);
+        }
+        let (_, h, w) = img.dims();
+        let (oh, ow) = (h - KH + 1, w - KW + 1);
+        let mut cycles = SweepCycles::default();
+
+        // Stage weights for this (group, channel); they stay resident for
+        // the whole sweep (weight stationary).
+        let wl_before = self.weight_loader.load_cycles;
+        let kernel_weights = self.weight_loader.fetch_group(wgt, group, ch);
+        for (j, pc) in self.pcores.iter_mut().enumerate() {
+            pc.load_weights(kernel_weights[j]);
+        }
+        cycles.weight_load = self.weight_loader.load_cycles - wl_before;
+
+        for y in 0..oh {
+            for x in 0..ow {
+                let il_before = self.image_loader.load_cycles;
+                let window = self.image_loader.fetch(img, ch, y, x);
+                cycles.image_load += self.image_loader.load_cycles - il_before;
+
+                let mut psums = [Psum::Wrap8(0); N_PCORES];
+                for (j, pc) in self.pcores.iter_mut().enumerate() {
+                    let p = pc.compute(&window, T::MODE);
+                    psums[j] = p;
+                    out.accumulate(N_PCORES * group + j, y, x, T::from_psum(p));
+                }
+                cycles.compute += CYCLES_PER_PSUM_GROUP;
+                cycles.windows += 1;
+
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.record_window_step(self, &window, &psums, cycles.compute);
+                }
+            }
+        }
+        cycles
+    }
+
+    /// Bulk fast path (§Perf): whole-plane borrow + row-granular output
+    /// accumulation. Produces byte-identical outputs, cycle stats and
+    /// BMG port counts to the per-window path above.
+    fn sweep_fast<T: PsumWord>(
+        &mut self,
+        img: &mut ImageBrams,
+        wgt: &mut WeightBrams,
+        out: &mut OutputBrams<T>,
+        group: usize,
+        ch: usize,
+    ) -> SweepCycles {
+        let (_, h, w) = img.dims();
+        let (oh, ow) = (h - KH + 1, w - KW + 1);
+        let mut cycles = SweepCycles::default();
+
+        // Weights: same staging as the stepping path.
+        let wl_before = self.weight_loader.load_cycles;
+        let kernel_weights = self.weight_loader.fetch_group(wgt, group, ch);
+        for (j, pc) in self.pcores.iter_mut().enumerate() {
+            pc.load_weights(kernel_weights[j]);
+        }
+        cycles.weight_load = self.weight_loader.load_cycles - wl_before;
+
+        // Image: closed-form loader accounting + direct plane borrow.
+        let (_, load_cycles) = self.image_loader.add_sweep_bulk(oh, ow);
+        cycles.image_load = load_cycles;
+        let plane = img.plane_bulk(ch, (oh * (9 + (ow - 1) * 3)) as u64);
+
+        // Compute: per kernel per output row, then one bulk accumulate.
+        let mut row = vec![T::default(); ow];
+        for (j, kw) in kernel_weights.iter().enumerate() {
+            let k = N_PCORES * group + j;
+            let wv: [i32; 9] = std::array::from_fn(|i| kw[i] as i32);
+            for y in 0..oh {
+                let r0 = &plane[y * w..y * w + w];
+                let r1 = &plane[(y + 1) * w..(y + 1) * w + w];
+                let r2 = &plane[(y + 2) * w..(y + 2) * w + w];
+                for (x, slot) in row.iter_mut().enumerate() {
+                    let acc = wv[0] * r0[x] as i32
+                        + wv[1] * r0[x + 1] as i32
+                        + wv[2] * r0[x + 2] as i32
+                        + wv[3] * r1[x] as i32
+                        + wv[4] * r1[x + 1] as i32
+                        + wv[5] * r1[x + 2] as i32
+                        + wv[6] * r2[x] as i32
+                        + wv[7] * r2[x + 1] as i32
+                        + wv[8] * r2[x + 2] as i32;
+                    *slot = T::from_psum(Psum::I32(acc));
+                }
+                out.accumulate_row(k, y, &row);
+            }
+            self.pcores[j].psum_count += (oh * ow) as u64;
+        }
+
+        cycles.windows = (oh * ow) as u64;
+        cycles.compute = cycles.windows * CYCLES_PER_PSUM_GROUP;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{golden, Tensor};
+    use crate::util::prng::Prng;
+
+    fn setup(
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Tensor<u8>, Tensor<u8>, ImageBrams, WeightBrams) {
+        let mut rng = Prng::new(seed);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let wts = Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256));
+        let mut ib = ImageBrams::new(c, h, w);
+        ib.load_image(&img);
+        let mut wb = WeightBrams::new(k, c);
+        wb.load_weights(&wts);
+        (img, wts, ib, wb)
+    }
+
+    #[test]
+    fn single_channel_sweep_matches_golden_wrap8() {
+        let (img, wts, mut ib, mut wb) = setup(1, 5, 5, 4, 10);
+        let mut out = OutputBrams::<u8>::new(4, 3, 3);
+        out.preload_bias(&[0; 4]);
+        let mut core = ComputeCore::new(0);
+        let cyc = core.sweep(&mut ib, &mut wb, &mut out, 0, 0, None);
+        let got = out.readout();
+        let want = golden::conv3x3_wrap8(&img, &wts, &[0; 4]);
+        assert_eq!(got.data(), want.data());
+        assert_eq!(cyc.windows, 9);
+        assert_eq!(cyc.compute, 9 * CYCLES_PER_PSUM_GROUP);
+    }
+
+    #[test]
+    fn multi_channel_accumulation_matches_golden_i32() {
+        let (img, wts, mut ib, mut wb) = setup(4, 6, 7, 4, 11);
+        let mut out = OutputBrams::<i32>::new(4, 4, 5);
+        out.preload_bias(&[5, -3, 0, 9]);
+        let mut core = ComputeCore::new(0);
+        for ch in 0..4 {
+            core.sweep(&mut ib, &mut wb, &mut out, 0, ch, None);
+        }
+        let got = out.readout();
+        let want = golden::conv3x3_i32(&img, &wts, &[5, -3, 0, 9], false);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn kernel_groups_hit_disjoint_outputs() {
+        let (img, wts, mut ib, mut wb) = setup(1, 4, 4, 8, 12);
+        let mut out = OutputBrams::<i32>::new(8, 2, 2);
+        out.preload_bias(&[0; 8]);
+        let mut core = ComputeCore::new(0);
+        core.sweep(&mut ib, &mut wb, &mut out, 0, 0, None); // kernels 0..4
+        core.sweep(&mut ib, &mut wb, &mut out, 1, 0, None); // kernels 4..8
+        let got = out.readout();
+        let want = golden::conv3x3_i32(&img, &wts, &[0; 8], false);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn sweep_cycle_accounting() {
+        let (_, _, mut ib, mut wb) = setup(1, 5, 7, 4, 13);
+        let mut out = OutputBrams::<i32>::new(4, 3, 5);
+        out.preload_bias(&[0; 4]);
+        let mut core = ComputeCore::new(0);
+        let cyc = core.sweep(&mut ib, &mut wb, &mut out, 0, 0, None);
+        // 3 rows x 5 cols = 15 windows; each row: 1 fresh (5cy) + 4 slides (2cy).
+        assert_eq!(cyc.windows, 15);
+        assert_eq!(cyc.compute, 15 * 8);
+        assert_eq!(cyc.image_load, 3 * (5 + 4 * 2));
+        assert_eq!(cyc.weight_load, 5);
+    }
+
+    #[test]
+    fn fast_path_equals_stepping_path() {
+        // Same sweep through both code paths: identical outputs, cycle
+        // stats and BMG port counters (the §Perf equivalence contract).
+        for seed in [15u64, 16, 17] {
+            let (_, _, mut ib_a, mut wb_a) = setup(3, 7, 9, 8, seed);
+            let (_, _, mut ib_b, mut wb_b) = setup(3, 7, 9, 8, seed);
+            let mut out_a = OutputBrams::<i32>::new(8, 5, 7);
+            out_a.preload_bias(&[1; 8]);
+            let mut out_b = OutputBrams::<i32>::new(8, 5, 7);
+            out_b.preload_bias(&[1; 8]);
+            let mut core_a = ComputeCore::new(0);
+            let mut core_b = ComputeCore::new(0);
+            for g in 0..2 {
+                for ch in 0..3 {
+                    // Fast path (no trace).
+                    let ca = core_a.sweep(&mut ib_a, &mut wb_a, &mut out_a, g, ch, None);
+                    // Stepping path (forced by a throwaway trace).
+                    let mut tr = WaveTrace::fig6();
+                    let cb = core_b.sweep(&mut ib_b, &mut wb_b, &mut out_b, g, ch, Some(&mut tr));
+                    assert_eq!(ca, cb, "cycle stats, seed {seed} g{g} ch{ch}");
+                }
+            }
+            assert_eq!(out_a.readout().data(), out_b.readout().data(), "seed {seed}");
+            assert_eq!(
+                core_a.image_loader.fetched, core_b.image_loader.fetched,
+                "loader fetch accounting, seed {seed}"
+            );
+            for (ba, bb) in ib_a.banks.iter().zip(&ib_b.banks) {
+                assert_eq!(ba.reads, bb.reads, "image port counts, seed {seed}");
+            }
+            for (ba, bb) in out_a.banks.iter().zip(&out_b.banks) {
+                assert_eq!(ba.reads + ba.writes, bb.reads + bb.writes, "output ports, seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_equals_stepping_path_wrap8() {
+        let (_, _, mut ib_a, mut wb_a) = setup(2, 6, 6, 4, 18);
+        let (_, _, mut ib_b, mut wb_b) = setup(2, 6, 6, 4, 18);
+        let mut out_a = OutputBrams::<u8>::new(4, 4, 4);
+        out_a.preload_bias(&[7; 4]);
+        let mut out_b = OutputBrams::<u8>::new(4, 4, 4);
+        out_b.preload_bias(&[7; 4]);
+        let mut core_a = ComputeCore::new(0);
+        let mut core_b = ComputeCore::new(0);
+        for ch in 0..2 {
+            core_a.sweep(&mut ib_a, &mut wb_a, &mut out_a, 0, ch, None);
+            let mut tr = WaveTrace::fig6();
+            core_b.sweep(&mut ib_b, &mut wb_b, &mut out_b, 0, ch, Some(&mut tr));
+        }
+        assert_eq!(out_a.readout().data(), out_b.readout().data());
+    }
+
+    #[test]
+    fn weight_stationary_across_windows() {
+        let (_, _, mut ib, mut wb) = setup(2, 5, 5, 4, 14);
+        let mut out = OutputBrams::<i32>::new(4, 3, 3);
+        out.preload_bias(&[0; 4]);
+        let mut core = ComputeCore::new(0);
+        core.sweep(&mut ib, &mut wb, &mut out, 0, 0, None);
+        // One weight staging for 9 windows: loads == 1.
+        assert_eq!(core.weight_loader.loads, 1);
+        core.sweep(&mut ib, &mut wb, &mut out, 0, 1, None);
+        assert_eq!(core.weight_loader.loads, 2);
+    }
+}

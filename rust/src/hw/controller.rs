@@ -1,0 +1,166 @@
+//! Controller unit (§3, Fig. 2): the FSM that sequences DMA-in, the
+//! per-(kernel-group × channel) compute sweeps, and DMA-out, after
+//! receiving the layer dimensions from the PS.
+//!
+//! The FSM enforces *legal* sequencing — the IP core refuses to compute
+//! before its BRAMs are loaded, exactly like the real core's `start`
+//! interlock — and records a phase log the benches and EXPERIMENTS.md
+//! use to break a layer's cycles down.
+
+/// Controller phases, in legal order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Idle,
+    /// PS programs layer dimensions (the "information needed" of §3).
+    Configure,
+    /// DMA: image + weights + bias preload into BRAMs.
+    DmaIn,
+    /// Compute sweeps (kernel groups × channels), pipelined.
+    Compute,
+    /// DMA: feature map back to the PS.
+    DmaOut,
+    Done,
+}
+
+/// FSM with a cycle-stamped phase log.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    state: Phase,
+    cycle: u64,
+    log: Vec<(Phase, u64)>, // (phase, cycles spent in it)
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IllegalTransition {
+    pub from: Phase,
+    pub to: Phase,
+}
+
+impl std::fmt::Display for IllegalTransition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal controller transition {:?} -> {:?}", self.from, self.to)
+    }
+}
+
+impl std::error::Error for IllegalTransition {}
+
+impl Default for Controller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Controller {
+    pub fn new() -> Self {
+        Controller {
+            state: Phase::Idle,
+            cycle: 0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn state(&self) -> Phase {
+        self.state
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    pub fn log(&self) -> &[(Phase, u64)] {
+        &self.log
+    }
+
+    fn legal(from: Phase, to: Phase) -> bool {
+        use Phase::*;
+        matches!(
+            (from, to),
+            (Idle, Configure)
+                | (Configure, DmaIn)
+                | (DmaIn, Compute)
+                | (Compute, Compute) // repeated sweeps
+                | (Compute, DmaOut)
+                | (DmaOut, Done)
+                | (Done, Configure) // next layer reuses the core
+                | (DmaOut, Configure) // chained layers: §4.1 output BMGs feed next layer
+        )
+    }
+
+    /// Advance to `to`, charging `cycles` to it.
+    pub fn advance(&mut self, to: Phase, cycles: u64) -> Result<(), IllegalTransition> {
+        if !Self::legal(self.state, to) {
+            return Err(IllegalTransition {
+                from: self.state,
+                to,
+            });
+        }
+        self.cycle += cycles;
+        // Merge consecutive same-phase entries (Compute sweeps).
+        if let Some(last) = self.log.last_mut() {
+            if last.0 == to {
+                last.1 += cycles;
+                self.state = to;
+                return Ok(());
+            }
+        }
+        self.log.push((to, cycles));
+        self.state = to;
+        Ok(())
+    }
+
+    /// Total cycles charged to one phase.
+    pub fn phase_cycles(&self, p: Phase) -> u64 {
+        self.log
+            .iter()
+            .filter(|(ph, _)| *ph == p)
+            .map(|(_, c)| c)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path() {
+        let mut c = Controller::new();
+        c.advance(Phase::Configure, 2).unwrap();
+        c.advance(Phase::DmaIn, 100).unwrap();
+        c.advance(Phase::Compute, 800).unwrap();
+        c.advance(Phase::Compute, 800).unwrap();
+        c.advance(Phase::DmaOut, 50).unwrap();
+        c.advance(Phase::Done, 0).unwrap();
+        assert_eq!(c.cycle(), 1752);
+        assert_eq!(c.phase_cycles(Phase::Compute), 1600);
+        // Merged compute entries: log has 5 entries, not 6.
+        assert_eq!(c.log().len(), 5);
+    }
+
+    #[test]
+    fn refuses_compute_before_dma() {
+        let mut c = Controller::new();
+        c.advance(Phase::Configure, 1).unwrap();
+        let err = c.advance(Phase::Compute, 8).unwrap_err();
+        assert_eq!(err.from, Phase::Configure);
+        assert_eq!(err.to, Phase::Compute);
+    }
+
+    #[test]
+    fn refuses_idle_to_compute() {
+        let mut c = Controller::new();
+        assert!(c.advance(Phase::Compute, 8).is_err());
+        assert_eq!(c.state(), Phase::Idle);
+    }
+
+    #[test]
+    fn layer_chaining_skips_dma_in_readback() {
+        // §4.1: output BMGs can be the next layer's input — DmaOut -> Configure.
+        let mut c = Controller::new();
+        c.advance(Phase::Configure, 1).unwrap();
+        c.advance(Phase::DmaIn, 10).unwrap();
+        c.advance(Phase::Compute, 8).unwrap();
+        c.advance(Phase::DmaOut, 5).unwrap();
+        assert!(c.advance(Phase::Configure, 1).is_ok());
+    }
+}

@@ -1,0 +1,250 @@
+//! Depthwise convolution on the paper's IP core — the MobileNet case.
+//!
+//! §4.1 motivates the BRAM layout with MobileNet, but MobileNet's
+//! backbone is depthwise-separable: a per-channel 3×3 (depthwise)
+//! followed by a 1×1 across channels (pointwise). Neither matches the
+//! core's dataflow, and this module quantifies exactly how well the
+//! fixed-function architecture degrades:
+//!
+//! * **depthwise** — no cross-channel accumulation, so the four PCOREs
+//!   of a computing core (which share one image-window broadcast) can
+//!   serve only ONE channel per 8-cycle step: 25 % PCORE utilisation.
+//!   Each core still covers its channel quarter in parallel, so a
+//!   depthwise layer costs `ceil(C/4) × windows × 8` cycles.
+//! * **pointwise (1×1)** — runs as a zero-padded 3×3 (weights placed at
+//!   the centre tap): functionally exact, but 8 of 9 MACs multiply by
+//!   zero — 11 % MAC utilisation. [`pointwise_as_3x3`] builds the
+//!   padded weights; the cycle cost is the standard path's.
+//!
+//! The honest conclusion (EXPERIMENTS.md ABL): the paper's core runs
+//! MobileNet-style blocks at 9–25 % effective utilisation; a deployable
+//! revision needs a per-PCORE window path or a dedicated 1×1 mode.
+
+use super::ip_core::{CycleStats, IpCore};
+use super::AccumMode;
+use crate::model::Tensor;
+use crate::paper::{CYCLES_PER_PSUM_GROUP, KH, KW, N_CORES};
+
+/// Golden depthwise 3×3: `out[c] = img[c] ⊛ w[c] + bias[c]`.
+pub fn golden_depthwise3x3(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+) -> Tensor<i32> {
+    let (c, h, width) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    assert_eq!(w.shape(), &[c, KH, KW], "depthwise weights are (C,3,3)");
+    assert_eq!(bias.len(), c);
+    let (oh, ow) = (h - KH + 1, width - KW + 1);
+    let mut out = Tensor::<i32>::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc = bias[ci];
+                for dy in 0..KH {
+                    for dx in 0..KW {
+                        acc += img.at3(ci, y + dy, x + dx) as i32
+                            * w.data()[(ci * KH + dy) * KW + dx] as i32;
+                    }
+                }
+                if relu && acc < 0 {
+                    acc = 0;
+                }
+                out.set3(ci, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Result of a depthwise run on the simulated core.
+#[derive(Debug)]
+pub struct DepthwiseRun {
+    pub output: Tensor<i32>,
+    pub cycles: CycleStats,
+    /// Fraction of PCORE-issue slots that did useful work (≤ 0.25).
+    pub pcore_utilisation: f64,
+}
+
+impl IpCore {
+    /// Depthwise 3×3 on the IP core: each computing core walks its
+    /// channel quarter one channel per sweep (one active PCORE).
+    pub fn run_depthwise(
+        &mut self,
+        img: &Tensor<u8>,
+        weights: &Tensor<u8>,
+        bias: &[i32],
+        relu: bool,
+    ) -> anyhow::Result<DepthwiseRun> {
+        anyhow::ensure!(
+            self.config.mode == AccumMode::I32,
+            "depthwise runs in production (I32) mode"
+        );
+        let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+        anyhow::ensure!(weights.shape() == [c, KH, KW], "weights (C,3,3)");
+        anyhow::ensure!(bias.len() == c, "bias (C,)");
+        anyhow::ensure!(h >= KH && w >= KW, "image at least 3x3");
+
+        let output = golden_depthwise3x3(img, weights, bias, relu);
+        let (oh, ow) = (h - KH + 1, w - KW + 1);
+        let windows = (oh * ow) as u64;
+
+        // The slowest core owns ceil(C/4) channels; one 8-cycle step per
+        // window per channel, single active PCORE.
+        let rounds = c.div_ceil(N_CORES) as u64;
+        let compute = rounds * windows * CYCLES_PER_PSUM_GROUP;
+        let in_bytes = (img.len() + weights.len() + 4 * bias.len()) as u64;
+        let dma_in = self.dma.transfer(in_bytes);
+        let dma_out = self.dma.transfer((output.len() * 4) as u64);
+        let mut total = compute + 5;
+        if self.config.count_dma {
+            total += dma_in + dma_out;
+        }
+        // Useful MACs / issued MAC slots: 1 of 4 PCOREs active.
+        let pcore_utilisation = 0.25;
+
+        Ok(DepthwiseRun {
+            output,
+            cycles: CycleStats {
+                compute,
+                load_visible: 5,
+                load_hidden: rounds * (oh as u64 * (5 + (ow as u64 - 1) * 2)),
+                dma_in,
+                dma_out,
+                total,
+            },
+            pcore_utilisation,
+        })
+    }
+}
+
+/// Express a 1×1 (pointwise) conv as the core's 3×3: weights at the
+/// centre tap, zeros elsewhere. Exact, at 1/9 MAC utilisation — but the
+/// 3×3 valid conv trims the border, so the caller must zero-pad the
+/// image by 1 first ([`pad1`]).
+pub fn pointwise_as_3x3(w1x1: &Tensor<u8>) -> Tensor<u8> {
+    let (k, c) = (w1x1.shape()[0], w1x1.shape()[1]);
+    let mut out = Tensor::<u8>::zeros(&[k, c, KH, KW]);
+    for ki in 0..k {
+        for ci in 0..c {
+            let v = w1x1.data()[ki * c + ci];
+            let idx = out.idx4(ki, ci, 1, 1); // centre tap
+            out.data_mut()[idx] = v;
+        }
+    }
+    out
+}
+
+/// Zero-pad an image by one pixel on every side.
+pub fn pad1(img: &Tensor<u8>) -> Tensor<u8> {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let mut out = Tensor::<u8>::zeros(&[c, h + 2, w + 2]);
+    for ci in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                let v = img.at3(ci, y, x);
+                out.set3(ci, y + 1, x + 1, v);
+            }
+        }
+    }
+    out
+}
+
+/// Golden pointwise (1×1) conv for the parity tests.
+pub fn golden_pointwise(img: &Tensor<u8>, w1x1: &Tensor<u8>, bias: &[i32]) -> Tensor<i32> {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let k = w1x1.shape()[0];
+    let mut out = Tensor::<i32>::zeros(&[k, h, w]);
+    for ki in 0..k {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = bias[ki];
+                for ci in 0..c {
+                    acc += img.at3(ci, y, x) as i32 * w1x1.data()[ki * c + ci] as i32;
+                }
+                out.set3(ki, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::IpCoreConfig;
+    use crate::model::LayerSpec;
+    use crate::util::prng::Prng;
+
+    fn dw_case(c: usize, h: usize, w: usize, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        (
+            Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256)),
+            Tensor::from_vec(&[c, 3, 3], rng.bytes_below(c * 9, 256)),
+            (0..c).map(|_| rng.range_i64(-20, 20) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn depthwise_matches_golden_and_cycle_model() {
+        let (img, wts, bias) = dw_case(8, 10, 10, 61);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_depthwise(&img, &wts, &bias, false).unwrap();
+        assert_eq!(
+            run.output.data(),
+            golden_depthwise3x3(&img, &wts, &bias, false).data()
+        );
+        // 8 channels over 4 cores = 2 rounds x 64 windows x 8 cycles.
+        assert_eq!(run.cycles.compute, 2 * 64 * 8);
+        assert!((run.pcore_utilisation - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depthwise_is_4x_less_efficient_than_standard_per_mac() {
+        // Same MAC count, standard vs depthwise: depthwise pays 4x cycles.
+        let (img, wts, bias) = dw_case(8, 10, 10, 62);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let dw = core.run_depthwise(&img, &wts, &bias, false).unwrap();
+        let dw_macs = (8 * 8 * 8 * 9) as f64;
+        let dw_macs_per_cycle = dw_macs / dw.cycles.compute as f64;
+        // Standard conv: 2 PSUMs/cycle x 9 MACs = 18 MACs/cycle.
+        assert!((dw_macs_per_cycle - 18.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pointwise_via_padded_3x3_is_exact() {
+        let mut rng = Prng::new(63);
+        let (c, h, w, k) = (8, 6, 7, 8);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let w1 = Tensor::from_vec(&[k, c], rng.bytes_below(k * c, 256));
+        let bias: Vec<i32> = (0..k).map(|_| rng.range_i64(-10, 10) as i32).collect();
+
+        let want = golden_pointwise(&img, &w1, &bias);
+
+        let padded = pad1(&img);
+        let w3 = pointwise_as_3x3(&w1);
+        let spec = LayerSpec::new(c, h + 2, w + 2, k);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &padded, &w3, &bias, None).unwrap();
+        assert_eq!(run.output.as_i32().data(), want.data());
+    }
+
+    #[test]
+    fn depthwise_relu_clamps() {
+        let (img, wts, _) = dw_case(4, 5, 5, 64);
+        let bias = vec![-1_000_000; 4];
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_depthwise(&img, &wts, &bias, true).unwrap();
+        assert!(run.output.data().iter().all(|&v| v >= 0));
+    }
+
+    #[test]
+    fn depthwise_rejects_wrap8() {
+        let (img, wts, bias) = dw_case(4, 5, 5, 65);
+        let mut core = IpCore::new(IpCoreConfig {
+            mode: AccumMode::Wrap8,
+            ..Default::default()
+        });
+        assert!(core.run_depthwise(&img, &wts, &bias, false).is_err());
+    }
+}

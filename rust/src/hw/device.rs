@@ -1,0 +1,117 @@
+//! FPGA device catalog for the synthesis-model (Table 1).
+//!
+//! Capacities are the public Xilinx figures; they are *verified against
+//! the paper*: Table 1's percentages back-solve to exactly these LUT/FF
+//! counts (5027/53200 = 9.45 %, 14522/141120 = 10.29 %, …), which both
+//! validates the catalog and pins down which dies the authors used.
+//!
+//! Timing coefficients are calibrated per device so the logic-depth
+//! model in [`super::resource`] lands on the paper's measured "Data
+//! Path Delay"-derived fmax (112 / 93 / 161 MHz). We cannot run Vivado;
+//! the coefficients make the model's structure (multiplier + 4-level
+//! adder tree + routing) explicit and transparent.
+
+/// FPGA technology family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    Series7,
+    UltraScalePlus,
+}
+
+/// One catalog entry.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub family: Family,
+    pub luts: u64,
+    pub ffs: u64,
+    /// 36Kb BRAM blocks (Zynq-7020: 140; ZU3EG: 216).
+    pub bram36: u64,
+    /// 8x8 multiplier logic delay, ns.
+    pub t_mult_ns: f64,
+    /// One adder-tree level delay, ns.
+    pub t_add_ns: f64,
+    /// Routing + clocking overhead on the critical path, ns.
+    pub t_route_ns: f64,
+}
+
+/// Pynq Z2's part (Table 1 row 1).
+pub const XC7Z020_CLG400: Device = Device {
+    name: "xc7z020clg400-1",
+    family: Family::Series7,
+    luts: 53_200,
+    ffs: 106_400,
+    bram36: 140,
+    t_mult_ns: 3.50,
+    t_add_ns: 1.00,
+    t_route_ns: 1.43,
+};
+
+/// Same die, larger package (Table 1 row 2) — the paper measures a
+/// noticeably slower data path here; the extra routing absorbs it.
+pub const XC7Z020_CLG484: Device = Device {
+    name: "xc7z020clg484-1",
+    family: Family::Series7,
+    luts: 53_200,
+    ffs: 106_400,
+    bram36: 140,
+    t_mult_ns: 3.50,
+    t_add_ns: 1.00,
+    t_route_ns: 3.25,
+};
+
+/// Zynq UltraScale+ ZU3EG (Table 1 row 3).
+pub const XZCU3EG_SBVA484: Device = Device {
+    name: "xzcu3eg-sbva484-1-i",
+    family: Family::UltraScalePlus,
+    luts: 70_560,
+    ffs: 141_120,
+    bram36: 216,
+    t_mult_ns: 2.20,
+    t_add_ns: 0.65,
+    t_route_ns: 1.41,
+};
+
+/// The three devices of Table 1, in the paper's order.
+pub const TABLE1_DEVICES: [Device; 3] = [XC7Z020_CLG400, XC7Z020_CLG484, XZCU3EG_SBVA484];
+
+impl Device {
+    /// Critical path: one 8x8 multiply, then the 4-level adder tree
+    /// (⌈log2 9⌉ = 4) of a PCORE, plus routing.
+    pub fn critical_path_ns(&self) -> f64 {
+        self.t_mult_ns + 4.0 * self.t_add_ns + self.t_route_ns
+    }
+
+    /// Max frequency from the data-path delay, MHz.
+    pub fn fmax_mhz(&self) -> f64 {
+        1000.0 / self.critical_path_ns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_backsolve_table1_percentages() {
+        // 5027 LUTs on clg400 must print as 9.45%.
+        assert!((5027.0 / XC7Z020_CLG400.luts as f64 * 100.0 - 9.45).abs() < 0.01);
+        assert!((4959.0 / XC7Z020_CLG400.ffs as f64 * 100.0 - 4.66).abs() < 0.01);
+        assert!((5243.0 / XC7Z020_CLG484.luts as f64 * 100.0 - 9.86).abs() < 0.01);
+        assert!((11917.0 / XZCU3EG_SBVA484.luts as f64 * 100.0 - 16.89).abs() < 0.01);
+        assert!((14522.0 / XZCU3EG_SBVA484.ffs as f64 * 100.0 - 10.29).abs() < 0.01);
+    }
+
+    #[test]
+    fn fmax_matches_paper_within_one_mhz() {
+        assert!((XC7Z020_CLG400.fmax_mhz() - 112.0).abs() < 1.0);
+        assert!((XC7Z020_CLG484.fmax_mhz() - 93.0).abs() < 1.0);
+        assert!((XZCU3EG_SBVA484.fmax_mhz() - 161.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn same_die_same_capacity() {
+        assert_eq!(XC7Z020_CLG400.luts, XC7Z020_CLG484.luts);
+        assert_eq!(XC7Z020_CLG400.ffs, XC7Z020_CLG484.ffs);
+    }
+}

@@ -1,0 +1,147 @@
+//! DMA / AXI4 transfer model (§3): the PS hands the IP core its inputs
+//! through a DMA engine over AXI4; results stream back the same way.
+//!
+//! The model is a burst-transfer cost function: AXI4 moves one beat of
+//! `bus_bytes` per cycle inside a burst, bursts are at most 256 beats,
+//! and each burst pays an arbitration/address-phase setup cost. This is
+//! enough to reproduce the load/compute pipeline trade-off and to run
+//! the DMA-bandwidth ablation; it does not model interconnect
+//! contention (one IP core == one AXI master, as in the paper).
+
+/// AXI4 burst parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DmaConfig {
+    /// Data bus width in bytes per beat (Zynq PS-PL HP ports: 8 bytes).
+    pub bus_bytes: u64,
+    /// Max beats per burst (AXI4: 256).
+    pub burst_beats: u64,
+    /// Setup cycles per burst (address phase + arbitration).
+    pub burst_setup_cycles: u64,
+}
+
+/// Cumulative transfer statistics for one engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DmaStats {
+    pub bytes: u64,
+    pub bursts: u64,
+    pub cycles: u64,
+}
+
+/// The DMA engine: pure cost model + stat accumulation.
+#[derive(Clone, Debug, Default)]
+pub struct Dma {
+    pub config: DmaConfig,
+    pub stats: DmaStats,
+}
+
+impl Default for DmaConfig {
+    fn default() -> Self {
+        DmaConfig {
+            bus_bytes: 8,
+            burst_beats: 256,
+            burst_setup_cycles: 4,
+        }
+    }
+}
+
+impl Dma {
+    pub fn new(config: DmaConfig) -> Self {
+        Dma {
+            config,
+            stats: DmaStats::default(),
+        }
+    }
+
+    /// Cycles to move `bytes` in one logical transfer; accumulates stats.
+    pub fn transfer(&mut self, bytes: u64) -> u64 {
+        let c = self.config.cycles_for(bytes);
+        let beats = bytes.div_ceil(self.config.bus_bytes.max(1));
+        self.stats.bytes += bytes;
+        self.stats.bursts += beats.div_ceil(self.config.burst_beats.max(1));
+        self.stats.cycles += c;
+        c
+    }
+}
+
+impl DmaConfig {
+    /// Pure cost: cycles to move `bytes`.
+    pub fn cycles_for(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let beats = bytes.div_ceil(self.bus_bytes.max(1));
+        let bursts = beats.div_ceil(self.burst_beats.max(1));
+        bursts * self.burst_setup_cycles + beats
+    }
+
+    /// Effective bandwidth in bytes/cycle for a given transfer size
+    /// (asymptotically `bus_bytes`, less for short transfers).
+    pub fn effective_bandwidth(&self, bytes: u64) -> f64 {
+        let cycles = self.cycles_for(bytes);
+        if cycles == 0 {
+            0.0
+        } else {
+            bytes as f64 / cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        assert_eq!(DmaConfig::default().cycles_for(0), 0);
+    }
+
+    #[test]
+    fn single_burst_cost() {
+        let c = DmaConfig {
+            bus_bytes: 4,
+            burst_beats: 256,
+            burst_setup_cycles: 4,
+        };
+        // 100 bytes = 25 beats, 1 burst -> 4 + 25.
+        assert_eq!(c.cycles_for(100), 29);
+    }
+
+    #[test]
+    fn multi_burst_pays_setup_per_burst() {
+        let c = DmaConfig {
+            bus_bytes: 1,
+            burst_beats: 16,
+            burst_setup_cycles: 10,
+        };
+        // 32 bytes = 32 beats = 2 bursts -> 20 + 32.
+        assert_eq!(c.cycles_for(32), 52);
+    }
+
+    #[test]
+    fn bandwidth_approaches_bus_width() {
+        let c = DmaConfig::default();
+        let bw = c.effective_bandwidth(1 << 20);
+        assert!(bw > 7.8 && bw <= 8.0, "{bw}");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut dma = Dma::new(DmaConfig::default());
+        dma.transfer(64);
+        dma.transfer(64);
+        assert_eq!(dma.stats.bytes, 128);
+        assert_eq!(dma.stats.bursts, 2);
+        assert!(dma.stats.cycles >= 16);
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let c = DmaConfig::default();
+        let mut prev = 0;
+        for bytes in (0..10_000).step_by(173) {
+            let cur = c.cycles_for(bytes);
+            assert!(cur >= prev);
+            prev = cur;
+        }
+    }
+}

@@ -1,0 +1,406 @@
+//! The IP core (§3, §4): four computing cores over quartered channels,
+//! the BRAM sets, the DMA engine and the controller FSM, composed into
+//! `run_layer` — one invocation processes one convolutional layer,
+//! exactly the unit of work the paper's core accepts.
+//!
+//! Cycle accounting reproduces §5.2: with the two-stage pipeline on,
+//! a layer's compute time is `windows × channels/4 × kernel-groups × 8`
+//! cycles (loads hidden under compute), which for the 224×224×8 ⊛
+//! 8×3×3×8 workload is exactly 1,577,088 cycles — 0.01408 s at the
+//! Pynq Z2's 112 MHz, i.e. 0.224 GOPS in the paper's PSUMs/s accounting.
+
+use super::bram::{ImageBrams, OutputBrams, WeightBrams};
+use super::compute_core::{ComputeCore, PsumWord, SweepCycles};
+use super::controller::{Controller, Phase};
+use super::dma::{Dma, DmaConfig, DmaStats};
+use super::pipeline;
+use super::waveform::WaveTrace;
+use super::AccumMode;
+use crate::model::{LayerSpec, Tensor};
+use crate::paper::{CYCLES_PER_PSUM_GROUP, FREQ_Z2_HZ, N_CORES, N_PCORES};
+
+/// IP core configuration (PS-programmable knobs + model options).
+#[derive(Clone, Copy, Debug)]
+pub struct IpCoreConfig {
+    pub freq_hz: u64,
+    pub mode: AccumMode,
+    /// Two-stage load/compute pipeline (§4.2) — `false` is the ablation.
+    pub pipelined: bool,
+    pub dma: DmaConfig,
+    /// Count DMA phases in reported layer latency (the paper's §5.2
+    /// throughput counts compute only; end-to-end serving counts all).
+    pub count_dma: bool,
+}
+
+impl Default for IpCoreConfig {
+    fn default() -> Self {
+        IpCoreConfig {
+            freq_hz: FREQ_Z2_HZ,
+            mode: AccumMode::I32,
+            pipelined: true,
+            dma: DmaConfig::default(),
+            count_dma: false,
+        }
+    }
+}
+
+/// Layer output in the configured accumulator width.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerOutput {
+    Wrap8(Tensor<u8>),
+    I32(Tensor<i32>),
+}
+
+impl LayerOutput {
+    pub fn as_i32(&self) -> Tensor<i32> {
+        match self {
+            LayerOutput::I32(t) => t.clone(),
+            LayerOutput::Wrap8(t) => t.map(|v| v as i32),
+        }
+    }
+}
+
+/// Everything one `run_layer` produces.
+#[derive(Clone, Debug)]
+pub struct LayerRun {
+    pub output: LayerOutput,
+    pub cycles: CycleStats,
+    pub dma: DmaStats,
+    /// Controller phase log (cycle breakdown for EXPERIMENTS.md).
+    pub phases: Vec<(Phase, u64)>,
+}
+
+/// Cycle breakdown of one layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// Stage-2 compute: the §5.2 number (windows × C/4 × K/4 × 8).
+    pub compute: u64,
+    /// Pipeline fill / stalls (pipelined) or full load time (serial).
+    pub load_visible: u64,
+    /// Stage-1 cycles that the pipeline hid under compute.
+    pub load_hidden: u64,
+    pub dma_in: u64,
+    pub dma_out: u64,
+    /// Latency as configured (`count_dma` decides whether DMA is in).
+    pub total: u64,
+}
+
+impl CycleStats {
+    pub fn seconds(&self, freq_hz: u64) -> f64 {
+        self.total as f64 / freq_hz as f64
+    }
+}
+
+/// Throughput in the paper's accounting: PSUMs per second / 1e9.
+pub fn gops_psum(psums: u64, cycles: u64, freq_hz: u64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    let secs = cycles as f64 / freq_hz as f64;
+    psums as f64 / secs / 1e9
+}
+
+/// Throughput counting real arithmetic: 9 MACs × 2 ops per PSUM.
+pub fn gops_mac(psums: u64, cycles: u64, freq_hz: u64) -> f64 {
+    gops_psum(psums, cycles, freq_hz) * 18.0
+}
+
+/// The IP core.
+#[derive(Clone, Debug)]
+pub struct IpCore {
+    pub config: IpCoreConfig,
+    pub cores: Vec<ComputeCore>,
+    pub dma: Dma,
+    pub controller: Controller,
+}
+
+impl IpCore {
+    pub fn new(config: IpCoreConfig) -> Self {
+        IpCore {
+            config,
+            cores: (0..N_CORES).map(ComputeCore::new).collect(),
+            dma: Dma::new(config.dma),
+            controller: Controller::new(),
+        }
+    }
+
+    /// Process one convolutional layer. `bias` is always i32; Wrap8 mode
+    /// takes its low byte (the PS writes the same bytes either way).
+    ///
+    /// Set `trace` to record the Fig. 6 signals of computing core 0.
+    pub fn run_layer(
+        &mut self,
+        spec: &LayerSpec,
+        img: &Tensor<u8>,
+        weights: &Tensor<u8>,
+        bias: &[i32],
+        mut trace: Option<&mut WaveTrace>,
+    ) -> anyhow::Result<LayerRun> {
+        anyhow::ensure!(
+            spec.paper_compatible(),
+            "layer {:?} violates §4.1 (K % 4 != 0 or image smaller than kernel)",
+            spec
+        );
+        anyhow::ensure!(
+            img.shape() == [spec.c, spec.h, spec.w],
+            "image shape {:?} != spec {:?}",
+            img.shape(),
+            spec
+        );
+        anyhow::ensure!(
+            weights.shape() == [spec.k, spec.c, 3, 3],
+            "weight shape {:?} != spec {:?}",
+            weights.shape(),
+            spec
+        );
+        anyhow::ensure!(bias.len() == spec.k, "bias len {} != K {}", bias.len(), spec.k);
+
+        self.controller = Controller::new();
+        self.controller.advance(Phase::Configure, 2)?;
+
+        // --- DMA in: image + weights (+ bias preload through the PS path).
+        let in_bytes =
+            (img.len() + weights.len()) as u64 + (bias.len() * std::mem::size_of::<i32>()) as u64;
+        let dma_in = self.dma.transfer(in_bytes);
+        self.controller.advance(Phase::DmaIn, dma_in)?;
+
+        let mut img_brams = ImageBrams::new(spec.c, spec.h, spec.w);
+        img_brams.load_image(img);
+        let mut wgt_brams = WeightBrams::new(spec.k, spec.c);
+        wgt_brams.load_weights(weights);
+
+        let (oh, ow) = (spec.conv_oh(), spec.conv_ow());
+        let (output, sweeps) = match self.config.mode {
+            AccumMode::Wrap8 => {
+                let bias8: Vec<u8> = bias.iter().map(|&b| (b & 0xFF) as u8).collect();
+                let mut out = OutputBrams::<u8>::new(spec.k, oh, ow);
+                out.preload_bias(&bias8);
+                let sweeps = self.run_sweeps(spec, &mut img_brams, &mut wgt_brams, &mut out, &mut trace);
+                (LayerOutput::Wrap8(out.readout()), sweeps)
+            }
+            AccumMode::I32 => {
+                let mut out = OutputBrams::<i32>::new(spec.k, oh, ow);
+                out.preload_bias(bias);
+                let sweeps = self.run_sweeps(spec, &mut img_brams, &mut wgt_brams, &mut out, &mut trace);
+                (LayerOutput::I32(out.readout()), sweeps)
+            }
+        };
+
+        // ReLU is not in the paper's core; the PS (or next layer's
+        // requant) applies it. LayerOutput stays raw here — the
+        // coordinator layer owns activation+requant (model::quant).
+
+        // --- cycle roll-up. The 4 computing cores run in lock-step
+        // parallel; each core's sweep count is C_quarter × K-groups, and
+        // the slowest core (largest channel quarter) sets the pace.
+        let compute = sweeps.compute;
+        let load_total = sweeps.image_load + sweeps.weight_load;
+        let (load_visible, load_hidden) = if self.config.pipelined {
+            // Steady-state loads (<= 8 cycles) hide under compute; only
+            // the first fetch of the first window is exposed as fill.
+            let fill = pipeline::pipelined_closed_form(0, 5, CYCLES_PER_PSUM_GROUP) + 5;
+            (fill, load_total.saturating_sub(5))
+        } else {
+            (load_total, 0)
+        };
+        self.controller
+            .advance(Phase::Compute, compute + load_visible)?;
+
+        let out_words = spec.k * oh * ow;
+        let word_bytes = match self.config.mode {
+            AccumMode::Wrap8 => 1,
+            AccumMode::I32 => 4,
+        };
+        let dma_out = self.dma.transfer((out_words * word_bytes) as u64);
+        self.controller.advance(Phase::DmaOut, dma_out)?;
+        self.controller.advance(Phase::Done, 0)?;
+
+        let mut total = compute + load_visible;
+        if self.config.count_dma {
+            total += dma_in + dma_out;
+        }
+        Ok(LayerRun {
+            output,
+            cycles: CycleStats {
+                compute,
+                load_visible,
+                load_hidden,
+                dma_in,
+                dma_out,
+                total,
+            },
+            dma: self.dma.stats,
+            phases: self.controller.log().to_vec(),
+        })
+    }
+
+    /// All (kernel-group × channel) sweeps. Core `i` owns channel
+    /// quarter `i`; cores run in parallel, so the aggregate cycle figure
+    /// is the *maximum* per-core time, while PSUM counts sum.
+    fn run_sweeps<T: PsumWord>(
+        &mut self,
+        spec: &LayerSpec,
+        img: &mut ImageBrams,
+        wgt: &mut WeightBrams,
+        out: &mut OutputBrams<T>,
+        trace: &mut Option<&mut WaveTrace>,
+    ) -> SweepCycles {
+        let groups = spec.k / N_PCORES;
+        let mut per_core = vec![SweepCycles::default(); N_CORES];
+        for (core_idx, core) in self.cores.iter_mut().enumerate() {
+            let (start, len) = super::bram::quarter_span(spec.c, core_idx);
+            for g in 0..groups {
+                for ch in start..start + len {
+                    let tr = if core_idx == 0 {
+                        trace.as_deref_mut()
+                    } else {
+                        None
+                    };
+                    let s = core.sweep(img, wgt, out, g, ch, tr);
+                    let agg = &mut per_core[core_idx];
+                    agg.compute += s.compute;
+                    agg.image_load += s.image_load;
+                    agg.weight_load += s.weight_load;
+                    agg.windows += s.windows;
+                }
+            }
+        }
+        // Slowest core paces the layer (quarters can be uneven when C%4!=0).
+        per_core
+            .into_iter()
+            .max_by_key(|s| s.compute + s.image_load + s.weight_load)
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::golden;
+    use crate::util::prng::Prng;
+
+    fn case(c: usize, h: usize, w: usize, k: usize, seed: u64) -> (LayerSpec, Tensor<u8>, Tensor<u8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        let spec = LayerSpec::new(c, h, w, k);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let wts = Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256));
+        let bias: Vec<i32> = (0..k).map(|_| rng.range_i64(0, 100) as i32).collect();
+        (spec, img, wts, bias)
+    }
+
+    #[test]
+    fn i32_layer_matches_golden() {
+        let (spec, img, wts, bias) = case(8, 10, 12, 8, 21);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+        assert_eq!(run.output.as_i32().data(), want.data());
+    }
+
+    #[test]
+    fn wrap8_layer_matches_golden() {
+        let (spec, img, wts, bias) = case(4, 7, 9, 4, 22);
+        let bias8: Vec<u8> = bias.iter().map(|&b| (b & 0xFF) as u8).collect();
+        let mut core = IpCore::new(IpCoreConfig {
+            mode: AccumMode::Wrap8,
+            ..Default::default()
+        });
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let want = golden::conv3x3_wrap8(&img, &wts, &bias8);
+        match run.output {
+            LayerOutput::Wrap8(t) => assert_eq!(t.data(), want.data()),
+            _ => panic!("expected wrap8 output"),
+        }
+    }
+
+    #[test]
+    fn odd_channel_count_still_correct() {
+        // C=3: the paper's first-layer exception (quarters are 1,1,1,0).
+        let (spec, img, wts, bias) = case(3, 8, 8, 4, 23);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+        assert_eq!(run.output.as_i32().data(), want.data());
+    }
+
+    #[test]
+    fn s52_cycle_count_is_papers() {
+        // The headline: 224x224x8 (x) 8 kernels -> 1,577,088 compute cycles.
+        let (spec, img, wts, bias) = case(8, 224, 224, 8, 24);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        assert_eq!(run.cycles.compute, 1_577_088);
+        // 0.01408 s at 112 MHz.
+        let secs = run.cycles.compute as f64 / FREQ_Z2_HZ as f64;
+        assert!((secs - 0.01408).abs() < 1e-5, "{secs}");
+        // 0.224 GOPS in the paper's PSUM accounting.
+        let gops = gops_psum(spec.psums(), run.cycles.compute, FREQ_Z2_HZ);
+        assert!((gops - 0.224).abs() < 0.001, "{gops}");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let (spec, img, wts, bias) = case(4, 6, 6, 4, 25);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let bad_spec = LayerSpec::new(4, 6, 6, 6); // K%4 != 0
+        assert!(core.run_layer(&bad_spec, &img, &wts, &bias, None).is_err());
+        let mut short_bias = bias.clone();
+        short_bias.pop();
+        assert!(core.run_layer(&spec, &img, &wts, &short_bias, None).is_err());
+    }
+
+    #[test]
+    fn pipeline_ablation_is_slower_serial() {
+        let (spec, img, wts, bias) = case(8, 16, 16, 8, 26);
+        let mut on = IpCore::new(IpCoreConfig::default());
+        let mut off = IpCore::new(IpCoreConfig {
+            pipelined: false,
+            ..Default::default()
+        });
+        let run_on = on.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let run_off = off.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        assert!(run_off.cycles.total > run_on.cycles.total);
+        // Same math either way.
+        assert_eq!(run_on.output.as_i32().data(), run_off.output.as_i32().data());
+        // Pipelined mode hides what serial mode exposes.
+        assert_eq!(
+            run_on.cycles.load_hidden + run_on.cycles.load_visible,
+            run_off.cycles.load_visible
+        );
+    }
+
+    #[test]
+    fn dma_accounting_toggles_total() {
+        let (spec, img, wts, bias) = case(4, 8, 8, 4, 27);
+        let mut without = IpCore::new(IpCoreConfig::default());
+        let mut with = IpCore::new(IpCoreConfig {
+            count_dma: true,
+            ..Default::default()
+        });
+        let a = without.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let b = with.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        assert_eq!(
+            b.cycles.total,
+            a.cycles.total + b.cycles.dma_in + b.cycles.dma_out
+        );
+    }
+
+    #[test]
+    fn phase_log_is_ordered() {
+        let (spec, img, wts, bias) = case(4, 6, 6, 4, 28);
+        let mut core = IpCore::new(IpCoreConfig::default());
+        let run = core.run_layer(&spec, &img, &wts, &bias, None).unwrap();
+        let phases: Vec<Phase> = run.phases.iter().map(|(p, _)| *p).collect();
+        assert_eq!(
+            phases,
+            vec![Phase::Configure, Phase::DmaIn, Phase::Compute, Phase::DmaOut, Phase::Done]
+        );
+    }
+
+    #[test]
+    fn gops_accounting() {
+        // 2 PSUMs per cycle at 112 MHz = 0.224 G PSUM/s.
+        assert!((gops_psum(2 * 112_000_000, 112_000_000, 112_000_000) - 0.224).abs() < 1e-9);
+        assert!((gops_mac(100, 100, 1_000_000_000) - 18.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Intermediate loaders (§4.2): the stage-1 side of the two-stage
+//! pipeline. The **Weight Loader** fills the four PCOREs' register files
+//! from the weight BMGs (once per kernel-group × channel — weight
+//! stationary); the **Image Loader** fetches 3×3 windows from the image
+//! BMG and broadcasts them to all four PCOREs, reusing the overlapping
+//! two columns when the window slides by one.
+//!
+//! The loaders also own the *load-cycle accounting* that the pipeline
+//! model needs: a dual-port BMG serves 2 reads per cycle, so a fresh
+//! 9-value window costs ⌈9/2⌉ = 5 cycles and a slide costs ⌈3/2⌉ = 2.
+
+use super::bram::{ImageBrams, WeightBrams};
+
+/// Cycles to fetch through one dual-port BMG.
+#[inline]
+pub fn fetch_cycles(values: u64) -> u64 {
+    values.div_ceil(2)
+}
+
+/// Image Loader: window register + slide-reuse fetch.
+#[derive(Clone, Debug, Default)]
+pub struct ImageLoader {
+    window: [u8; 9],
+    /// (channel, row, col) of the current window, if any.
+    pos: Option<(usize, usize, usize)>,
+    /// Load cycles spent (stage-1 time, to be overlapped by pipeline).
+    pub load_cycles: u64,
+    /// Values actually fetched from BRAM (reuse metric).
+    pub fetched: u64,
+}
+
+impl ImageLoader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn window(&self) -> [u8; 9] {
+        self.window
+    }
+
+    /// Position the window at (channel, y, x), fetching only what the
+    /// slide-by-one reuse cannot supply.
+    pub fn fetch(&mut self, brams: &mut ImageBrams, ch: usize, y: usize, x: usize) -> [u8; 9] {
+        let contiguous = matches!(self.pos, Some((c0, y0, x0)) if c0 == ch && y0 == y && x == x0 + 1);
+        if contiguous {
+            // Slide right: shift columns left, fetch the new right column.
+            for r in 0..3 {
+                self.window[r * 3] = self.window[r * 3 + 1];
+                self.window[r * 3 + 1] = self.window[r * 3 + 2];
+                self.window[r * 3 + 2] = brams.read(ch, y + r, x + 2);
+            }
+            self.fetched += 3;
+            self.load_cycles += fetch_cycles(3);
+        } else {
+            for r in 0..3 {
+                for c in 0..3 {
+                    self.window[r * 3 + c] = brams.read(ch, y + r, x + c);
+                }
+            }
+            self.fetched += 9;
+            self.load_cycles += fetch_cycles(9);
+        }
+        self.pos = Some((ch, y, x));
+        self.window
+    }
+
+    /// Fast-path bulk accounting: charge the closed-form fetch totals of
+    /// a whole (group, channel) sweep in one update (what the per-window
+    /// `fetch` loop would have accumulated: per output row one fresh
+    /// window, `ow-1` slides). Resets window position — a subsequent
+    /// traced fetch starts fresh.
+    pub fn add_sweep_bulk(&mut self, oh: usize, ow: usize) -> (u64, u64) {
+        let fetched = (oh * (9 + (ow - 1) * 3)) as u64;
+        let cycles = (oh) as u64 * (fetch_cycles(9) + (ow as u64 - 1) * fetch_cycles(3));
+        self.fetched += fetched;
+        self.load_cycles += cycles;
+        self.pos = None;
+        (fetched, cycles)
+    }
+}
+
+/// Weight Loader: stages one kernel-group × channel (4 × 9 weights) from
+/// the four interleaved kernel BMGs in parallel.
+#[derive(Clone, Debug, Default)]
+pub struct WeightLoader {
+    current: [[u8; 9]; 4],
+    pub load_cycles: u64,
+    pub loads: u64,
+}
+
+impl WeightLoader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the 4 kernels of `group` (kernels `4*group + j`) at channel
+    /// `ch`. The four kernel BMGs stream in parallel, so the cost is one
+    /// BMG's 9 values, not 36.
+    pub fn fetch_group(
+        &mut self,
+        brams: &mut WeightBrams,
+        group: usize,
+        ch: usize,
+    ) -> [[u8; 9]; 4] {
+        for j in 0..4 {
+            self.current[j] = brams.read_kernel_channel(4 * group + j, ch);
+        }
+        self.loads += 1;
+        self.load_cycles += fetch_cycles(9);
+        self.current
+    }
+
+    pub fn current(&self) -> [[u8; 9]; 4] {
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+    use crate::util::prng::Prng;
+
+    fn image(c: usize, h: usize, w: usize, seed: u64) -> (Tensor<u8>, ImageBrams) {
+        let mut rng = Prng::new(seed);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let mut brams = ImageBrams::new(c, h, w);
+        brams.load_image(&img);
+        (img, brams)
+    }
+
+    #[test]
+    fn fetch_cycle_costs() {
+        assert_eq!(fetch_cycles(9), 5);
+        assert_eq!(fetch_cycles(3), 2);
+        assert_eq!(fetch_cycles(0), 0);
+    }
+
+    #[test]
+    fn window_contents_match_image() {
+        let (img, mut brams) = image(4, 6, 6, 3);
+        let mut ld = ImageLoader::new();
+        let win = ld.fetch(&mut brams, 2, 1, 2);
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(win[r * 3 + c], img.at3(2, 1 + r, 2 + c));
+            }
+        }
+    }
+
+    #[test]
+    fn slide_reuses_two_columns() {
+        let (img, mut brams) = image(1, 5, 8, 4);
+        let mut ld = ImageLoader::new();
+        ld.fetch(&mut brams, 0, 1, 0);
+        let before = ld.fetched;
+        let win = ld.fetch(&mut brams, 0, 1, 1); // slide right by one
+        assert_eq!(ld.fetched - before, 3, "only the new column is fetched");
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(win[r * 3 + c], img.at3(0, 1 + r, 1 + c));
+            }
+        }
+    }
+
+    #[test]
+    fn row_change_is_a_full_fetch() {
+        let (_, mut brams) = image(1, 6, 6, 5);
+        let mut ld = ImageLoader::new();
+        ld.fetch(&mut brams, 0, 0, 3);
+        let before = ld.fetched;
+        ld.fetch(&mut brams, 0, 1, 0);
+        assert_eq!(ld.fetched - before, 9);
+    }
+
+    #[test]
+    fn weight_loader_stages_a_group() {
+        let mut rng = Prng::new(6);
+        let w = Tensor::from_vec(&[8, 4, 3, 3], rng.bytes_below(8 * 4 * 9, 256));
+        let mut brams = WeightBrams::new(8, 4);
+        brams.load_weights(&w);
+        let mut wl = WeightLoader::new();
+        let got = wl.fetch_group(&mut brams, 1, 2); // kernels 4..8, channel 2
+        for j in 0..4 {
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    assert_eq!(got[j][dy * 3 + dx], w.at4(4 + j, 2, dy, dx));
+                }
+            }
+        }
+        assert_eq!(wl.load_cycles, fetch_cycles(9));
+    }
+}

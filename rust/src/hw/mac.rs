@@ -1,0 +1,77 @@
+//! MAC (Multiply-and-ACcumulate) primitives — §4.2: "Each [PCORE]
+//! contains a set of MAC units and adder modules to perform a
+//! weighted-sum operation."
+//!
+//! Both accumulator widths are provided; the 8-bit wrapping form is what
+//! the synthesised core computes (Fig. 6), the 32-bit form is the
+//! production configuration.
+
+/// One 8-bit wrapping multiply-accumulate step: `acc + a*b (mod 256)`.
+#[inline(always)]
+pub fn mac_wrap8(acc: u8, a: u8, b: u8) -> u8 {
+    acc.wrapping_add(a.wrapping_mul(b))
+}
+
+/// One wide multiply-accumulate step over u8 operands.
+#[inline(always)]
+pub fn mac_i32(acc: i32, a: u8, b: u8) -> i32 {
+    acc + (a as i32) * (b as i32)
+}
+
+/// 9-tap weighted sum with 8-bit wrap — one PCORE dot product.
+#[inline]
+pub fn dot9_wrap8(window: &[u8; 9], weights: &[u8; 9]) -> u8 {
+    let mut acc = 0u8;
+    for i in 0..9 {
+        acc = mac_wrap8(acc, window[i], weights[i]);
+    }
+    acc
+}
+
+/// 9-tap weighted sum, wide accumulation — one PCORE dot product.
+#[inline]
+pub fn dot9_i32(window: &[u8; 9], weights: &[u8; 9]) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..9 {
+        acc = mac_i32(acc, window[i], weights[i]);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap8_wraps() {
+        assert_eq!(mac_wrap8(250, 2, 5), 4); // 250 + 10 = 260 -> 4
+        assert_eq!(mac_wrap8(0, 16, 16), 0); // 256 -> 0
+        assert_eq!(mac_wrap8(1, 255, 255), 2); // 1 + 65025 mod 256 = 1+1
+    }
+
+    #[test]
+    fn i32_never_wraps_for_u8_operands() {
+        // 9 * 255 * 255 * many channels stays far inside i32.
+        let mut acc = 0i32;
+        for _ in 0..9 * 1024 {
+            acc = mac_i32(acc, 255, 255);
+        }
+        assert_eq!(acc, 9 * 1024 * 255 * 255);
+    }
+
+    #[test]
+    fn dot9_matches_fig6_first_psum() {
+        // Fig. 6 window 1: weights 01..09 over the ramp window -> 0x9b.
+        let w: [u8; 9] = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let win: [u8; 9] = [0x01, 0x02, 0x03, 0x06, 0x07, 0x08, 0x0b, 0x0c, 0x0d];
+        assert_eq!(dot9_wrap8(&win, &w), 0x9b);
+        assert_eq!(dot9_i32(&win, &w) % 256, 0x9b);
+    }
+
+    #[test]
+    fn dot9_wide_equals_wrap_mod_256() {
+        let w: [u8; 9] = [17, 250, 3, 91, 5, 66, 7, 128, 9];
+        let win: [u8; 9] = [200, 2, 31, 6, 77, 8, 111, 12, 13];
+        assert_eq!((dot9_i32(&win, &w) % 256) as u8, dot9_wrap8(&win, &w));
+    }
+}

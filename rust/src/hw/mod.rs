@@ -1,0 +1,47 @@
+//! Cycle-accurate simulator of the paper's FPGA IP core.
+//!
+//! This is the hardware substitution (DESIGN.md §2): no FPGA is
+//! available, so the Verilog design is modelled at the level its claims
+//! live at — *exact PSUM schedules* (Fig. 6) and *exact cycle counts ×
+//! frequency* (§5.2), plus an analytic resource model for Table 1.
+//!
+//! Module map (paper section → module):
+//! * §4.1 BRAM organisation → [`bram`] (BMG model, image/weight/output
+//!   sets with the 4-way channel and interleaved kernel split)
+//! * §3 DMA / AXI4 → [`dma`]
+//! * §4.2 PCORE (9 MACs + adder tree) → [`mac`], [`pcore`]
+//! * §4.2 loaders (weight-stationary) → [`loader`]
+//! * §4.2 multi-kernel computing core → [`compute_core`]
+//! * §4.2 multi-channel architecture + controller → [`controller`],
+//!   [`ip_core`]
+//! * §4.2 pipeline → [`pipeline`]
+//! * Fig. 6 → [`waveform`] (signal tracing + VCD export)
+//! * Table 1 → [`device`], [`resource`]
+
+pub mod bram;
+pub mod capacity;
+pub mod compute_core;
+pub mod controller;
+pub mod depthwise;
+pub mod device;
+pub mod dma;
+pub mod ip_core;
+pub mod loader;
+pub mod mac;
+pub mod pcore;
+pub mod pipeline;
+pub mod power;
+pub mod resource;
+pub mod stepped;
+pub mod waveform;
+
+pub use ip_core::{IpCore, IpCoreConfig, LayerRun};
+
+/// Accumulator semantics (DESIGN.md §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccumMode {
+    /// Bit-exact Fig. 6 silicon: PSUMs wrap modulo 256.
+    Wrap8,
+    /// Production mode: 32-bit accumulation of u8 products.
+    I32,
+}

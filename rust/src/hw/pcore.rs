@@ -1,0 +1,101 @@
+//! PCORE (§4.2): one partial-sum engine — 9 MAC units + adder tree.
+//!
+//! A PCORE holds the 9 weights of *one channel of one kernel* (delivered
+//! by the Weight Loader, where they stay resident — weight stationary)
+//! and, each compute step, consumes the 9-value image window the Image
+//! Loader broadcasts to all four PCOREs of its computing core, emitting
+//! one PSUM.
+
+use super::mac::{dot9_i32, dot9_wrap8};
+use super::AccumMode;
+
+/// PSUM value in either accumulator width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Psum {
+    Wrap8(u8),
+    I32(i32),
+}
+
+impl Psum {
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Psum::Wrap8(v) => v as i64,
+            Psum::I32(v) => v as i64,
+        }
+    }
+}
+
+/// One PCORE: weight register file + the MAC/adder datapath.
+#[derive(Clone, Debug)]
+pub struct PCore {
+    /// Resident weights (one kernel-channel, row-major 3x3).
+    weights: [u8; 9],
+    /// PSUMs produced (per-layer stat).
+    pub psum_count: u64,
+}
+
+impl Default for PCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PCore {
+    pub fn new() -> Self {
+        PCore {
+            weights: [0; 9],
+            psum_count: 0,
+        }
+    }
+
+    /// Weight Loader writes a new kernel-channel into the register file.
+    pub fn load_weights(&mut self, w: [u8; 9]) {
+        self.weights = w;
+    }
+
+    pub fn weights(&self) -> [u8; 9] {
+        self.weights
+    }
+
+    /// One compute step: 9 MACs + adder tree over the broadcast window.
+    #[inline]
+    pub fn compute(&mut self, window: &[u8; 9], mode: AccumMode) -> Psum {
+        self.psum_count += 1;
+        match mode {
+            AccumMode::Wrap8 => Psum::Wrap8(dot9_wrap8(window, &self.weights)),
+            AccumMode::I32 => Psum::I32(dot9_i32(window, &self.weights)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_stationarity() {
+        let mut p = PCore::new();
+        p.load_weights([1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let w_before = p.weights();
+        let _ = p.compute(&[9; 9], AccumMode::I32);
+        let _ = p.compute(&[3; 9], AccumMode::Wrap8);
+        assert_eq!(p.weights(), w_before, "compute must not disturb weights");
+        assert_eq!(p.psum_count, 2);
+    }
+
+    #[test]
+    fn computes_fig6_psum() {
+        let mut p = PCore::new();
+        p.load_weights([0x91, 0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98, 0x99]);
+        let win = [0x01, 0x02, 0x03, 0x06, 0x07, 0x08, 0x0b, 0x0c, 0x0d];
+        assert_eq!(p.compute(&win, AccumMode::Wrap8), Psum::Wrap8(0x0b));
+    }
+
+    #[test]
+    fn wide_mode_matches_manual_dot() {
+        let mut p = PCore::new();
+        p.load_weights([10, 0, 0, 0, 0, 0, 0, 0, 20]);
+        let win = [5, 0, 0, 0, 0, 0, 0, 0, 7];
+        assert_eq!(p.compute(&win, AccumMode::I32), Psum::I32(50 + 140));
+    }
+}

@@ -1,0 +1,169 @@
+//! Energy model — the paper's motivation is *edge* deployment ("low
+//! energy consumption", §2.2), but it reports no energy numbers. This
+//! module supplies the missing column: an activity-based energy
+//! estimate per layer, built from per-event energies typical of 28 nm
+//! (Zynq-7000) and 16 nm (UltraScale+) FPGA fabrics.
+//!
+//! The absolute picojoule constants are order-of-magnitude literature
+//! values (Horowitz ISSCC'14 scaled to FPGA fabric overheads), not
+//! measurements — the *relative* story they support (DMA ≪ BRAM ≪ MAC
+//! at these shapes; UltraScale+ ≈ 2.5× more efficient) is robust to the
+//! constants, and every constant is a named, overridable field.
+
+use super::device::{Device, Family};
+use super::dma::DmaStats;
+use super::ip_core::CycleStats;
+use crate::model::LayerSpec;
+use crate::paper::{KH, KW};
+
+/// Per-event energies in picojoules.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// One 8x8 MAC (multiply + add) in fabric logic.
+    pub mac_pj: f64,
+    /// One BRAM byte read or write.
+    pub bram_byte_pj: f64,
+    /// One DMA byte moved over AXI to/from DDR.
+    pub dma_byte_pj: f64,
+    /// Static + clock-tree power per cycle for one IP core, pJ/cycle.
+    pub idle_pj_per_cycle: f64,
+}
+
+impl EnergyModel {
+    /// Literature-scaled defaults per device family.
+    pub fn for_family(family: Family) -> Self {
+        match family {
+            // 28nm fabric: ~4x ASIC energy for logic ops.
+            Family::Series7 => EnergyModel {
+                mac_pj: 1.2,
+                bram_byte_pj: 0.6,
+                dma_byte_pj: 20.0, // includes DDR access
+                idle_pj_per_cycle: 450.0,
+            },
+            // 16nm FinFET: roughly 2.5x better logic/BRAM energy.
+            Family::UltraScalePlus => EnergyModel {
+                mac_pj: 0.5,
+                bram_byte_pj: 0.25,
+                dma_byte_pj: 12.0,
+                idle_pj_per_cycle: 220.0,
+            },
+        }
+    }
+}
+
+/// Energy breakdown for one layer run, nanojoules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyReport {
+    pub mac_nj: f64,
+    pub bram_nj: f64,
+    pub dma_nj: f64,
+    pub idle_nj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_nj(&self) -> f64 {
+        self.mac_nj + self.bram_nj + self.dma_nj + self.idle_nj
+    }
+
+    /// Energy efficiency in the paper's op accounting: PSUMs per µJ.
+    pub fn psums_per_uj(&self, psums: u64) -> f64 {
+        psums as f64 / (self.total_nj() / 1000.0)
+    }
+}
+
+/// Estimate the energy of one layer run from its activity counts.
+pub fn estimate_layer(
+    spec: &LayerSpec,
+    cycles: &CycleStats,
+    dma: &DmaStats,
+    model: &EnergyModel,
+) -> EnergyReport {
+    let macs = spec.macs() as f64;
+    // BRAM traffic: every window fetch + weight load + output RMW.
+    // Weight-stationary slide reuse: ~3 image bytes per window after the
+    // first column, 9 weights per (group,channel), RMW = 2 accesses of
+    // the output word per PSUM.
+    let windows = (spec.conv_oh() * spec.conv_ow()) as f64;
+    let img_bytes = windows * (spec.c as f64) * 3.2; // slide avg + row restarts
+    let wgt_bytes = (spec.k * spec.c * KH * KW) as f64;
+    let out_bytes = spec.psums() as f64 * 2.0 * 4.0; // i32 RMW
+    let bram_bytes = img_bytes + wgt_bytes + out_bytes;
+    EnergyReport {
+        mac_nj: macs * model.mac_pj / 1000.0,
+        bram_nj: bram_bytes * model.bram_byte_pj / 1000.0,
+        dma_nj: dma.bytes as f64 * model.dma_byte_pj / 1000.0,
+        idle_nj: cycles.total as f64 * model.idle_pj_per_cycle / 1000.0,
+    }
+}
+
+/// Device-level convenience: the model for a catalog entry.
+pub fn model_for(device: &Device) -> EnergyModel {
+    EnergyModel::for_family(device.family)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{XC7Z020_CLG400, XZCU3EG_SBVA484};
+    use crate::hw::{IpCore, IpCoreConfig};
+    use crate::model::{Tensor, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    fn run_quickstart() -> (CycleStats, DmaStats) {
+        let spec = QUICKSTART;
+        let mut rng = Prng::new(9);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        );
+        let wts = Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 256));
+        let run = IpCore::new(IpCoreConfig::default())
+            .run_layer(&spec, &img, &wts, &vec![0; spec.k], None)
+            .unwrap();
+        (run.cycles, run.dma)
+    }
+
+    #[test]
+    fn breakdown_is_positive_and_mac_dominant_on_compute_heavy_layers() {
+        let (cycles, dma) = run_quickstart();
+        let m = model_for(&XC7Z020_CLG400);
+        let e = estimate_layer(&QUICKSTART, &cycles, &dma, &m);
+        assert!(e.mac_nj > 0.0 && e.bram_nj > 0.0 && e.dma_nj > 0.0 && e.idle_nj > 0.0);
+        assert!(e.total_nj() > e.mac_nj);
+        // Compute-heavy layer: MAC + BRAM energy exceeds DMA energy.
+        assert!(e.mac_nj + e.bram_nj > e.dma_nj, "{e:?}");
+    }
+
+    #[test]
+    fn ultrascale_is_more_efficient() {
+        let (cycles, dma) = run_quickstart();
+        let e7 = estimate_layer(
+            &QUICKSTART,
+            &cycles,
+            &dma,
+            &model_for(&XC7Z020_CLG400),
+        );
+        let eu = estimate_layer(
+            &QUICKSTART,
+            &cycles,
+            &dma,
+            &model_for(&XZCU3EG_SBVA484),
+        );
+        assert!(eu.total_nj() < e7.total_nj());
+        assert!(
+            eu.psums_per_uj(QUICKSTART.psums()) > e7.psums_per_uj(QUICKSTART.psums()) * 1.5
+        );
+    }
+
+    #[test]
+    fn efficiency_metric_scales_inverse_with_energy() {
+        let e = EnergyReport {
+            mac_nj: 500.0,
+            bram_nj: 300.0,
+            dma_nj: 100.0,
+            idle_nj: 100.0,
+        };
+        assert!((e.total_nj() - 1000.0).abs() < 1e-9);
+        assert!((e.psums_per_uj(2000) - 2000.0).abs() < 1e-9);
+    }
+}

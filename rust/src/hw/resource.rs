@@ -1,0 +1,249 @@
+//! Analytic resource model — regenerates Table 1 without Vivado.
+//!
+//! The model is a *component census* of the RTL: every structural unit
+//! of the architecture (144 MACs, 16 adder trees, 8 loaders, FSM, AXI
+//! glue, address generators) with per-unit LUT/FF costs. 7-series costs
+//! are calibrated once against the paper's clg400 row; the UltraScale+
+//! row calibrates a family factor (the paper's ZU3EG build uses *more*
+//! logic — consistent with the toolchain not inferring DSP48s on that
+//! target and the wider control FFs; we carry the factor, and say so,
+//! rather than pretend a synthesis we cannot run).
+//!
+//! What the model is for: (a) regenerating Table 1's shape —
+//! utilisation <10 % LUT / <5 % FF on the Z-7020 parts, higher on
+//! ZU3EG, fmax ordering 484 < 400 < ZU3EG; (b) the max-cores analysis
+//! behind the paper's "20 cores ⇒ 4.48 GOPS" claim, including the
+//! honest observation that Table 1's own LUT numbers cap a Z-7020 at
+//! 10 replicas of the *full* IP core.
+
+use super::device::{Device, Family, TABLE1_DEVICES};
+use crate::paper::{N_CORES, N_PCORES};
+
+/// Per-unit LUT/FF cost of one structural component.
+#[derive(Clone, Copy, Debug)]
+pub struct UnitCost {
+    pub name: &'static str,
+    pub count: u64,
+    pub lut: u64,
+    pub ff: u64,
+}
+
+/// The structural census of the IP core (counts from §4.2; per-unit
+/// 7-series costs calibrated to Table 1 row 1).
+pub fn census() -> Vec<UnitCost> {
+    let macs = (N_CORES * N_PCORES * 9) as u64; // 144
+    let trees = (N_CORES * N_PCORES) as u64; // 16
+    let cores = N_CORES as u64;
+    vec![
+        UnitCost {
+            name: "mac (8x8 mult + acc)",
+            count: macs,
+            lut: 22,
+            ff: 18,
+        },
+        UnitCost {
+            name: "pcore adder tree",
+            count: trees,
+            lut: 30,
+            ff: 27,
+        },
+        UnitCost {
+            name: "image loader",
+            count: cores,
+            lut: 110,
+            ff: 130,
+        },
+        UnitCost {
+            name: "weight loader",
+            count: cores,
+            lut: 90,
+            ff: 110,
+        },
+        UnitCost {
+            name: "controller fsm",
+            count: 1,
+            lut: 150,
+            ff: 170,
+        },
+        UnitCost {
+            name: "axi/dma glue",
+            count: 1,
+            lut: 180,
+            ff: 220,
+        },
+        UnitCost {
+            name: "bram address gen",
+            count: 12, // 4 image + 4 output + 4 weight groups
+            lut: 20,
+            ff: 48,
+        },
+    ]
+}
+
+/// Family scaling relative to the calibrated 7-series costs.
+fn family_factors(family: Family) -> (f64, f64) {
+    match family {
+        Family::Series7 => (1.0, 1.0),
+        // Calibrated on the paper's ZU3EG row (11917 LUT / 14522 FF vs
+        // the 7-series census): no DSP inference + wider control regs.
+        Family::UltraScalePlus => (2.375, 2.934),
+    }
+}
+
+/// Model output for one device.
+#[derive(Clone, Debug)]
+pub struct ResourceEstimate {
+    pub device: Device,
+    pub luts: u64,
+    pub ffs: u64,
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+    pub fmax_mhz: f64,
+}
+
+/// Paper's Table 1, for tolerance checks.
+#[derive(Clone, Copy, Debug)]
+pub struct Table1Row {
+    pub device: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub fmax_mhz: f64,
+}
+
+pub const PAPER_TABLE1: [Table1Row; 3] = [
+    Table1Row {
+        device: "xc7z020clg400-1",
+        luts: 5027,
+        ffs: 4959,
+        fmax_mhz: 112.0,
+    },
+    Table1Row {
+        device: "xc7z020clg484-1",
+        luts: 5243,
+        ffs: 5054,
+        fmax_mhz: 93.0,
+    },
+    Table1Row {
+        device: "xzcu3eg-sbva484-1-i",
+        luts: 11917,
+        ffs: 14522,
+        fmax_mhz: 161.0,
+    },
+];
+
+/// Estimate the full IP core on one device.
+pub fn estimate(device: &Device) -> ResourceEstimate {
+    let (flut, fff) = family_factors(device.family);
+    let (mut luts, mut ffs) = (0f64, 0f64);
+    for u in census() {
+        luts += (u.count * u.lut) as f64;
+        ffs += (u.count * u.ff) as f64;
+    }
+    let luts = (luts * flut).round() as u64;
+    let ffs = (ffs * fff).round() as u64;
+    ResourceEstimate {
+        device: *device,
+        luts,
+        ffs,
+        lut_pct: luts as f64 / device.luts as f64 * 100.0,
+        ff_pct: ffs as f64 / device.ffs as f64 * 100.0,
+        fmax_mhz: device.fmax_mhz(),
+    }
+}
+
+/// Regenerate Table 1 (all three devices).
+pub fn table1() -> Vec<ResourceEstimate> {
+    TABLE1_DEVICES.iter().map(estimate).collect()
+}
+
+/// Render the table in the paper's layout.
+pub fn render_table1() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:>16} {:>16} {:>14}\n",
+        "FPGA", "#LUTs", "#FF", "Max frequency"
+    ));
+    for e in table1() {
+        out.push_str(&format!(
+            "{:<22} {:>7} ({:>5.2}%) {:>7} ({:>5.2}%) {:>10.0} MHz\n",
+            e.device.name, e.luts, e.lut_pct, e.ffs, e.ff_pct, e.fmax_mhz
+        ));
+    }
+    out
+}
+
+/// How many *full IP cores* fit on a device by each resource, and the
+/// binding constraint. The paper claims 20 via its "<5 % per core"
+/// reading; Table 1's own LUT row binds a Z-7020 at 10 — we report both
+/// (EXPERIMENTS.md discusses the discrepancy).
+#[derive(Clone, Copy, Debug)]
+pub struct MaxCores {
+    pub by_lut: u64,
+    pub by_ff: u64,
+    pub binding: u64,
+}
+
+pub fn max_cores(device: &Device) -> MaxCores {
+    let e = estimate(device);
+    let by_lut = device.luts / e.luts.max(1);
+    let by_ff = device.ffs / e.ffs.max(1);
+    MaxCores {
+        by_lut,
+        by_ff,
+        binding: by_lut.min(by_ff),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::{XC7Z020_CLG400, XZCU3EG_SBVA484};
+
+    #[test]
+    fn census_totals_calibrated_to_clg400_row() {
+        let e = estimate(&XC7Z020_CLG400);
+        let paper = PAPER_TABLE1[0];
+        let lut_err = (e.luts as f64 - paper.luts as f64).abs() / paper.luts as f64;
+        let ff_err = (e.ffs as f64 - paper.ffs as f64).abs() / paper.ffs as f64;
+        assert!(lut_err < 0.01, "LUT {} vs paper {}", e.luts, paper.luts);
+        assert!(ff_err < 0.01, "FF {} vs paper {}", e.ffs, paper.ffs);
+    }
+
+    #[test]
+    fn all_rows_within_tolerance() {
+        // 5% absorbs P&R variance across packages (clg484 row).
+        for (e, paper) in table1().iter().zip(PAPER_TABLE1.iter()) {
+            assert_eq!(e.device.name, paper.device);
+            let lut_err = (e.luts as f64 - paper.luts as f64).abs() / paper.luts as f64;
+            let ff_err = (e.ffs as f64 - paper.ffs as f64).abs() / paper.ffs as f64;
+            assert!(lut_err < 0.05, "{}: LUT {} vs {}", paper.device, e.luts, paper.luts);
+            assert!(ff_err < 0.05, "{}: FF {} vs {}", paper.device, e.ffs, paper.ffs);
+            assert!((e.fmax_mhz - paper.fmax_mhz).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn utilisation_shape_matches_paper_claims() {
+        let z2 = estimate(&XC7Z020_CLG400);
+        assert!(z2.lut_pct < 10.0, "under 10% LUTs on the Z-7020");
+        assert!(z2.ff_pct < 5.0, "under 5% FFs on the Z-7020");
+        let zu = estimate(&XZCU3EG_SBVA484);
+        assert!(zu.lut_pct > z2.lut_pct, "ZU3EG row uses more logic");
+    }
+
+    #[test]
+    fn max_cores_analysis() {
+        let m = max_cores(&XC7Z020_CLG400);
+        assert_eq!(m.by_lut, 10, "Table 1's own LUT numbers bind at 10");
+        assert!(m.by_ff >= 20, "the paper's 20-core claim holds by FFs");
+        assert_eq!(m.binding, 10);
+    }
+
+    #[test]
+    fn render_contains_all_devices() {
+        let t = render_table1();
+        for d in &PAPER_TABLE1 {
+            assert!(t.contains(d.device));
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Cycle-stepped microarchitecture model of one computing core.
+//!
+//! The fast functional model ([`super::compute_core`]) charges 8 cycles
+//! per window by fiat — the paper's §5.2 claim. This module *derives*
+//! those 8 cycles from a concrete per-cycle schedule and proves it
+//! consistent with the architecture's physical constraints:
+//!
+//! ```text
+//! cycle 0   address generation + window shift-in (slide column fetch)
+//! cycle 1   window register broadcast to the 4 PCOREs
+//! cycle 2   9 parallel multipliers fire in every PCORE
+//! cycle 3-6 adder tree, 4 levels (9 -> 5 -> 3 -> 2 -> 1)
+//! cycle 7   accumulate into the output BMGs (read-modify-write)
+//! ```
+//!
+//! Along the way it checks the §4.1 claim that the BMG split makes all
+//! concurrent accesses conflict-free: a dual-port BMG may serve at most
+//! 2 accesses per cycle, and the stepped run records every port touch
+//! per cycle and asserts the bound. The adder tree is evaluated as a
+//! real binary reduction (per-level wrapping in Wrap8 mode), which
+//! also validates the 4-level depth the resource/timing model charges.
+
+use super::bram::{ImageBrams, OutputBrams, WeightBrams};
+use super::compute_core::PsumWord;
+use super::AccumMode;
+use crate::paper::{CYCLES_PER_PSUM_GROUP, KH, KW, N_PCORES};
+use std::collections::HashMap;
+
+/// What happens in each cycle of the 8-cycle window schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Address generation + image-window fetch/shift.
+    Fetch,
+    /// Window register broadcast.
+    Broadcast,
+    /// 9 parallel multipliers per PCORE.
+    Multiply,
+    /// Adder tree level `n` (1..=4).
+    TreeLevel(u8),
+    /// Output-BRAM read-modify-write accumulate.
+    Accumulate,
+}
+
+/// The canonical 8-cycle schedule.
+pub const SCHEDULE: [StepPhase; CYCLES_PER_PSUM_GROUP as usize] = [
+    StepPhase::Fetch,
+    StepPhase::Broadcast,
+    StepPhase::Multiply,
+    StepPhase::TreeLevel(1),
+    StepPhase::TreeLevel(2),
+    StepPhase::TreeLevel(3),
+    StepPhase::TreeLevel(4),
+    StepPhase::Accumulate,
+];
+
+/// Port-pressure record: (bank name, cycle) -> accesses that cycle.
+#[derive(Debug, Default)]
+pub struct PortLog {
+    pub touches: HashMap<(String, u64), u32>,
+    pub violations: Vec<(String, u64, u32)>,
+}
+
+impl PortLog {
+    fn touch(&mut self, bank: &str, cycle: u64, n: u32) {
+        let e = self.touches.entry((bank.to_string(), cycle)).or_insert(0);
+        *e += n;
+        if *e > 2 {
+            self.violations.push((bank.to_string(), cycle, *e));
+        }
+    }
+
+    pub fn max_pressure(&self) -> u32 {
+        self.touches.values().copied().max().unwrap_or(0)
+    }
+}
+
+/// Reduce 9 values through an explicit 4-level binary adder tree.
+/// In Wrap8 mode every level wraps at 8 bits, as 8-bit adders would.
+fn adder_tree(products: &[i64; 9], mode: AccumMode) -> i64 {
+    let clip = |v: i64| match mode {
+        AccumMode::Wrap8 => v & 0xFF,
+        AccumMode::I32 => v,
+    };
+    let mut level: Vec<i64> = products.iter().map(|&p| clip(p)).collect();
+    let mut depth = 0;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(clip(pair.iter().sum()));
+        }
+        level = next;
+        depth += 1;
+    }
+    assert_eq!(depth, 4, "9-input tree must be 4 levels deep");
+    level[0]
+}
+
+/// Result of one stepped sweep.
+#[derive(Debug)]
+pub struct SteppedRun {
+    pub cycles: u64,
+    pub windows: u64,
+    pub ports: PortLog,
+    /// Phase executed at every cycle (for schedule assertions).
+    pub phase_trace: Vec<StepPhase>,
+}
+
+/// Run one (kernel group, channel) sweep cycle-by-cycle, accumulating
+/// into `out`. Semantically identical to `ComputeCore::sweep`; the
+/// point is the per-cycle derivation, not speed.
+pub fn sweep_stepped<T: PsumWord>(
+    img: &mut ImageBrams,
+    wgt: &mut WeightBrams,
+    out: &mut OutputBrams<T>,
+    group: usize,
+    ch: usize,
+) -> SteppedRun {
+    let (_, h, w) = img.dims();
+    let (oh, ow) = (h - KH + 1, w - KW + 1);
+    let mut ports = PortLog::default();
+    let mut phase_trace = Vec::new();
+    let mut cycle = 0u64;
+
+    // Weight staging (pipelined away in steady state; charged to the
+    // stage-1 budget, not the 8-cycle schedule). The four kernel BMGs
+    // stream in parallel: 9 values each over ceil(9/2) cycles.
+    let mut weights = [[0u8; 9]; N_PCORES];
+    for (j, wj) in weights.iter_mut().enumerate() {
+        *wj = wgt.read_kernel_channel(N_PCORES * group + j, ch);
+    }
+    for c in 0..9u64.div_ceil(2) {
+        for j in 0..N_PCORES {
+            ports.touch(&format!("wgt_bmg_q{ch}_{j}"), cycle + c, 2);
+        }
+    }
+    cycle += 9u64.div_ceil(2);
+
+    let mut window = [0u8; 9];
+    for y in 0..oh {
+        for x in 0..ow {
+            let fresh = x == 0;
+            for (ci, phase) in SCHEDULE.iter().enumerate() {
+                phase_trace.push(*phase);
+                let c = cycle + ci as u64;
+                match phase {
+                    StepPhase::Fetch => {
+                        if fresh {
+                            // Full 9-value fetch: spread over the fetch +
+                            // broadcast slots of the *previous* window in
+                            // real silicon; the port log charges it here
+                            // conservatively at 2/cycle over 5 cycles
+                            // starting early (pipelined), so pressure
+                            // still bounds at 2.
+                            for (i, wv) in window.iter_mut().enumerate() {
+                                let (dy, dx) = (i / 3, i % 3);
+                                *wv = img.read(ch, y + dy, x + dx);
+                            }
+                            for cc in 0..5u64 {
+                                ports.touch(&format!("img_bmg_q{ch}"), c.wrapping_sub(cc), 2);
+                            }
+                        } else {
+                            // Slide: 3 new values, 2 ports -> 2 cycles
+                            // (one overlaps broadcast).
+                            for r in 0..3 {
+                                window[r * 3] = window[r * 3 + 1];
+                                window[r * 3 + 1] = window[r * 3 + 2];
+                                window[r * 3 + 2] = img.read(ch, y + r, x + 2);
+                            }
+                            ports.touch(&format!("img_bmg_q{ch}"), c, 2);
+                            ports.touch(&format!("img_bmg_q{ch}"), c + 1, 1);
+                        }
+                    }
+                    StepPhase::Broadcast => { /* register transfer, no ports */ }
+                    StepPhase::Multiply | StepPhase::TreeLevel(_) => { /* datapath */ }
+                    StepPhase::Accumulate => {
+                        for j in 0..N_PCORES {
+                            let products: [i64; 9] = std::array::from_fn(|i| {
+                                window[i] as i64 * weights[j][i] as i64
+                            });
+                            let psum = adder_tree(&products, T::MODE);
+                            let k = N_PCORES * group + j;
+                            let word = match T::MODE {
+                                AccumMode::Wrap8 => T::from_psum(
+                                    super::pcore::Psum::Wrap8((psum & 0xFF) as u8),
+                                ),
+                                AccumMode::I32 => {
+                                    T::from_psum(super::pcore::Psum::I32(psum as i32))
+                                }
+                            };
+                            out.accumulate(k, y, x, word);
+                            // RMW = 1 read + 1 write on the kernel's bank.
+                            ports.touch(&format!("out_bmg{}", k % N_PCORES), c, 2);
+                        }
+                    }
+                }
+            }
+            cycle += CYCLES_PER_PSUM_GROUP;
+        }
+    }
+
+    SteppedRun {
+        cycles: cycle,
+        windows: (oh * ow) as u64,
+        ports,
+        phase_trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::compute_core::ComputeCore;
+    use crate::model::{golden, Tensor};
+    use crate::util::prng::Prng;
+
+    fn setup(
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Tensor<u8>, Tensor<u8>, ImageBrams, WeightBrams) {
+        let mut rng = Prng::new(seed);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let wts = Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256));
+        let mut ib = ImageBrams::new(c, h, w);
+        ib.load_image(&img);
+        let mut wb = WeightBrams::new(k, c);
+        wb.load_weights(&wts);
+        (img, wts, ib, wb)
+    }
+
+    #[test]
+    fn stepped_matches_functional_model() {
+        let (_, _, mut ib, mut wb) = setup(1, 6, 7, 4, 31);
+        let (_, _, mut ib2, mut wb2) = setup(1, 6, 7, 4, 31);
+        let mut out_stepped = OutputBrams::<i32>::new(4, 4, 5);
+        out_stepped.preload_bias(&[3, 1, 4, 1]);
+        let mut out_fast = OutputBrams::<i32>::new(4, 4, 5);
+        out_fast.preload_bias(&[3, 1, 4, 1]);
+
+        sweep_stepped(&mut ib, &mut wb, &mut out_stepped, 0, 0);
+        let mut core = ComputeCore::new(0);
+        core.sweep(&mut ib2, &mut wb2, &mut out_fast, 0, 0, None);
+        assert_eq!(out_stepped.readout().data(), out_fast.readout().data());
+    }
+
+    #[test]
+    fn stepped_matches_golden_both_modes() {
+        let (img, wts, mut ib, mut wb) = setup(1, 5, 5, 4, 32);
+        // i32
+        let mut out = OutputBrams::<i32>::new(4, 3, 3);
+        out.preload_bias(&[0; 4]);
+        sweep_stepped(&mut ib, &mut wb, &mut out, 0, 0);
+        let want = golden::conv3x3_i32(&img, &wts, &[0; 4], false);
+        assert_eq!(out.readout().data(), want.data());
+        // wrap8 (per-level wrapping tree must equal sequential wrap MAC)
+        let (img8, wts8, mut ib8, mut wb8) = setup(1, 5, 5, 4, 32);
+        let mut out8 = OutputBrams::<u8>::new(4, 3, 3);
+        out8.preload_bias(&[0; 4]);
+        sweep_stepped(&mut ib8, &mut wb8, &mut out8, 0, 0);
+        let want8 = golden::conv3x3_wrap8(&img8, &wts8, &[0; 4]);
+        assert_eq!(out8.readout().data(), want8.data());
+    }
+
+    #[test]
+    fn schedule_is_eight_cycles_per_window() {
+        let (_, _, mut ib, mut wb) = setup(1, 5, 5, 4, 33);
+        let mut out = OutputBrams::<i32>::new(4, 3, 3);
+        out.preload_bias(&[0; 4]);
+        let run = sweep_stepped(&mut ib, &mut wb, &mut out, 0, 0);
+        assert_eq!(run.windows, 9);
+        // weight staging (5) + 9 windows x 8.
+        assert_eq!(run.cycles, 5 + 9 * 8);
+        assert_eq!(run.phase_trace.len(), 9 * 8);
+        // Every window executes the canonical schedule in order.
+        for chunk in run.phase_trace.chunks(8) {
+            assert_eq!(chunk, &SCHEDULE[..]);
+        }
+    }
+
+    #[test]
+    fn dual_port_constraint_never_violated() {
+        let (_, _, mut ib, mut wb) = setup(2, 8, 9, 8, 34);
+        let mut out = OutputBrams::<i32>::new(8, 6, 7);
+        out.preload_bias(&[0; 8]);
+        for g in 0..2 {
+            for ch in 0..2 {
+                let run = sweep_stepped(&mut ib, &mut wb, &mut out, g, ch);
+                assert!(
+                    run.ports.violations.is_empty(),
+                    "port violations: {:?}",
+                    &run.ports.violations[..run.ports.violations.len().min(5)]
+                );
+                assert!(run.ports.max_pressure() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn adder_tree_is_four_levels_and_exact() {
+        let products: [i64; 9] = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        assert_eq!(adder_tree(&products, AccumMode::I32), 45);
+        // Wrapping tree == wrapping sequential sum (mod-256 associativity).
+        let big: [i64; 9] = [200, 250, 100, 90, 80, 70, 255, 255, 1];
+        let seq = big.iter().fold(0i64, |a, b| (a + b) & 0xFF);
+        assert_eq!(adder_tree(&big, AccumMode::Wrap8), seq);
+    }
+}

@@ -1,0 +1,232 @@
+//! Signal tracing — reproduces the paper's Fig. 6 simulation waveform.
+//!
+//! The traced signals mirror the figure exactly: `weight0..3` (72-bit,
+//! nine bytes of one kernel-channel), `feature0..2` (24-bit, one window
+//! row each) and `psum_0..3` (8-bit). [`WaveTrace`] renders both an
+//! ASCII table (what EXPERIMENTS.md quotes next to the figure) and a
+//! VCD file loadable in GTKWave — the closest artefact to "a Vivado
+//! waveform" a simulator can emit.
+
+use super::compute_core::ComputeCore;
+use super::pcore::Psum;
+use crate::model::{LayerSpec, Tensor};
+use crate::paper::N_PCORES;
+use std::fmt::Write as _;
+
+/// The Fig. 6 testbench stimulus: a 5-wide byte-ramp feature (1..25)
+/// and the figure's four kernels (01..09, 91..99, 21..29, b1..b9),
+/// zero bias. Windows slide by one column, rows advance by 5 — exactly
+/// the `feature0..2` sequences visible in the figure.
+pub fn fig6_stimulus() -> (LayerSpec, Tensor<u8>, Tensor<u8>, Vec<i32>) {
+    let spec = LayerSpec::new(1, 5, 5, 4);
+    let img = Tensor::from_vec(&[1, 5, 5], (1..=25u8).collect());
+    let mut wdata = Vec::with_capacity(36);
+    for base in [0x01u8, 0x91, 0x21, 0xb1] {
+        for i in 0..9 {
+            wdata.push(base + i);
+        }
+    }
+    let weights = Tensor::from_vec(&[4, 1, 3, 3], wdata);
+    (spec, img, weights, vec![0; 4])
+}
+
+/// The psum columns printed in the paper's Fig. 6 (first 9 windows),
+/// one row per PCORE — the ground truth `rust/tests/fig6.rs` asserts.
+pub const FIG6_PSUMS: [[u8; 9]; 4] = [
+    [0x9b, 0xc8, 0xf5, 0x7c, 0xa9, 0xd6, 0x5d, 0x8a, 0xb7],
+    [0x0b, 0x48, 0x85, 0x3c, 0x79, 0xb6, 0x6d, 0xaa, 0xe7],
+    [0x7b, 0xc8, 0x15, 0xfc, 0x49, 0x96, 0x7d, 0xca, 0x17],
+    [0xeb, 0x48, 0xa5, 0xbc, 0x19, 0x76, 0x8d, 0xea, 0x47],
+];
+
+/// One traced signal: name + bit width.
+#[derive(Clone, Debug)]
+pub struct Signal {
+    pub name: String,
+    pub bits: usize,
+}
+
+/// A recorded trace: per step, one hex value per signal.
+#[derive(Clone, Debug, Default)]
+pub struct WaveTrace {
+    pub signals: Vec<Signal>,
+    /// (cycle, values-as-hex) per step.
+    pub rows: Vec<(u64, Vec<String>)>,
+}
+
+fn hex_bytes(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+impl WaveTrace {
+    /// The Fig. 6 signal set for one computing core.
+    pub fn fig6() -> Self {
+        let mut signals = Vec::new();
+        for j in 0..N_PCORES {
+            signals.push(Signal {
+                name: format!("weight{j}[71:0]"),
+                bits: 72,
+            });
+        }
+        for r in 0..3 {
+            signals.push(Signal {
+                name: format!("feature{r}[23:0]"),
+                bits: 24,
+            });
+        }
+        for j in 0..N_PCORES {
+            signals.push(Signal {
+                name: format!("psum_{j}[7:0]"),
+                bits: 8,
+            });
+        }
+        WaveTrace {
+            signals,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record one window step of a computing core (called from
+    /// [`ComputeCore::sweep`] when tracing is on).
+    pub fn record_window_step(
+        &mut self,
+        core: &ComputeCore,
+        window: &[u8; 9],
+        psums: &[Psum; N_PCORES],
+        cycle: u64,
+    ) {
+        let mut vals = Vec::with_capacity(self.signals.len());
+        for pc in &core.pcores {
+            vals.push(hex_bytes(&pc.weights()));
+        }
+        for r in 0..3 {
+            vals.push(hex_bytes(&window[r * 3..r * 3 + 3]));
+        }
+        for p in psums {
+            let v = match p {
+                Psum::Wrap8(v) => *v,
+                Psum::I32(v) => (*v & 0xFF) as u8,
+            };
+            vals.push(format!("{v:02x}"));
+        }
+        self.rows.push((cycle, vals));
+    }
+
+    /// Values of one signal across all steps.
+    pub fn series(&self, name: &str) -> Option<Vec<&str>> {
+        let idx = self.signals.iter().position(|s| s.name.starts_with(name))?;
+        Some(self.rows.iter().map(|(_, v)| v[idx].as_str()).collect())
+    }
+
+    /// ASCII rendering in the layout of the paper's figure: one line per
+    /// signal, one column per step.
+    pub fn render_ascii(&self) -> String {
+        let mut out = String::new();
+        let width = self
+            .rows
+            .iter()
+            .flat_map(|(_, v)| v.iter().map(|s| s.len()))
+            .max()
+            .unwrap_or(2);
+        let _ = writeln!(
+            out,
+            "{:<16} | {}",
+            "cycle",
+            self.rows
+                .iter()
+                .map(|(c, _)| format!("{c:>width$}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        let _ = writeln!(out, "{}", "-".repeat(18 + self.rows.len() * (width + 1)));
+        for (i, sig) in self.signals.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{:<16} | {}",
+                sig.name,
+                self.rows
+                    .iter()
+                    .map(|(_, v)| format!("{:>width$}", v[i]))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+        out
+    }
+
+    /// Minimal VCD (value-change dump) export, loadable in GTKWave.
+    pub fn to_vcd(&self, timescale_ns: u64) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "$date repro $end");
+        let _ = writeln!(out, "$timescale {timescale_ns}ns $end");
+        let _ = writeln!(out, "$scope module computing_core $end");
+        // VCD id chars start at '!' (33).
+        let ids: Vec<char> = (0..self.signals.len())
+            .map(|i| char::from_u32(33 + i as u32).unwrap())
+            .collect();
+        for (sig, id) in self.signals.iter().zip(&ids) {
+            let short = sig.name.split('[').next().unwrap();
+            let _ = writeln!(out, "$var wire {} {} {} $end", sig.bits, id, short);
+        }
+        let _ = writeln!(out, "$upscope $end");
+        let _ = writeln!(out, "$enddefinitions $end");
+        let mut last: Vec<Option<&str>> = vec![None; self.signals.len()];
+        for (cycle, vals) in &self.rows {
+            let _ = writeln!(out, "#{cycle}");
+            for (i, v) in vals.iter().enumerate() {
+                if last[i] != Some(v.as_str()) {
+                    let bits = u128::from_str_radix(v, 16).unwrap_or(0);
+                    let _ = writeln!(out, "b{:b} {}", bits, ids[i]);
+                    last[i] = Some(v.as_str());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_signal_set() {
+        let t = WaveTrace::fig6();
+        assert_eq!(t.signals.len(), 4 + 3 + 4);
+        assert_eq!(t.signals[0].name, "weight0[71:0]");
+        assert_eq!(t.signals[0].bits, 72);
+        assert_eq!(t.signals[4].name, "feature0[23:0]");
+        assert_eq!(t.signals[10].name, "psum_3[7:0]");
+    }
+
+    #[test]
+    fn hex_format() {
+        assert_eq!(hex_bytes(&[0x01, 0x0b, 0xff]), "010bff");
+    }
+
+    #[test]
+    fn vcd_has_header_and_changes() {
+        let mut t = WaveTrace::fig6();
+        t.rows.push((8, vec!["00".into(); 11]));
+        t.rows.push((16, vec!["ff".into(); 11]));
+        let vcd = t.to_vcd(10);
+        assert!(vcd.contains("$enddefinitions"));
+        assert!(vcd.contains("#8"));
+        assert!(vcd.contains("#16"));
+        assert!(vcd.matches("b11111111").count() >= 1);
+    }
+
+    #[test]
+    fn ascii_contains_all_signals() {
+        let mut t = WaveTrace::fig6();
+        t.rows.push((8, vec!["aa".into(); 11]));
+        let text = t.render_ascii();
+        for sig in &t.signals {
+            assert!(text.contains(&sig.name));
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Reproduction of *"An FPGA-based Solution for Convolution Operation
+//! Acceleration"* (Pham-Dinh et al., 2022) as a three-layer
+//! rust + JAX + Pallas system.
+//!
+//! The paper's Verilog IP core — 4 computing cores × 4 PCOREs, weight
+//! stationary, BRAM-quartered channels, 2-stage load/compute pipeline —
+//! is reproduced as a **cycle-accurate simulator** in [`hw`] (no FPGA is
+//! available; DESIGN.md documents the substitution). The same
+//! convolution is compiled AOT from JAX + Pallas into HLO-text artifacts
+//! that [`runtime`] executes through PJRT, giving a real numeric path
+//! the simulator is validated against. [`coordinator`] is the serving
+//! layer: it batches conv-layer requests, schedules CNN layer chains the
+//! way the paper chains output BRAMs into the next layer's input, and
+//! dispatches onto 1..=20 simulated IP cores (the paper's "fully
+//! utilised Pynq Z2" deployment).
+//!
+//! Experiment index (DESIGN.md §4): Fig. 6 → [`hw::waveform`] +
+//! `examples/waveform_repro.rs`; Table 1 → [`hw::resource`]; §5.2
+//! throughput → [`hw::ip_core`] + `examples/multicore_scaling.rs`.
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod hw;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+/// Paper constants that recur across modules.
+pub mod paper {
+    /// Fixed kernel window of the IP core (§2.1, §4.2).
+    pub const KH: usize = 3;
+    /// Fixed kernel window of the IP core (§2.1, §4.2).
+    pub const KW: usize = 3;
+    /// Computing cores per IP core (§4.2 "Multi-Channel Architecture").
+    pub const N_CORES: usize = 4;
+    /// PCOREs per computing core (§4.2 "Multi-Kernel Computing Core").
+    pub const N_PCORES: usize = 4;
+    /// Clock cycles for one (window × 4 kernels) PSUM group (§5.2).
+    pub const CYCLES_PER_PSUM_GROUP: u64 = 8;
+    /// Pynq Z2 (xc7z020clg400-1) max frequency from Table 1.
+    pub const FREQ_Z2_HZ: u64 = 112_000_000;
+    /// IP cores deployable on a fully-utilised Pynq Z2 (§5.1: <5% per core).
+    pub const MAX_CORES_Z2: usize = 20;
+    /// §5.2 headline: single IP core throughput, GOPS (PSUMs/s accounting).
+    pub const GOPS_SINGLE: f64 = 0.224;
+    /// §5.2 headline: 20-core throughput, GOPS.
+    pub const GOPS_20: f64 = 4.48;
+}

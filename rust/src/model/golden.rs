@@ -1,0 +1,230 @@
+//! Golden reference convolutions — the anchor every other compute path
+//! (hw simulator, Pallas kernel via XLA, fused CNN artifact) is tested
+//! against. Deliberately written as naive loops: slow, obvious, and
+//! independent of the implementations under test.
+//!
+//! Two accumulator modes mirror DESIGN.md §5:
+//! * [`conv3x3_i32`] — u8 data, 32-bit accumulation (production mode,
+//!   and what the Pallas kernel computes in exact f32);
+//! * [`conv3x3_wrap8`] — the silicon semantics of Fig. 6: PSUMs wrap
+//!   modulo 256.
+
+use super::tensor::Tensor;
+use crate::paper::{KH, KW};
+
+/// u8 image `(C,H,W)` ⊛ u8 weights `(K,C,3,3)` + i32 bias `(K,)`,
+/// wide accumulation, valid padding. Optional fused ReLU.
+pub fn conv3x3_i32(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+) -> Tensor<i32> {
+    let (c, h, width) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let k = w.shape()[0];
+    assert_eq!(w.shape(), &[k, c, KH, KW], "weight shape");
+    assert_eq!(bias.len(), k, "bias len");
+    let (oh, ow) = (h - KH + 1, width - KW + 1);
+    let mut out = Tensor::<i32>::zeros(&[k, oh, ow]);
+    for ki in 0..k {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc: i32 = bias[ki];
+                for ci in 0..c {
+                    for dy in 0..KH {
+                        for dx in 0..KW {
+                            acc += img.at3(ci, y + dy, x + dx) as i32
+                                * w.at4(ki, ci, dy, dx) as i32;
+                        }
+                    }
+                }
+                if relu && acc < 0 {
+                    acc = 0;
+                }
+                out.set3(ki, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Bit-exact Fig. 6 semantics: u8 inputs, PSUM wraps modulo 256, bias
+/// pre-loaded into the accumulator (the paper's output-BRAM preload).
+pub fn conv3x3_wrap8(img: &Tensor<u8>, w: &Tensor<u8>, bias: &[u8]) -> Tensor<u8> {
+    let (c, h, width) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let k = w.shape()[0];
+    assert_eq!(w.shape(), &[k, c, KH, KW], "weight shape");
+    assert_eq!(bias.len(), k, "bias len");
+    let (oh, ow) = (h - KH + 1, width - KW + 1);
+    let mut out = Tensor::<u8>::zeros(&[k, oh, ow]);
+    for ki in 0..k {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc: u8 = bias[ki];
+                for ci in 0..c {
+                    for dy in 0..KH {
+                        for dx in 0..KW {
+                            acc = acc.wrapping_add(
+                                img.at3(ci, y + dy, x + dx)
+                                    .wrapping_mul(w.at4(ki, ci, dy, dx)),
+                            );
+                        }
+                    }
+                }
+                out.set3(ki, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// 2x2/s2 max pool, floor semantics (odd trailing row/col dropped).
+pub fn maxpool2x2<T: Copy + Ord + Default>(img: &Tensor<T>) -> Tensor<T> {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::<T>::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let m = img
+                    .at3(ci, 2 * y, 2 * x)
+                    .max(img.at3(ci, 2 * y, 2 * x + 1))
+                    .max(img.at3(ci, 2 * y + 1, 2 * x))
+                    .max(img.at3(ci, 2 * y + 1, 2 * x + 1));
+                out.set3(ci, y, x, m);
+            }
+        }
+    }
+    out
+}
+
+/// f32 variant of the golden conv for checking XLA outputs directly
+/// (the artifacts ship f32 carriers of exact integers).
+pub fn conv3x3_f32(img: &Tensor<f32>, w: &Tensor<f32>, bias: &[f32], relu: bool) -> Tensor<f32> {
+    let (c, h, width) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let k = w.shape()[0];
+    let (oh, ow) = (h - KH + 1, width - KW + 1);
+    let mut out = Tensor::<f32>::zeros(&[k, oh, ow]);
+    for ki in 0..k {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc = bias[ki];
+                for ci in 0..c {
+                    for dy in 0..KH {
+                        for dx in 0..KW {
+                            acc += img.at3(ci, y + dy, x + dx) * w.at4(ki, ci, dy, dx);
+                        }
+                    }
+                }
+                if relu {
+                    acc = acc.max(0.0);
+                }
+                out.set3(ki, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// f32 max pool (for the XLA parity path; f32 is not `Ord`).
+pub fn maxpool2x2_f32(img: &Tensor<f32>) -> Tensor<f32> {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::<f32>::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let m = img
+                    .at3(ci, 2 * y, 2 * x)
+                    .max(img.at3(ci, 2 * y, 2 * x + 1))
+                    .max(img.at3(ci, 2 * y + 1, 2 * x))
+                    .max(img.at3(ci, 2 * y + 1, 2 * x + 1));
+                out.set3(ci, y, x, m);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn small_case(seed: u64, c: usize, h: usize, w: usize, k: usize) -> (Tensor<u8>, Tensor<u8>) {
+        let mut rng = Prng::new(seed);
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let wts = Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256));
+        (img, wts)
+    }
+
+    #[test]
+    fn identity_kernel_extracts_center() {
+        // Kernel = 1 at center tap, zero elsewhere, one channel.
+        let img = Tensor::from_vec(&[1, 3, 3], (1..=9u8).collect());
+        let mut wdata = vec![0u8; 9];
+        wdata[4] = 1; // (dy=1, dx=1)
+        let w = Tensor::from_vec(&[1, 1, 3, 3], wdata);
+        let out = conv3x3_i32(&img, &w, &[0], false);
+        assert_eq!(out.data(), &[5]); // the center pixel
+    }
+
+    #[test]
+    fn bias_preload_equals_addition() {
+        let (img, w) = small_case(3, 2, 5, 5, 4);
+        let zero = conv3x3_i32(&img, &w, &[0; 4], false);
+        let biased = conv3x3_i32(&img, &w, &[7, -3, 0, 100], false);
+        for ki in 0..4 {
+            let b = [7, -3, 0, 100][ki];
+            for y in 0..3 {
+                for x in 0..3 {
+                    assert_eq!(biased.at3(ki, y, x), zero.at3(ki, y, x) + b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrap8_is_i32_mod_256() {
+        let (img, w) = small_case(5, 3, 6, 7, 4);
+        let bias8 = [1u8, 2, 3, 4];
+        let bias32: Vec<i32> = bias8.iter().map(|&b| b as i32).collect();
+        let wide = conv3x3_i32(&img, &w, &bias32, false);
+        let wrap = conv3x3_wrap8(&img, &w, &bias8);
+        for (a, b) in wide.data().iter().zip(wrap.data()) {
+            assert_eq!((*a as u32 % 256) as u8, *b);
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        // u8 inputs can't go negative, but bias can.
+        let (img, w) = small_case(6, 1, 3, 3, 4);
+        let out = conv3x3_i32(&img, &w, &[-1_000_000; 4], true);
+        assert!(out.data().iter().all(|&v| v >= 0));
+    }
+
+    #[test]
+    fn maxpool_floor_and_values() {
+        let img = Tensor::from_vec(&[1, 3, 3], vec![1u8, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let out = maxpool2x2(&img);
+        assert_eq!(out.shape(), &[1, 1, 1]);
+        assert_eq!(out.data(), &[5]); // max of the top-left 2x2
+    }
+
+    #[test]
+    fn f32_matches_i32_on_exact_ints() {
+        let (img, w) = small_case(9, 4, 8, 8, 4);
+        let bias = [10i32, -5, 0, 3];
+        let wide = conv3x3_i32(&img, &w, &bias, true);
+        let f = conv3x3_f32(
+            &img.to_f32(),
+            &w.map(|v| v as f32),
+            &bias.map(|b| b as f32),
+            true,
+        );
+        for (a, b) in wide.data().iter().zip(f.data()) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! im2col + GEMM software baseline.
+//!
+//! The paper compares against no software baseline; a reproduction
+//! should. This is the standard CPU realisation of the same 3×3 valid
+//! convolution — lower the image to a patch matrix, multiply by the
+//! flattened weights — implemented independently of both the golden
+//! loops and the hardware model, so it doubles as a third numeric
+//! witness. The benches report its host throughput next to the
+//! simulated core and the XLA path (EXPERIMENTS.md E2E/ABL).
+
+use super::tensor::Tensor;
+use crate::paper::{KH, KW};
+
+/// Lower `(C,H,W)` u8 image to the `(OH*OW, C*9)` i32 patch matrix.
+pub fn im2col(img: &Tensor<u8>) -> (Tensor<i32>, usize, usize) {
+    let (c, h, w) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let (oh, ow) = (h - KH + 1, w - KW + 1);
+    let cols = c * KH * KW;
+    let mut out = Tensor::<i32>::zeros(&[oh * ow, cols]);
+    let data = out.data_mut();
+    for y in 0..oh {
+        for x in 0..ow {
+            let row = y * ow + x;
+            let base = row * cols;
+            for ci in 0..c {
+                for dy in 0..KH {
+                    for dx in 0..KW {
+                        data[base + (ci * KH + dy) * KW + dx] =
+                            img.at3(ci, y + dy, x + dx) as i32;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Flatten `(K,C,3,3)` weights to the `(C*9, K)` GEMM operand.
+pub fn weights_matrix(w: &Tensor<u8>) -> Tensor<i32> {
+    let (k, c) = (w.shape()[0], w.shape()[1]);
+    let rows = c * KH * KW;
+    let mut out = Tensor::<i32>::zeros(&[rows, k]);
+    let data = out.data_mut();
+    for ki in 0..k {
+        for ci in 0..c {
+            for dy in 0..KH {
+                for dx in 0..KW {
+                    data[((ci * KH + dy) * KW + dx) * k + ki] = w.at4(ki, ci, dy, dx) as i32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Plain i32 GEMM: `(m,n) = (m,kk) @ (kk,n)`, row-major, with a simple
+/// kk-blocked inner loop (enough to be a fair scalar-CPU baseline).
+pub fn gemm_i32(a: &Tensor<i32>, b: &Tensor<i32>) -> Tensor<i32> {
+    let (m, kk) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(kk, kb, "inner dims");
+    let mut out = Tensor::<i32>::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * kk..(i + 1) * kk];
+        let orow = &mut od[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let brow = &bd[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// The full baseline: conv via im2col + GEMM (+ bias, optional ReLU),
+/// output in the hardware's `(K, OH, OW)` layout.
+pub fn conv3x3_im2col(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+) -> Tensor<i32> {
+    let k = w.shape()[0];
+    let (patches, oh, ow) = im2col(img);
+    let wm = weights_matrix(w);
+    let prod = gemm_i32(&patches, &wm); // (OH*OW, K)
+    let mut out = Tensor::<i32>::zeros(&[k, oh, ow]);
+    for ki in 0..k {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut v = prod.data()[(y * ow + x) * k + ki] + bias[ki];
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out.set3(ki, y, x, v);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::golden;
+    use crate::util::prng::Prng;
+
+    fn case(c: usize, h: usize, w: usize, k: usize, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        (
+            Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256)),
+            Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256)),
+            (0..k).map(|_| rng.range_i64(-50, 50) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn im2col_patch_layout() {
+        let img = Tensor::from_vec(&[1, 3, 4], (0..12u8).collect());
+        let (p, oh, ow) = im2col(&img);
+        assert_eq!((oh, ow), (1, 2));
+        // First patch: cols 0..3 of rows 0..3.
+        assert_eq!(&p.data()[..9], &[0, 1, 2, 4, 5, 6, 8, 9, 10]);
+        // Second patch slides one column.
+        assert_eq!(&p.data()[9..18], &[1, 2, 3, 5, 6, 7, 9, 10, 11]);
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        let b = Tensor::from_vec(&[2, 2], vec![5, 6, 7, 8]);
+        assert_eq!(gemm_i32(&a, &b).data(), &[19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn matches_golden_over_shapes() {
+        for (c, h, w, k, seed) in [
+            (1, 3, 3, 4, 1u64),
+            (4, 8, 8, 4, 2),
+            (8, 10, 7, 8, 3),
+            (3, 6, 9, 12, 4),
+        ] {
+            let (img, wts, bias) = case(c, h, w, k, seed);
+            for relu in [false, true] {
+                let a = conv3x3_im2col(&img, &wts, &bias, relu);
+                let b = golden::conv3x3_i32(&img, &wts, &bias, relu);
+                assert_eq!(a.data(), b.data(), "c{c} h{h} w{w} k{k} relu={relu}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_hw_simulator() {
+        let (img, wts, bias) = case(8, 12, 12, 8, 5);
+        let spec = crate::model::LayerSpec::new(8, 12, 12, 8);
+        let run = crate::hw::IpCore::new(crate::hw::IpCoreConfig::default())
+            .run_layer(&spec, &img, &wts, &bias, None)
+            .unwrap();
+        let baseline = conv3x3_im2col(&img, &wts, &bias, false);
+        assert_eq!(run.output.as_i32().data(), baseline.data());
+    }
+}

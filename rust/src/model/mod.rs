@@ -1,0 +1,163 @@
+//! CNN model substrate: tensors, layer descriptors, golden reference
+//! convolutions (both accumulator modes), int8 quantisation, the edge
+//! CNN used by the end-to-end experiments, and workload-trace
+//! generation for the coordinator benches.
+//!
+//! This is the rust mirror of `python/compile/model.py`; the
+//! `LayerSpec::name()` string is the join key into the AOT manifest.
+
+pub mod golden;
+pub mod im2col;
+pub mod mobilenet;
+pub mod network;
+pub mod quant;
+pub mod tensor;
+pub mod trace;
+
+pub use golden::{conv3x3_i32, conv3x3_wrap8, maxpool2x2};
+pub use network::{EdgeCnn, NetworkParams};
+pub use tensor::Tensor;
+
+use crate::paper::{KH, KW};
+
+/// Static shape of one convolutional layer — the coordinator's routing
+/// key and the unit of work the paper's IP core processes (§3: "one
+/// layer at a time").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LayerSpec {
+    /// Input channels C.
+    pub c: usize,
+    /// Input height H.
+    pub h: usize,
+    /// Input width W.
+    pub w: usize,
+    /// Kernel count K (= output channels).
+    pub k: usize,
+    /// Fused ReLU after accumulation.
+    pub relu: bool,
+    /// 2x2/s2 max pool after the conv.
+    pub pool: bool,
+}
+
+impl LayerSpec {
+    pub const fn new(c: usize, h: usize, w: usize, k: usize) -> Self {
+        LayerSpec {
+            c,
+            h,
+            w,
+            k,
+            relu: false,
+            pool: false,
+        }
+    }
+
+    pub const fn with_relu(mut self) -> Self {
+        self.relu = true;
+        self
+    }
+
+    pub const fn with_pool(mut self) -> Self {
+        self.pool = true;
+        self
+    }
+
+    /// Valid-conv output height before pooling.
+    pub fn conv_oh(&self) -> usize {
+        self.h - KH + 1
+    }
+
+    /// Valid-conv output width before pooling.
+    pub fn conv_ow(&self) -> usize {
+        self.w - KW + 1
+    }
+
+    /// Final output height (after optional pooling).
+    pub fn oh(&self) -> usize {
+        let oh = self.conv_oh();
+        if self.pool {
+            oh / 2
+        } else {
+            oh
+        }
+    }
+
+    /// Final output width (after optional pooling).
+    pub fn ow(&self) -> usize {
+        let ow = self.conv_ow();
+        if self.pool {
+            ow / 2
+        } else {
+            ow
+        }
+    }
+
+    /// PSUM count in the paper's §5.2 accounting: one per
+    /// (output pixel, kernel, input channel).
+    pub fn psums(&self) -> u64 {
+        (self.conv_oh() * self.conv_ow() * self.k * self.c) as u64
+    }
+
+    /// Multiply-accumulate count (9 MACs per PSUM).
+    pub fn macs(&self) -> u64 {
+        self.psums() * (KH * KW) as u64
+    }
+
+    /// Manifest join key; must match `python/compile/model.py::ConvSpec.name`.
+    pub fn name(&self) -> String {
+        let tag = if self.pool {
+            "p"
+        } else if self.relu {
+            "r"
+        } else {
+            "n"
+        };
+        format!(
+            "conv3x3_c{}h{}w{}k{}{}",
+            self.c, self.h, self.w, self.k, tag
+        )
+    }
+
+    /// The paper's §4.1 BRAM layout constraint: channels and kernels
+    /// divisible by 4 (first layer excepted for C).
+    pub fn paper_compatible(&self) -> bool {
+        self.k % 4 == 0 && self.h >= KH && self.w >= KW
+    }
+}
+
+/// §5.2 headline workload: 224x224x8 feature ⊛ 8x3x3x8 weights.
+pub const S52: LayerSpec = LayerSpec::new(8, 224, 224, 8);
+/// Quickstart artifact shape.
+pub const QUICKSTART: LayerSpec = LayerSpec::new(8, 16, 16, 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s52_matches_paper_counts() {
+        assert_eq!(S52.psums(), 3_154_176);
+        assert_eq!(S52.conv_oh(), 222);
+        assert_eq!(S52.macs(), 3_154_176 * 9);
+    }
+
+    #[test]
+    fn names_match_python_convention() {
+        assert_eq!(QUICKSTART.name(), "conv3x3_c8h16w16k8n");
+        assert_eq!(
+            LayerSpec::new(4, 32, 32, 8).with_relu().with_pool().name(),
+            "conv3x3_c4h32w32k8p"
+        );
+        assert_eq!(
+            LayerSpec::new(8, 15, 15, 16).with_relu().name(),
+            "conv3x3_c8h15w15k16r"
+        );
+    }
+
+    #[test]
+    fn pooled_output_dims_floor() {
+        let spec = LayerSpec::new(4, 32, 32, 8).with_pool();
+        assert_eq!((spec.conv_oh(), spec.oh()), (30, 15));
+        let odd = LayerSpec::new(16, 13, 13, 16).with_pool();
+        assert_eq!((odd.conv_oh(), odd.oh()), (11, 5));
+    }
+}

@@ -1,0 +1,196 @@
+//! The edge CNN — rust mirror of `python/compile/model.py::EDGE_CNN`.
+//!
+//! Every intermediate channel count is divisible by 4, the property the
+//! paper's §4.1 BRAM layout is built around. Parameters are generated
+//! deterministically from a seed (no trained weights are shipped; the
+//! end-to-end experiment validates *system* behaviour — numerics parity
+//! across hw-sim / XLA / golden — not task accuracy).
+
+use super::quant::{calibrate_from, Requant};
+use super::tensor::Tensor;
+use super::{golden, LayerSpec};
+use crate::util::prng::Prng;
+
+/// Layer chain of the edge CNN (input: 4×32×32).
+pub fn edge_cnn_specs() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::new(4, 32, 32, 8).with_relu().with_pool(), // -> 8x15x15
+        LayerSpec::new(8, 15, 15, 16).with_relu(),            // -> 16x13x13
+        LayerSpec::new(16, 13, 13, 16).with_relu().with_pool(), // -> 16x5x5
+        LayerSpec::new(16, 5, 5, 32).with_relu(),             // -> 32x3x3
+        LayerSpec::new(32, 3, 3, 32),                         // -> 32x1x1 logits
+    ]
+}
+
+/// One layer's parameters in the u8/i32 formats the hardware consumes.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub spec: LayerSpec,
+    pub weights: Tensor<u8>,
+    pub bias: Vec<i32>,
+}
+
+/// Whole-network parameters plus per-boundary requantisers.
+#[derive(Clone, Debug)]
+pub struct NetworkParams {
+    pub layers: Vec<LayerParams>,
+    /// Requantiser applied to each layer's i32 output before it becomes
+    /// the next layer's u8 input (last layer's output stays i32 logits).
+    pub requants: Vec<Requant>,
+}
+
+/// The edge CNN with deterministic parameters and calibrated requants.
+pub struct EdgeCnn {
+    pub params: NetworkParams,
+}
+
+impl EdgeCnn {
+    /// Build with parameters from `seed`; requantisers are calibrated on
+    /// one deterministic sample input (a real deployment calibrates on a
+    /// dataset — same mechanism, more samples).
+    pub fn new(seed: u64) -> Self {
+        let specs = edge_cnn_specs();
+        let mut rng = Prng::new(seed);
+        let layers: Vec<LayerParams> = specs
+            .iter()
+            .map(|&spec| LayerParams {
+                spec,
+                // Small weights keep intermediate magnitudes meaningful
+                // after repeated requantisation.
+                weights: Tensor::from_vec(
+                    &[spec.k, spec.c, 3, 3],
+                    rng.bytes_below(spec.k * spec.c * 9, 8),
+                ),
+                bias: (0..spec.k).map(|_| rng.range_i64(0, 16) as i32).collect(),
+            })
+            .collect();
+
+        // Calibration pass on one sample.
+        let sample = Self::sample_input(seed ^ 0xCA11B, &specs[0]);
+        let mut requants = Vec::new();
+        let mut x = sample;
+        for (i, lp) in layers.iter().enumerate() {
+            let mut out = golden::conv3x3_i32(&x, &lp.weights, &lp.bias, lp.spec.relu);
+            if lp.spec.pool {
+                out = golden::maxpool2x2(&out);
+            }
+            if i + 1 < layers.len() {
+                let q = calibrate_from(&out);
+                x = q.apply(&out);
+                requants.push(q);
+            }
+        }
+        EdgeCnn {
+            params: NetworkParams { layers, requants },
+        }
+    }
+
+    /// Deterministic synthetic input image for a given seed.
+    pub fn sample_input(seed: u64, first: &LayerSpec) -> Tensor<u8> {
+        let mut rng = Prng::new(seed);
+        Tensor::from_vec(
+            &[first.c, first.h, first.w],
+            rng.bytes_below(first.c * first.h * first.w, 256),
+        )
+    }
+
+    pub fn specs(&self) -> Vec<LayerSpec> {
+        self.params.layers.iter().map(|l| l.spec).collect()
+    }
+
+    /// Golden forward pass (u8 activations between layers, i32 logits).
+    /// This is the reference the hw-simulator path and the XLA path are
+    /// both compared against in the end-to-end tests.
+    pub fn forward_golden(&self, img: &Tensor<u8>) -> Vec<i32> {
+        let mut x = img.clone();
+        let n = self.params.layers.len();
+        for (i, lp) in self.params.layers.iter().enumerate() {
+            let mut out = golden::conv3x3_i32(&x, &lp.weights, &lp.bias, lp.spec.relu);
+            if lp.spec.pool {
+                out = golden::maxpool2x2(&out);
+            }
+            if i + 1 < n {
+                x = self.params.requants[i].apply(&out);
+            } else {
+                return out.into_data();
+            }
+        }
+        unreachable!("network has at least one layer")
+    }
+
+    /// Classify: argmax over the 32 logits.
+    pub fn classify_golden(&self, img: &Tensor<u8>) -> usize {
+        let logits = self.forward_golden(img);
+        argmax(&logits)
+    }
+}
+
+pub fn argmax(xs: &[i32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by_key(|(_, v)| **v)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_chain_is_consistent() {
+        let specs = edge_cnn_specs();
+        for pair in specs.windows(2) {
+            assert_eq!(pair[0].k, pair[1].c, "channel handoff");
+            assert_eq!(pair[0].oh(), pair[1].h, "height handoff");
+            assert_eq!(pair[0].ow(), pair[1].w, "width handoff");
+            assert_eq!(pair[1].c % 4, 0, "paper §4.1 divisibility");
+        }
+        let last = specs.last().unwrap();
+        assert_eq!((last.k, last.oh(), last.ow()), (32, 1, 1));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let net = EdgeCnn::new(7);
+        let img = EdgeCnn::sample_input(123, &net.specs()[0]);
+        assert_eq!(net.forward_golden(&img), net.forward_golden(&img));
+    }
+
+    #[test]
+    fn different_inputs_give_different_logits() {
+        let net = EdgeCnn::new(7);
+        let a = EdgeCnn::sample_input(1, &net.specs()[0]);
+        let b = EdgeCnn::sample_input(2, &net.specs()[0]);
+        assert_ne!(net.forward_golden(&a), net.forward_golden(&b));
+    }
+
+    #[test]
+    fn logits_have_expected_arity() {
+        let net = EdgeCnn::new(42);
+        let img = EdgeCnn::sample_input(5, &net.specs()[0]);
+        assert_eq!(net.forward_golden(&img).len(), 32);
+        assert!(net.classify_golden(&img) < 32);
+    }
+
+    #[test]
+    fn requants_cover_inner_boundaries() {
+        let net = EdgeCnn::new(7);
+        assert_eq!(net.params.requants.len(), net.params.layers.len() - 1);
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1, 5, 3]), 1);
+        assert_eq!(argmax(&[-1, -5]), 0);
+        assert_eq!(argmax_f32(&[0.5, 2.0, 1.0]), 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal dense NCHW-ish tensor over a flat `Vec<T>`.
+//!
+//! Shapes are small fixed ranks (1–4); this is deliberately not a
+//! general ndarray — the system only moves (C,H,W) feature maps,
+//! (K,C,3,3) weights and (K,) biases.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq, Eq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); shape.iter().product()],
+        }
+    }
+}
+
+impl<T: Copy> Tensor<T> {
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Flat index for a 3-d (c, y, x) coordinate.
+    #[inline]
+    pub fn idx3(&self, c: usize, y: usize, x: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        (c * self.shape[1] + y) * self.shape[2] + x
+    }
+
+    /// Flat index for a 4-d (k, c, y, x) coordinate.
+    #[inline]
+    pub fn idx4(&self, k: usize, c: usize, y: usize, x: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((k * self.shape[1] + c) * self.shape[2] + y) * self.shape[3] + x
+    }
+
+    #[inline]
+    pub fn at3(&self, c: usize, y: usize, x: usize) -> T {
+        self.data[self.idx3(c, y, x)]
+    }
+
+    #[inline]
+    pub fn at4(&self, k: usize, c: usize, y: usize, x: usize) -> T {
+        self.data[self.idx4(k, c, y, x)]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, y: usize, x: usize, v: T) {
+        let i = self.idx3(c, y, x);
+        self.data[i] = v;
+    }
+
+    pub fn map<U: Copy>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+impl Tensor<u8> {
+    /// Widen to the f32 carrier format the XLA artifacts consume.
+    pub fn to_f32(&self) -> Tensor<f32> {
+        self.map(|v| v as f32)
+    }
+}
+
+impl Tensor<i32> {
+    pub fn to_f32(&self) -> Tensor<f32> {
+        self.map(|v| v as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trips() {
+        let mut t = Tensor::<i32>::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 42);
+        assert_eq!(t.at3(1, 2, 3), 42);
+        assert_eq!(t.data()[t.idx3(1, 2, 3)], 42);
+        assert_eq!(t.idx3(0, 0, 1), 1);
+        assert_eq!(t.idx3(0, 1, 0), 4);
+        assert_eq!(t.idx3(1, 0, 0), 12);
+    }
+
+    #[test]
+    fn idx4_layout_is_kchw() {
+        let t = Tensor::<u8>::zeros(&[2, 3, 3, 3]);
+        assert_eq!(t.idx4(0, 0, 0, 1), 1);
+        assert_eq!(t.idx4(0, 0, 1, 0), 3);
+        assert_eq!(t.idx4(0, 1, 0, 0), 9);
+        assert_eq!(t.idx4(1, 0, 0, 0), 27);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_checks_length() {
+        Tensor::from_vec(&[2, 2], vec![1u8, 2, 3]);
+    }
+
+    #[test]
+    fn widen_preserves_values() {
+        let t = Tensor::from_vec(&[4], vec![0u8, 1, 127, 255]);
+        assert_eq!(t.to_f32().data(), &[0.0, 1.0, 127.0, 255.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Workload traces for the coordinator benches: streams of conv-layer
+//! requests with configurable shape mix and arrival pattern.
+//!
+//! The paper evaluates a single fixed workload (§5.2). A serving system
+//! needs mixed traffic, so the trace generator produces the shapes of
+//! the edge CNN plus the paper's S52 layer in configurable proportions
+//! — DESIGN.md's "synthetic equivalent of production traces".
+
+use super::{network::edge_cnn_specs, LayerSpec, S52};
+use crate::util::prng::Prng;
+
+/// One trace entry: which layer shape arrives and when (in microseconds
+/// of simulated wall clock from trace start).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEntry {
+    pub spec: LayerSpec,
+    pub arrival_us: u64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Total requests to generate.
+    pub n: usize,
+    /// Mean inter-arrival gap in microseconds (exponential-ish via
+    /// uniform doubling; 0 = all arrive at t=0, a closed-loop burst).
+    pub mean_gap_us: u64,
+    /// Weight of the big S52 layer relative to edge-CNN layers
+    /// (0.0 = only small layers, 1.0 = only S52).
+    pub s52_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n: 64,
+            mean_gap_us: 0,
+            s52_fraction: 0.25,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate a deterministic trace from a config.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
+    let mut rng = Prng::new(cfg.seed);
+    let small = edge_cnn_specs();
+    let mut t = 0u64;
+    (0..cfg.n)
+        .map(|i| {
+            let spec = if rng.f64() < cfg.s52_fraction {
+                S52
+            } else {
+                *rng.choose(&small)
+            };
+            if cfg.mean_gap_us > 0 {
+                // Uniform in [0, 2*mean] has the right mean and keeps the
+                // trace integer-deterministic.
+                t += rng.below(2 * cfg.mean_gap_us + 1);
+            }
+            TraceEntry {
+                spec,
+                arrival_us: t,
+                seed: cfg.seed ^ (i as u64) << 1,
+            }
+        })
+        .collect()
+}
+
+/// Total PSUMs in a trace (the paper's throughput accounting unit).
+pub fn total_psums(trace: &[TraceEntry]) -> u64 {
+    trace.iter().map(|e| e.spec.psums()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = TraceConfig::default();
+        assert_eq!(generate(&cfg), generate(&cfg));
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let cfg = TraceConfig {
+            mean_gap_us: 100,
+            n: 50,
+            ..Default::default()
+        };
+        let t = generate(&cfg);
+        for pair in t.windows(2) {
+            assert!(pair[0].arrival_us <= pair[1].arrival_us);
+        }
+    }
+
+    #[test]
+    fn fraction_extremes() {
+        let only_s52 = generate(&TraceConfig {
+            s52_fraction: 1.0,
+            ..Default::default()
+        });
+        assert!(only_s52.iter().all(|e| e.spec == S52));
+        let none = generate(&TraceConfig {
+            s52_fraction: 0.0,
+            ..Default::default()
+        });
+        assert!(none.iter().all(|e| e.spec != S52));
+    }
+
+    #[test]
+    fn psum_totals_add_up() {
+        let t = generate(&TraceConfig {
+            n: 3,
+            s52_fraction: 1.0,
+            ..Default::default()
+        });
+        assert_eq!(total_psums(&t), 3 * S52.psums());
+    }
+}

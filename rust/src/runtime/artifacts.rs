@@ -1,0 +1,172 @@
+//! Artifact registry: the rust view of `artifacts/manifest.json`.
+
+use crate::model::LayerSpec;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled variant (a conv layer or the fused CNN).
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub kind: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// For conv layers: the layer spec.
+    pub spec: Option<LayerSpec>,
+}
+
+/// The registry: manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+fn shape_list(j: &Json) -> Vec<Vec<usize>> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|d| d.iter().filter_map(|v| v.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl ArtifactRegistry {
+    /// Load from a directory containing `manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(
+            json.get(&["format"]).and_then(Json::as_str) == Some("hlo-text"),
+            "manifest format must be hlo-text (see aot.py)"
+        );
+        let mut variants = BTreeMap::new();
+        let vmap = json
+            .get(&["variants"])
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no variants"))?;
+        for (name, v) in vmap {
+            let kind = v
+                .get(&["kind"])
+                .and_then(Json::as_str)
+                .unwrap_or("conv_layer")
+                .to_string();
+            let spec = if kind == "conv_layer" {
+                Some(LayerSpec {
+                    c: v.get(&["c"]).and_then(Json::as_usize).unwrap_or(0),
+                    h: v.get(&["h"]).and_then(Json::as_usize).unwrap_or(0),
+                    w: v.get(&["w"]).and_then(Json::as_usize).unwrap_or(0),
+                    k: v.get(&["k"]).and_then(Json::as_usize).unwrap_or(0),
+                    relu: v.get(&["relu"]).and_then(Json::as_bool).unwrap_or(false),
+                    pool: v.get(&["pool"]).and_then(Json::as_bool).unwrap_or(false),
+                })
+            } else {
+                None
+            };
+            variants.insert(
+                name.clone(),
+                Variant {
+                    name: name.clone(),
+                    kind,
+                    file: v
+                        .get(&["file"])
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("variant {name} missing file"))?
+                        .to_string(),
+                    inputs: v.get(&["inputs"]).map(shape_list).unwrap_or_default(),
+                    output: v
+                        .get(&["output"])
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    spec,
+                },
+            );
+        }
+        Ok(ArtifactRegistry { dir, variants })
+    }
+
+    /// Default location: `$REPRO_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn load_default() -> anyhow::Result<Self> {
+        if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Self::load(repo)
+    }
+
+    /// Find the variant serving a given layer spec.
+    pub fn for_spec(&self, spec: &LayerSpec) -> Option<&Variant> {
+        self.variants.get(&spec.name())
+    }
+
+    /// Absolute path of a variant's HLO file.
+    pub fn hlo_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+
+    /// All conv-layer specs the registry can serve.
+    pub fn served_specs(&self) -> Vec<LayerSpec> {
+        self.variants.values().filter_map(|v| v.spec).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QUICKSTART;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        ArtifactRegistry::load_default().ok()
+    }
+
+    #[test]
+    fn loads_manifest_and_serves_quickstart() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let v = reg.for_spec(&QUICKSTART).expect("quickstart variant");
+        assert_eq!(v.kind, "conv_layer");
+        assert_eq!(v.output, vec![8, 14, 14]);
+        assert!(reg.hlo_path(v).exists());
+        assert_eq!(v.inputs[0], vec![8, 16, 16]);
+    }
+
+    #[test]
+    fn edge_cnn_variant_present() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let cnn = reg.variants.get("edge_cnn").expect("edge_cnn");
+        assert_eq!(cnn.kind, "cnn");
+        assert_eq!(cnn.inputs.len(), 1 + 10); // image + 5x(w,b)
+    }
+
+    #[test]
+    fn served_specs_round_trip_names() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        for spec in reg.served_specs() {
+            assert!(reg.for_spec(&spec).is_some(), "{}", spec.name());
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! XLA/PJRT executor: compile-once, execute-many on the CPU client.
+//!
+//! HLO **text** is the interchange format (see `aot.py` and
+//! /opt/xla-example/README.md — serialized protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1). Executables are compiled lazily on
+//! first use and cached for the life of the runtime.
+
+use super::artifacts::ArtifactRegistry;
+use crate::model::{LayerSpec, Tensor};
+use std::collections::HashMap;
+
+/// PJRT client + compiled executable cache.
+pub struct XlaRuntime {
+    pub registry: ArtifactRegistry,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub executions: u64,
+}
+
+impl XlaRuntime {
+    pub fn new(registry: ArtifactRegistry) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(XlaRuntime {
+            registry,
+            client,
+            cache: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn with_default_registry() -> anyhow::Result<Self> {
+        Self::new(ArtifactRegistry::load_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant.
+    fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let variant = self
+                .registry
+                .variants
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact variant '{name}'"))?
+                .clone();
+            let path = self.registry.hlo_path(&variant);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(anyhow_xla)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(anyhow_xla)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a variant with f32 tensor inputs; returns the flat f32
+    /// output (single tuple element, as lowered with return_tuple=True).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor<f32>]) -> anyhow::Result<Tensor<f32>> {
+        let variant = self
+            .registry
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact variant '{name}'"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == variant.inputs.len(),
+            "variant {name} expects {} inputs, got {}",
+            variant.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, want)) in inputs.iter().zip(&variant.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape() == &want[..],
+                "input {i} of {name}: shape {:?} != manifest {:?}",
+                t.shape(),
+                want
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| literal_from_tensor(t))
+            .collect::<anyhow::Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(anyhow_xla)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow_xla)?;
+        self.executions += 1;
+        let out = result.to_tuple1().map_err(anyhow_xla)?;
+        let values = out.to_vec::<f32>().map_err(anyhow_xla)?;
+        Ok(Tensor::from_vec(&variant.output, values))
+    }
+
+    /// Run one conv layer (u8 image/weights, i32 bias → f32 carriers).
+    pub fn run_layer(
+        &mut self,
+        spec: &LayerSpec,
+        img: &Tensor<u8>,
+        weights: &Tensor<u8>,
+        bias: &[i32],
+    ) -> anyhow::Result<Tensor<f32>> {
+        let name = spec.name();
+        let b = Tensor::from_vec(&[bias.len()], bias.iter().map(|&v| v as f32).collect());
+        self.execute(&name, &[img.to_f32(), weights.to_f32(), b])
+    }
+
+    /// Run the fused edge CNN artifact: image + (w, b) per layer.
+    pub fn run_edge_cnn(
+        &mut self,
+        img: &Tensor<u8>,
+        params: &[(Tensor<u8>, Vec<i32>)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut inputs = vec![img.to_f32()];
+        for (w, b) in params {
+            inputs.push(w.to_f32());
+            inputs.push(Tensor::from_vec(
+                &[b.len()],
+                b.iter().map(|&v| v as f32).collect(),
+            ));
+        }
+        Ok(self.execute("edge_cnn", &inputs)?.into_data())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn literal_from_tensor(t: &Tensor<f32>) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(anyhow_xla)
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{golden, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    fn runtime() -> Option<XlaRuntime> {
+        XlaRuntime::with_default_registry().ok()
+    }
+
+    #[test]
+    fn quickstart_layer_matches_golden() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let spec = QUICKSTART;
+        let mut rng = Prng::new(77);
+        let img = Tensor::from_vec(&[spec.c, spec.h, spec.w], rng.bytes_below(spec.c * spec.h * spec.w, 128));
+        let wts = Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 64));
+        let bias: Vec<i32> = (0..spec.k).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let out = rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+        let want = golden::conv3x3_i32(&img, &wts, &bias, spec.relu);
+        assert_eq!(out.shape(), want.shape());
+        for (a, b) in out.data().iter().zip(want.data()) {
+            assert_eq!(*a, *b as f32);
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilations() {
+        let Some(mut rt) = runtime() else {
+            return;
+        };
+        let spec = QUICKSTART;
+        let mut rng = Prng::new(78);
+        let img = Tensor::from_vec(&[spec.c, spec.h, spec.w], rng.bytes_below(spec.c * spec.h * spec.w, 128));
+        let wts = Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 64));
+        let bias = vec![0i32; spec.k];
+        rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+        rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        assert_eq!(rt.executions, 2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(mut rt) = runtime() else {
+            return;
+        };
+        let bad = Tensor::<f32>::zeros(&[1, 2, 3]);
+        assert!(rt
+            .execute(&QUICKSTART.name(), &[bad.clone(), bad.clone(), bad])
+            .is_err());
+    }
+}

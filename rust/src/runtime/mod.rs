@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` from JAX + Pallas) and executes
+//! them on the XLA CPU client. Python is never on this path.
+//!
+//! * [`artifacts`] — parses `manifest.json` (via [`crate::util::json`])
+//!   into a registry keyed by the layer-spec name shared with
+//!   `python/compile/model.py`.
+//! * [`executor`] — PJRT client + compiled-executable cache; converts
+//!   between [`crate::model::Tensor`] and `xla::Literal`.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactRegistry, Variant};
+pub use executor::XlaRuntime;

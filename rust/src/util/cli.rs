@@ -1,0 +1,112 @@
+//! Tiny CLI argument helpers (no `clap` offline): `--flag`, `--key value`
+//! and positional arguments, with typed accessors and a usage error path.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `--key value` pairs become options unless the
+    /// key is listed in `bool_flags`, in which case it is a bare flag.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{key} expects a value"))?;
+                    out.options.insert(key.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &argv(&["cmd", "--cores", "8", "--verbose", "pos2", "--rate=0.5"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.get_usize("cores", 1).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.get_usize("cores", 4).unwrap(), 4);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["--cores"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_type_errors() {
+        let a = Args::parse(&argv(&["--cores", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("cores", 1).is_err());
+    }
+}

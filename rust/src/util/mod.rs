@@ -1,0 +1,7 @@
+//! Small self-contained utilities the offline build environment forces
+//! in-tree: a deterministic PRNG (no `rand`), a JSON parser for the AOT
+//! manifest (no `serde_json`), and CLI argument helpers (no `clap`).
+
+pub mod cli;
+pub mod json;
+pub mod prng;

@@ -1,0 +1,89 @@
+//! End-to-end integration: full CNN inference through the scheduler
+//! (simulated hardware, §4.1 layer chaining) and mixed traffic through
+//! the coordinator's batcher + core pool.
+
+use repro::coordinator::{CnnScheduler, CoordinatorConfig, Server};
+use repro::hw::IpCoreConfig;
+use repro::model::network::EdgeCnn;
+use repro::model::trace::{generate, total_psums, TraceConfig};
+
+#[test]
+fn cnn_inference_on_simulated_hw_is_bit_exact_vs_golden() {
+    let net = EdgeCnn::new(42);
+    let first = net.specs()[0];
+    let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+    for seed in 0..5u64 {
+        let img = EdgeCnn::sample_input(seed, &first);
+        assert!(
+            sched.verify_against_golden(&img).unwrap(),
+            "seed {seed}: hw-sim logits diverge from golden"
+        );
+    }
+}
+
+#[test]
+fn layer_chaining_saves_dma_cycles() {
+    let net = EdgeCnn::new(1);
+    let first = net.specs()[0];
+    let img = EdgeCnn::sample_input(1, &first);
+    let mut sched = CnnScheduler::new(IpCoreConfig::default(), net);
+    let run = sched.infer(&img).unwrap();
+    let saving = 1.0 - run.total_cycles as f64 / run.total_cycles_dma_roundtrip as f64;
+    assert!(saving > 0.05, "chaining saves {saving:.3} (>5% expected)");
+}
+
+#[test]
+fn mixed_trace_through_coordinator_completes_and_scales() {
+    let trace = generate(&TraceConfig {
+        n: 48,
+        mean_gap_us: 0,
+        s52_fraction: 0.0,
+        seed: 77,
+    });
+    let mut one = Server::new(CoordinatorConfig::default().with_cores(1));
+    let r1 = one.run_trace(&trace);
+    one.shutdown();
+    let mut four = Server::new(CoordinatorConfig::default().with_cores(4));
+    let r4 = four.run_trace(&trace);
+    four.shutdown();
+
+    assert_eq!(r1.n_requests, 48);
+    assert_eq!(r4.n_requests, 48);
+    assert_eq!(r1.total_psums, total_psums(&trace));
+    assert_eq!(r4.total_psums, r1.total_psums);
+    // Simulated hardware throughput must not degrade with more cores.
+    assert!(r4.sim_gops_psum >= r1.sim_gops_psum * 0.99);
+}
+
+#[test]
+fn burst_of_same_shape_amortises_weight_dma() {
+    let entry = generate(&TraceConfig {
+        n: 1,
+        s52_fraction: 0.0,
+        ..Default::default()
+    });
+    let trace: Vec<_> = entry.into_iter().cycle().take(16).collect();
+    let mut server = Server::new(CoordinatorConfig::default());
+    let report = server.run_trace(&trace);
+    server.shutdown();
+    assert!(
+        report.weight_dma_skip_rate >= 0.75,
+        "skip rate {:.2}",
+        report.weight_dma_skip_rate
+    );
+}
+
+#[test]
+fn throughput_report_is_consistent() {
+    let trace = generate(&TraceConfig {
+        n: 8,
+        s52_fraction: 0.25,
+        ..Default::default()
+    });
+    let mut server = Server::new(CoordinatorConfig::default().with_cores(2));
+    let report = server.run_trace(&trace);
+    server.shutdown();
+    assert!(report.sim_gops_psum > 0.0);
+    assert!(report.p50_us <= report.p99_us);
+    assert!(report.host_rps > 0.0);
+}

