@@ -1,6 +1,9 @@
 //! Experiment S52 scaling: the paper's 0.224 GOPS single-core and
 //! 4.48 GOPS 20-core claims, measured end-to-end through the
-//! coordinator's core pool (not just multiplied out).
+//! coordinator's backend pool (not just multiplied out) — plus the
+//! heterogeneous-pool scenario the backend refactor enables: simulated
+//! IP cores mixed with golden-CPU fallback workers serving a trace
+//! that includes depthwise (MobileNet-style) jobs.
 //!
 //! ```bash
 //! cargo run --release --example multicore_scaling -- [--requests N]
@@ -24,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         n,
         mean_gap_us: 0,
         s52_fraction: 1.0, // pure §5.2 workload
+        depthwise_fraction: 0.0,
         seed: 52,
     });
 
@@ -55,5 +59,52 @@ fn main() -> anyhow::Result<()> {
     println!("ours:  single core {single:.4} GOPS, 20 cores {twenty:.4} GOPS");
     let lin = twenty / (single * MAX_CORES_Z2 as f64);
     println!("scaling efficiency at 20 cores: {:.1}%", lin * 100.0);
+
+    // --- heterogeneous pool: IP cores + golden-CPU fallback workers
+    // serving mixed standard/depthwise traffic. Depthwise jobs route
+    // only to depthwise-capable backends (capability mask); fallback
+    // workers absorb overflow once the accelerators queue up
+    // (cost-model-weighted least-loaded dispatch).
+    println!("\n=== heterogeneous pool: mixed standard + depthwise trace ===");
+    let mixed = generate(&TraceConfig {
+        n: n.max(24),
+        mean_gap_us: 0,
+        s52_fraction: 0.1,
+        depthwise_fraction: 0.3,
+        seed: 53,
+    });
+    let dw_jobs = mixed
+        .iter()
+        .filter(|e| e.kind == repro::backend::JobKind::Depthwise)
+        .count();
+    println!(
+        "trace: {} requests ({} depthwise), pools below serve the identical stream",
+        mixed.len(),
+        dw_jobs
+    );
+    for (label, cores, golden) in [
+        ("4 sim cores          ", 4usize, 0usize),
+        ("4 sim + 2 golden-cpu ", 4, 2),
+        ("2 sim + 4 golden-cpu ", 2, 4),
+    ] {
+        let mut server = Server::new(
+            CoordinatorConfig::default()
+                .with_cores(cores)
+                .with_golden_workers(golden),
+        );
+        let report = server.run_trace(&mixed);
+        server.shutdown();
+        let mix = report
+            .backend_mix
+            .iter()
+            .map(|(name, count)| format!("{name}:{count}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "  {label} p50={:>6}us p99={:>6}us host_rps={:>7.1} served {mix}",
+            report.p50_us, report.p99_us, report.host_rps
+        );
+    }
+    println!("(depthwise jobs never appear on a depthwise-incapable backend; see\n rust/src/coordinator/dispatch.rs tests for the wrap8-core exclusion proof)");
     Ok(())
 }

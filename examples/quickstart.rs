@@ -45,14 +45,21 @@ fn main() -> anyhow::Result<()> {
         gops_mac(spec.psums(), run.cycles.compute, 112_000_000),
     );
 
-    // 3. XLA / PJRT (Pallas kernel, AOT).
-    let mut rt = XlaRuntime::with_default_registry()?;
-    let xla = rt.run_layer(&spec, &img, &wts, &bias)?;
-    println!("xla:     out[0,0,0..4] = {:?} (platform {})", &xla.data()[..4], rt.platform());
-    for (a, b) in xla.data().iter().zip(want.data()) {
-        assert_eq!(*a, *b as f32, "XLA must match golden");
+    // 3. XLA / PJRT (Pallas kernel, AOT). Needs the `xla` feature and
+    // built artifacts; degrade to a two-way check otherwise.
+    match XlaRuntime::with_default_registry() {
+        Ok(mut rt) => {
+            let xla = rt.run_layer(&spec, &img, &wts, &bias)?;
+            println!("xla:     out[0,0,0..4] = {:?} (platform {})", &xla.data()[..4], rt.platform());
+            for (a, b) in xla.data().iter().zip(want.data()) {
+                assert_eq!(*a, *b as f32, "XLA must match golden");
+            }
+            println!("\nall three paths agree bit-exactly ✓");
+        }
+        Err(e) => {
+            println!("xla:     skipped ({e})");
+            println!("\ngolden and hw-sim agree bit-exactly ✓");
+        }
     }
-
-    println!("\nall three paths agree bit-exactly ✓");
     Ok(())
 }

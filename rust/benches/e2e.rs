@@ -37,6 +37,7 @@ fn main() {
         n: 32,
         mean_gap_us: 0,
         s52_fraction: 0.0,
+        depthwise_fraction: 0.0,
         seed: 7,
     });
     for cores in [1usize, 4, 20] {
@@ -50,6 +51,26 @@ fn main() {
             report.p50_us,
             report.p99_us,
             report.weight_dma_skip_rate * 100.0
+        );
+        server.shutdown();
+    }
+
+    // --- heterogeneous pool: sim cores + golden fallback, mixed kinds.
+    {
+        let mixed = generate(&TraceConfig {
+            n: 32,
+            mean_gap_us: 0,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.25,
+            seed: 8,
+        });
+        let mut server = Server::new(
+            CoordinatorConfig::default().with_cores(4).with_golden_workers(2),
+        );
+        let report = server.run_trace(&mixed);
+        println!(
+            "heterogeneous 4 sim + 2 golden: host_rps={:.1} p99={}us mix={:?}",
+            report.host_rps, report.p99_us, report.backend_mix
         );
         server.shutdown();
     }

@@ -1,0 +1,169 @@
+//! [`ConvBackend`] over the naive CPU reference convolutions.
+//!
+//! The honest host-fallback worker: a deployment keeps a few CPU
+//! workers behind the accelerator pool so overflow traffic degrades in
+//! latency instead of being shed. Outputs are bit-identical to the
+//! simulated core (the golden functions *are* the anchor the simulator
+//! is tested against); the reported cycles are the backend's own cost
+//! model — modelled host-equivalent work, not simulated silicon.
+
+use super::{BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload};
+use crate::hw::depthwise::golden_depthwise3x3;
+use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
+use crate::model::golden::conv3x3_i32;
+
+/// Host-CPU reference backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GoldenBackend;
+
+impl GoldenBackend {
+    pub fn new() -> Self {
+        GoldenBackend
+    }
+}
+
+impl ConvBackend for GoldenBackend {
+    fn name(&self) -> &'static str {
+        "golden-cpu"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            standard3x3: true,
+            depthwise: true,
+            pointwise_as_3x3: true,
+            accum: AccumMode::I32,
+            spec_allowlist: None,
+        }
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::HostMacs
+    }
+
+    fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+        let cost = self.cost(job.spec, job.kind);
+        let output = match job.kind {
+            JobKind::Standard | JobKind::PointwiseAs3x3 => {
+                anyhow::ensure!(
+                    job.img.shape() == [job.spec.c, job.spec.h, job.spec.w],
+                    "image shape {:?} != spec {:?}",
+                    job.img.shape(),
+                    job.spec
+                );
+                anyhow::ensure!(
+                    job.weights.shape() == [job.spec.k, job.spec.c, 3, 3],
+                    "weight shape {:?} != spec {:?}",
+                    job.weights.shape(),
+                    job.spec
+                );
+                // Raw accumulator output, like the hardware path: the
+                // serving layer owns activation + requant.
+                conv3x3_i32(job.img, job.weights, job.bias, false)
+            }
+            JobKind::Depthwise => {
+                anyhow::ensure!(
+                    job.img.shape() == [job.spec.c, job.spec.h, job.spec.w],
+                    "image shape {:?} != spec {:?}",
+                    job.img.shape(),
+                    job.spec
+                );
+                anyhow::ensure!(
+                    job.weights.shape() == [job.spec.c, 3, 3],
+                    "depthwise weight shape {:?} != (C,3,3) for {:?}",
+                    job.weights.shape(),
+                    job.spec
+                );
+                anyhow::ensure!(
+                    job.bias.len() == job.spec.c,
+                    "depthwise bias len {} != C {}",
+                    job.bias.len(),
+                    job.spec.c
+                );
+                golden_depthwise3x3(job.img, job.weights, job.bias, job.spec.relu)
+            }
+        };
+        Ok(BackendRun {
+            output,
+            cycles: CycleStats {
+                compute: cost,
+                total: cost,
+                ..Default::default()
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::hw::IpCoreConfig;
+    use crate::model::{LayerSpec, Tensor, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn matches_sim_backend_bit_for_bit() {
+        let spec = QUICKSTART;
+        let mut rng = Prng::new(41);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        );
+        let wts = Tensor::from_vec(
+            &[spec.k, spec.c, 3, 3],
+            rng.bytes_below(spec.k * spec.c * 9, 256),
+        );
+        let bias: Vec<i32> = (0..spec.k).map(|_| rng.range_i64(-9, 9) as i32).collect();
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let a = GoldenBackend::new().run(&payload).unwrap();
+        let b = SimBackend::new(IpCoreConfig::default()).run(&payload).unwrap();
+        assert_eq!(a.output.data(), b.output.data());
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let spec = LayerSpec::new(4, 8, 8, 4);
+        let img = Tensor::<u8>::zeros(&[4, 8, 8]);
+        let wts = Tensor::<u8>::zeros(&[4, 4, 3, 3]);
+        let bias = vec![0i32; 4];
+        let wrong_spec = LayerSpec::new(8, 8, 8, 4);
+        let err = GoldenBackend::new().run(&JobPayload {
+            kind: JobKind::Standard,
+            spec: &wrong_spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn reports_modelled_cost_as_cycles() {
+        let spec = QUICKSTART;
+        let img = Tensor::<u8>::zeros(&[spec.c, spec.h, spec.w]);
+        let wts = Tensor::<u8>::zeros(&[spec.k, spec.c, 3, 3]);
+        let bias = vec![0i32; spec.k];
+        let mut be = GoldenBackend::new();
+        let run = be
+            .run(&JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .unwrap();
+        assert_eq!(run.cycles.total, be.cost(&spec, JobKind::Standard));
+    }
+}

@@ -1,0 +1,262 @@
+//! The execution-backend seam: every way this system can compute a
+//! convolution layer sits behind one [`ConvBackend`] trait.
+//!
+//! The paper ships a single fixed-function IP core; a deployment mixes
+//! compute substrates — replicated accelerator cores, host-CPU
+//! fallback, a compiled XLA path — and routes each layer job to a
+//! capable, least-loaded unit (the pattern the FPGA-CNN survey
+//! literature calls heterogeneous per-layer scheduling). This module
+//! is that seam:
+//!
+//! * [`ConvBackend`] — executes one conv-layer job ([`JobPayload`]) and
+//!   reports its output plus a simulated/modelled cost ([`BackendRun`]);
+//! * [`Capability`] — what the backend can run: standard 3×3,
+//!   depthwise, pointwise-as-3×3, and which accumulator mode it
+//!   produces;
+//! * [`CostModel`] — a cheap, `Copy` cost estimator the dispatcher uses
+//!   for capability-masked, cost-weighted least-loaded routing without
+//!   reaching into worker threads;
+//! * [`sim::SimBackend`] — the cycle-accurate [`crate::hw::IpCore`]
+//!   (standard, pointwise-as-3×3, and depthwise through the same entry
+//!   point);
+//! * [`golden::GoldenBackend`] — the naive CPU reference, the honest
+//!   host-fallback worker;
+//! * [`xla::XlaBackend`] — the AOT Pallas/HLO artifacts under PJRT
+//!   (available when the `xla` feature is linked and artifacts exist).
+//!
+//! The parity contract: for identical integer inputs every backend
+//! produces bit-identical i32 outputs (`rust/tests/backend_parity.rs`).
+
+pub mod golden;
+pub mod sim;
+pub mod xla;
+
+pub use golden::GoldenBackend;
+pub use sim::SimBackend;
+pub use xla::XlaBackend;
+
+use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
+use crate::model::{LayerSpec, Tensor};
+use crate::paper::{CYCLES_PER_PSUM_GROUP, N_CORES, N_PCORES};
+
+/// What kind of convolution a job asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    /// The paper's standard 3×3 conv: `(C,H,W) ⊛ (K,C,3,3) + (K,)`.
+    Standard,
+    /// Per-channel 3×3: `(C,H,W) ⊛ (C,3,3) + (C,)`, `spec.k == spec.c`.
+    /// ReLU fuses into the core's depthwise path (`spec.relu`).
+    Depthwise,
+    /// A 1×1 conv pre-lowered to the core's 3×3 dataflow: the image
+    /// arrives zero-padded by one pixel and the weights centre-tapped
+    /// (see [`crate::hw::depthwise::pointwise_as_3x3`]). Numerically a
+    /// standard job; tracked separately so backends can decline the
+    /// 11%-MAC-utilisation mapping.
+    PointwiseAs3x3,
+}
+
+/// PSUMs a job contributes in the paper's accounting — kind-aware:
+/// depthwise accumulates one PSUM per (window, channel), not per
+/// (window, kernel, channel).
+pub fn job_psums(spec: &LayerSpec, kind: JobKind) -> u64 {
+    match kind {
+        JobKind::Depthwise => (spec.conv_oh() * spec.conv_ow() * spec.c) as u64,
+        JobKind::Standard | JobKind::PointwiseAs3x3 => spec.psums(),
+    }
+}
+
+/// What a backend can execute, and in which accumulator mode.
+#[derive(Clone, Debug)]
+pub struct Capability {
+    pub standard3x3: bool,
+    pub depthwise: bool,
+    pub pointwise_as_3x3: bool,
+    /// Accumulator semantics of the outputs this backend produces.
+    /// Mixed pools serving production traffic should be I32-homogeneous;
+    /// the dispatcher masks by job kind and leaves accumulator policy to
+    /// pool construction.
+    pub accum: AccumMode,
+    /// `Some(specs)` when the backend can only serve a fixed spec set
+    /// (the XLA path serves exactly its compiled artifacts); `None`
+    /// means any valid spec of a supported kind. The dispatcher must
+    /// honour this — a mask/run mismatch panics the worker thread.
+    pub spec_allowlist: Option<Vec<LayerSpec>>,
+}
+
+impl Capability {
+    pub fn supports(&self, kind: JobKind) -> bool {
+        match kind {
+            JobKind::Standard => self.standard3x3,
+            JobKind::Depthwise => self.depthwise,
+            JobKind::PointwiseAs3x3 => self.pointwise_as_3x3,
+        }
+    }
+
+    /// Full routing predicate: kind mask plus the spec allowlist.
+    pub fn allows(&self, spec: &LayerSpec, kind: JobKind) -> bool {
+        self.supports(kind)
+            && match &self.spec_allowlist {
+                None => true,
+                Some(list) => list.contains(spec),
+            }
+    }
+}
+
+/// Dispatcher-side cost estimator. `Copy`, so the pool can weigh queue
+/// load on the submit thread while the backend itself lives inside a
+/// worker thread. Units are "equivalent busy cycles" of the owning
+/// backend — only relative magnitudes within one pool matter for
+/// least-loaded balancing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostModel {
+    /// The IP core's closed-form schedule (§5.2): standard jobs cost
+    /// `windows × ceil(C/4) × K/4 × 8` cycles, depthwise jobs
+    /// `windows × ceil(C/4) × 8` (one active PCORE).
+    SimCycles,
+    /// Naive host loops: ~one unit per MAC (9 per PSUM).
+    HostMacs,
+    /// Vectorised host runtime: `psums / throughput_factor` units.
+    Vectorized { throughput_factor: u64 },
+}
+
+impl CostModel {
+    pub fn cost(&self, spec: &LayerSpec, kind: JobKind) -> u64 {
+        let windows = (spec.conv_oh() * spec.conv_ow()) as u64;
+        let c_rounds = spec.c.div_ceil(N_CORES) as u64;
+        match (*self, kind) {
+            (CostModel::SimCycles, JobKind::Depthwise) => {
+                c_rounds * windows * CYCLES_PER_PSUM_GROUP
+            }
+            (CostModel::SimCycles, _) => {
+                let kernel_groups = (spec.k as u64 / N_PCORES as u64).max(1);
+                windows * c_rounds * kernel_groups * CYCLES_PER_PSUM_GROUP
+            }
+            (CostModel::HostMacs, kind) => job_psums(spec, kind) * 9,
+            (CostModel::Vectorized { throughput_factor }, kind) => {
+                job_psums(spec, kind) / throughput_factor.max(1) + 1
+            }
+        }
+    }
+}
+
+/// One conv-layer job in backend-agnostic, borrowed form.
+///
+/// Shapes by kind — `Standard`/`PointwiseAs3x3`: image `(C,H,W)`,
+/// weights `(K,C,3,3)`, bias `(K,)`; `Depthwise`: weights `(C,3,3)`,
+/// bias `(C,)`, `spec.k == spec.c`.
+#[derive(Debug)]
+pub struct JobPayload<'a> {
+    pub kind: JobKind,
+    pub spec: &'a LayerSpec,
+    pub img: &'a Tensor<u8>,
+    pub weights: &'a Tensor<u8>,
+    pub bias: &'a [i32],
+    /// The dispatcher already has this weight set resident on the
+    /// executing unit (weight-stationary batching): backends that model
+    /// a weight DMA may discount it.
+    pub weights_resident: bool,
+}
+
+/// What one backend execution produced.
+#[derive(Clone, Debug)]
+pub struct BackendRun {
+    /// Widened i32 output (backends in narrower accumulator modes widen
+    /// on readout, exactly like `LayerOutput::into_i32`).
+    pub output: Tensor<i32>,
+    /// Simulated cycles for hardware backends; modelled equivalent
+    /// cycles (the backend's [`CostModel`]) for host paths. Drives
+    /// metrics and load accounting uniformly.
+    pub cycles: CycleStats,
+}
+
+/// A unit that executes conv-layer jobs. `Send` is a supertrait so
+/// boxed backends can move into pool worker threads.
+pub trait ConvBackend: Send {
+    /// Stable identifier (distinct per configuration where it matters,
+    /// e.g. `sim-ipcore-wrap8` vs `sim-ipcore-i32`).
+    fn name(&self) -> &'static str;
+
+    /// What this backend can run.
+    fn capability(&self) -> Capability;
+
+    /// Dispatcher-side cost estimator for this backend.
+    fn cost_model(&self) -> CostModel;
+
+    /// Estimated cost of one job (provided: delegates to the model).
+    fn cost(&self, spec: &LayerSpec, kind: JobKind) -> u64 {
+        self.cost_model().cost(spec, kind)
+    }
+
+    /// Execute one job. Standard/pointwise jobs return the raw
+    /// accumulator output (activation + requant belong to the serving
+    /// layer); depthwise fuses ReLU when `spec.relu` is set, matching
+    /// the core's depthwise entry point.
+    fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{QUICKSTART, S52};
+
+    #[test]
+    fn sim_cost_matches_s52_cycle_count() {
+        // The cost model must agree with the simulator's §5.2 headline.
+        let c = CostModel::SimCycles.cost(&S52, JobKind::Standard);
+        assert_eq!(c, 1_577_088);
+    }
+
+    #[test]
+    fn depthwise_psums_drop_the_kernel_axis() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        assert_eq!(job_psums(&spec, JobKind::Standard), 64 * 8 * 8);
+        assert_eq!(job_psums(&spec, JobKind::Depthwise), 64 * 8);
+    }
+
+    #[test]
+    fn capability_masks_by_kind() {
+        let cap = Capability {
+            standard3x3: true,
+            depthwise: false,
+            pointwise_as_3x3: true,
+            accum: AccumMode::I32,
+            spec_allowlist: None,
+        };
+        assert!(cap.supports(JobKind::Standard));
+        assert!(cap.supports(JobKind::PointwiseAs3x3));
+        assert!(!cap.supports(JobKind::Depthwise));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
+    }
+
+    #[test]
+    fn spec_allowlist_restricts_routing() {
+        let cap = Capability {
+            standard3x3: true,
+            depthwise: false,
+            pointwise_as_3x3: false,
+            accum: AccumMode::I32,
+            spec_allowlist: Some(vec![QUICKSTART]),
+        };
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
+        assert!(!cap.allows(&S52, JobKind::Standard));
+        // Kind mask still applies on top of the allowlist.
+        assert!(!cap.allows(&QUICKSTART, JobKind::Depthwise));
+    }
+
+    #[test]
+    fn host_cost_exceeds_sim_cost_per_job() {
+        // Golden fallback must look more expensive than an IP core so
+        // least-loaded dispatch prefers accelerators until they queue.
+        let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
+        let host = CostModel::HostMacs.cost(&QUICKSTART, JobKind::Standard);
+        assert!(host > sim, "host {host} vs sim {sim}");
+    }
+
+    #[test]
+    fn vectorized_cost_is_never_zero() {
+        let tiny = LayerSpec::new(1, 3, 3, 4);
+        let c = CostModel::Vectorized { throughput_factor: 1_000_000 }.cost(&tiny, JobKind::Standard);
+        assert!(c >= 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! [`ConvBackend`] over the AOT-compiled Pallas/HLO artifacts executed
+//! through PJRT ([`crate::runtime::XlaRuntime`]).
+//!
+//! Availability is doubly gated: the crate must be built with the
+//! `xla` feature (otherwise `XlaRuntime` is the stub that fails at
+//! construction) and the artifact registry must exist on disk. Both
+//! failures surface in [`XlaBackend::try_new`], so pools and tests can
+//! degrade by skipping this backend.
+//!
+//! Serving restrictions, encoded in the capability mask and re-checked
+//! at run time: standard 3×3 only (the artifact set has no depthwise or
+//! centre-tapped pointwise variants), raw-accumulator specs only (the
+//! fused relu/pool variants transform the output, which would break the
+//! backend parity contract), and only specs present in the registry.
+
+use super::{BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload};
+use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
+use crate::model::LayerSpec;
+use crate::runtime::XlaRuntime;
+
+/// PJRT-executed conv backend.
+pub struct XlaBackend {
+    rt: XlaRuntime,
+}
+
+impl XlaBackend {
+    /// Build over the default artifact registry; `Err` when the `xla`
+    /// feature is not linked or no artifacts are built.
+    pub fn try_new() -> anyhow::Result<Self> {
+        Ok(XlaBackend {
+            rt: XlaRuntime::with_default_registry()?,
+        })
+    }
+
+    pub fn with_runtime(rt: XlaRuntime) -> Self {
+        XlaBackend { rt }
+    }
+
+    /// Raw-conv specs this backend can serve (registry ∩ contract).
+    pub fn served_specs(&self) -> Vec<LayerSpec> {
+        self.rt
+            .registry
+            .served_specs()
+            .into_iter()
+            .filter(|s| !s.relu && !s.pool)
+            .collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+impl ConvBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            standard3x3: true,
+            depthwise: false,
+            pointwise_as_3x3: false,
+            accum: AccumMode::I32,
+            // The mask must agree with run(): only raw-conv specs the
+            // artifact registry actually compiled. Anything else would
+            // route here, fail run()'s ensures, and panic the worker.
+            spec_allowlist: Some(self.served_specs()),
+        }
+    }
+
+    fn cost_model(&self) -> CostModel {
+        // ~1 unit per PSUM: costlier than a dedicated IP core
+        // (SimCycles ≈ psums/2) so accelerators fill first, far cheaper
+        // than naive host loops (HostMacs = 9 × psums).
+        CostModel::Vectorized {
+            throughput_factor: 1,
+        }
+    }
+
+    fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+        anyhow::ensure!(
+            job.kind == JobKind::Standard,
+            "xla backend serves standard 3x3 jobs only, got {:?}",
+            job.kind
+        );
+        anyhow::ensure!(
+            !job.spec.relu && !job.spec.pool,
+            "xla backend serves raw-accumulator specs only (artifact {} fuses relu/pool)",
+            job.spec.name()
+        );
+        let cost = self.cost(job.spec, job.kind);
+        let out = self.rt.run_layer(job.spec, job.img, job.weights, job.bias)?;
+        // The artifacts carry exact integers in f32 (DESIGN.md §5);
+        // widen back to the i32 parity format.
+        Ok(BackendRun {
+            output: out.map(|v| v as i32),
+            cycles: CycleStats {
+                compute: cost,
+                total: cost,
+                ..Default::default()
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{golden, Tensor, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn unavailable_runtime_degrades_to_err() {
+        // Whichever gate is closed (feature or artifacts), try_new must
+        // either produce a working backend or a skippable error.
+        match XlaBackend::try_new() {
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(!msg.is_empty(), "skip reason must be reportable");
+            }
+            Ok(mut be) => {
+                let spec = QUICKSTART;
+                let mut rng = Prng::new(71);
+                let img = Tensor::from_vec(
+                    &[spec.c, spec.h, spec.w],
+                    rng.bytes_below(spec.c * spec.h * spec.w, 128),
+                );
+                let wts = Tensor::from_vec(
+                    &[spec.k, spec.c, 3, 3],
+                    rng.bytes_below(spec.k * spec.c * 9, 32),
+                );
+                let bias: Vec<i32> =
+                    (0..spec.k).map(|_| rng.range_i64(-20, 20) as i32).collect();
+                let run = be
+                    .run(&JobPayload {
+                        kind: JobKind::Standard,
+                        spec: &spec,
+                        img: &img,
+                        weights: &wts,
+                        bias: &bias,
+                        weights_resident: false,
+                    })
+                    .unwrap();
+                let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+                assert_eq!(run.output.data(), want.data());
+            }
+        }
+    }
+
+    #[test]
+    fn capability_is_standard_only_and_allowlisted() {
+        // Static shape of the mask; no runtime needed. A constructed
+        // backend's mask is registry-derived (see capability()).
+        let cap = Capability {
+            standard3x3: true,
+            depthwise: false,
+            pointwise_as_3x3: false,
+            accum: AccumMode::I32,
+            spec_allowlist: Some(vec![QUICKSTART]),
+        };
+        assert!(cap.supports(JobKind::Standard));
+        assert!(!cap.supports(JobKind::Depthwise));
+        assert!(!cap.supports(JobKind::PointwiseAs3x3));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
+        assert!(!cap.allows(&crate::model::S52, JobKind::Standard));
+    }
+
+    #[test]
+    fn cost_sits_between_sim_and_host() {
+        // Routing intent: accelerators fill first, naive host loops
+        // last, the vectorised XLA path in between.
+        let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
+        let xla = CostModel::Vectorized { throughput_factor: 1 }.cost(&QUICKSTART, JobKind::Standard);
+        let host = CostModel::HostMacs.cost(&QUICKSTART, JobKind::Standard);
+        assert!(sim < xla, "sim {sim} < xla {xla}");
+        assert!(xla < host, "xla {xla} < host {host}");
+    }
+}

@@ -12,14 +12,17 @@
 
 use super::config::BatchConfig;
 use super::request::Submission;
+use crate::backend::JobKind;
 use crate::model::LayerSpec;
 use std::collections::VecDeque;
 
-/// A closed batch, ready for dispatch.
+/// A closed batch, ready for dispatch. All jobs share spec, weight set
+/// and kind, so a batch routes as one unit to one capable backend.
 #[derive(Debug)]
 pub struct Batch {
     pub spec: LayerSpec,
     pub weights_id: u64,
+    pub kind: JobKind,
     pub jobs: Vec<Submission>,
 }
 
@@ -41,13 +44,15 @@ impl Batcher {
 
     /// Add a submission; returns any batch that closed as a result.
     pub fn push(&mut self, sub: Submission) -> Vec<Batch> {
-        let key = (sub.job.spec, sub.job.weights_id);
+        let key = (sub.job.spec, sub.job.weights_id, sub.job.kind);
         let mut closed = Vec::new();
 
         // Try to join an open batch; count skips on the ones passed over.
         let mut sub = Some(sub);
         for (batch, skips) in self.open.iter_mut() {
-            if (batch.spec, batch.weights_id) == key && batch.jobs.len() < self.config.max_batch {
+            if (batch.spec, batch.weights_id, batch.kind) == key
+                && batch.jobs.len() < self.config.max_batch
+            {
                 batch.jobs.push(sub.take().expect("joined at most once"));
                 break;
             } else {
@@ -59,6 +64,7 @@ impl Batcher {
                 Batch {
                     spec: key.0,
                     weights_id: key.1,
+                    kind: key.2,
                     jobs: vec![sub],
                 },
                 0,
@@ -142,6 +148,32 @@ mod tests {
         let closed = b.push(sub(3, S52)); // skip 2 -> quickstart batch must close
         assert_eq!(closed.len(), 1);
         assert_eq!(closed[0].spec, QUICKSTART);
+    }
+
+    #[test]
+    fn depthwise_and_standard_of_same_spec_never_share_a_batch() {
+        // 4x8x8 k4 is a valid shape for both kinds; the batch key must
+        // keep them apart so a batch routes to one capable backend.
+        let spec = LayerSpec::new(4, 8, 8, 4);
+        let mut b = Batcher::new(cfg(8, 100));
+        let (tx, _rx) = channel();
+        for i in 0..4u64 {
+            let job = if i % 2 == 0 {
+                ConvJob::synthetic(i, spec, i)
+            } else {
+                ConvJob::synthetic_depthwise(i, spec, i)
+            };
+            b.push(Submission {
+                job,
+                reply: tx.clone(),
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        let batches = b.flush();
+        assert_eq!(batches.len(), 2);
+        for batch in &batches {
+            assert!(batch.jobs.iter().all(|s| s.job.kind == batch.kind));
+        }
     }
 
     #[test]

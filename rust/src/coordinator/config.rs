@@ -27,6 +27,11 @@ impl Default for BatchConfig {
 pub struct CoordinatorConfig {
     /// Simulated IP cores (the paper deploys 1..=20 on a Pynq Z2).
     pub n_cores: usize,
+    /// Host-CPU fallback workers (`backend::GoldenBackend`) appended to
+    /// the pool after the IP cores — the heterogeneous-pool deployment:
+    /// overflow and depthwise traffic can spill onto the PS instead of
+    /// queueing behind the accelerators.
+    pub golden_fallback_workers: usize,
     pub ip: IpCoreConfig,
     pub batch: BatchConfig,
     /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
@@ -39,6 +44,7 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             n_cores: 1,
+            golden_fallback_workers: 0,
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
@@ -53,6 +59,12 @@ impl CoordinatorConfig {
             "core count {n} outside the paper's 1..=20 deployment range"
         );
         self.n_cores = n;
+        self
+    }
+
+    /// Append `n` golden-CPU fallback workers to the pool.
+    pub fn with_golden_workers(mut self, n: usize) -> Self {
+        self.golden_fallback_workers = n;
         self
     }
 }
@@ -71,6 +83,13 @@ mod tests {
     #[test]
     fn with_cores_accepts_paper_range() {
         assert_eq!(CoordinatorConfig::default().with_cores(20).n_cores, 20);
+    }
+
+    #[test]
+    fn golden_workers_default_to_zero_and_compose() {
+        assert_eq!(CoordinatorConfig::default().golden_fallback_workers, 0);
+        let c = CoordinatorConfig::default().with_cores(4).with_golden_workers(2);
+        assert_eq!((c.n_cores, c.golden_fallback_workers), (4, 2));
     }
 
     #[test]

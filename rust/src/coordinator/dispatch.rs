@@ -1,14 +1,24 @@
-//! Core pool: N simulated IP cores as worker threads, fed closed
-//! batches; the paper's "deploy up to 20 cores concurrently" (§5.1).
+//! Worker pool over heterogeneous [`ConvBackend`]s, fed closed batches.
 //!
-//! Dispatch policy is least-loaded (by queued PSUMs): big S52 layers
-//! and small edge-CNN layers coexist in one trace, and PSUM-weighted
-//! load balancing is what keeps 20 cores busy instead of FIFO striping.
+//! The paper's deployment is N replicated IP cores ("up to 20
+//! concurrently", §5.1); a production pool mixes those with host
+//! fallback workers and, when linked, an XLA path. Each worker thread
+//! owns one `Box<dyn ConvBackend>`; dispatch is:
+//!
+//! 1. **capability-masked** — a batch of depthwise jobs is only offered
+//!    to workers whose backend supports depthwise (wrap-8 cores and the
+//!    XLA path decline them);
+//! 2. **cost-weighted least-loaded** — queue depth is measured in each
+//!    backend's own [`CostModel`] units (closed-form cycles for IP
+//!    cores, modelled MACs for host fallback), so a big S52 layer
+//!    counts for more than an edge-CNN layer and slow fallback workers
+//!    fill only after the accelerators queue up.
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
 use super::request::ConvResult;
-use crate::hw::{IpCore, IpCoreConfig};
+use crate::backend::{Capability, ConvBackend, CostModel, SimBackend};
+use crate::hw::IpCoreConfig;
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -22,11 +32,18 @@ enum WorkerMsg {
 struct Worker {
     tx: Sender<WorkerMsg>,
     handle: JoinHandle<()>,
-    /// Outstanding simulated work (PSUMs), for least-loaded dispatch.
+    /// Outstanding modelled work (backend cost units), for least-loaded
+    /// dispatch.
     load: Arc<AtomicI64>,
+    /// Capability snapshot taken before the backend moved into its
+    /// thread; drives the dispatch mask.
+    capability: Capability,
+    /// Cost model snapshot; weighs this worker's queue.
+    cost: CostModel,
+    name: &'static str,
 }
 
-/// Pool of simulated IP cores.
+/// Pool of conv-backend workers (simulated IP cores by default).
 pub struct CorePool {
     workers: Vec<Worker>,
     pub metrics: Arc<Metrics>,
@@ -34,10 +51,25 @@ pub struct CorePool {
 }
 
 impl CorePool {
+    /// Homogeneous pool: `n_cores` simulated IP cores (the paper's
+    /// deployment).
     pub fn new(n_cores: usize, config: IpCoreConfig) -> Self {
+        let backends = (0..n_cores)
+            .map(|_| Box::new(SimBackend::new(config)) as Box<dyn ConvBackend>)
+            .collect();
+        Self::with_backends(backends, config)
+    }
+
+    /// Heterogeneous pool: one worker per backend, in order. `config`
+    /// stays around for frequency-based reporting (simulated µs on the
+    /// wire protocol).
+    pub fn with_backends(backends: Vec<Box<dyn ConvBackend>>, config: IpCoreConfig) -> Self {
+        assert!(!backends.is_empty(), "pool needs at least one backend");
         let metrics = Arc::new(Metrics::new());
-        let workers = (0..n_cores)
-            .map(|core_idx| Self::spawn_worker(core_idx, config, Arc::clone(&metrics)))
+        let workers = backends
+            .into_iter()
+            .enumerate()
+            .map(|(idx, backend)| Self::spawn_worker(idx, backend, Arc::clone(&metrics)))
             .collect();
         CorePool {
             workers,
@@ -54,85 +86,93 @@ impl CorePool {
         self.config
     }
 
-    fn spawn_worker(core_idx: usize, config: IpCoreConfig, metrics: Arc<Metrics>) -> Worker {
+    /// `(name, capability)` per worker, in worker order.
+    pub fn worker_capabilities(&self) -> Vec<(&'static str, Capability)> {
+        self.workers
+            .iter()
+            .map(|w| (w.name, w.capability.clone()))
+            .collect()
+    }
+
+    fn spawn_worker(core_idx: usize, backend: Box<dyn ConvBackend>, metrics: Arc<Metrics>) -> Worker {
+        let capability = backend.capability();
+        let cost = backend.cost_model();
+        let name = backend.name();
         let (tx, rx) = channel::<WorkerMsg>();
         let load = Arc::new(AtomicI64::new(0));
         let load_in_worker = Arc::clone(&load);
         let handle = std::thread::Builder::new()
-            .name(format!("ipcore-{core_idx}"))
+            .name(format!("conv-{name}-{core_idx}"))
             .spawn(move || {
-                let mut core = IpCore::new(config);
+                let mut backend = backend;
                 let mut resident_weights: Option<u64> = None;
                 while let Ok(WorkerMsg::Run(batch)) = rx.recv() {
                     // Weight-stationary across the batch: first job pays
-                    // the weight DMA, the rest reuse the BRAM contents.
+                    // the weight DMA, the rest reuse the resident set
+                    // (backends that model DMA apply the discount).
                     let batch_weights = batch.weights_id;
                     for sub in batch.jobs {
                         let reused = resident_weights == Some(batch_weights);
-                        let run = core
-                            .run_layer(
-                                &sub.job.spec,
-                                &sub.job.img,
-                                &sub.job.weights,
-                                &sub.job.bias,
-                                None,
-                            )
+                        let run = backend
+                            .run(&sub.job.payload(reused))
                             .expect("batched job passed shape validation at submit");
                         resident_weights = Some(batch_weights);
 
-                        let mut cycles = run.cycles;
-                        if reused {
-                            // The weight portion of DmaIn is skipped; image
-                            // bytes still move. Approximate by the weight
-                            // fraction of the input transfer.
-                            let w_bytes = sub.job.weights.len() as u64;
-                            let total_in = (sub.job.img.len() + sub.job.weights.len()) as u64
-                                + 4 * sub.job.bias.len() as u64;
-                            let saved = cycles.dma_in * w_bytes / total_in.max(1);
-                            cycles.dma_in -= saved;
-                            if core.config.count_dma {
-                                cycles.total -= saved;
-                            }
-                        }
-
                         let latency = sub.enqueued.elapsed();
                         metrics.record_completion(
-                            sub.job.spec.psums(),
-                            cycles.total.max(cycles.compute),
+                            sub.job.psums(),
+                            run.cycles.total.max(run.cycles.compute),
                             latency,
                             reused,
                         );
-                        load_in_worker
-                            .fetch_sub(sub.job.spec.psums() as i64, Ordering::Relaxed);
+                        load_in_worker.fetch_sub(
+                            cost.cost(&sub.job.spec, sub.job.kind) as i64,
+                            Ordering::Relaxed,
+                        );
                         // Receiver may have hung up (fire-and-forget); fine.
                         let _ = sub.reply.send(ConvResult {
                             id: sub.job.id,
                             spec: sub.job.spec,
-                            output: run.output.as_i32(),
-                            cycles,
+                            kind: sub.job.kind,
+                            output: run.output,
+                            cycles: run.cycles,
                             core: core_idx,
+                            backend: name,
                             latency,
                             weights_reused: reused,
                         });
                     }
                 }
             })
-            .expect("spawn ipcore worker");
-        Worker { tx, handle, load }
+            .expect("spawn conv worker");
+        Worker {
+            tx,
+            handle,
+            load,
+            capability,
+            cost,
+            name,
+        }
     }
 
-    /// Dispatch a closed batch to the least-loaded core.
-    pub fn dispatch(&self, batch: Batch) {
-        let total: i64 = batch
-            .jobs
-            .iter()
-            .map(|s| s.job.spec.psums() as i64)
-            .sum();
+    /// Dispatch a closed batch to the least-loaded *capable* worker.
+    /// Returns the batch untouched when no worker in the pool can serve
+    /// its (spec, kind) — kind mask plus any backend spec allowlist.
+    pub fn try_dispatch(&self, batch: Batch) -> Result<(), Batch> {
+        let kind = batch.kind;
         let worker = self
             .workers
             .iter()
-            .min_by_key(|w| w.load.load(Ordering::Relaxed))
-            .expect("pool has at least one core");
+            .filter(|w| w.capability.allows(&batch.spec, kind))
+            .min_by_key(|w| w.load.load(Ordering::Relaxed));
+        let Some(worker) = worker else {
+            return Err(batch);
+        };
+        let total: i64 = batch
+            .jobs
+            .iter()
+            .map(|s| worker.cost.cost(&s.job.spec, s.job.kind) as i64)
+            .sum();
         worker.load.fetch_add(total, Ordering::Relaxed);
         self.metrics
             .requests
@@ -141,6 +181,19 @@ impl CorePool {
             .tx
             .send(WorkerMsg::Run(batch))
             .expect("worker alive while pool alive");
+        Ok(())
+    }
+
+    /// [`Self::try_dispatch`] that treats an unroutable batch as a
+    /// deployment bug.
+    pub fn dispatch(&self, batch: Batch) {
+        if let Err(batch) = self.try_dispatch(batch) {
+            panic!(
+                "no backend in the pool supports {:?} jobs ({} workers)",
+                batch.kind,
+                self.workers.len()
+            );
+        }
     }
 
     /// Graceful shutdown: drain queues, join threads.
@@ -157,28 +210,32 @@ impl CorePool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{GoldenBackend, JobKind};
     use crate::coordinator::batcher::Batch;
     use crate::coordinator::request::{ConvJob, Submission};
-    use crate::model::{golden, QUICKSTART};
+    use crate::hw::depthwise::golden_depthwise3x3;
+    use crate::hw::AccumMode;
+    use crate::model::{golden, LayerSpec, QUICKSTART};
     use std::sync::mpsc::channel;
     use std::time::Duration;
+
+    fn batch_of(job: ConvJob, tx: &std::sync::mpsc::Sender<ConvResult>) -> Batch {
+        Batch {
+            spec: job.spec,
+            weights_id: job.weights_id,
+            kind: job.kind,
+            jobs: vec![Submission {
+                job,
+                reply: tx.clone(),
+                enqueued: std::time::Instant::now(),
+            }],
+        }
+    }
 
     fn one_job_batch(id: u64) -> (Batch, std::sync::mpsc::Receiver<ConvResult>) {
         let (tx, rx) = channel();
         let job = ConvJob::synthetic(id, QUICKSTART, id);
-        let weights_id = job.weights_id;
-        (
-            Batch {
-                spec: QUICKSTART,
-                weights_id,
-                jobs: vec![Submission {
-                    job,
-                    reply: tx,
-                    enqueued: std::time::Instant::now(),
-                }],
-            },
-            rx,
-        )
+        (batch_of(job, &tx), rx)
     }
 
     #[test]
@@ -191,6 +248,7 @@ mod tests {
         let want = golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false);
         assert_eq!(res.output.data(), want.data());
         assert_eq!(res.id, 1);
+        assert_eq!(res.backend, "sim-ipcore-i32");
         pool.shutdown();
     }
 
@@ -209,6 +267,7 @@ mod tests {
         pool.dispatch(Batch {
             spec: QUICKSTART,
             weights_id,
+            kind: JobKind::Standard,
             jobs,
         });
         let results: Vec<ConvResult> = (0..3)
@@ -227,16 +286,7 @@ mod tests {
         let n = 32u64;
         for i in 0..n {
             let job = ConvJob::synthetic(i, QUICKSTART, i);
-            let weights_id = job.weights_id;
-            pool.dispatch(Batch {
-                spec: QUICKSTART,
-                weights_id,
-                jobs: vec![Submission {
-                    job,
-                    reply: tx.clone(),
-                    enqueued: std::time::Instant::now(),
-                }],
-            });
+            pool.dispatch(batch_of(job, &tx));
         }
         drop(tx);
         let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
@@ -261,6 +311,92 @@ mod tests {
             pool.metrics.psums.load(std::sync::atomic::Ordering::Relaxed),
             QUICKSTART.psums()
         );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn mixed_pool_answers_standard_and_depthwise() {
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(SimBackend::new(IpCoreConfig::default())),
+            Box::new(GoldenBackend::new()),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        let dw_spec = LayerSpec::new(8, 10, 10, 8);
+        for i in 0..6u64 {
+            let job = if i % 2 == 0 {
+                ConvJob::synthetic(i, QUICKSTART, i)
+            } else {
+                ConvJob::synthetic_depthwise(i, dw_spec, i)
+            };
+            pool.dispatch(batch_of(job, &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            let (img, wts, bias) = match r.kind {
+                JobKind::Depthwise => {
+                    let j = ConvJob::synthetic_depthwise(r.id, dw_spec, r.id);
+                    (j.img, j.weights, j.bias)
+                }
+                _ => {
+                    let j = ConvJob::synthetic(r.id, QUICKSTART, r.id);
+                    (j.img, j.weights, j.bias)
+                }
+            };
+            let want = match r.kind {
+                JobKind::Depthwise => golden_depthwise3x3(&img, &wts, &bias, false),
+                _ => golden::conv3x3_i32(&img, &wts, &bias, false),
+            };
+            assert_eq!(r.output.data(), want.data(), "job {} via {}", r.id, r.backend);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn depthwise_routes_only_to_capable_backends() {
+        // Worker 0 is a wrap-8 core: standard-only. All depthwise jobs
+        // must land on workers 1 (i32 core) or 2 (golden fallback).
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(SimBackend::new(IpCoreConfig {
+                mode: AccumMode::Wrap8,
+                ..Default::default()
+            })),
+            Box::new(SimBackend::new(IpCoreConfig::default())),
+            Box::new(GoldenBackend::new()),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        assert!(!pool.worker_capabilities()[0].1.supports(JobKind::Depthwise));
+        let (tx, rx) = channel();
+        let dw_spec = LayerSpec::new(8, 10, 10, 8);
+        for i in 0..12u64 {
+            let job = ConvJob::synthetic_depthwise(i, dw_spec, i);
+            pool.dispatch(batch_of(job, &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 12);
+        for r in &results {
+            assert_ne!(r.core, 0, "depthwise routed to the wrap8 core");
+            assert_ne!(r.backend, "sim-ipcore-wrap8");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unroutable_batch_is_returned_not_lost() {
+        let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(SimBackend::new(IpCoreConfig {
+            mode: AccumMode::Wrap8,
+            ..Default::default()
+        }))];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, _rx) = channel();
+        let job = ConvJob::synthetic_depthwise(1, LayerSpec::new(4, 8, 8, 4), 1);
+        let batch = batch_of(job, &tx);
+        let back = pool.try_dispatch(batch).expect_err("must not route");
+        assert_eq!(back.kind, JobKind::Depthwise);
+        assert_eq!(back.jobs.len(), 1);
         pool.shutdown();
     }
 }

@@ -1,22 +1,30 @@
-//! L3 coordinator: the serving layer over the accelerator substrate.
+//! L3 coordinator: the serving layer over the execution backends.
 //!
 //! The paper ships an IP core and leaves the system around it to "the
 //! PS". This module is that system, built the way a deployable runtime
-//! (vLLM-router-style) would be:
+//! (vLLM-router-style) would be — and since the backend refactor it is
+//! substrate-agnostic: everything below the batcher speaks
+//! [`crate::backend::ConvBackend`], not `hw::IpCore` directly.
 //!
-//! * [`request`] — typed conv / inference requests and responses;
-//! * [`batcher`] — groups same-shape requests so a core keeps its
-//!   weight BRAM layout (weight-stationary across a batch, amortising
-//!   the weight DMA);
-//! * [`dispatch`] — a pool of 1..=20 simulated IP cores, each a worker
-//!   thread (the paper's "20 cores on a fully-utilised Pynq Z2");
-//! * [`scheduler`] — chains CNN layers on one core the way §4.1 chains
-//!   output BRAMs into the next layer's input (no DMA round-trip),
-//!   applying inter-layer requantisation;
+//! * [`request`] — typed conv / inference requests and responses,
+//!   kind-tagged (standard / depthwise / pointwise-as-3×3);
+//! * [`batcher`] — groups same-(shape, weight-set, kind) requests so a
+//!   core keeps its weight BRAM layout (weight-stationary across a
+//!   batch, amortising the weight DMA);
+//! * [`dispatch`] — a pool of worker threads each owning a
+//!   `Box<dyn ConvBackend>`: the paper's "20 cores on a fully-utilised
+//!   Pynq Z2", host-CPU fallback workers, or any mix. Routing is
+//!   capability-masked (depthwise jobs only reach depthwise-capable
+//!   backends) and least-loaded in each backend's own cost-model units;
+//! * [`scheduler`] — chains CNN layers on one backend the way §4.1
+//!   chains output BRAMs into the next layer's input (no DMA
+//!   round-trip), applying inter-layer requantisation; generic over the
+//!   backend;
 //! * [`metrics`] — request counters, simulated-cycle accounting, and a
 //!   latency histogram;
 //! * [`server`] — the closed-loop trace driver used by the benches and
-//!   the end-to-end example.
+//!   the end-to-end example; builds heterogeneous pools from
+//!   [`CoordinatorConfig`].
 //!
 //! Everything is std-only (threads + mpsc): the offline build has no
 //! tokio, and the workloads here are CPU-bound simulation, not I/O.

@@ -1,5 +1,6 @@
 //! Request/response types flowing through the coordinator.
 
+use crate::backend::{job_psums, JobKind, JobPayload};
 use crate::hw::ip_core::CycleStats;
 use crate::model::{LayerSpec, Tensor};
 use std::sync::mpsc::Sender;
@@ -8,12 +9,15 @@ use std::time::Duration;
 /// Monotonically assigned request id.
 pub type RequestId = u64;
 
-/// One convolution-layer job (the unit the IP core accepts).
+/// One convolution-layer job (the unit a backend accepts).
 #[derive(Clone, Debug)]
 pub struct ConvJob {
     pub id: RequestId,
     pub spec: LayerSpec,
+    /// Which conv flavour this is; drives capability-masked routing.
+    pub kind: JobKind,
     pub img: Tensor<u8>,
+    /// `(K,C,3,3)` for standard/pointwise jobs, `(C,3,3)` for depthwise.
     pub weights: Tensor<u8>,
     pub bias: Vec<i32>,
     /// Identifies the weight set: consecutive jobs sharing it on one
@@ -21,13 +25,61 @@ pub struct ConvJob {
     pub weights_id: u64,
 }
 
+/// FNV-1a over every field that determines the weight-set layout.
+///
+/// The previous derivation (`spec.psums() ^ 0x5EED`) collided whenever
+/// two different specs had equal PSUM counts (e.g. `8x16x16 k8` vs
+/// `16x16x16 k4`), silently skipping the weight DMA across genuinely
+/// different weight tensors.
+pub fn weights_fingerprint(spec: &LayerSpec, kind: JobKind) -> u64 {
+    fnv1a(spec, kind, &[])
+}
+
+/// [`weights_fingerprint`] with extra distinguishing state hashed in —
+/// for per-request weight sets (explicit tensors over TCP) that must
+/// never alias the synthetic per-spec sets. The salt is folded into the
+/// FNV state, not XOR-ed on afterwards, so no salt value can cancel
+/// back to an unsalted fingerprint.
+pub fn weights_fingerprint_salted(spec: &LayerSpec, kind: JobKind, salt: u64) -> u64 {
+    fnv1a(spec, kind, &[0x5A17_ED00, salt])
+}
+
+fn fnv1a(spec: &LayerSpec, kind: JobKind, salt: &[u64]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let kind_tag = match kind {
+        JobKind::Standard => 1u64,
+        JobKind::Depthwise => 2,
+        JobKind::PointwiseAs3x3 => 3,
+    };
+    let fields = [
+        spec.c as u64,
+        spec.h as u64,
+        spec.w as u64,
+        spec.k as u64,
+        spec.relu as u64,
+        spec.pool as u64,
+        kind_tag,
+    ];
+    for field in fields.iter().chain(salt) {
+        for byte in field.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
 impl ConvJob {
-    /// Deterministically generate a job from a seed (trace replay).
+    /// Deterministically generate a standard job from a seed (trace
+    /// replay).
     pub fn synthetic(id: RequestId, spec: LayerSpec, seed: u64) -> Self {
         let mut rng = crate::util::prng::Prng::new(seed);
         ConvJob {
             id,
             spec,
+            kind: JobKind::Standard,
             img: Tensor::from_vec(
                 &[spec.c, spec.h, spec.w],
                 rng.bytes_below(spec.c * spec.h * spec.w, 256),
@@ -39,7 +91,43 @@ impl ConvJob {
             bias: (0..spec.k).map(|_| rng.range_i64(0, 32) as i32).collect(),
             // Synthetic traces share one weight set per spec, like a
             // deployed model's fixed parameters.
-            weights_id: spec.psums() ^ 0x5EED,
+            weights_id: weights_fingerprint(&spec, JobKind::Standard),
+        }
+    }
+
+    /// Deterministically generate a depthwise job (`spec.k == spec.c`,
+    /// weights `(C,3,3)`).
+    pub fn synthetic_depthwise(id: RequestId, spec: LayerSpec, seed: u64) -> Self {
+        assert_eq!(spec.k, spec.c, "depthwise spec must have K == C");
+        let mut rng = crate::util::prng::Prng::new(seed);
+        ConvJob {
+            id,
+            spec,
+            kind: JobKind::Depthwise,
+            img: Tensor::from_vec(
+                &[spec.c, spec.h, spec.w],
+                rng.bytes_below(spec.c * spec.h * spec.w, 256),
+            ),
+            weights: Tensor::from_vec(&[spec.c, 3, 3], rng.bytes_below(spec.c * 9, 16)),
+            bias: (0..spec.c).map(|_| rng.range_i64(0, 32) as i32).collect(),
+            weights_id: weights_fingerprint(&spec, JobKind::Depthwise),
+        }
+    }
+
+    /// Kind-aware PSUM count (the load/metrics accounting unit).
+    pub fn psums(&self) -> u64 {
+        job_psums(&self.spec, self.kind)
+    }
+
+    /// Borrowed view a [`crate::backend::ConvBackend`] executes.
+    pub fn payload(&self, weights_resident: bool) -> JobPayload<'_> {
+        JobPayload {
+            kind: self.kind,
+            spec: &self.spec,
+            img: &self.img,
+            weights: &self.weights,
+            bias: &self.bias,
+            weights_resident,
         }
     }
 }
@@ -49,15 +137,26 @@ impl ConvJob {
 pub struct ConvResult {
     pub id: RequestId,
     pub spec: LayerSpec,
+    pub kind: JobKind,
     pub output: Tensor<i32>,
-    /// Simulated hardware cycles for this job.
+    /// Simulated hardware cycles (hw backends) or modelled equivalent
+    /// cycles (host backends) for this job.
     pub cycles: CycleStats,
-    /// Which simulated core ran it.
+    /// Which pool worker ran it.
     pub core: usize,
+    /// Name of the backend that ran it (e.g. `sim-ipcore-i32`).
+    pub backend: &'static str,
     /// Host wall-clock latency from enqueue to completion.
     pub latency: Duration,
     /// Whether the weight DMA was skipped (batch reuse).
     pub weights_reused: bool,
+}
+
+impl ConvResult {
+    /// Kind-aware PSUM count (matches [`ConvJob::psums`]).
+    pub fn psums(&self) -> u64 {
+        job_psums(&self.spec, self.kind)
+    }
 }
 
 /// Envelope handed to the dispatcher: job + reply channel + enqueue time.
@@ -88,6 +187,7 @@ mod tests {
         assert_eq!(j.img.shape(), &[8, 16, 16]);
         assert_eq!(j.weights.shape(), &[8, 8, 3, 3]);
         assert_eq!(j.bias.len(), 8);
+        assert_eq!(j.kind, JobKind::Standard);
     }
 
     #[test]
@@ -95,5 +195,59 @@ mod tests {
         let a = ConvJob::synthetic(1, QUICKSTART, 1);
         let b = ConvJob::synthetic(2, QUICKSTART, 2);
         assert_eq!(a.weights_id, b.weights_id);
+    }
+
+    #[test]
+    fn equal_psum_specs_no_longer_collide() {
+        // 8x16x16 k8 and 16x16x16 k4 both have 12544 PSUMs; under the
+        // old psums^0x5EED derivation they shared a weights_id and
+        // wrongly skipped the weight DMA across different weight sets.
+        let a = LayerSpec::new(8, 16, 16, 8);
+        let b = LayerSpec::new(16, 16, 16, 4);
+        assert_eq!(a.psums(), b.psums(), "test premise: equal PSUM counts");
+        assert_ne!(
+            weights_fingerprint(&a, JobKind::Standard),
+            weights_fingerprint(&b, JobKind::Standard)
+        );
+    }
+
+    #[test]
+    fn fingerprint_separates_kind_and_flags() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        assert_ne!(
+            weights_fingerprint(&spec, JobKind::Standard),
+            weights_fingerprint(&spec, JobKind::Depthwise)
+        );
+        assert_ne!(
+            weights_fingerprint(&spec, JobKind::Standard),
+            weights_fingerprint(&spec.with_relu(), JobKind::Standard)
+        );
+    }
+
+    #[test]
+    fn salted_fingerprint_never_cancels_to_unsalted() {
+        // The old `fingerprint ^ id ^ 0xF00D` scheme collapsed to the
+        // plain per-spec fingerprint at id == 0xF00D, wrongly enabling
+        // a weight-DMA skip between different weight sets.
+        let spec = QUICKSTART;
+        let base = weights_fingerprint(&spec, JobKind::Standard);
+        for salt in [0u64, 1, 0xF00D, u64::MAX] {
+            assert_ne!(weights_fingerprint_salted(&spec, JobKind::Standard, salt), base);
+        }
+        assert_ne!(
+            weights_fingerprint_salted(&spec, JobKind::Standard, 1),
+            weights_fingerprint_salted(&spec, JobKind::Standard, 2)
+        );
+    }
+
+    #[test]
+    fn depthwise_job_shapes_and_psums() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        let j = ConvJob::synthetic_depthwise(3, spec, 7);
+        assert_eq!(j.weights.shape(), &[8, 3, 3]);
+        assert_eq!(j.bias.len(), 8);
+        assert_eq!(j.kind, JobKind::Depthwise);
+        assert_eq!(j.psums(), (8 * 8 * 8) as u64);
+        assert!(j.psums() < spec.psums(), "no kernel axis in depthwise");
     }
 }

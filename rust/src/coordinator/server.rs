@@ -1,13 +1,21 @@
 //! Closed-loop trace server: the front door the benches and the
 //! end-to-end example drive. Submissions flow request → batcher →
-//! core pool → reply channel; the server owns the batcher and collects
-//! a report (latency quantiles, simulated GOPS, batching efficiency).
+//! backend pool → reply channel; the server owns the batcher and
+//! collects a report (latency quantiles, simulated GOPS, batching
+//! efficiency, per-backend job mix).
+//!
+//! The pool is built from [`CoordinatorConfig`]: `n_cores` simulated IP
+//! cores plus `golden_fallback_workers` host-CPU workers — the
+//! heterogeneous deployment. Depthwise trace entries exercise the
+//! capability mask: they only ever route to depthwise-capable workers.
 
 use super::batcher::Batcher;
 use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
 use super::request::{ConvJob, ConvResult, Submission};
+use crate::backend::{ConvBackend, GoldenBackend, JobKind, SimBackend};
 use crate::model::trace::TraceEntry;
+use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
@@ -20,7 +28,8 @@ pub struct Report {
     pub wall: Duration,
     /// Simulated hardware time (max over cores would need per-core
     /// tracking; we report aggregate cycles / n_cores as the even-load
-    /// estimate, which trace tests validate).
+    /// estimate, which trace tests validate). Host-fallback workers
+    /// contribute modelled-equivalent cycles (their cost model).
     pub sim_gops_psum: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -28,9 +37,11 @@ pub struct Report {
     pub weight_dma_skip_rate: f64,
     /// Host-side throughput (requests/s) — the simulator's own speed.
     pub host_rps: f64,
+    /// Completed jobs per backend name (heterogeneous-pool routing).
+    pub backend_mix: Vec<(&'static str, usize)>,
 }
 
-/// The server: config + core pool.
+/// The server: config + backend pool.
 pub struct Server {
     pub config: CoordinatorConfig,
     pool: CorePool,
@@ -38,9 +49,16 @@ pub struct Server {
 
 impl Server {
     pub fn new(config: CoordinatorConfig) -> Self {
+        let mut backends: Vec<Box<dyn ConvBackend>> = Vec::new();
+        for _ in 0..config.n_cores {
+            backends.push(Box::new(SimBackend::new(config.ip)));
+        }
+        for _ in 0..config.golden_fallback_workers {
+            backends.push(Box::new(GoldenBackend::new()));
+        }
         Server {
             config,
-            pool: CorePool::new(config.n_cores, config.ip),
+            pool: CorePool::with_backends(backends, config.ip),
         }
     }
 
@@ -67,7 +85,7 @@ impl Server {
                 let mut results = Vec::new();
                 while let Ok(r) = rx.recv() {
                     if let Some(ac) = &admission {
-                        ac.complete(r.spec.psums());
+                        ac.complete(r.psums());
                     }
                     results.push(r);
                 }
@@ -79,14 +97,17 @@ impl Server {
             if let Some(ac) = &admission {
                 // Admitted-but-unbatched work can't complete; flush open
                 // batches before blocking or the budget never frees.
-                if ac.admit(entry.spec.psums(), Policy::Reject) == super::backpressure::Admission::Rejected {
+                if ac.admit(entry.psums(), Policy::Reject) == super::backpressure::Admission::Rejected {
                     for open in batcher.flush() {
                         self.pool.dispatch(open);
                     }
-                    ac.admit(entry.spec.psums(), Policy::Block);
+                    ac.admit(entry.psums(), Policy::Block);
                 }
             }
-            let job = ConvJob::synthetic(i as u64, entry.spec, entry.seed);
+            let job = match entry.kind {
+                JobKind::Depthwise => ConvJob::synthetic_depthwise(i as u64, entry.spec, entry.seed),
+                _ => ConvJob::synthetic(i as u64, entry.spec, entry.seed),
+            };
             let sub = Submission {
                 job,
                 reply: tx.clone(),
@@ -105,6 +126,11 @@ impl Server {
         let wall = start.elapsed();
         assert_eq!(results.len(), trace.len(), "every request answered");
 
+        let mut mix: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for r in &results {
+            *mix.entry(r.backend).or_default() += 1;
+        }
+
         let m = &self.pool.metrics;
         let completed = m.completed.load(Ordering::Relaxed);
         let skipped = m.weight_dma_skipped.load(Ordering::Relaxed);
@@ -122,6 +148,7 @@ impl Server {
                 skipped as f64 / completed as f64
             },
             host_rps: results.len() as f64 / wall.as_secs_f64().max(1e-9),
+            backend_mix: mix.into_iter().collect(),
         }
     }
 
@@ -132,9 +159,15 @@ impl Server {
 
 impl Report {
     pub fn render(&self) -> String {
+        let mix = self
+            .backend_mix
+            .iter()
+            .map(|(name, n)| format!("{name}x{n}"))
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "requests={} cores={} wall={:?} host_rps={:.1}\n\
-             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}%",
+             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% mix=[{}]",
             self.n_requests,
             self.n_cores,
             self.wall,
@@ -143,7 +176,8 @@ impl Report {
             self.total_psums,
             self.p50_us,
             self.p99_us,
-            self.weight_dma_skip_rate * 100.0
+            self.weight_dma_skip_rate * 100.0,
+            mix
         )
     }
 }
@@ -158,6 +192,7 @@ mod tests {
             n,
             mean_gap_us: 0,
             s52_fraction: 0.0, // keep tests fast: edge-CNN shapes only
+            depthwise_fraction: 0.0,
             seed: 3,
         })
     }
@@ -211,6 +246,38 @@ mod tests {
         let report = server.run_trace(&small_trace(4));
         let text = report.render();
         assert!(text.contains("requests=4"));
+        assert!(text.contains("sim-ipcore-i32"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_pool_serves_mixed_kind_trace() {
+        // Acceptance scenario: sim + golden pool, trace with depthwise
+        // traffic. Everything is answered, PSUM accounting is
+        // kind-aware, and the mix report names both backend types when
+        // fallback workers absorb load.
+        let mut server = Server::new(
+            CoordinatorConfig::default().with_cores(2).with_golden_workers(2),
+        );
+        let trace = generate(&TraceConfig {
+            n: 32,
+            mean_gap_us: 0,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.4,
+            seed: 21,
+        });
+        assert!(
+            trace.iter().any(|e| e.kind == crate::backend::JobKind::Depthwise),
+            "trace must contain depthwise entries"
+        );
+        let report = server.run_trace(&trace);
+        assert_eq!(report.n_requests, 32);
+        assert_eq!(report.total_psums, total_psums(&trace));
+        assert_eq!(report.n_cores, 4);
+        let served: usize = report.backend_mix.iter().map(|(_, n)| n).sum();
+        assert_eq!(served, 32);
+        // No depthwise-incapable backend exists in this pool; routing
+        // exclusion is covered in dispatch tests with a wrap8 worker.
         server.shutdown();
     }
 }

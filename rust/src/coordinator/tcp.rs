@@ -19,7 +19,8 @@
 //! numerics without shipping whole feature maps back.
 
 use super::dispatch::CorePool;
-use super::request::{ConvJob, ConvResult, Submission};
+use super::request::{weights_fingerprint_salted, ConvJob, ConvResult, Submission};
+use crate::backend::JobKind;
 use crate::model::{LayerSpec, Tensor};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -90,10 +91,14 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
         Ok(ConvJob {
             id,
             spec,
+            kind: JobKind::Standard,
             img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
             weights: Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
             bias,
-            weights_id: id ^ 0xF00D, // explicit tensors: unique weight set
+            // Explicit tensors: a unique weight set per request; the id
+            // is hashed into the fingerprint (not XOR-ed) so no id can
+            // alias a synthetic per-spec weight set.
+            weights_id: weights_fingerprint_salted(&spec, JobKind::Standard, id),
         })
     } else {
         let seed = req
@@ -115,6 +120,7 @@ fn response_json(r: &ConvResult, freq_hz: u64) -> Json {
         ("id", Json::num(r.id as f64)),
         ("ok", Json::Bool(true)),
         ("core", Json::num(r.core as f64)),
+        ("backend", Json::str(r.backend)),
         ("compute_cycles", Json::num(r.cycles.compute as f64)),
         (
             "sim_us",
@@ -162,9 +168,11 @@ fn handle_connection(stream: TcpStream, pool: Arc<CorePool>, next_id: Arc<Atomic
                         let (tx, rx) = channel();
                         let spec = job.spec;
                         let weights_id = job.weights_id;
+                        let kind = job.kind;
                         pool.dispatch(super::batcher::Batch {
                             spec,
                             weights_id,
+                            kind,
                             jobs: vec![Submission {
                                 job,
                                 reply: tx,

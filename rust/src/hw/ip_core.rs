@@ -58,6 +58,16 @@ impl LayerOutput {
             LayerOutput::Wrap8(t) => t.map(|v| v as i32),
         }
     }
+
+    /// Consuming variant of [`Self::as_i32`]: the common I32 case moves
+    /// the tensor out instead of cloning it — the dispatch hot path
+    /// hands the feature map straight to the reply channel.
+    pub fn into_i32(self) -> Tensor<i32> {
+        match self {
+            LayerOutput::I32(t) => t,
+            LayerOutput::Wrap8(t) => t.map(|v| v as i32),
+        }
+    }
 }
 
 /// Everything one `run_layer` produces.

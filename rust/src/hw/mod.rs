@@ -17,6 +17,12 @@
 //! * §4.2 pipeline → [`pipeline`]
 //! * Fig. 6 → [`waveform`] (signal tracing + VCD export)
 //! * Table 1 → [`device`], [`resource`]
+//!
+//! Serving code does not drive [`IpCore`] directly any more: the
+//! simulator is one [`crate::backend::ConvBackend`] implementation
+//! (`backend::SimBackend`), which also routes [`depthwise`] through the
+//! same entry point as standard layers. Direct use remains for the
+//! experiment drivers (waveforms, tiling, resource/power models).
 
 pub mod bram;
 pub mod capacity;

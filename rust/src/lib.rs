@@ -1,23 +1,40 @@
 //! Reproduction of *"An FPGA-based Solution for Convolution Operation
-//! Acceleration"* (Pham-Dinh et al., 2022) as a three-layer
+//! Acceleration"* (Pham-Dinh et al., 2022) as a layered
 //! rust + JAX + Pallas system.
 //!
-//! The paper's Verilog IP core — 4 computing cores × 4 PCOREs, weight
-//! stationary, BRAM-quartered channels, 2-stage load/compute pipeline —
-//! is reproduced as a **cycle-accurate simulator** in [`hw`] (no FPGA is
-//! available; DESIGN.md documents the substitution). The same
-//! convolution is compiled AOT from JAX + Pallas into HLO-text artifacts
-//! that [`runtime`] executes through PJRT, giving a real numeric path
-//! the simulator is validated against. [`coordinator`] is the serving
-//! layer: it batches conv-layer requests, schedules CNN layer chains the
-//! way the paper chains output BRAMs into the next layer's input, and
-//! dispatches onto 1..=20 simulated IP cores (the paper's "fully
-//! utilised Pynq Z2" deployment).
+//! The layers, bottom to top:
+//!
+//! * [`hw`] — the paper's Verilog IP core (4 computing cores × 4
+//!   PCOREs, weight stationary, BRAM-quartered channels, 2-stage
+//!   load/compute pipeline) as a **cycle-accurate simulator** (no FPGA
+//!   is available; DESIGN.md documents the substitution).
+//! * [`model`] — tensors, layer specs, the golden CPU reference every
+//!   compute path is tested against, quantisation, the edge CNN and
+//!   workload-trace generation.
+//! * [`runtime`] — the same convolution compiled AOT from JAX + Pallas
+//!   into HLO-text artifacts, executed through PJRT (behind the `xla`
+//!   feature; an API-identical stub keeps tier-1 builds toolchain-free).
+//! * [`backend`] — **the execution seam**: one [`backend::ConvBackend`]
+//!   trait in front of every way a conv layer can run — the simulated
+//!   IP core (standard, pointwise-as-3×3 and depthwise through one
+//!   entry point), the golden CPU fallback, and the XLA path — each
+//!   reporting a capability descriptor and a dispatch cost model. The
+//!   parity contract (bit-identical i32 outputs across backends) is
+//!   enforced by `rust/tests/backend_parity.rs`.
+//! * [`coordinator`] — the serving layer: kind-tagged requests,
+//!   weight-stationary batching, a heterogeneous worker pool
+//!   (`Box<dyn ConvBackend>` per worker — e.g. the paper's 20 simulated
+//!   cores plus host-fallback workers) with capability-masked,
+//!   cost-weighted least-loaded dispatch, a CNN layer scheduler that
+//!   chains output BRAMs into the next layer's input (§4.1), and a
+//!   JSON-over-TCP front end.
 //!
 //! Experiment index (DESIGN.md §4): Fig. 6 → [`hw::waveform`] +
 //! `examples/waveform_repro.rs`; Table 1 → [`hw::resource`]; §5.2
-//! throughput → [`hw::ip_core`] + `examples/multicore_scaling.rs`.
+//! throughput → [`hw::ip_core`] + `examples/multicore_scaling.rs`
+//! (which also scales a mixed sim+golden pool).
 
+pub mod backend;
 pub mod bench_util;
 pub mod coordinator;
 pub mod hw;

@@ -10,8 +10,10 @@
 //! repro simulate --c C --h H --w W --k K [--wrap8] [--no-pipeline] [--dma]
 //!                                       run one layer on the simulated IP core
 //! repro infer [--seed S] [--xla]        edge CNN inference: hw-sim vs golden (vs XLA)
-//! repro serve [--cores N] [--requests N] [--s52 F]
+//! repro serve [--cores N] [--golden N] [--requests N] [--s52 F] [--dw F]
 //!                                       closed-loop trace through the coordinator
+//!                                       (--golden adds CPU fallback workers,
+//!                                        --dw mixes in depthwise jobs)
 //! repro artifacts                       list the AOT artifact registry
 //! ```
 
@@ -208,15 +210,22 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
     let n = args.get_usize("requests", 64).map_err(|e| anyhow::anyhow!(e))?;
     let s52 = args.get_f64("s52", 0.1).map_err(|e| anyhow::anyhow!(e))?;
+    let dw = args.get_f64("dw", 0.0).map_err(|e| anyhow::anyhow!(e))?;
     let trace = generate(&TraceConfig {
         n,
         mean_gap_us: 0,
         s52_fraction: s52,
+        depthwise_fraction: dw,
         seed: 11,
     });
-    let mut server = Server::new(CoordinatorConfig::default().with_cores(cores));
+    let mut server = Server::new(
+        CoordinatorConfig::default()
+            .with_cores(cores)
+            .with_golden_workers(golden),
+    );
     let report = server.run_trace(&trace);
     println!("{}", report.render());
     server.shutdown();

@@ -4,18 +4,31 @@
 //! The paper evaluates a single fixed workload (§5.2). A serving system
 //! needs mixed traffic, so the trace generator produces the shapes of
 //! the edge CNN plus the paper's S52 layer in configurable proportions
-//! — DESIGN.md's "synthetic equivalent of production traces".
+//! — DESIGN.md's "synthetic equivalent of production traces" — and,
+//! since the backend refactor, an optional fraction of depthwise
+//! (MobileNet-style) jobs that exercise the pool's capability-masked
+//! routing.
 
 use super::{network::edge_cnn_specs, LayerSpec, S52};
+use crate::backend::{job_psums, JobKind};
 use crate::util::prng::Prng;
 
-/// One trace entry: which layer shape arrives and when (in microseconds
-/// of simulated wall clock from trace start).
+/// One trace entry: which layer shape arrives, what kind of conv it
+/// is, and when (in microseconds of simulated wall clock from trace
+/// start).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TraceEntry {
     pub spec: LayerSpec,
+    pub kind: JobKind,
     pub arrival_us: u64,
     pub seed: u64,
+}
+
+impl TraceEntry {
+    /// Kind-aware PSUM count (matches the coordinator's accounting).
+    pub fn psums(&self) -> u64 {
+        job_psums(&self.spec, self.kind)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -28,6 +41,9 @@ pub struct TraceConfig {
     /// Weight of the big S52 layer relative to edge-CNN layers
     /// (0.0 = only small layers, 1.0 = only S52).
     pub s52_fraction: f64,
+    /// Fraction of depthwise (per-channel 3×3) jobs mixed into the
+    /// stream (0.0 = none; drawn before the S52/edge split).
+    pub depthwise_fraction: f64,
     pub seed: u64,
 }
 
@@ -37,22 +53,39 @@ impl Default for TraceConfig {
             n: 64,
             mean_gap_us: 0,
             s52_fraction: 0.25,
+            depthwise_fraction: 0.0,
             seed: 1,
         }
     }
+}
+
+/// Depthwise shapes mirroring the edge CNN's intermediate maps
+/// (`K == C`, the MobileNet-style blocks of `hw::depthwise`).
+fn depthwise_specs() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::new(4, 32, 32, 4),
+        LayerSpec::new(8, 15, 15, 8),
+        LayerSpec::new(16, 13, 13, 16),
+    ]
 }
 
 /// Generate a deterministic trace from a config.
 pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
     let mut rng = Prng::new(cfg.seed);
     let small = edge_cnn_specs();
+    let dw = depthwise_specs();
     let mut t = 0u64;
     (0..cfg.n)
         .map(|i| {
-            let spec = if rng.f64() < cfg.s52_fraction {
-                S52
+            // Draw the depthwise coin only when enabled, so traces from
+            // older configs replay identically at depthwise_fraction=0.
+            let is_dw = cfg.depthwise_fraction > 0.0 && rng.f64() < cfg.depthwise_fraction;
+            let (spec, kind) = if is_dw {
+                (*rng.choose(&dw), JobKind::Depthwise)
+            } else if rng.f64() < cfg.s52_fraction {
+                (S52, JobKind::Standard)
             } else {
-                *rng.choose(&small)
+                (*rng.choose(&small), JobKind::Standard)
             };
             if cfg.mean_gap_us > 0 {
                 // Uniform in [0, 2*mean] has the right mean and keeps the
@@ -61,6 +94,7 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
             }
             TraceEntry {
                 spec,
+                kind,
                 arrival_us: t,
                 seed: cfg.seed ^ (i as u64) << 1,
             }
@@ -68,9 +102,10 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceEntry> {
         .collect()
 }
 
-/// Total PSUMs in a trace (the paper's throughput accounting unit).
+/// Total PSUMs in a trace (the paper's throughput accounting unit),
+/// kind-aware.
 pub fn total_psums(trace: &[TraceEntry]) -> u64 {
-    trace.iter().map(|e| e.spec.psums()).sum()
+    trace.iter().map(|e| e.psums()).sum()
 }
 
 #[cfg(test)]
@@ -118,5 +153,33 @@ mod tests {
             ..Default::default()
         });
         assert_eq!(total_psums(&t), 3 * S52.psums());
+    }
+
+    #[test]
+    fn depthwise_fraction_extremes() {
+        let all_dw = generate(&TraceConfig {
+            n: 40,
+            depthwise_fraction: 1.0,
+            ..Default::default()
+        });
+        assert!(all_dw.iter().all(|e| e.kind == JobKind::Depthwise));
+        assert!(all_dw.iter().all(|e| e.spec.k == e.spec.c));
+        let none = generate(&TraceConfig {
+            n: 40,
+            depthwise_fraction: 0.0,
+            ..Default::default()
+        });
+        assert!(none.iter().all(|e| e.kind == JobKind::Standard));
+    }
+
+    #[test]
+    fn depthwise_psums_have_no_kernel_axis() {
+        let e = TraceEntry {
+            spec: LayerSpec::new(8, 10, 10, 8),
+            kind: JobKind::Depthwise,
+            arrival_us: 0,
+            seed: 0,
+        };
+        assert_eq!(e.psums(), 64 * 8);
     }
 }

@@ -1,0 +1,77 @@
+//! Featureless stand-in for [`super::executor`]: the same `XlaRuntime`
+//! surface, but construction always fails. Built when the `xla` feature
+//! is off so the tier-1 build needs no PJRT toolchain while every
+//! caller keeps compiling; callers already treat a failed constructor
+//! as "XLA unavailable — skip".
+
+use super::artifacts::ArtifactRegistry;
+use crate::model::{LayerSpec, Tensor};
+
+/// Stub runtime; cannot be constructed (both constructors return
+/// `Err`), so the `&mut self` methods are unreachable by construction.
+pub struct XlaRuntime {
+    pub registry: ArtifactRegistry,
+    /// Executions performed (metrics).
+    pub executions: u64,
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "XlaRuntime is unavailable: this binary was built without the `xla` \
+         feature (rebuild with `--features xla` and a PJRT-linked xla crate)"
+    )
+}
+
+impl XlaRuntime {
+    pub fn new(_registry: ArtifactRegistry) -> anyhow::Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn with_default_registry() -> anyhow::Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Execute a variant with f32 tensor inputs.
+    pub fn execute(&mut self, _name: &str, _inputs: &[Tensor<f32>]) -> anyhow::Result<Tensor<f32>> {
+        Err(unavailable())
+    }
+
+    /// Run one conv layer (u8 image/weights, i32 bias → f32 carriers).
+    pub fn run_layer(
+        &mut self,
+        _spec: &LayerSpec,
+        _img: &Tensor<u8>,
+        _weights: &Tensor<u8>,
+        _bias: &[i32],
+    ) -> anyhow::Result<Tensor<f32>> {
+        Err(unavailable())
+    }
+
+    /// Run the fused edge CNN artifact: image + (w, b) per layer.
+    pub fn run_edge_cnn(
+        &mut self,
+        _img: &Tensor<u8>,
+        _params: &[(Tensor<u8>, Vec<i32>)],
+    ) -> anyhow::Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_the_missing_feature() {
+        let err = XlaRuntime::with_default_registry().unwrap_err();
+        assert!(err.to_string().contains("xla"));
+    }
+}

@@ -4,12 +4,26 @@
 //!
 //! * [`artifacts`] — parses `manifest.json` (via [`crate::util::json`])
 //!   into a registry keyed by the layer-spec name shared with
-//!   `python/compile/model.py`.
-//! * [`executor`] — PJRT client + compiled-executable cache; converts
-//!   between [`crate::model::Tensor`] and `xla::Literal`.
+//!   `python/compile/model.py`. Always available.
+//! * `executor` — PJRT client + compiled-executable cache; converts
+//!   between [`crate::model::Tensor`] and `xla::Literal`. Compiled only
+//!   with the `xla` feature; without it, [`XlaRuntime`] is an
+//!   API-identical stub whose constructors return `Err`, so every
+//!   caller (examples, benches, `backend::XlaBackend`, parity tests)
+//!   degrades by skipping the XLA path.
 
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
 pub mod executor;
 
+#[cfg(not(feature = "xla"))]
+pub mod executor_stub;
+
 pub use artifacts::{ArtifactRegistry, Variant};
+
+#[cfg(feature = "xla")]
 pub use executor::XlaRuntime;
+
+#[cfg(not(feature = "xla"))]
+pub use executor_stub::XlaRuntime;

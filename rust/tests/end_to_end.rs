@@ -38,6 +38,7 @@ fn mixed_trace_through_coordinator_completes_and_scales() {
         n: 48,
         mean_gap_us: 0,
         s52_fraction: 0.0,
+        depthwise_fraction: 0.0,
         seed: 77,
     });
     let mut one = Server::new(CoordinatorConfig::default().with_cores(1));
@@ -70,6 +71,36 @@ fn burst_of_same_shape_amortises_weight_dma() {
         report.weight_dma_skip_rate >= 0.75,
         "skip rate {:.2}",
         report.weight_dma_skip_rate
+    );
+}
+
+#[test]
+fn heterogeneous_pool_serves_depthwise_traffic_end_to_end() {
+    // The acceptance scenario for the backend refactor: a mixed pool
+    // (simulated IP cores + golden-CPU fallback workers) serves a trace
+    // with depthwise traffic; everything is answered exactly once and
+    // the PSUM accounting is kind-aware on both sides.
+    let trace = generate(&TraceConfig {
+        n: 40,
+        mean_gap_us: 0,
+        s52_fraction: 0.0,
+        depthwise_fraction: 0.35,
+        seed: 88,
+    });
+    let mut server = Server::new(
+        CoordinatorConfig::default().with_cores(3).with_golden_workers(2),
+    );
+    let report = server.run_trace(&trace);
+    server.shutdown();
+    assert_eq!(report.n_requests, 40);
+    assert_eq!(report.n_cores, 5);
+    assert_eq!(report.total_psums, total_psums(&trace));
+    let served: usize = report.backend_mix.iter().map(|(_, n)| n).sum();
+    assert_eq!(served, 40);
+    assert!(
+        report.backend_mix.iter().any(|(name, _)| *name == "sim-ipcore-i32"),
+        "mix {:?}",
+        report.backend_mix
     );
 }
 

@@ -100,6 +100,7 @@ fn backpressure_bounds_inflight_work_without_losing_requests() {
         n: 30,
         mean_gap_us: 0,
         s52_fraction: 0.0,
+        depthwise_fraction: 0.0,
         seed: 9,
     });
     let unbounded = {

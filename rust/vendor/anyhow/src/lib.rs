@@ -1,0 +1,161 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored
+//! crate provides the exact subset of the `anyhow` 1.x API the
+//! repository uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the blanket `From<E: std::error::Error>`
+//! conversion that makes `?` work. Error chains and backtraces are out
+//! of scope; `Error` carries the boxed source (or a message) and
+//! renders it through `Display`.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what keeps the blanket `From` impl
+//! coherent.
+
+use std::fmt;
+
+/// Boxed dynamic error with a `Display`-first rendering.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// `Result` defaulted to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Internal carrier for string-built errors ([`anyhow!`]).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            inner: Box::new(error),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string, a displayable value, or
+/// `format!`-style arguments — mirrors `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error — mirrors `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Assert a condition, early-returning an error when it fails —
+/// mirrors `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($tt:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($tt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    fn guarded(v: i32) -> Result<i32> {
+        ensure!(v > 0, "value {v} must be positive");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let name = "probe";
+        let e = anyhow!("unknown variant '{name}'");
+        assert_eq!(e.to_string(), "unknown variant 'probe'");
+        let e = anyhow!("at {}: {name}", 7);
+        assert_eq!(e.to_string(), "at 7: probe");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_and_bail_return_errors() {
+        assert_eq!(guarded(3).unwrap(), 3);
+        let e = guarded(-1).unwrap_err();
+        assert!(e.to_string().contains("must be positive"));
+    }
+
+    #[test]
+    fn debug_renders_message() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}
