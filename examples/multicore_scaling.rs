@@ -60,11 +60,14 @@ fn main() -> anyhow::Result<()> {
     let lin = twenty / (single * MAX_CORES_Z2 as f64);
     println!("scaling efficiency at 20 cores: {:.1}%", lin * 100.0);
 
-    // --- heterogeneous pool: IP cores + golden-CPU fallback workers
-    // serving mixed standard/depthwise traffic. Depthwise jobs route
-    // only to depthwise-capable backends (capability mask); fallback
-    // workers absorb overflow once the accelerators queue up
-    // (cost-model-weighted least-loaded dispatch).
+    // --- heterogeneous pool: IP cores + host fallback workers serving
+    // mixed standard/depthwise traffic. Depthwise jobs route only to
+    // depthwise-capable backends (capability mask); fallback workers
+    // absorb overflow once the accelerators queue up (cost-model-
+    // weighted least-loaded dispatch). The im2col rows swap the naive
+    // golden loops for the threaded im2col+GEMM backend — same
+    // bit-exact numerics, far cheaper cost quotes, so the host absorbs
+    // more of the spill.
     println!("\n=== heterogeneous pool: mixed standard + depthwise trace ===");
     let mixed = generate(&TraceConfig {
         n: n.max(24),
@@ -82,15 +85,18 @@ fn main() -> anyhow::Result<()> {
         mixed.len(),
         dw_jobs
     );
-    for (label, cores, golden) in [
-        ("4 sim cores          ", 4usize, 0usize),
-        ("4 sim + 2 golden-cpu ", 4, 2),
-        ("2 sim + 4 golden-cpu ", 2, 4),
+    for (label, cores, golden, im2col) in [
+        ("4 sim cores          ", 4usize, 0usize, 0usize),
+        ("4 sim + 2 golden-cpu ", 4, 2, 0),
+        ("2 sim + 4 golden-cpu ", 2, 4, 0),
+        ("4 sim + 2 im2col-cpu ", 4, 0, 2),
+        ("2 sim + 4 im2col-cpu ", 2, 0, 4),
     ] {
         let mut server = Server::new(
             CoordinatorConfig::default()
                 .with_cores(cores)
-                .with_golden_workers(golden),
+                .with_golden_workers(golden)
+                .with_im2col_workers(im2col),
         );
         let report = server.run_trace(&mixed);
         server.shutdown();

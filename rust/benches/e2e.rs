@@ -1,14 +1,20 @@
 //! Bench: end-to-end serving — full CNN inference through the layer
-//! scheduler, and mixed-trace throughput through the coordinator's core
+//! scheduler, mixed-trace throughput through the coordinator's core
 //! pool at 1 / 4 / 20 cores (the §5.2 scaling story, measured through
-//! the real dispatch path rather than multiplied out).
+//! the real dispatch path rather than multiplied out), and the host
+//! GEMM calibration leg: naive `gemm_i32` vs the blocked parallel
+//! kernel behind `Im2colBackend` (the measured ratio anchors
+//! `CostModel::Im2col`; see `IM2COL_MACS_PER_UNIT`).
 
 use repro::bench_util::{black_box, Bencher};
 use repro::coordinator::{CnnScheduler, CoordinatorConfig, Server};
 use repro::hw::IpCoreConfig;
+use repro::model::im2col::{gemm_i32, gemm_i32_blocked, im2col, weights_matrix};
 use repro::model::network::EdgeCnn;
 use repro::model::trace::{generate, TraceConfig};
+use repro::model::{LayerSpec, Tensor};
 use repro::paper::FREQ_Z2_HZ;
+use repro::util::prng::Prng;
 
 fn main() {
     println!("=== bench: e2e (edge CNN + coordinator) ===");
@@ -55,7 +61,8 @@ fn main() {
         server.shutdown();
     }
 
-    // --- heterogeneous pool: sim cores + golden fallback, mixed kinds.
+    // --- heterogeneous pools: sim cores + host fallback (naive golden
+    // vs threaded im2col), same mixed-kind trace.
     {
         let mixed = generate(&TraceConfig {
             n: 32,
@@ -64,15 +71,62 @@ fn main() {
             depthwise_fraction: 0.25,
             seed: 8,
         });
-        let mut server = Server::new(
-            CoordinatorConfig::default().with_cores(4).with_golden_workers(2),
+        for (label, golden_n, im2col_n) in
+            [("4 sim + 2 golden", 2usize, 0usize), ("4 sim + 2 im2col", 0, 2)]
+        {
+            let mut server = Server::new(
+                CoordinatorConfig::default()
+                    .with_cores(4)
+                    .with_golden_workers(golden_n)
+                    .with_im2col_workers(im2col_n),
+            );
+            let report = server.run_trace(&mixed);
+            println!(
+                "heterogeneous {label}: host_rps={:.1} p99={}us mix={:?}",
+                report.host_rps, report.p99_us, report.backend_mix
+            );
+            server.shutdown();
+        }
+    }
+
+    // --- host GEMM calibration: naive vs blocked-parallel on the
+    // 32×32 c8→k16 layer (900×72 patches @ 72×16 weights). The printed
+    // ratio is what `CostModel::Im2col` is calibrated against; the
+    // blocked kernel at 4 threads must beat the naive loop.
+    {
+        let spec = LayerSpec::new(8, 32, 32, 16);
+        let mut rng = Prng::new(99);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
         );
-        let report = server.run_trace(&mixed);
+        let wts = Tensor::from_vec(
+            &[spec.k, spec.c, 3, 3],
+            rng.bytes_below(spec.k * spec.c * 9, 256),
+        );
+        let (patches, _, _) = im2col(&img);
+        let wm = weights_matrix(&wts);
+        assert_eq!(
+            gemm_i32_blocked(&patches, &wm, 4).data(),
+            gemm_i32(&patches, &wm).data(),
+            "blocked GEMM must stay bit-identical to naive"
+        );
+        let macs = spec.macs() as f64;
+        let naive = b.run_throughput("gemm_i32 naive 900x72@72x16 (MACs/s)", macs, || {
+            black_box(gemm_i32(&patches, &wm))
+        });
+        let blocked1 = b.run_throughput("gemm_i32_blocked t=1 (MACs/s)", macs, || {
+            black_box(gemm_i32_blocked(&patches, &wm, 1))
+        });
+        let blocked4 = b.run_throughput("gemm_i32_blocked t=4 (MACs/s)", macs, || {
+            black_box(gemm_i32_blocked(&patches, &wm, 4))
+        });
         println!(
-            "heterogeneous 4 sim + 2 golden: host_rps={:.1} p99={}us mix={:?}",
-            report.host_rps, report.p99_us, report.backend_mix
+            "blocked-vs-naive speedup: t=1 {:.2}x, t=4 {:.2}x (CostModel::Im2col assumes {}x/thread)",
+            naive.per_iter_secs() / blocked1.per_iter_secs(),
+            naive.per_iter_secs() / blocked4.per_iter_secs(),
+            repro::backend::IM2COL_MACS_PER_UNIT
         );
-        server.shutdown();
     }
 
     // --- host cost of one dispatch round trip (scheduling overhead).

@@ -43,44 +43,15 @@ impl ConvBackend for GoldenBackend {
     }
 
     fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+        job.validate()?;
         let cost = self.cost(job.spec, job.kind);
         let output = match job.kind {
             JobKind::Standard | JobKind::PointwiseAs3x3 => {
-                anyhow::ensure!(
-                    job.img.shape() == [job.spec.c, job.spec.h, job.spec.w],
-                    "image shape {:?} != spec {:?}",
-                    job.img.shape(),
-                    job.spec
-                );
-                anyhow::ensure!(
-                    job.weights.shape() == [job.spec.k, job.spec.c, 3, 3],
-                    "weight shape {:?} != spec {:?}",
-                    job.weights.shape(),
-                    job.spec
-                );
                 // Raw accumulator output, like the hardware path: the
                 // serving layer owns activation + requant.
                 conv3x3_i32(job.img, job.weights, job.bias, false)
             }
             JobKind::Depthwise => {
-                anyhow::ensure!(
-                    job.img.shape() == [job.spec.c, job.spec.h, job.spec.w],
-                    "image shape {:?} != spec {:?}",
-                    job.img.shape(),
-                    job.spec
-                );
-                anyhow::ensure!(
-                    job.weights.shape() == [job.spec.c, 3, 3],
-                    "depthwise weight shape {:?} != (C,3,3) for {:?}",
-                    job.weights.shape(),
-                    job.spec
-                );
-                anyhow::ensure!(
-                    job.bias.len() == job.spec.c,
-                    "depthwise bias len {} != C {}",
-                    job.bias.len(),
-                    job.spec.c
-                );
                 golden_depthwise3x3(job.img, job.weights, job.bias, job.spec.relu)
             }
         };
@@ -139,6 +110,25 @@ mod tests {
         let err = GoldenBackend::new().run(&JobPayload {
             kind: JobKind::Standard,
             spec: &wrong_spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_short_bias_instead_of_panicking() {
+        // A bias shorter than K must surface as Err from the shared
+        // payload validation, not as an index panic inside the kernel.
+        let spec = LayerSpec::new(4, 8, 8, 4);
+        let img = Tensor::<u8>::zeros(&[4, 8, 8]);
+        let wts = Tensor::<u8>::zeros(&[4, 4, 3, 3]);
+        let bias = vec![0i32; 2];
+        let err = GoldenBackend::new().run(&JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
             img: &img,
             weights: &wts,
             bias: &bias,

@@ -1,0 +1,271 @@
+//! [`ConvBackend`] over the threaded im2col + blocked-GEMM host kernel.
+//!
+//! The serious CPU fallback. [`super::GoldenBackend`] stays in the tree
+//! as the naive anchor, but a host CPU absorbing overflow traffic
+//! should run convolution the way the FPGA-CNN survey literature says
+//! hosts run it: lower to a patch matrix, multiply by the flattened
+//! weights ([`crate::model::im2col`]), and fan the GEMM's row panels
+//! across threads. Depthwise jobs have no cross-channel reduction to
+//! feed a GEMM, so they parallelise the natural way instead — one
+//! scoped thread per contiguous channel chunk.
+//!
+//! Numerics are bit-identical to the golden reference (and therefore
+//! to the simulated core) for every kind and thread count — enforced
+//! by the unified parity harness in `rust/tests/backend_parity.rs`.
+//! The reported cycles are the backend's own [`CostModel::Im2col`]
+//! quote: modelled host-equivalent work, not simulated silicon.
+
+use super::{BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload};
+use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
+use crate::model::im2col::conv3x3_im2col_threaded;
+use crate::model::Tensor;
+use crate::paper::{KH, KW};
+
+/// Threaded im2col+GEMM host backend.
+#[derive(Clone, Copy, Debug)]
+pub struct Im2colBackend {
+    threads: usize,
+}
+
+impl Default for Im2colBackend {
+    fn default() -> Self {
+        Im2colBackend::new(4)
+    }
+}
+
+impl Im2colBackend {
+    /// A worker fanning its kernels across `threads` scoped threads
+    /// (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Im2colBackend {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// Depthwise 3×3 with the channel axis fanned across scoped threads.
+/// Each thread owns a disjoint `(chunk, OH, OW)` slice of the output;
+/// per channel the arithmetic is exactly
+/// [`crate::hw::depthwise::golden_depthwise3x3`]'s loop, so the result
+/// is bit-identical for any thread count.
+fn depthwise3x3_threaded(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+    threads: usize,
+) -> Tensor<i32> {
+    let (c, h, width) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let (oh, ow) = (h - KH + 1, width - KW + 1);
+    let plane = oh * ow;
+    let mut out = Tensor::<i32>::zeros(&[c, oh, ow]);
+    let threads = threads.clamp(1, c);
+    let chans_per = c.div_ceil(threads);
+    let od = out.data_mut();
+    let kernel = |base: usize, chunk: &mut [i32]| {
+        for (dc, plane_out) in chunk.chunks_mut(plane).enumerate() {
+            let ci = base + dc;
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut acc = bias[ci];
+                    for dy in 0..KH {
+                        for dx in 0..KW {
+                            acc += img.at3(ci, y + dy, x + dx) as i32
+                                * w.data()[(ci * KH + dy) * KW + dx] as i32;
+                        }
+                    }
+                    if relu && acc < 0 {
+                        acc = 0;
+                    }
+                    plane_out[y * ow + x] = acc;
+                }
+            }
+        }
+    };
+    if threads == 1 {
+        kernel(0, od);
+        return out;
+    }
+    std::thread::scope(|scope| {
+        for (t, chunk) in od.chunks_mut(chans_per * plane).enumerate() {
+            let kernel = &kernel;
+            scope.spawn(move || kernel(t * chans_per, chunk));
+        }
+    });
+    out
+}
+
+impl ConvBackend for Im2colBackend {
+    fn name(&self) -> &'static str {
+        "im2col-cpu"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            standard3x3: true,
+            depthwise: true,
+            pointwise_as_3x3: true,
+            accum: AccumMode::I32,
+            spec_allowlist: None,
+        }
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Im2col {
+            threads: self.threads as u64,
+        }
+    }
+
+    fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+        job.validate()?;
+        let cost = self.cost(job.spec, job.kind);
+        let output = match job.kind {
+            JobKind::Standard | JobKind::PointwiseAs3x3 => {
+                // Raw accumulator output, like every standard-path
+                // backend: activation + requant belong to the serving
+                // layer.
+                conv3x3_im2col_threaded(job.img, job.weights, job.bias, false, self.threads)
+            }
+            JobKind::Depthwise => {
+                depthwise3x3_threaded(job.img, job.weights, job.bias, job.spec.relu, self.threads)
+            }
+        };
+        Ok(BackendRun {
+            output,
+            cycles: CycleStats {
+                compute: cost,
+                total: cost,
+                ..Default::default()
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GoldenBackend;
+    use crate::hw::depthwise::golden_depthwise3x3;
+    use crate::model::{golden, LayerSpec, Tensor, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    fn standard_payload_parts(spec: &LayerSpec, seed: u64) -> (Tensor<u8>, Tensor<u8>, Vec<i32>) {
+        let mut rng = Prng::new(seed);
+        (
+            Tensor::from_vec(
+                &[spec.c, spec.h, spec.w],
+                rng.bytes_below(spec.c * spec.h * spec.w, 256),
+            ),
+            Tensor::from_vec(
+                &[spec.k, spec.c, 3, 3],
+                rng.bytes_below(spec.k * spec.c * 9, 256),
+            ),
+            (0..spec.k).map(|_| rng.range_i64(-50, 50) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn standard_job_matches_golden_backend_bit_for_bit() {
+        let spec = QUICKSTART;
+        let (img, wts, bias) = standard_payload_parts(&spec, 61);
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let want = GoldenBackend::new().run(&payload).unwrap();
+        for threads in [1usize, 2, 4] {
+            let got = Im2colBackend::new(threads).run(&payload).unwrap();
+            assert_eq!(got.output.data(), want.output.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn depthwise_job_matches_golden_and_fuses_relu() {
+        let spec = LayerSpec::new(8, 10, 10, 8).with_relu();
+        let mut rng = Prng::new(62);
+        let img = Tensor::from_vec(&[8, 10, 10], rng.bytes_below(800, 256));
+        let wts = Tensor::from_vec(&[8, 3, 3], rng.bytes_below(72, 256));
+        let bias: Vec<i32> = (0..8).map(|_| rng.range_i64(-200_000, 10) as i32).collect();
+        let payload = JobPayload {
+            kind: JobKind::Depthwise,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let want = golden_depthwise3x3(&img, &wts, &bias, true);
+        for threads in [1usize, 3, 16] {
+            let got = Im2colBackend::new(threads).run(&payload).unwrap();
+            assert_eq!(got.output.data(), want.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let img = Tensor::<u8>::zeros(&[4, 8, 8]);
+        let wts = Tensor::<u8>::zeros(&[4, 4, 3, 3]);
+        let bias = vec![0i32; 4];
+        let wrong_spec = LayerSpec::new(8, 8, 8, 4);
+        let err = Im2colBackend::new(2).run(&JobPayload {
+            kind: JobKind::Standard,
+            spec: &wrong_spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn reports_its_own_cost_model_as_cycles() {
+        let spec = QUICKSTART;
+        let (img, wts, bias) = standard_payload_parts(&spec, 63);
+        let mut be = Im2colBackend::new(4);
+        assert_eq!(be.cost_model(), CostModel::Im2col { threads: 4 });
+        let run = be
+            .run(&JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .unwrap();
+        assert_eq!(run.cycles.total, be.cost(&spec, JobKind::Standard));
+    }
+
+    #[test]
+    fn raw_standard_output_ignores_spec_relu() {
+        // Parity contract: standard jobs return the raw accumulator even
+        // when the spec carries a fused-relu flag (the scheduler owns
+        // activation); only depthwise fuses.
+        let spec = LayerSpec::new(4, 6, 6, 4).with_relu();
+        let (img, wts, _) = standard_payload_parts(&spec, 64);
+        let bias = vec![-1_000_000i32; 4];
+        let run = Im2colBackend::new(2)
+            .run(&JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .unwrap();
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+        assert_eq!(run.output.data(), want.data());
+        assert!(run.output.data().iter().any(|&v| v < 0), "raw accumulator must go negative here");
+    }
+}

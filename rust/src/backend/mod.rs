@@ -19,19 +19,29 @@
 //! * [`sim::SimBackend`] — the cycle-accurate [`crate::hw::IpCore`]
 //!   (standard, pointwise-as-3×3, and depthwise through the same entry
 //!   point);
-//! * [`golden::GoldenBackend`] — the naive CPU reference, the honest
-//!   host-fallback worker;
+//! * [`golden::GoldenBackend`] — the naive CPU reference, kept as the
+//!   anchor every other path is measured against;
+//! * [`im2col::Im2colBackend`] — the serious host fallback: threaded
+//!   im2col + cache-blocked GEMM (`model::im2col`), the canonical
+//!   CPU formulation in the FPGA-CNN survey literature;
 //! * [`xla::XlaBackend`] — the AOT Pallas/HLO artifacts under PJRT
 //!   (available when the `xla` feature is linked and artifacts exist).
 //!
 //! The parity contract: for identical integer inputs every backend
 //! produces bit-identical i32 outputs (`rust/tests/backend_parity.rs`).
+//!
+//! Routing is three-way masked: job *kind* against the capability
+//! flags, job *accumulator requirement* against [`Capability::accum`]
+//! (a wrap-8 reply can only come from a wrap-8 core, and vice versa),
+//! and the spec against any backend allowlist.
 
 pub mod golden;
+pub mod im2col;
 pub mod sim;
 pub mod xla;
 
 pub use golden::GoldenBackend;
+pub use im2col::Im2colBackend;
 pub use sim::SimBackend;
 pub use xla::XlaBackend;
 
@@ -73,9 +83,9 @@ pub struct Capability {
     pub depthwise: bool,
     pub pointwise_as_3x3: bool,
     /// Accumulator semantics of the outputs this backend produces.
-    /// Mixed pools serving production traffic should be I32-homogeneous;
-    /// the dispatcher masks by job kind and leaves accumulator policy to
-    /// pool construction.
+    /// [`Self::allows`] matches it against the job's required mode, so
+    /// a mixed pool can carry wrap-8 silicon next to production (I32)
+    /// workers without either absorbing the other's traffic.
     pub accum: AccumMode,
     /// `Some(specs)` when the backend can only serve a fixed spec set
     /// (the XLA path serves exactly its compiled artifacts); `None`
@@ -93,9 +103,15 @@ impl Capability {
         }
     }
 
-    /// Full routing predicate: kind mask plus the spec allowlist.
-    pub fn allows(&self, spec: &LayerSpec, kind: JobKind) -> bool {
+    /// Full routing predicate: kind mask, accumulator-mode match, and
+    /// the spec allowlist. `accum` is what the *job* requires of its
+    /// reply; a backend only qualifies when it produces exactly those
+    /// semantics — an I32 pool must not absorb wrap-8 traffic (it would
+    /// answer with un-wrapped values) and a wrap-8 core must not absorb
+    /// production traffic.
+    pub fn allows(&self, spec: &LayerSpec, kind: JobKind, accum: AccumMode) -> bool {
         self.supports(kind)
+            && self.accum == accum
             && match &self.spec_allowlist {
                 None => true,
                 Some(list) => list.contains(spec),
@@ -118,7 +134,20 @@ pub enum CostModel {
     HostMacs,
     /// Vectorised host runtime: `psums / throughput_factor` units.
     Vectorized { throughput_factor: u64 },
+    /// Threaded im2col + blocked GEMM ([`im2col::Im2colBackend`]):
+    /// GEMM MACs plus the patch-matrix lowering traffic, retired at
+    /// [`IM2COL_MACS_PER_UNIT`] MACs per unit per worker thread.
+    Im2col { threads: u64 },
 }
+
+/// MACs one im2col worker thread retires per cost unit, calibrated so
+/// `HostMacs / Im2col` matches the blocked-GEMM-vs-naive ratio the
+/// `e2e` bench measures on the 32×32 c8→k16 layer (the blocked kernel
+/// streams B rows instead of re-walking the image, ≈4× per thread
+/// before threading multiplies it). With 4 threads an im2col worker
+/// therefore quotes ~1/16 of [`CostModel::HostMacs`] — still above
+/// [`CostModel::SimCycles`], so accelerators fill first.
+pub const IM2COL_MACS_PER_UNIT: u64 = 4;
 
 impl CostModel {
     pub fn cost(&self, spec: &LayerSpec, kind: JobKind) -> u64 {
@@ -135,6 +164,17 @@ impl CostModel {
             (CostModel::HostMacs, kind) => job_psums(spec, kind) * 9,
             (CostModel::Vectorized { throughput_factor }, kind) => {
                 job_psums(spec, kind) / throughput_factor.max(1) + 1
+            }
+            (CostModel::Im2col { threads }, kind) => {
+                let macs = job_psums(spec, kind) * 9;
+                // The lowering writes one patch word per (window, c, tap)
+                // — standard/pointwise only; the depthwise path convolves
+                // channels directly and never builds a patch matrix.
+                let lowering = match kind {
+                    JobKind::Depthwise => 0,
+                    JobKind::Standard | JobKind::PointwiseAs3x3 => windows * spec.c as u64 * 9,
+                };
+                ((macs + lowering) / (IM2COL_MACS_PER_UNIT * threads.max(1))).max(1)
             }
         }
     }
@@ -156,6 +196,54 @@ pub struct JobPayload<'a> {
     /// executing unit (weight-stationary batching): backends that model
     /// a weight DMA may discount it.
     pub weights_resident: bool,
+}
+
+impl JobPayload<'_> {
+    /// Kind-aware shape contract, shared by the host backends (the
+    /// simulator re-validates inside [`crate::hw::IpCore`]): image
+    /// matches the spec, weights match the kind's layout, bias length
+    /// matches the output-channel count. Backends call this up front so
+    /// a malformed payload returns `Err` instead of panicking a pool
+    /// worker mid-kernel.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.img.shape() == [self.spec.c, self.spec.h, self.spec.w],
+            "image shape {:?} != spec {:?}",
+            self.img.shape(),
+            self.spec
+        );
+        match self.kind {
+            JobKind::Standard | JobKind::PointwiseAs3x3 => {
+                anyhow::ensure!(
+                    self.weights.shape() == [self.spec.k, self.spec.c, 3, 3],
+                    "weight shape {:?} != spec {:?}",
+                    self.weights.shape(),
+                    self.spec
+                );
+                anyhow::ensure!(
+                    self.bias.len() == self.spec.k,
+                    "bias len {} != K {}",
+                    self.bias.len(),
+                    self.spec.k
+                );
+            }
+            JobKind::Depthwise => {
+                anyhow::ensure!(
+                    self.weights.shape() == [self.spec.c, 3, 3],
+                    "depthwise weight shape {:?} != (C,3,3) for {:?}",
+                    self.weights.shape(),
+                    self.spec
+                );
+                anyhow::ensure!(
+                    self.bias.len() == self.spec.c,
+                    "depthwise bias len {} != C {}",
+                    self.bias.len(),
+                    self.spec.c
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// What one backend execution produced.
@@ -226,7 +314,25 @@ mod tests {
         assert!(cap.supports(JobKind::Standard));
         assert!(cap.supports(JobKind::PointwiseAs3x3));
         assert!(!cap.supports(JobKind::Depthwise));
-        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
+    }
+
+    #[test]
+    fn allows_requires_exact_accum_match() {
+        let mut cap = Capability {
+            standard3x3: true,
+            depthwise: false,
+            pointwise_as_3x3: true,
+            accum: AccumMode::I32,
+            spec_allowlist: None,
+        };
+        // An I32 backend must not absorb wrap-8 traffic...
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
+        assert!(!cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::Wrap8));
+        // ...and a wrap-8 backend must not absorb production traffic.
+        cap.accum = AccumMode::Wrap8;
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::Wrap8));
+        assert!(!cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
     }
 
     #[test]
@@ -238,10 +344,10 @@ mod tests {
             accum: AccumMode::I32,
             spec_allowlist: Some(vec![QUICKSTART]),
         };
-        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
-        assert!(!cap.allows(&S52, JobKind::Standard));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
+        assert!(!cap.allows(&S52, JobKind::Standard, AccumMode::I32));
         // Kind mask still applies on top of the allowlist.
-        assert!(!cap.allows(&QUICKSTART, JobKind::Depthwise));
+        assert!(!cap.allows(&QUICKSTART, JobKind::Depthwise, AccumMode::I32));
     }
 
     #[test]
@@ -258,5 +364,36 @@ mod tests {
         let tiny = LayerSpec::new(1, 3, 3, 4);
         let c = CostModel::Vectorized { throughput_factor: 1_000_000 }.cost(&tiny, JobKind::Standard);
         assert!(c >= 1);
+    }
+
+    #[test]
+    fn im2col_cost_sits_between_sim_and_naive_host() {
+        // Routing intent for mixed pools: accelerators fill first, the
+        // threaded im2col worker is the next-cheapest unit, the naive
+        // golden loops are last-resort.
+        let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
+        let im2col = CostModel::Im2col { threads: 4 }.cost(&QUICKSTART, JobKind::Standard);
+        let host = CostModel::HostMacs.cost(&QUICKSTART, JobKind::Standard);
+        assert!(sim < im2col, "sim {sim} < im2col {im2col}");
+        assert!(im2col < host, "im2col {im2col} < host {host}");
+    }
+
+    #[test]
+    fn im2col_depthwise_cost_has_no_lowering_term() {
+        // Depthwise runs channel loops directly — the quote is pure
+        // MACs (windows × C × 9), with no patch-matrix traffic added.
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        let got = CostModel::Im2col { threads: 1 }.cost(&spec, JobKind::Depthwise);
+        assert_eq!(got, 64 * 8 * 9 / IM2COL_MACS_PER_UNIT);
+    }
+
+    #[test]
+    fn im2col_cost_scales_down_with_threads_and_never_hits_zero() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        let t1 = CostModel::Im2col { threads: 1 }.cost(&spec, JobKind::Standard);
+        let t4 = CostModel::Im2col { threads: 4 }.cost(&spec, JobKind::Standard);
+        assert!(t4 < t1, "threads must cheapen the quote: {t4} vs {t1}");
+        let tiny = LayerSpec::new(1, 3, 3, 4);
+        assert!(CostModel::Im2col { threads: 1_000_000 }.cost(&tiny, JobKind::Depthwise) >= 1);
     }
 }

@@ -163,8 +163,9 @@ mod tests {
         assert!(cap.supports(JobKind::Standard));
         assert!(!cap.supports(JobKind::Depthwise));
         assert!(!cap.supports(JobKind::PointwiseAs3x3));
-        assert!(cap.allows(&QUICKSTART, JobKind::Standard));
-        assert!(!cap.allows(&crate::model::S52, JobKind::Standard));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
+        assert!(!cap.allows(&crate::model::S52, JobKind::Standard, AccumMode::I32));
+        assert!(!cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::Wrap8));
     }
 
     #[test]

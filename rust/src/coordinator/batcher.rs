@@ -13,16 +13,22 @@
 use super::config::BatchConfig;
 use super::request::Submission;
 use crate::backend::JobKind;
+use crate::hw::AccumMode;
 use crate::model::LayerSpec;
 use std::collections::VecDeque;
 
-/// A closed batch, ready for dispatch. All jobs share spec, weight set
-/// and kind, so a batch routes as one unit to one capable backend.
+/// A closed batch, ready for dispatch. All jobs share spec, weight set,
+/// kind and required accumulator mode, so a batch routes as one unit to
+/// one capable backend.
 #[derive(Debug)]
 pub struct Batch {
     pub spec: LayerSpec,
     pub weights_id: u64,
     pub kind: JobKind,
+    /// Accumulator semantics every job in the batch requires of its
+    /// reply (part of the grouping key: wrap-8 and production jobs of
+    /// the same shape must not share a batch, they route differently).
+    pub accum: AccumMode,
     pub jobs: Vec<Submission>,
 }
 
@@ -44,13 +50,13 @@ impl Batcher {
 
     /// Add a submission; returns any batch that closed as a result.
     pub fn push(&mut self, sub: Submission) -> Vec<Batch> {
-        let key = (sub.job.spec, sub.job.weights_id, sub.job.kind);
+        let key = (sub.job.spec, sub.job.weights_id, sub.job.kind, sub.job.accum);
         let mut closed = Vec::new();
 
         // Try to join an open batch; count skips on the ones passed over.
         let mut sub = Some(sub);
         for (batch, skips) in self.open.iter_mut() {
-            if (batch.spec, batch.weights_id, batch.kind) == key
+            if (batch.spec, batch.weights_id, batch.kind, batch.accum) == key
                 && batch.jobs.len() < self.config.max_batch
             {
                 batch.jobs.push(sub.take().expect("joined at most once"));
@@ -65,6 +71,7 @@ impl Batcher {
                     spec: key.0,
                     weights_id: key.1,
                     kind: key.2,
+                    accum: key.3,
                     jobs: vec![sub],
                 },
                 0,
@@ -173,6 +180,30 @@ mod tests {
         assert_eq!(batches.len(), 2);
         for batch in &batches {
             assert!(batch.jobs.iter().all(|s| s.job.kind == batch.kind));
+        }
+    }
+
+    #[test]
+    fn accum_modes_never_share_a_batch() {
+        // Wrap-8 and production jobs of the same spec route to different
+        // backends, so the batcher must keep them apart.
+        let mut b = Batcher::new(cfg(8, 100));
+        let (tx, _rx) = channel();
+        for i in 0..6u64 {
+            let mut job = ConvJob::synthetic(i, QUICKSTART, i);
+            if i % 2 == 1 {
+                job = job.with_accum(AccumMode::Wrap8);
+            }
+            b.push(Submission {
+                job,
+                reply: tx.clone(),
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        let batches = b.flush();
+        assert_eq!(batches.len(), 2);
+        for batch in &batches {
+            assert!(batch.jobs.iter().all(|s| s.job.accum == batch.accum));
         }
     }
 

@@ -32,6 +32,13 @@ pub struct CoordinatorConfig {
     /// overflow and depthwise traffic can spill onto the PS instead of
     /// queueing behind the accelerators.
     pub golden_fallback_workers: usize,
+    /// Threaded im2col+GEMM workers (`backend::Im2colBackend`) appended
+    /// after the golden workers — the *serious* CPU fallback; each one
+    /// fans its GEMM across [`Self::im2col_worker_threads`] threads and
+    /// quotes `CostModel::Im2col` units to the dispatcher.
+    pub im2col_workers: usize,
+    /// Threads per im2col worker's scoped GEMM fan-out.
+    pub im2col_worker_threads: usize,
     pub ip: IpCoreConfig,
     pub batch: BatchConfig,
     /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
@@ -45,6 +52,8 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             n_cores: 1,
             golden_fallback_workers: 0,
+            im2col_workers: 0,
+            im2col_worker_threads: 4,
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
@@ -65,6 +74,18 @@ impl CoordinatorConfig {
     /// Append `n` golden-CPU fallback workers to the pool.
     pub fn with_golden_workers(mut self, n: usize) -> Self {
         self.golden_fallback_workers = n;
+        self
+    }
+
+    /// Append `n` threaded im2col+GEMM workers to the pool.
+    pub fn with_im2col_workers(mut self, n: usize) -> Self {
+        self.im2col_workers = n;
+        self
+    }
+
+    /// Threads each im2col worker fans its GEMM across (min 1).
+    pub fn with_im2col_worker_threads(mut self, threads: usize) -> Self {
+        self.im2col_worker_threads = threads.max(1);
         self
     }
 }
@@ -90,6 +111,19 @@ mod tests {
         assert_eq!(CoordinatorConfig::default().golden_fallback_workers, 0);
         let c = CoordinatorConfig::default().with_cores(4).with_golden_workers(2);
         assert_eq!((c.n_cores, c.golden_fallback_workers), (4, 2));
+    }
+
+    #[test]
+    fn im2col_workers_default_off_with_four_threads_and_compose() {
+        let d = CoordinatorConfig::default();
+        assert_eq!((d.im2col_workers, d.im2col_worker_threads), (0, 4));
+        let c = CoordinatorConfig::default()
+            .with_cores(2)
+            .with_im2col_workers(3)
+            .with_im2col_worker_threads(8);
+        assert_eq!((c.im2col_workers, c.im2col_worker_threads), (3, 8));
+        // Thread knob is clamped to at least one.
+        assert_eq!(CoordinatorConfig::default().with_im2col_worker_threads(0).im2col_worker_threads, 1);
     }
 
     #[test]

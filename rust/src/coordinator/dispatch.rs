@@ -94,6 +94,16 @@ impl CorePool {
             .collect()
     }
 
+    /// Outstanding queued work per worker, in each worker's own
+    /// cost-model units (the quantity least-loaded dispatch compares).
+    /// Observability + tests; values drop as workers complete jobs.
+    pub fn worker_loads(&self) -> Vec<i64> {
+        self.workers
+            .iter()
+            .map(|w| w.load.load(Ordering::Relaxed))
+            .collect()
+    }
+
     fn spawn_worker(core_idx: usize, backend: Box<dyn ConvBackend>, metrics: Arc<Metrics>) -> Worker {
         let capability = backend.capability();
         let cost = backend.cost_model();
@@ -157,13 +167,14 @@ impl CorePool {
 
     /// Dispatch a closed batch to the least-loaded *capable* worker.
     /// Returns the batch untouched when no worker in the pool can serve
-    /// its (spec, kind) — kind mask plus any backend spec allowlist.
+    /// its (spec, kind, accum) — kind mask, accumulator-mode match and
+    /// any backend spec allowlist.
     pub fn try_dispatch(&self, batch: Batch) -> Result<(), Batch> {
         let kind = batch.kind;
         let worker = self
             .workers
             .iter()
-            .filter(|w| w.capability.allows(&batch.spec, kind))
+            .filter(|w| w.capability.allows(&batch.spec, kind, batch.accum))
             .min_by_key(|w| w.load.load(Ordering::Relaxed));
         let Some(worker) = worker else {
             return Err(batch);
@@ -189,8 +200,9 @@ impl CorePool {
     pub fn dispatch(&self, batch: Batch) {
         if let Err(batch) = self.try_dispatch(batch) {
             panic!(
-                "no backend in the pool supports {:?} jobs ({} workers)",
+                "no backend in the pool supports {:?} jobs in {:?} accum mode ({} workers)",
                 batch.kind,
+                batch.accum,
                 self.workers.len()
             );
         }
@@ -210,7 +222,7 @@ impl CorePool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{GoldenBackend, JobKind};
+    use crate::backend::{BackendRun, GoldenBackend, Im2colBackend, JobKind, JobPayload};
     use crate::coordinator::batcher::Batch;
     use crate::coordinator::request::{ConvJob, Submission};
     use crate::hw::depthwise::golden_depthwise3x3;
@@ -224,6 +236,7 @@ mod tests {
             spec: job.spec,
             weights_id: job.weights_id,
             kind: job.kind,
+            accum: job.accum,
             jobs: vec![Submission {
                 job,
                 reply: tx.clone(),
@@ -268,6 +281,7 @@ mod tests {
             spec: QUICKSTART,
             weights_id,
             kind: JobKind::Standard,
+            accum: AccumMode::I32,
             jobs,
         });
         let results: Vec<ConvResult> = (0..3)
@@ -380,6 +394,217 @@ mod tests {
         for r in &results {
             assert_ne!(r.core, 0, "depthwise routed to the wrap8 core");
             assert_ne!(r.backend, "sim-ipcore-wrap8");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn mixed_kind_mixed_accum_burst_never_misroutes() {
+        // The full routing predicate under fire: a pool mixing an I32
+        // core, a wrap-8 core and a threaded im2col worker, fed a burst
+        // of standard-I32, depthwise and standard-wrap8 jobs. No job may
+        // land on a worker whose `Capability::allows` rejects its
+        // (spec, kind, accum) triple — and every reply must be the
+        // matching reference, bit for bit.
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(SimBackend::new(IpCoreConfig::default())),
+            Box::new(SimBackend::new(IpCoreConfig {
+                mode: AccumMode::Wrap8,
+                ..Default::default()
+            })),
+            Box::new(Im2colBackend::new(2)),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let caps = pool.worker_capabilities();
+        let (tx, rx) = channel();
+        let dw_spec = LayerSpec::new(8, 10, 10, 8);
+        let mut wrap8_ids = std::collections::HashSet::new();
+        for i in 0..24u64 {
+            let job = match i % 3 {
+                0 => ConvJob::synthetic(i, QUICKSTART, i),
+                1 => ConvJob::synthetic_depthwise(i, dw_spec, i),
+                _ => {
+                    wrap8_ids.insert(i);
+                    ConvJob::synthetic(i, QUICKSTART, i).with_accum(AccumMode::Wrap8)
+                }
+            };
+            pool.dispatch(batch_of(job, &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 24);
+        for r in &results {
+            let accum = if wrap8_ids.contains(&r.id) {
+                AccumMode::Wrap8
+            } else {
+                AccumMode::I32
+            };
+            assert!(
+                caps[r.core].1.allows(&r.spec, r.kind, accum),
+                "job {} ({:?}, {:?}) landed on incapable worker {} ({})",
+                r.id,
+                r.kind,
+                accum,
+                r.core,
+                r.backend
+            );
+            // And the numerics match the per-(kind, accum) reference.
+            let job = match r.kind {
+                JobKind::Depthwise => ConvJob::synthetic_depthwise(r.id, dw_spec, r.id),
+                _ => ConvJob::synthetic(r.id, QUICKSTART, r.id),
+            };
+            let want = match (r.kind, accum) {
+                (JobKind::Depthwise, _) => {
+                    golden_depthwise3x3(&job.img, &job.weights, &job.bias, false)
+                }
+                (_, AccumMode::I32) => golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false),
+                (_, AccumMode::Wrap8) => {
+                    let bias8: Vec<u8> = job.bias.iter().map(|&b| b as u8).collect();
+                    golden::conv3x3_wrap8(&job.img, &job.weights, &bias8).map(|v| v as i32)
+                }
+            };
+            assert_eq!(r.output.data(), want.data(), "job {} via {}", r.id, r.backend);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wrap8_jobs_route_to_wrap8_silicon_only() {
+        // The ROADMAP accum-routing gap, closed: the dispatcher matches
+        // job accum requirements against Capability::accum instead of
+        // relying on I32-homogeneous pools.
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(SimBackend::new(IpCoreConfig::default())),
+            Box::new(SimBackend::new(IpCoreConfig {
+                mode: AccumMode::Wrap8,
+                ..Default::default()
+            })),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        for i in 0..8u64 {
+            let job = ConvJob::synthetic(i, QUICKSTART, i).with_accum(if i % 2 == 0 {
+                AccumMode::I32
+            } else {
+                AccumMode::Wrap8
+            });
+            pool.dispatch(batch_of(job, &tx));
+        }
+        drop(tx);
+        for r in rx.iter() {
+            if r.id % 2 == 0 {
+                assert_eq!(r.backend, "sim-ipcore-i32", "job {}", r.id);
+            } else {
+                assert_eq!(r.backend, "sim-ipcore-wrap8", "job {}", r.id);
+            }
+        }
+        // An I32-only pool must hand a wrap8 batch back, not serve it wide.
+        let i32_pool = CorePool::new(1, IpCoreConfig::default());
+        let (tx, _rx) = channel();
+        let job = ConvJob::synthetic(99, QUICKSTART, 99).with_accum(AccumMode::Wrap8);
+        let back = i32_pool.try_dispatch(batch_of(job, &tx)).expect_err("must not route");
+        assert_eq!(back.accum, AccumMode::Wrap8);
+        pool.shutdown();
+        i32_pool.shutdown();
+    }
+
+    /// Test backend that parks every job until the test releases its
+    /// gate — lets a test observe queued load without racing completion.
+    struct GatedBackend {
+        gate: std::sync::mpsc::Receiver<()>,
+        model: CostModel,
+    }
+
+    impl ConvBackend for GatedBackend {
+        fn name(&self) -> &'static str {
+            "gated-test"
+        }
+        fn capability(&self) -> Capability {
+            Capability {
+                standard3x3: true,
+                depthwise: true,
+                pointwise_as_3x3: true,
+                accum: AccumMode::I32,
+                spec_allowlist: None,
+            }
+        }
+        fn cost_model(&self) -> CostModel {
+            self.model
+        }
+        fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+            self.gate.recv().ok();
+            GoldenBackend::new().run(job)
+        }
+    }
+
+    #[test]
+    fn least_loaded_weighs_each_queue_in_its_own_cost_units() {
+        // Two parked workers with different cost models. The first job
+        // lands on worker 0 (both queues empty, first wins); its queue
+        // must weigh exactly worker 0's own HostMacs quote. The second
+        // job must go to the now-cheaper worker 1 and weigh exactly
+        // worker 1's own Im2col quote — not worker 0's units.
+        let (gate_a, rx_a) = channel();
+        let (gate_b, rx_b) = channel();
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(GatedBackend {
+                gate: rx_a,
+                model: CostModel::HostMacs,
+            }),
+            Box::new(GatedBackend {
+                gate: rx_b,
+                model: CostModel::Im2col { threads: 4 },
+            }),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        pool.dispatch(batch_of(ConvJob::synthetic(0, QUICKSTART, 0), &tx));
+        pool.dispatch(batch_of(ConvJob::synthetic(1, QUICKSTART, 1), &tx));
+        let host = CostModel::HostMacs.cost(&QUICKSTART, JobKind::Standard) as i64;
+        let im2col = CostModel::Im2col { threads: 4 }.cost(&QUICKSTART, JobKind::Standard) as i64;
+        assert_ne!(host, im2col, "test premise: the two models quote different units");
+        assert_eq!(pool.worker_loads(), vec![host, im2col]);
+        gate_a.send(()).unwrap();
+        gate_b.send(()).unwrap();
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(pool.worker_loads(), vec![0, 0]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn im2col_only_pool_serves_standard_and_depthwise() {
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(Im2colBackend::new(2)),
+            Box::new(Im2colBackend::new(2)),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        let dw_spec = LayerSpec::new(4, 8, 8, 4);
+        for i in 0..6u64 {
+            let job = if i % 2 == 0 {
+                ConvJob::synthetic(i, QUICKSTART, i)
+            } else {
+                ConvJob::synthetic_depthwise(i, dw_spec, i)
+            };
+            pool.dispatch(batch_of(job, &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.backend, "im2col-cpu");
+            let job = match r.kind {
+                JobKind::Depthwise => ConvJob::synthetic_depthwise(r.id, dw_spec, r.id),
+                _ => ConvJob::synthetic(r.id, QUICKSTART, r.id),
+            };
+            let want = match r.kind {
+                JobKind::Depthwise => golden_depthwise3x3(&job.img, &job.weights, &job.bias, false),
+                _ => golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false),
+            };
+            assert_eq!(r.output.data(), want.data(), "job {}", r.id);
         }
         pool.shutdown();
     }

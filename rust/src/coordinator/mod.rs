@@ -8,14 +8,17 @@
 //!
 //! * [`request`] — typed conv / inference requests and responses,
 //!   kind-tagged (standard / depthwise / pointwise-as-3×3);
-//! * [`batcher`] — groups same-(shape, weight-set, kind) requests so a
-//!   core keeps its weight BRAM layout (weight-stationary across a
-//!   batch, amortising the weight DMA);
+//! * [`batcher`] — groups same-(shape, weight-set, kind, accum)
+//!   requests so a core keeps its weight BRAM layout (weight-stationary
+//!   across a batch, amortising the weight DMA);
 //! * [`dispatch`] — a pool of worker threads each owning a
 //!   `Box<dyn ConvBackend>`: the paper's "20 cores on a fully-utilised
-//!   Pynq Z2", host-CPU fallback workers, or any mix. Routing is
-//!   capability-masked (depthwise jobs only reach depthwise-capable
-//!   backends) and least-loaded in each backend's own cost-model units;
+//!   Pynq Z2", naive golden or threaded im2col host workers
+//!   ([`config::CoordinatorConfig::im2col_workers`]), or any mix.
+//!   Routing is capability-masked (depthwise jobs only reach
+//!   depthwise-capable backends; a job's required accumulator mode must
+//!   match `Capability::accum`, so wrap-8 traffic only reaches wrap-8
+//!   silicon) and least-loaded in each backend's own cost-model units;
 //! * [`scheduler`] — chains CNN layers on one backend the way §4.1
 //!   chains output BRAMs into the next layer's input (no DMA
 //!   round-trip), applying inter-layer requantisation; generic over the

@@ -2,6 +2,7 @@
 
 use crate::backend::{job_psums, JobKind, JobPayload};
 use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
 use crate::model::{LayerSpec, Tensor};
 use std::sync::mpsc::Sender;
 use std::time::Duration;
@@ -16,6 +17,11 @@ pub struct ConvJob {
     pub spec: LayerSpec,
     /// Which conv flavour this is; drives capability-masked routing.
     pub kind: JobKind,
+    /// Accumulator semantics the reply must carry. Routing matches this
+    /// against [`crate::backend::Capability::accum`], so wrap-8 jobs in
+    /// a mixed pool only ever reach wrap-8 silicon and production (I32)
+    /// jobs never land on a wrapping core.
+    pub accum: AccumMode,
     pub img: Tensor<u8>,
     /// `(K,C,3,3)` for standard/pointwise jobs, `(C,3,3)` for depthwise.
     pub weights: Tensor<u8>,
@@ -80,6 +86,7 @@ impl ConvJob {
             id,
             spec,
             kind: JobKind::Standard,
+            accum: AccumMode::I32,
             img: Tensor::from_vec(
                 &[spec.c, spec.h, spec.w],
                 rng.bytes_below(spec.c * spec.h * spec.w, 256),
@@ -104,6 +111,7 @@ impl ConvJob {
             id,
             spec,
             kind: JobKind::Depthwise,
+            accum: AccumMode::I32,
             img: Tensor::from_vec(
                 &[spec.c, spec.h, spec.w],
                 rng.bytes_below(spec.c * spec.h * spec.w, 256),
@@ -112,6 +120,13 @@ impl ConvJob {
             bias: (0..spec.c).map(|_| rng.range_i64(0, 32) as i32).collect(),
             weights_id: weights_fingerprint(&spec, JobKind::Depthwise),
         }
+    }
+
+    /// Require different accumulator semantics of the reply (the
+    /// synthetic constructors default to production I32).
+    pub fn with_accum(mut self, accum: AccumMode) -> Self {
+        self.accum = accum;
+        self
     }
 
     /// Kind-aware PSUM count (the load/metrics accounting unit).
@@ -238,6 +253,15 @@ mod tests {
             weights_fingerprint_salted(&spec, JobKind::Standard, 1),
             weights_fingerprint_salted(&spec, JobKind::Standard, 2)
         );
+    }
+
+    #[test]
+    fn synthetic_jobs_default_to_i32_accum() {
+        use crate::hw::AccumMode;
+        let j = ConvJob::synthetic(1, QUICKSTART, 1);
+        assert_eq!(j.accum, AccumMode::I32);
+        let w8 = ConvJob::synthetic(2, QUICKSTART, 2).with_accum(AccumMode::Wrap8);
+        assert_eq!(w8.accum, AccumMode::Wrap8);
     }
 
     #[test]

@@ -216,4 +216,19 @@ mod tests {
         assert_eq!(a.total_cycles, a.total_cycles_dma_roundtrip);
         assert!(b.total_cycles < b.total_cycles_dma_roundtrip);
     }
+
+    #[test]
+    fn generic_scheduler_runs_on_the_im2col_backend() {
+        // The threaded host kernel under the same chaining logic:
+        // logits bit-identical to the simulated core's.
+        use crate::backend::Im2colBackend;
+        let img = EdgeCnn::sample_input(10, &EdgeCnn::new(16).specs()[0]);
+        let mut on_im2col = CnnScheduler::with_backend(Im2colBackend::new(4), EdgeCnn::new(16));
+        let mut on_sim = CnnScheduler::new(IpCoreConfig::default(), EdgeCnn::new(16));
+        let a = on_im2col.infer(&img).unwrap();
+        let b = on_sim.infer(&img).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.class, b.class);
+        assert!(on_im2col.verify_against_golden(&img).unwrap());
+    }
 }

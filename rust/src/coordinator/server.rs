@@ -5,15 +5,16 @@
 //! efficiency, per-backend job mix).
 //!
 //! The pool is built from [`CoordinatorConfig`]: `n_cores` simulated IP
-//! cores plus `golden_fallback_workers` host-CPU workers — the
-//! heterogeneous deployment. Depthwise trace entries exercise the
-//! capability mask: they only ever route to depthwise-capable workers.
+//! cores, plus `golden_fallback_workers` naive host workers, plus
+//! `im2col_workers` threaded im2col+GEMM workers — the heterogeneous
+//! deployment. Depthwise trace entries exercise the capability mask:
+//! they only ever route to depthwise-capable workers.
 
 use super::batcher::Batcher;
 use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
 use super::request::{ConvJob, ConvResult, Submission};
-use crate::backend::{ConvBackend, GoldenBackend, JobKind, SimBackend};
+use crate::backend::{ConvBackend, GoldenBackend, Im2colBackend, JobKind, SimBackend};
 use crate::model::trace::TraceEntry;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -55,6 +56,9 @@ impl Server {
         }
         for _ in 0..config.golden_fallback_workers {
             backends.push(Box::new(GoldenBackend::new()));
+        }
+        for _ in 0..config.im2col_workers {
+            backends.push(Box::new(Im2colBackend::new(config.im2col_worker_threads)));
         }
         Server {
             config,
@@ -278,6 +282,30 @@ mod tests {
         assert_eq!(served, 32);
         // No depthwise-incapable backend exists in this pool; routing
         // exclusion is covered in dispatch tests with a wrap8 worker.
+        server.shutdown();
+    }
+
+    #[test]
+    fn im2col_workers_join_the_pool_and_serve_mixed_traffic() {
+        let mut server = Server::new(
+            CoordinatorConfig::default()
+                .with_cores(1)
+                .with_im2col_workers(2)
+                .with_im2col_worker_threads(2),
+        );
+        let trace = generate(&TraceConfig {
+            n: 24,
+            mean_gap_us: 0,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.3,
+            seed: 31,
+        });
+        let report = server.run_trace(&trace);
+        assert_eq!(report.n_requests, 24);
+        assert_eq!(report.n_cores, 3);
+        assert_eq!(report.total_psums, total_psums(&trace));
+        let served: usize = report.backend_mix.iter().map(|(_, n)| n).sum();
+        assert_eq!(served, 24);
         server.shutdown();
     }
 }

@@ -92,6 +92,9 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
             id,
             spec,
             kind: JobKind::Standard,
+            // The wire protocol serves production traffic only; wrap-8
+            // replies stay an in-process (experiment) concern.
+            accum: crate::hw::AccumMode::I32,
             img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
             weights: Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
             bias,
@@ -169,10 +172,12 @@ fn handle_connection(stream: TcpStream, pool: Arc<CorePool>, next_id: Arc<Atomic
                         let spec = job.spec;
                         let weights_id = job.weights_id;
                         let kind = job.kind;
+                        let accum = job.accum;
                         pool.dispatch(super::batcher::Batch {
                             spec,
                             weights_id,
                             kind,
+                            accum,
                             jobs: vec![Submission {
                                 job,
                                 reply: tx,

@@ -10,9 +10,10 @@
 //! repro simulate --c C --h H --w W --k K [--wrap8] [--no-pipeline] [--dma]
 //!                                       run one layer on the simulated IP core
 //! repro infer [--seed S] [--xla]        edge CNN inference: hw-sim vs golden (vs XLA)
-//! repro serve [--cores N] [--golden N] [--requests N] [--s52 F] [--dw F]
+//! repro serve [--cores N] [--golden N] [--im2col N] [--requests N] [--s52 F] [--dw F]
 //!                                       closed-loop trace through the coordinator
-//!                                       (--golden adds CPU fallback workers,
+//!                                       (--golden adds naive CPU fallback workers,
+//!                                        --im2col adds threaded im2col+GEMM workers,
 //!                                        --dw mixes in depthwise jobs)
 //! repro artifacts                       list the AOT artifact registry
 //! ```
@@ -211,6 +212,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
     let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let im2col = args.get_usize("im2col", 0).map_err(|e| anyhow::anyhow!(e))?;
     let n = args.get_usize("requests", 64).map_err(|e| anyhow::anyhow!(e))?;
     let s52 = args.get_f64("s52", 0.1).map_err(|e| anyhow::anyhow!(e))?;
     let dw = args.get_f64("dw", 0.0).map_err(|e| anyhow::anyhow!(e))?;
@@ -224,7 +226,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut server = Server::new(
         CoordinatorConfig::default()
             .with_cores(cores)
-            .with_golden_workers(golden),
+            .with_golden_workers(golden)
+            .with_im2col_workers(im2col),
     );
     let report = server.run_trace(&trace);
     println!("{}", report.render());

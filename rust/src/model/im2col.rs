@@ -1,4 +1,4 @@
-//! im2col + GEMM software baseline.
+//! im2col + GEMM software baseline — and the serious host kernel.
 //!
 //! The paper compares against no software baseline; a reproduction
 //! should. This is the standard CPU realisation of the same 3×3 valid
@@ -7,9 +7,30 @@
 //! loops and the hardware model, so it doubles as a third numeric
 //! witness. The benches report its host throughput next to the
 //! simulated core and the XLA path (EXPERIMENTS.md E2E/ABL).
+//!
+//! Two GEMMs live here:
+//!
+//! * [`gemm_i32`] — the naive scalar loop, kept as the fair
+//!   single-thread baseline the benches compare against;
+//! * [`gemm_i32_blocked`] — the production host kernel behind
+//!   [`crate::backend::Im2colBackend`]: the A matrix is split into
+//!   contiguous row panels (one scoped thread each, no shared mutable
+//!   state — each thread owns a disjoint slice of the output) and the
+//!   inner dimension is walked in cache-sized blocks so a B panel stays
+//!   resident while a row panel streams through it.
+//!
+//! Bit-exactness contract: for every output element both GEMMs
+//! accumulate the same products in the same (ascending-`l`) order, so
+//! their i32 results are identical — not merely close — and the
+//! backend parity suite (`rust/tests/backend_parity.rs`) holds the
+//! threaded path to the same bit-identical standard as the simulator.
 
 use super::tensor::Tensor;
 use crate::paper::{KH, KW};
+
+/// Inner-dimension block of [`gemm_i32_blocked`]: 64 i32 `A` values plus
+/// a 64-row stripe of `B` sit comfortably in L1 next to the output row.
+pub const GEMM_KK_BLOCK: usize = 64;
 
 /// Lower `(C,H,W)` u8 image to the `(OH*OW, C*9)` i32 patch matrix.
 pub fn im2col(img: &Tensor<u8>) -> (Tensor<i32>, usize, usize) {
@@ -78,18 +99,72 @@ pub fn gemm_i32(a: &Tensor<i32>, b: &Tensor<i32>) -> Tensor<i32> {
     out
 }
 
-/// The full baseline: conv via im2col + GEMM (+ bias, optional ReLU),
-/// output in the hardware's `(K, OH, OW)` layout.
-pub fn conv3x3_im2col(
-    img: &Tensor<u8>,
-    w: &Tensor<u8>,
+/// Cache-blocked, row-panel-parallel GEMM: `(m,n) = (m,kk) @ (kk,n)`,
+/// row-major, bit-identical to [`gemm_i32`] (see the module docs for
+/// the ordering argument). `threads` scoped worker threads each own a
+/// contiguous panel of output rows; `threads <= 1` (or a single-panel
+/// problem) runs inline with no spawn.
+pub fn gemm_i32_blocked(a: &Tensor<i32>, b: &Tensor<i32>, threads: usize) -> Tensor<i32> {
+    let (m, kk) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(kk, kb, "inner dims");
+    let mut out = Tensor::<i32>::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let threads = threads.clamp(1, m);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    if threads == 1 {
+        gemm_panel(ad, bd, od, m, kk, n);
+        return out;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, panel) in od.chunks_mut(rows_per * n).enumerate() {
+            let rows = panel.len() / n;
+            let a_panel = &ad[t * rows_per * kk..(t * rows_per + rows) * kk];
+            scope.spawn(move || gemm_panel(a_panel, bd, panel, rows, kk, n));
+        }
+    });
+    out
+}
+
+/// One row panel: `out[rows,n] += a[rows,kk] @ b[kk,n]`, walking the
+/// inner dimension in [`GEMM_KK_BLOCK`]-sized stripes. Per output
+/// element the products arrive in ascending-`l` order — the exact
+/// order [`gemm_i32`] uses — so the two are bit-identical.
+fn gemm_panel(a: &[i32], b: &[i32], out: &mut [i32], rows: usize, kk: usize, n: usize) {
+    let mut l0 = 0;
+    while l0 < kk {
+        let l1 = (l0 + GEMM_KK_BLOCK).min(kk);
+        for i in 0..rows {
+            let arow = &a[i * kk + l0..i * kk + l1];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (dl, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let brow = &b[(l0 + dl) * n..(l0 + dl + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        l0 = l1;
+    }
+}
+
+/// `(OH*OW, K)` GEMM product → the hardware's `(K, OH, OW)` layout,
+/// adding bias and (optionally) fusing ReLU on the way through.
+fn scatter_bias_relu(
+    prod: &Tensor<i32>,
+    k: usize,
+    oh: usize,
+    ow: usize,
     bias: &[i32],
     relu: bool,
 ) -> Tensor<i32> {
-    let k = w.shape()[0];
-    let (patches, oh, ow) = im2col(img);
-    let wm = weights_matrix(w);
-    let prod = gemm_i32(&patches, &wm); // (OH*OW, K)
     let mut out = Tensor::<i32>::zeros(&[k, oh, ow]);
     for ki in 0..k {
         for y in 0..oh {
@@ -103,6 +178,38 @@ pub fn conv3x3_im2col(
         }
     }
     out
+}
+
+/// The full baseline: conv via im2col + GEMM (+ bias, optional ReLU),
+/// output in the hardware's `(K, OH, OW)` layout.
+pub fn conv3x3_im2col(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+) -> Tensor<i32> {
+    let k = w.shape()[0];
+    let (patches, oh, ow) = im2col(img);
+    let wm = weights_matrix(w);
+    let prod = gemm_i32(&patches, &wm); // (OH*OW, K)
+    scatter_bias_relu(&prod, k, oh, ow, bias, relu)
+}
+
+/// [`conv3x3_im2col`] over the blocked parallel GEMM — the host kernel
+/// [`crate::backend::Im2colBackend`] runs. Bit-identical to the naive
+/// baseline (and therefore to the golden anchor) for any thread count.
+pub fn conv3x3_im2col_threaded(
+    img: &Tensor<u8>,
+    w: &Tensor<u8>,
+    bias: &[i32],
+    relu: bool,
+    threads: usize,
+) -> Tensor<i32> {
+    let k = w.shape()[0];
+    let (patches, oh, ow) = im2col(img);
+    let wm = weights_matrix(w);
+    let prod = gemm_i32_blocked(&patches, &wm, threads);
+    scatter_bias_relu(&prod, k, oh, ow, bias, relu)
 }
 
 #[cfg(test)]
@@ -151,6 +258,50 @@ mod tests {
                 let a = conv3x3_im2col(&img, &wts, &bias, relu);
                 let b = golden::conv3x3_i32(&img, &wts, &bias, relu);
                 assert_eq!(a.data(), b.data(), "c{c} h{h} w{w} k{k} relu={relu}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_on_conv_shapes() {
+        for (c, h, w, k, seed) in [(4usize, 8, 8, 4, 11u64), (8, 10, 7, 8, 12), (3, 17, 9, 12, 13)] {
+            let (img, wts, _) = case(c, h, w, k, seed);
+            let (patches, _, _) = im2col(&img);
+            let wm = weights_matrix(&wts);
+            let want = gemm_i32(&patches, &wm);
+            for threads in [1usize, 2, 4, 7] {
+                let got = gemm_i32_blocked(&patches, &wm, threads);
+                assert_eq!(got.shape(), want.shape());
+                assert_eq!(got.data(), want.data(), "c{c} h{h} w{w} k{k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_handles_degenerate_and_offblock_shapes() {
+        // Inner dim straddling the block boundary, row counts below and
+        // above the thread count, single row/column.
+        for (m, kk, n) in [(1usize, 1usize, 1usize), (3, 65, 2), (130, 64, 5), (5, 63, 1)] {
+            let mut rng = Prng::new((m * 1000 + kk * 10 + n) as u64);
+            let a = Tensor::from_vec(&[m, kk], (0..m * kk).map(|_| rng.range_i64(-99, 99) as i32).collect());
+            let b = Tensor::from_vec(&[kk, n], (0..kk * n).map(|_| rng.range_i64(-99, 99) as i32).collect());
+            let want = gemm_i32(&a, &b);
+            for threads in [1usize, 4, 16] {
+                assert_eq!(gemm_i32_blocked(&a, &b, threads).data(), want.data(), "m{m} kk{kk} n{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_conv_matches_baseline_and_golden() {
+        for (c, h, w, k, seed) in [(1usize, 3, 3, 4, 21u64), (8, 12, 12, 8, 22), (5, 9, 14, 16, 23)] {
+            let (img, wts, bias) = case(c, h, w, k, seed);
+            for relu in [false, true] {
+                let want = golden::conv3x3_i32(&img, &wts, &bias, relu);
+                for threads in [1usize, 3, 4] {
+                    let got = conv3x3_im2col_threaded(&img, &wts, &bias, relu, threads);
+                    assert_eq!(got.data(), want.data(), "c{c} k{k} relu={relu} threads={threads}");
+                }
             }
         }
     }

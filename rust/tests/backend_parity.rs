@@ -1,20 +1,77 @@
-//! Backend parity property tests: for identical integer inputs, every
-//! `ConvBackend` must produce bit-identical i32 outputs — across random
-//! paper-compatible specs, both special job kinds (depthwise and
-//! pointwise-as-3×3), and, when the runtime is linked and artifacts
-//! exist, the XLA path.
+//! Unified backend parity harness: ONE property suite, run over every
+//! `ConvBackend` the build can construct — the cycle-accurate simulator,
+//! the naive golden fallback, the threaded im2col+GEMM backend at
+//! several thread counts, and (when the runtime is linked and artifacts
+//! exist) the XLA path. For identical integer inputs every backend must
+//! produce **bit-identical** i32 outputs across randomized specs, all
+//! three job kinds (standard, depthwise, pointwise-as-3×3) and both
+//! accumulator modes (wrap-8 silicon vs production I32).
+//!
+//! Each case asks every backend whether it `allows` the (spec, kind,
+//! accum) triple — exactly the dispatcher's routing predicate — so a
+//! backend that declines a job is skipped the same way the pool would
+//! skip it, and a backend that *claims* a job is held to the reference.
 //!
 //! In-tree PRNG harness (no proptest offline): every case reports its
 //! seed so failures reproduce exactly.
 
-use repro::backend::{ConvBackend, GoldenBackend, JobKind, JobPayload, SimBackend, XlaBackend};
-use repro::hw::depthwise::{golden_pointwise, pad1, pointwise_as_3x3};
-use repro::hw::IpCoreConfig;
-use repro::model::{LayerSpec, Tensor};
+use repro::backend::{
+    ConvBackend, GoldenBackend, Im2colBackend, JobKind, JobPayload, SimBackend, XlaBackend,
+};
+use repro::hw::depthwise::{golden_depthwise3x3, golden_pointwise, pad1, pointwise_as_3x3};
+use repro::hw::{AccumMode, IpCoreConfig};
+use repro::model::{golden, LayerSpec, Tensor};
 use repro::util::prng::Prng;
 
+/// Every backend the suite can construct offline, in I32 (production)
+/// mode. XLA joins when the feature is linked and artifacts exist; its
+/// spec allowlist keeps it out of cases it never compiled.
+fn all_backends() -> Vec<Box<dyn ConvBackend>> {
+    let mut v: Vec<Box<dyn ConvBackend>> = vec![
+        Box::new(SimBackend::new(IpCoreConfig::default())),
+        Box::new(GoldenBackend::new()),
+        Box::new(Im2colBackend::new(1)),
+        Box::new(Im2colBackend::new(4)),
+    ];
+    match XlaBackend::try_new() {
+        Ok(b) => v.push(Box::new(b)),
+        Err(e) => eprintln!("parity harness runs without the xla leg: {e}"),
+    }
+    v
+}
+
+/// Run `payload` on every backend that claims it (the dispatcher's own
+/// `allows` predicate) and assert each result is bit-identical to
+/// `want`. Returns how many backends ran, so callers can assert the
+/// suite exercised what it meant to.
+fn assert_parity(
+    backends: &mut [Box<dyn ConvBackend>],
+    payload: &JobPayload,
+    accum: AccumMode,
+    want: &Tensor<i32>,
+    label: &str,
+) -> usize {
+    let mut ran = 0;
+    for be in backends.iter_mut() {
+        if !be.capability().allows(payload.spec, payload.kind, accum) {
+            continue;
+        }
+        let name = be.name();
+        let run = be
+            .run(payload)
+            .unwrap_or_else(|e| panic!("{label}: backend {name} claimed the job but failed: {e}"));
+        assert_eq!(
+            run.output.data(),
+            want.data(),
+            "{label}: {name} diverges from the reference"
+        );
+        ran += 1;
+    }
+    ran
+}
+
 /// Random paper-compatible raw-conv spec (no relu/pool: the backend
-/// contract is the raw accumulator output).
+/// contract is the raw accumulator output for standard jobs).
 fn arb_spec(rng: &mut Prng) -> LayerSpec {
     let c = *rng.choose(&[1usize, 2, 3, 4, 5, 8, 12, 16]);
     let k = *rng.choose(&[4usize, 8, 12, 16]);
@@ -37,59 +94,62 @@ fn arb_case(rng: &mut Prng, spec: &LayerSpec) -> (Tensor<u8>, Tensor<u8>, Vec<i3
     )
 }
 
-fn run_both(
-    kind: JobKind,
-    spec: &LayerSpec,
-    img: &Tensor<u8>,
-    weights: &Tensor<u8>,
-    bias: &[i32],
-) -> (Tensor<i32>, Tensor<i32>) {
-    let payload = JobPayload {
-        kind,
-        spec,
-        img,
-        weights,
-        bias,
-        weights_resident: false,
-    };
-    let sim = SimBackend::new(IpCoreConfig::default())
-        .run(&payload)
-        .unwrap_or_else(|e| panic!("sim backend {spec:?} {kind:?}: {e}"));
-    let gold = GoldenBackend::new()
-        .run(&payload)
-        .unwrap_or_else(|e| panic!("golden backend {spec:?} {kind:?}: {e}"));
-    (sim.output, gold.output)
-}
-
 #[test]
-fn prop_standard_jobs_agree_across_backends() {
+fn prop_standard_jobs_agree_across_all_backends() {
+    let mut backends = all_backends();
     for seed in 0..50u64 {
         let mut rng = Prng::new(seed);
         let spec = arb_spec(&mut rng);
         let (img, wts, bias) = arb_case(&mut rng, &spec);
-        let (sim, gold) = run_both(JobKind::Standard, &spec, &img, &wts, &bias);
-        assert_eq!(sim.data(), gold.data(), "seed {seed} spec {spec:?}");
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
+        // sim + golden + im2col×2 at minimum (xla only on its own specs).
+        assert!(ran >= 4, "seed {seed}: only {ran} backends ran");
     }
 }
 
 #[test]
-fn prop_depthwise_jobs_agree_across_backends() {
+fn prop_depthwise_jobs_agree_across_all_backends() {
+    let mut backends = all_backends();
     for seed in 100..140u64 {
         let mut rng = Prng::new(seed);
         let c = *rng.choose(&[1usize, 3, 4, 8, 16]);
         let h = 3 + rng.below(10) as usize;
         let w = 3 + rng.below(10) as usize;
-        let spec = LayerSpec::new(c, h, w, c);
+        let mut spec = LayerSpec::new(c, h, w, c);
+        if rng.f64() < 0.5 {
+            // Depthwise fuses ReLU on the backend (the core's entry
+            // point does); cover both settings.
+            spec = spec.with_relu();
+        }
         let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
         let wts = Tensor::from_vec(&[c, 3, 3], rng.bytes_below(c * 9, 256));
         let bias: Vec<i32> = (0..c).map(|_| rng.range_i64(-100, 100) as i32).collect();
-        let (sim, gold) = run_both(JobKind::Depthwise, &spec, &img, &wts, &bias);
-        assert_eq!(sim.data(), gold.data(), "seed {seed} c={c} h={h} w={w}");
+        let want = golden_depthwise3x3(&img, &wts, &bias, spec.relu);
+        let payload = JobPayload {
+            kind: JobKind::Depthwise,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed} c={c} h={h} w={w} relu={}", spec.relu));
+        assert!(ran >= 4, "seed {seed}: only {ran} backends ran depthwise");
     }
 }
 
 #[test]
-fn prop_pointwise_as_3x3_jobs_agree_across_backends_and_reference() {
+fn prop_pointwise_as_3x3_jobs_agree_across_all_backends_and_reference() {
+    let mut backends = all_backends();
     for seed in 200..230u64 {
         let mut rng = Prng::new(seed);
         let c = *rng.choose(&[2usize, 4, 8]);
@@ -100,15 +160,66 @@ fn prop_pointwise_as_3x3_jobs_agree_across_backends_and_reference() {
         let w1x1 = Tensor::from_vec(&[k, c], rng.bytes_below(k * c, 256));
         let bias: Vec<i32> = (0..k).map(|_| rng.range_i64(-50, 50) as i32).collect();
 
-        // Lower 1x1 -> padded 3x3, the IP core's dataflow.
+        // Lower 1x1 -> padded 3x3, the IP core's dataflow. The direct
+        // 1x1 reference anchors the whole lowering, not just parity.
         let padded = pad1(&img);
         let w3 = pointwise_as_3x3(&w1x1);
         let spec = LayerSpec::new(c, h + 2, w + 2, k);
-
-        let (sim, gold) = run_both(JobKind::PointwiseAs3x3, &spec, &padded, &w3, &bias);
         let want = golden_pointwise(&img, &w1x1, &bias);
-        assert_eq!(sim.data(), want.data(), "seed {seed}: sim vs direct 1x1");
-        assert_eq!(gold.data(), want.data(), "seed {seed}: golden vs direct 1x1");
+
+        let payload = JobPayload {
+            kind: JobKind::PointwiseAs3x3,
+            spec: &spec,
+            img: &padded,
+            weights: &w3,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed}: vs direct 1x1"));
+        assert!(ran >= 4, "seed {seed}: only {ran} backends ran pointwise");
+    }
+}
+
+#[test]
+fn prop_wrap8_jobs_route_only_to_wrap8_silicon_and_match_reference() {
+    // The other accumulator mode: a wrap-8 job must be declined by every
+    // I32 backend (exactly what the dispatcher's accum mask enforces)
+    // and served bit-exactly by the wrap-8 core — widened mod-256 values
+    // of the conv3x3_wrap8 reference.
+    let mut i32_backends = all_backends();
+    let mut wrap8 = SimBackend::new(IpCoreConfig {
+        mode: AccumMode::Wrap8,
+        ..Default::default()
+    });
+    for seed in 300..330u64 {
+        let mut rng = Prng::new(seed);
+        let spec = arb_spec(&mut rng);
+        let (img, wts, _) = arb_case(&mut rng, &spec);
+        // Wrap-8 bias preloads the 8-bit accumulator: keep it in u8 range.
+        let bias8: Vec<u8> = (0..spec.k).map(|_| rng.below(256) as u8).collect();
+        let bias: Vec<i32> = bias8.iter().map(|&b| b as i32).collect();
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+
+        for be in i32_backends.iter_mut() {
+            assert!(
+                !be.capability().allows(&spec, JobKind::Standard, AccumMode::Wrap8),
+                "seed {seed}: {} must decline wrap8 traffic",
+                be.name()
+            );
+        }
+        assert!(wrap8.capability().allows(&spec, JobKind::Standard, AccumMode::Wrap8));
+        assert!(!wrap8.capability().allows(&spec, JobKind::Standard, AccumMode::I32));
+
+        let run = wrap8.run(&payload).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let want = golden::conv3x3_wrap8(&img, &wts, &bias8).map(|v| v as i32);
+        assert_eq!(run.output.data(), want.data(), "seed {seed} spec {spec:?}");
     }
 }
 
@@ -123,6 +234,11 @@ fn xla_backend_agrees_when_available() {
     };
     let specs = xla.served_specs();
     assert!(!specs.is_empty(), "linked runtime must serve raw-conv specs");
+    let mut others: Vec<Box<dyn ConvBackend>> = vec![
+        Box::new(SimBackend::new(IpCoreConfig::default())),
+        Box::new(GoldenBackend::new()),
+        Box::new(Im2colBackend::new(4)),
+    ];
     for (i, spec) in specs.iter().enumerate() {
         if spec.h > 64 {
             continue; // S52-sized shapes have their own test elsewhere
@@ -145,10 +261,10 @@ fn xla_backend_agrees_when_available() {
             bias: &bias,
             weights_resident: false,
         };
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
         let from_xla = xla.run(&payload).unwrap();
-        let (sim, gold) = run_both(JobKind::Standard, spec, &img, &wts, &bias);
-        assert_eq!(sim.data(), gold.data(), "{}", spec.name());
-        assert_eq!(from_xla.output.data(), gold.data(), "{}: xla vs golden", spec.name());
+        assert_eq!(from_xla.output.data(), want.data(), "{}: xla vs golden", spec.name());
+        assert_parity(&mut others, &payload, AccumMode::I32, &want, &spec.name());
     }
 }
 
@@ -156,7 +272,6 @@ fn xla_backend_agrees_when_available() {
 fn capability_masks_are_honest() {
     // A backend that claims a kind must run it; one that declines must
     // refuse at run() too (so routing bugs fail loudly, not wrongly).
-    use repro::hw::AccumMode;
     let spec = LayerSpec::new(4, 6, 6, 4);
     let img = Tensor::<u8>::zeros(&[4, 6, 6]);
     let dw_wts = Tensor::<u8>::zeros(&[4, 3, 3]);
@@ -170,9 +285,14 @@ fn capability_masks_are_honest() {
         weights_resident: false,
     };
 
-    let mut capable = SimBackend::new(IpCoreConfig::default());
-    assert!(capable.capability().supports(JobKind::Depthwise));
-    assert!(capable.run(&payload).is_ok());
+    for mut capable in [
+        Box::new(SimBackend::new(IpCoreConfig::default())) as Box<dyn ConvBackend>,
+        Box::new(GoldenBackend::new()),
+        Box::new(Im2colBackend::new(2)),
+    ] {
+        assert!(capable.capability().supports(JobKind::Depthwise), "{}", capable.name());
+        assert!(capable.run(&payload).is_ok(), "{}", capable.name());
+    }
 
     let mut incapable = SimBackend::new(IpCoreConfig {
         mode: AccumMode::Wrap8,

@@ -3,14 +3,17 @@
 //!
 //! Invariants covered: simulator == golden across random shapes and
 //! both accumulator modes; wrap8 == wide mod 256; block-partition
-//! invariance of the BRAM layout; batcher partition/no-mixing; quant
-//! monotonicity + range; pipeline timing bounds; DMA cost monotonicity.
+//! invariance of the BRAM layout; im2col lowering / weight-flattening
+//! layout invariants; blocked-parallel GEMM ≡ naive GEMM; batcher
+//! partition/no-mixing; quant monotonicity + range; pipeline timing
+//! bounds; DMA cost monotonicity.
 
 use repro::coordinator::batcher::Batcher;
 use repro::coordinator::config::BatchConfig;
 use repro::coordinator::request::{ConvJob, Submission};
 use repro::hw::pipeline::{two_stage_pipelined, two_stage_serial};
 use repro::hw::{AccumMode, IpCore, IpCoreConfig};
+use repro::model::im2col::{gemm_i32, gemm_i32_blocked, im2col, weights_matrix};
 use repro::model::{golden, quant::Requant, LayerSpec, Tensor};
 use repro::util::prng::Prng;
 use std::sync::mpsc::channel;
@@ -129,6 +132,93 @@ fn prop_requant_monotone_and_in_range() {
             assert!(out >= last, "seed {seed}");
             last = out;
         }
+    }
+}
+
+#[test]
+fn prop_im2col_shape_and_patch_invariants() {
+    // The lowering's contract: (OH*OW, C*9) patch matrix, valid-conv
+    // output dims, and every entry is exactly its source pixel widened.
+    for seed in 600..630u64 {
+        let mut rng = Prng::new(seed);
+        let c = *rng.choose(&[1usize, 2, 3, 5, 8]);
+        let h = 3 + rng.below(10) as usize;
+        let w = 3 + rng.below(10) as usize;
+        let img = Tensor::from_vec(&[c, h, w], rng.bytes_below(c * h * w, 256));
+        let (p, oh, ow) = im2col(&img);
+        assert_eq!((oh, ow), (h - 2, w - 2), "seed {seed}");
+        assert_eq!(p.shape(), &[oh * ow, c * 9], "seed {seed}");
+        let cols = c * 9;
+        for row in 0..oh * ow {
+            let (y, x) = (row / ow, row % ow);
+            for ci in 0..c {
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        assert_eq!(
+                            p.data()[row * cols + (ci * 3 + dy) * 3 + dx],
+                            img.at3(ci, y + dy, x + dx) as i32,
+                            "seed {seed} row {row} c{ci} ({dy},{dx})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_weights_matrix_shape_and_layout() {
+    for seed in 640..660u64 {
+        let mut rng = Prng::new(seed);
+        let c = *rng.choose(&[1usize, 3, 4, 8]);
+        let k = *rng.choose(&[4usize, 8, 12]);
+        let wts = Tensor::from_vec(&[k, c, 3, 3], rng.bytes_below(k * c * 9, 256));
+        let wm = weights_matrix(&wts);
+        assert_eq!(wm.shape(), &[c * 9, k], "seed {seed}");
+        for ki in 0..k {
+            for ci in 0..c {
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        assert_eq!(
+                            wm.data()[((ci * 3 + dy) * 3 + dx) * k + ki],
+                            wts.at4(ki, ci, dy, dx) as i32,
+                            "seed {seed} k{ki} c{ci} ({dy},{dx})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_gemm_equals_naive_on_random_matrices() {
+    // The routing-relevant bit-exactness claim, on shapes the conv path
+    // never produces: non-multiple-of-block inner dims (the kk block is
+    // 64), row counts that don't divide by the thread count, signed
+    // entries, and degenerate single-row/column cases.
+    for seed in 700..740u64 {
+        let mut rng = Prng::new(seed);
+        let m = 1 + rng.below(80) as usize;
+        let kk = 1 + rng.below(150) as usize;
+        let n = 1 + rng.below(40) as usize;
+        let a = Tensor::from_vec(
+            &[m, kk],
+            (0..m * kk).map(|_| rng.range_i64(-100, 100) as i32).collect(),
+        );
+        let b = Tensor::from_vec(
+            &[kk, n],
+            (0..kk * n).map(|_| rng.range_i64(-100, 100) as i32).collect(),
+        );
+        let want = gemm_i32(&a, &b);
+        let threads = *rng.choose(&[1usize, 2, 3, 4, 7, 16]);
+        let got = gemm_i32_blocked(&a, &b, threads);
+        assert_eq!(got.shape(), want.shape(), "seed {seed}");
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "seed {seed} m={m} kk={kk} n={n} threads={threads}"
+        );
     }
 }
 
