@@ -1,0 +1,91 @@
+//! Fleet scaling demo: throughput of one remote-core pool as TCP-served
+//! peers join it.
+//!
+//! The paper scales by replicating its IP core on one board (0.224
+//! GOPS/core, 4.48 GOPS at 20 cores). This example scales past the
+//! board: N in-process `TcpServer` peers — each simulating a small
+//! board — are fronted by a single pool of `RemoteBackend` workers
+//! speaking wire protocol v2, and the same mixed trace is pushed
+//! through fleets of growing size.
+//!
+//! ```bash
+//! cargo run --release --example fleet_scaling -- [--requests N] [--peer-cores N]
+//! ```
+
+use repro::coordinator::tcp::TcpServer;
+use repro::coordinator::{CoordinatorConfig, Server};
+use repro::model::trace::{generate, TraceConfig};
+use repro::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[]).map_err(|e| anyhow::anyhow!(e))?;
+    let requests = args.get_usize("requests", 96).map_err(|e| anyhow::anyhow!(e))?;
+    let peer_cores = args.get_usize("peer-cores", 2).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        (1..=20).contains(&peer_cores),
+        "--peer-cores must be 1..=20 (each peer simulates a small board)"
+    );
+
+    let trace = generate(&TraceConfig {
+        n: requests,
+        mean_gap_us: 0,
+        s52_fraction: 0.1,
+        depthwise_fraction: 0.2,
+        seed: 23,
+    });
+
+    println!(
+        "fleet scaling: {requests}-request mixed trace (10% S52, 20% depthwise), \
+         peers of {peer_cores} simulated cores each\n"
+    );
+    println!(
+        "{:>6} {:>12} {:>14} {:>9} {:>9}  mix",
+        "peers", "host_rps", "sim_gops_psum", "p50_us", "p99_us"
+    );
+
+    for n_peers in [1usize, 2, 4] {
+        let peers: Vec<TcpServer> = (0..n_peers)
+            .map(|_| {
+                TcpServer::start(
+                    "127.0.0.1:0",
+                    CoordinatorConfig::default().with_cores(peer_cores),
+                )
+                .expect("spawn fleet peer")
+            })
+            .collect();
+        let config = CoordinatorConfig {
+            n_cores: 0, // the front is pure fan-out: remote workers only
+            ..CoordinatorConfig::default()
+                .with_remote_peers(peers.iter().map(|p| p.addr.to_string()).collect())
+        };
+        let mut front = Server::try_new(config)?;
+        let report = front.run_trace(&trace);
+        anyhow::ensure!(
+            report.n_errors == 0,
+            "{n_peers}-peer fleet had {} job errors",
+            report.n_errors
+        );
+        let mix = report
+            .backend_mix
+            .iter()
+            .map(|(name, n)| format!("{name}x{n}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        println!(
+            "{:>6} {:>12.1} {:>14.4} {:>9} {:>9}  [{mix}]",
+            n_peers, report.host_rps, report.sim_gops_psum, report.p50_us, report.p99_us
+        );
+        front.shutdown();
+        for p in peers {
+            p.stop();
+        }
+    }
+
+    println!(
+        "\nEvery request crossed a real socket: explicit tensors out, full \
+         output tensors back, checksum-free bit-exact numerics enforced by \
+         the same parity harness that covers local backends."
+    );
+    Ok(())
+}

@@ -6,7 +6,7 @@
 //! ```
 
 use repro::coordinator::tcp::{request_once, TcpServer};
-use repro::hw::IpCoreConfig;
+use repro::coordinator::CoordinatorConfig;
 use repro::model::{golden, QUICKSTART};
 use repro::util::cli::Args;
 use repro::util::json::Json;
@@ -18,8 +18,8 @@ fn main() -> anyhow::Result<()> {
     let clients = args.get_usize("clients", 8).map_err(|e| anyhow::anyhow!(e))?;
     let per_client = args.get_usize("requests", 16).map_err(|e| anyhow::anyhow!(e))?;
 
-    let server = TcpServer::start("127.0.0.1:0", 4, IpCoreConfig::default())?;
-    println!("server on {} (4 simulated IP cores)", server.addr);
+    let server = TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(4))?;
+    println!("server on {} (4 simulated IP cores, wire protocol v2)", server.addr);
 
     // Expected checksum for each seed (client-side golden).
     let expected = |seed: u64| {

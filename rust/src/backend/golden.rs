@@ -34,6 +34,7 @@ impl ConvBackend for GoldenBackend {
             depthwise: true,
             pointwise_as_3x3: true,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: None,
         }
     }

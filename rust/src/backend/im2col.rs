@@ -111,6 +111,7 @@ impl ConvBackend for Im2colBackend {
             depthwise: true,
             pointwise_as_3x3: true,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: None,
         }
     }

@@ -25,23 +25,31 @@
 //!   im2col + cache-blocked GEMM (`model::im2col`), the canonical
 //!   CPU formulation in the FPGA-CNN survey literature;
 //! * [`xla::XlaBackend`] — the AOT Pallas/HLO artifacts under PJRT
-//!   (available when the `xla` feature is linked and artifacts exist).
+//!   (available when the `xla` feature is linked and artifacts exist);
+//! * [`remote::RemoteBackend`] — a whole remote machine behind the
+//!   TCP wire protocol v2 ([`crate::coordinator::tcp`]): the peer's
+//!   `hello` handshake advertises its capability, and the pool treats
+//!   it as one more capability-masked worker.
 //!
 //! The parity contract: for identical integer inputs every backend
 //! produces bit-identical i32 outputs (`rust/tests/backend_parity.rs`).
 //!
-//! Routing is three-way masked: job *kind* against the capability
+//! Routing is masked four ways: job *kind* against the capability
 //! flags, job *accumulator requirement* against [`Capability::accum`]
 //! (a wrap-8 reply can only come from a wrap-8 core, and vice versa),
-//! and the spec against any backend allowlist.
+//! the spec against the §4.1 gate ([`Capability::paper_specs_only`] —
+//! the IP core and remote peers reject `K % 4 != 0`), and the spec
+//! against any backend allowlist.
 
 pub mod golden;
 pub mod im2col;
+pub mod remote;
 pub mod sim;
 pub mod xla;
 
 pub use golden::GoldenBackend;
 pub use im2col::Im2colBackend;
+pub use remote::RemoteBackend;
 pub use sim::SimBackend;
 pub use xla::XlaBackend;
 
@@ -66,6 +74,19 @@ pub enum JobKind {
     PointwiseAs3x3,
 }
 
+impl JobKind {
+    /// Canonical wire-protocol tag (`coordinator::tcp` requests and
+    /// replies; `backend::remote` emits it). One mapping for both
+    /// sides, so client and server can't drift apart.
+    pub fn tag(self) -> &'static str {
+        match self {
+            JobKind::Standard => "standard",
+            JobKind::Depthwise => "depthwise",
+            JobKind::PointwiseAs3x3 => "pointwise",
+        }
+    }
+}
+
 /// PSUMs a job contributes in the paper's accounting — kind-aware:
 /// depthwise accumulates one PSUM per (window, channel), not per
 /// (window, kernel, channel).
@@ -87,10 +108,18 @@ pub struct Capability {
     /// a mixed pool can carry wrap-8 silicon next to production (I32)
     /// workers without either absorbing the other's traffic.
     pub accum: AccumMode,
+    /// Standard/pointwise jobs must satisfy the paper's §4.1 BRAM
+    /// layout constraint ([`LayerSpec::paper_compatible`]: `K % 4 == 0`
+    /// and the image at least kernel-sized). True for the simulated IP
+    /// core — whose `run_layer` rejects such specs — and for remote
+    /// peers, whose wire applies the same gate; host CPU workers take
+    /// any shape. Depthwise routes through a different entry point and
+    /// is unaffected.
+    pub paper_specs_only: bool,
     /// `Some(specs)` when the backend can only serve a fixed spec set
     /// (the XLA path serves exactly its compiled artifacts); `None`
     /// means any valid spec of a supported kind. The dispatcher must
-    /// honour this — a mask/run mismatch panics the worker thread.
+    /// honour this — a mask/run mismatch fails the job at run().
     pub spec_allowlist: Option<Vec<LayerSpec>>,
 }
 
@@ -103,15 +132,18 @@ impl Capability {
         }
     }
 
-    /// Full routing predicate: kind mask, accumulator-mode match, and
-    /// the spec allowlist. `accum` is what the *job* requires of its
-    /// reply; a backend only qualifies when it produces exactly those
-    /// semantics — an I32 pool must not absorb wrap-8 traffic (it would
-    /// answer with un-wrapped values) and a wrap-8 core must not absorb
-    /// production traffic.
+    /// Full routing predicate: kind mask, accumulator-mode match, the
+    /// §4.1 gate, and the spec allowlist. `accum` is what the *job*
+    /// requires of its reply; a backend only qualifies when it produces
+    /// exactly those semantics — an I32 pool must not absorb wrap-8
+    /// traffic (it would answer with un-wrapped values) and a wrap-8
+    /// core must not absorb production traffic.
     pub fn allows(&self, spec: &LayerSpec, kind: JobKind, accum: AccumMode) -> bool {
         self.supports(kind)
             && self.accum == accum
+            && (!self.paper_specs_only
+                || kind == JobKind::Depthwise
+                || spec.paper_compatible())
             && match &self.spec_allowlist {
                 None => true,
                 Some(list) => list.contains(spec),
@@ -138,6 +170,64 @@ pub enum CostModel {
     /// GEMM MACs plus the patch-matrix lowering traffic, retired at
     /// [`IM2COL_MACS_PER_UNIT`] MACs per unit per worker thread.
     Im2col { threads: u64 },
+    /// A whole remote machine behind the TCP wire protocol v2
+    /// ([`remote::RemoteBackend`]): the peer's `hello` handshake
+    /// advertises what its workers *are* (each worker's cost-model
+    /// family), so the quote is the job's cost under the peer's fastest
+    /// advertised tier ([`RemotePeerClass`]) plus the wire traffic
+    /// (request tensors out, `full_output` reply back) retired at
+    /// [`REMOTE_WORDS_PER_UNIT`] words per unit. A peer fronting only
+    /// naive host workers therefore quotes host-loop prices, not
+    /// FPGA-core prices. The quote deliberately does NOT divide by the
+    /// peer's worker count: one connection serves one job at a time, so
+    /// until requests are pipelined (ROADMAP) a wider peer drains a
+    /// queue no faster than a single worker of its tier.
+    Remote { class: RemotePeerClass },
+}
+
+/// The compute tier a remote peer's `hello` advertised (its workers'
+/// cost-model families, collapsed to the fastest tier present). Lets
+/// [`CostModel::Remote`] price a peer by what its silicon actually is
+/// instead of assuming every remote machine is a rack of IP cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemotePeerClass {
+    /// Simulated IP cores (`sim-cycles`).
+    SimCycles,
+    /// Vectorised runtime, e.g. the XLA path (`vectorized`); also the
+    /// conservative stand-in for a peer's own remote workers, whose
+    /// real depth the hello cannot convey.
+    Vectorized,
+    /// Threaded im2col+GEMM host workers (`im2col`).
+    Im2col,
+    /// Naive host loops (`host-macs`) — and the fallback for tags this
+    /// build does not know, so unknown tiers price conservatively.
+    HostMacs,
+}
+
+impl RemotePeerClass {
+    /// Representative local cost model for this tier (thread/throughput
+    /// parameters default to each backend's own defaults — the hello
+    /// does not carry them).
+    pub fn model(self) -> CostModel {
+        match self {
+            RemotePeerClass::SimCycles => CostModel::SimCycles,
+            RemotePeerClass::Vectorized => CostModel::Vectorized {
+                throughput_factor: 1,
+            },
+            RemotePeerClass::Im2col => CostModel::Im2col { threads: 4 },
+            RemotePeerClass::HostMacs => CostModel::HostMacs,
+        }
+    }
+
+    /// Parse a `hello` worker `model` tag (see [`CostModel::family_tag`]).
+    pub fn from_tag(tag: &str) -> Self {
+        match tag {
+            "sim-cycles" => RemotePeerClass::SimCycles,
+            "im2col" => RemotePeerClass::Im2col,
+            "vectorized" | "remote" => RemotePeerClass::Vectorized,
+            _ => RemotePeerClass::HostMacs,
+        }
+    }
 }
 
 /// MACs one im2col worker thread retires per cost unit, calibrated so
@@ -149,7 +239,29 @@ pub enum CostModel {
 /// [`CostModel::SimCycles`], so accelerators fill first.
 pub const IM2COL_MACS_PER_UNIT: u64 = 4;
 
+/// Wire words one cost unit ships for [`CostModel::Remote`]. Every
+/// remote job pays its tensors across the socket both ways; dividing
+/// the word count by this keeps the overhead term the same order as
+/// the per-core compute share, so a single-worker peer always quotes
+/// *more* than a local [`CostModel::SimCycles`] core and the pool
+/// prefers local silicon until it queues.
+pub const REMOTE_WORDS_PER_UNIT: u64 = 4;
+
 impl CostModel {
+    /// Wire tag of this model's family, advertised per worker in the
+    /// v2 `hello` (`model` field) so remote coordinators can price this
+    /// pool's compute honestly ([`RemotePeerClass::from_tag`] is the
+    /// parse side).
+    pub fn family_tag(&self) -> &'static str {
+        match self {
+            CostModel::SimCycles => "sim-cycles",
+            CostModel::HostMacs => "host-macs",
+            CostModel::Vectorized { .. } => "vectorized",
+            CostModel::Im2col { .. } => "im2col",
+            CostModel::Remote { .. } => "remote",
+        }
+    }
+
     pub fn cost(&self, spec: &LayerSpec, kind: JobKind) -> u64 {
         let windows = (spec.conv_oh() * spec.conv_ow()) as u64;
         let c_rounds = spec.c.div_ceil(N_CORES) as u64;
@@ -175,6 +287,27 @@ impl CostModel {
                     JobKind::Standard | JobKind::PointwiseAs3x3 => windows * spec.c as u64 * 9,
                 };
                 ((macs + lowering) / (IM2COL_MACS_PER_UNIT * threads.max(1))).max(1)
+            }
+            (CostModel::Remote { class }, kind) => {
+                // Serial service over one socket: one worker of the
+                // peer's fastest tier is the honest compute term.
+                let compute_share = class.model().cost(spec, kind);
+                // Request ships image + weights; the full_output reply
+                // ships one word per output element (windows × output
+                // channels — NOT per PSUM, which would overcharge the
+                // reply leg by a factor of C on standard jobs).
+                let weight_words = match kind {
+                    JobKind::Depthwise => spec.c * 9,
+                    JobKind::Standard | JobKind::PointwiseAs3x3 => spec.k * spec.c * 9,
+                } as u64;
+                let reply_words = windows
+                    * match kind {
+                        JobKind::Depthwise => spec.c,
+                        JobKind::Standard | JobKind::PointwiseAs3x3 => spec.k,
+                    } as u64;
+                let wire_words =
+                    (spec.c * spec.h * spec.w) as u64 + weight_words + reply_words;
+                compute_share + wire_words / REMOTE_WORDS_PER_UNIT + 1
             }
         }
     }
@@ -309,6 +442,7 @@ mod tests {
             depthwise: false,
             pointwise_as_3x3: true,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: None,
         };
         assert!(cap.supports(JobKind::Standard));
@@ -324,6 +458,7 @@ mod tests {
             depthwise: false,
             pointwise_as_3x3: true,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: None,
         };
         // An I32 backend must not absorb wrap-8 traffic...
@@ -342,12 +477,38 @@ mod tests {
             depthwise: false,
             pointwise_as_3x3: false,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: Some(vec![QUICKSTART]),
         };
         assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
         assert!(!cap.allows(&S52, JobKind::Standard, AccumMode::I32));
         // Kind mask still applies on top of the allowlist.
         assert!(!cap.allows(&QUICKSTART, JobKind::Depthwise, AccumMode::I32));
+    }
+
+    #[test]
+    fn paper_gate_masks_incompatible_standard_specs_but_not_depthwise() {
+        // The §4.1 gate: a sim core or remote peer must decline k%4!=0
+        // standard jobs (a host worker in the same pool serves them),
+        // while depthwise — a different entry point with no such
+        // constraint — routes freely (e.g. c == k == 6).
+        let mut cap = Capability {
+            standard3x3: true,
+            depthwise: true,
+            pointwise_as_3x3: true,
+            accum: AccumMode::I32,
+            paper_specs_only: true,
+            spec_allowlist: None,
+        };
+        let off_paper = LayerSpec::new(4, 8, 8, 6); // K % 4 != 0
+        let dw = LayerSpec::new(6, 8, 8, 6);
+        assert!(!cap.allows(&off_paper, JobKind::Standard, AccumMode::I32));
+        assert!(!cap.allows(&off_paper, JobKind::PointwiseAs3x3, AccumMode::I32));
+        assert!(cap.allows(&QUICKSTART, JobKind::Standard, AccumMode::I32));
+        assert!(cap.allows(&dw, JobKind::Depthwise, AccumMode::I32));
+        // Host workers take any shape.
+        cap.paper_specs_only = false;
+        assert!(cap.allows(&off_paper, JobKind::Standard, AccumMode::I32));
     }
 
     #[test]
@@ -385,6 +546,78 @@ mod tests {
         let spec = LayerSpec::new(8, 10, 10, 8);
         let got = CostModel::Im2col { threads: 1 }.cost(&spec, JobKind::Depthwise);
         assert_eq!(got, 64 * 8 * 9 / IM2COL_MACS_PER_UNIT);
+    }
+
+    fn remote_sim() -> CostModel {
+        CostModel::Remote {
+            class: RemotePeerClass::SimCycles,
+        }
+    }
+
+    #[test]
+    fn remote_costs_more_than_local_silicon_of_the_same_tier() {
+        // The wire overhead term must keep a remote peer behind a local
+        // core of the same silicon, so the pool fills local
+        // accelerators before shipping tensors across the network — and
+        // the quote is never zero, even for tiny jobs.
+        let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
+        let remote = remote_sim().cost(&QUICKSTART, JobKind::Standard);
+        assert!(remote > sim, "remote {remote} vs sim {sim}");
+        let tiny = LayerSpec::new(1, 3, 3, 4);
+        assert!(remote_sim().cost(&tiny, JobKind::Depthwise) >= 1);
+    }
+
+    #[test]
+    fn remote_depthwise_quote_ships_depthwise_weights() {
+        // Depthwise weights are (C,3,3), not (K,C,3,3): the wire term
+        // must be smaller than the standard job's on the same spec.
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        let dw = remote_sim().cost(&spec, JobKind::Depthwise);
+        let std = remote_sim().cost(&spec, JobKind::Standard);
+        assert!(dw < std, "depthwise {dw} vs standard {std}");
+    }
+
+    #[test]
+    fn remote_quotes_track_the_peer_tier() {
+        // A peer fronting only naive golden workers must quote host
+        // prices — routing keeps preferring a local IP core over
+        // shipping tensors to a slow remote CPU — and the tiers order
+        // the same way their local models do; the hello's `model` tags
+        // are what make that honest.
+        let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
+        let q = |class: RemotePeerClass| {
+            CostModel::Remote { class }.cost(&QUICKSTART, JobKind::Standard)
+        };
+        assert!(q(RemotePeerClass::HostMacs) > sim);
+        assert!(q(RemotePeerClass::SimCycles) < q(RemotePeerClass::Im2col));
+        assert!(q(RemotePeerClass::Im2col) < q(RemotePeerClass::HostMacs));
+    }
+
+    #[test]
+    fn peer_class_tags_round_trip_cost_model_families() {
+        for model in [
+            CostModel::SimCycles,
+            CostModel::HostMacs,
+            CostModel::Vectorized { throughput_factor: 3 },
+            CostModel::Im2col { threads: 2 },
+        ] {
+            let class = RemotePeerClass::from_tag(model.family_tag());
+            assert_eq!(
+                class.model().family_tag(),
+                model.family_tag(),
+                "{model:?} must survive the hello round trip"
+            );
+        }
+        // A peer's own remote workers and unknown tiers get priced
+        // conservatively rather than rejected.
+        assert_eq!(
+            RemotePeerClass::from_tag("remote"),
+            RemotePeerClass::Vectorized
+        );
+        assert_eq!(
+            RemotePeerClass::from_tag("warp-drive"),
+            RemotePeerClass::HostMacs
+        );
     }
 
     #[test]

@@ -1,0 +1,642 @@
+//! [`ConvBackend`] over a persistent TCP connection to a wire-protocol
+//! v2 peer ([`crate::coordinator::tcp`]) — the remote-core backend that
+//! turns N TCP-served machines into one heterogeneous pool.
+//!
+//! The paper scales by replicating its IP core on one board; this
+//! backend scales past the board: each [`RemoteBackend`] dials one
+//! `TcpServer` peer, reads its `hello` capability advertisement (which
+//! kinds it serves, in which accumulator mode, behind how many
+//! workers), and then presents the whole remote machine to the local
+//! pool as one more capability-masked, cost-weighted worker — exactly
+//! the host-side scheduler shape the FPGA-CNN survey literature
+//! prescribes for multi-accelerator deployments.
+//!
+//! Per job, the backend ships the explicit tensors across the socket
+//! with `"full_output":true` and reconstructs the reply tensor, so the
+//! parity contract holds end-to-end over the wire: bit-identical i32
+//! outputs for standard, depthwise and pointwise-as-3×3 jobs
+//! (`rust/tests/backend_parity.rs` runs it as just another backend).
+//!
+//! Failure semantics: a dropped peer **fails its in-flight job and
+//! drops the connection**; the next job redials (re-running the
+//! handshake). The pool worker loop turns the `Err` into an error
+//! reply on the job's channel, so a dead machine degrades that job —
+//! it never hangs the pool. The `weights_resident` DMA discount does
+//! not cross the wire: every remote job pays its own transfer.
+
+use super::{
+    BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, RemotePeerClass,
+};
+use crate::coordinator::tcp::{read_line_capped, LineRead, MAX_LINE_BYTES, PROTO_VERSION};
+use crate::hw::ip_core::CycleStats;
+use crate::hw::AccumMode;
+use crate::model::{Tensor, QUICKSTART};
+use crate::util::json::Json;
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Hard ceiling on waiting for one reply. A peer that stalls past this
+/// fails the job (and the connection) instead of hanging a pool worker
+/// forever; simulated jobs answer in milliseconds, so thirty seconds
+/// only ever trips on a genuinely wedged peer. Writes carry the same
+/// bound, so a peer that stops reading can't park a worker either.
+pub const REMOTE_REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Ceiling on (re)dialling a peer. A black-holed peer (powered off,
+/// packets dropped without RST) must fail each redialling job after
+/// seconds, not stall the pool worker for the kernel's multi-minute
+/// default connect timeout.
+pub const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// What the peer's `hello` advertised.
+#[derive(Clone, Copy, Debug)]
+struct PeerInfo {
+    standard: bool,
+    depthwise: bool,
+    pointwise: bool,
+    /// All I32-capable workers behind the peer (the capability gate).
+    workers: u64,
+    /// The fastest compute tier among those workers — what
+    /// [`CostModel::Remote`] prices the peer's compute as.
+    class: RemotePeerClass,
+}
+
+/// One remote machine as a pool worker.
+pub struct RemoteBackend {
+    addr: String,
+    /// Leaked once per constructed backend so worker names stay
+    /// `&'static str` like every other backend's.
+    name: &'static str,
+    peer: PeerInfo,
+    conn: Option<Conn>,
+    next_id: u64,
+}
+
+fn parse_hello(line: &str) -> Result<PeerInfo, String> {
+    let j = Json::parse(line.trim()).map_err(|e| format!("malformed hello: {e}"))?;
+    let h = j
+        .get(&["hello"])
+        .ok_or("first frame from peer is not a hello")?;
+    let proto = h.get(&["proto"]).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    if proto != PROTO_VERSION {
+        return Err(format!(
+            "peer speaks wire protocol {proto}, this backend needs {PROTO_VERSION}"
+        ));
+    }
+    let workers = h
+        .get(&["workers"])
+        .and_then(Json::as_arr)
+        .ok_or("hello.workers missing")?;
+    let mut info = PeerInfo {
+        standard: false,
+        depthwise: false,
+        pointwise: false,
+        workers: 0,
+        class: RemotePeerClass::HostMacs,
+    };
+    let mut classes: Vec<RemotePeerClass> = Vec::new();
+    for w in workers {
+        // The wire serves I32 production traffic only; wrap-8 silicon
+        // on the peer can never answer us, so it doesn't count.
+        if w.get(&["accum"]).and_then(Json::as_str) != Some("i32") {
+            continue;
+        }
+        info.workers += 1;
+        let flag = |k: &str| w.get(&[k]).and_then(Json::as_bool).unwrap_or(false);
+        info.standard |= flag("standard");
+        info.depthwise |= flag("depthwise");
+        info.pointwise |= flag("pointwise");
+        // Missing `model` tags price conservatively (host loops).
+        classes.push(
+            w.get(&["model"])
+                .and_then(Json::as_str)
+                .map(RemotePeerClass::from_tag)
+                .unwrap_or(RemotePeerClass::HostMacs),
+        );
+    }
+    if info.workers == 0 {
+        return Err("peer advertises no i32-capable workers".into());
+    }
+    // Price the peer by its fastest advertised tier (cheapest local
+    // reference-job quote).
+    info.class = classes
+        .into_iter()
+        .min_by_key(|c| c.model().cost(&QUICKSTART, JobKind::Standard))
+        .expect("workers > 0 implies at least one class");
+    Ok(info)
+}
+
+fn dial(addr: &str) -> anyhow::Result<(Conn, PeerInfo)> {
+    // Try every resolved address (std's connect semantics): dual-stack
+    // hostnames must not fail just because the first family is dead.
+    let mut last_err: Option<std::io::Error> = None;
+    let mut stream: Option<TcpStream> = None;
+    for sock_addr in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock_addr, REMOTE_CONNECT_TIMEOUT) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let stream = match stream {
+        Some(s) => s,
+        None => match last_err {
+            Some(e) => return Err(anyhow::anyhow!("{addr}: connect failed: {e}")),
+            None => return Err(anyhow::anyhow!("{addr}: resolved to no address")),
+        },
+    };
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(REMOTE_REPLY_TIMEOUT))?;
+    stream.set_write_timeout(Some(REMOTE_REPLY_TIMEOUT))?;
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    match read_line_capped(&mut reader, &mut buf, MAX_LINE_BYTES)? {
+        LineRead::Eof => anyhow::bail!("{addr}: peer closed before sending a hello"),
+        LineRead::Line => {}
+    }
+    let line = String::from_utf8_lossy(&buf);
+    let peer = parse_hello(&line).map_err(|e| anyhow::anyhow!("{addr}: {e}"))?;
+    Ok((Conn { writer, reader }, peer))
+}
+
+fn request_json(id: u64, job: &JobPayload) -> Json {
+    let mut spec = vec![
+        ("c", Json::num(job.spec.c as f64)),
+        ("h", Json::num(job.spec.h as f64)),
+        ("w", Json::num(job.spec.w as f64)),
+        ("k", Json::num(job.spec.k as f64)),
+    ];
+    if job.spec.relu {
+        spec.push(("relu", Json::Bool(true)));
+    }
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("kind", Json::str(job.kind.tag())),
+        ("spec", Json::obj(spec)),
+        ("img", Json::arr_u64(job.img.data().iter().map(|&v| v as u64))),
+        (
+            "weights",
+            Json::arr_u64(job.weights.data().iter().map(|&v| v as u64)),
+        ),
+        ("bias", Json::arr_i64(job.bias.iter().map(|&v| v as i64))),
+        ("full_output", Json::Bool(true)),
+    ])
+}
+
+fn expected_shape(job: &JobPayload) -> Vec<usize> {
+    let (oh, ow) = (job.spec.conv_oh(), job.spec.conv_ow());
+    match job.kind {
+        JobKind::Depthwise => vec![job.spec.c, oh, ow],
+        JobKind::Standard | JobKind::PointwiseAs3x3 => vec![job.spec.k, oh, ow],
+    }
+}
+
+impl RemoteBackend {
+    /// Dial `addr` (`host:port`) and perform the v2 handshake. Errors
+    /// when the peer is unreachable, greets with anything but a valid
+    /// v2 `hello`, or fronts no I32-capable workers.
+    pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        let (conn, peer) = dial(addr)?;
+        let name: &'static str = Box::leak(format!("remote@{addr}").into_boxed_str());
+        Ok(RemoteBackend {
+            addr: addr.to_string(),
+            name,
+            peer,
+            conn: Some(conn),
+            next_id: 1,
+        })
+    }
+
+    /// The peer address this backend fronts.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// I32-capable workers the peer advertised in its `hello`.
+    pub fn peer_workers(&self) -> u64 {
+        self.peer.workers
+    }
+
+    /// One request/reply exchange. The outer `Err` is a transport or
+    /// protocol failure (stream desynced or dead — caller must drop the
+    /// connection); the inner `Err(String)` is a *clean* job error the
+    /// peer answered on a healthy, still-aligned stream (the connection
+    /// stays up).
+    fn round_trip(
+        &mut self,
+        id: u64,
+        job: &JobPayload,
+    ) -> anyhow::Result<Result<BackendRun, String>> {
+        let conn = self.conn.as_mut().expect("connection ensured by run()");
+        writeln!(conn.writer, "{}", request_json(id, job).to_json())?;
+        let mut buf = Vec::new();
+        let resp = loop {
+            buf.clear();
+            match read_line_capped(&mut conn.reader, &mut buf, MAX_LINE_BYTES)? {
+                LineRead::Eof => anyhow::bail!("peer closed the connection mid-request"),
+                LineRead::Line => {}
+            }
+            let line = String::from_utf8_lossy(&buf);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let j = Json::parse(trimmed)
+                .map_err(|e| anyhow::anyhow!("unparseable reply: {e}"))?;
+            if j.get(&["hello"]).is_some() {
+                continue; // stray greeting; keep draining
+            }
+            match j.get(&["id"]).and_then(Json::as_f64).map(|n| n as u64) {
+                Some(rid) if rid == id => break j,
+                // A stale reply to an older request this backend already
+                // failed: drain it so the stream realigns.
+                Some(_) => continue,
+                None => anyhow::bail!("reply frame without an id"),
+            }
+        };
+        if resp.get(&["ok"]).and_then(Json::as_bool) != Some(true) {
+            let msg = resp
+                .get(&["error"])
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified peer error");
+            return Ok(Err(msg.to_string()));
+        }
+        let shape: Vec<usize> = resp
+            .get(&["shape"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("reply missing shape (peer ignored full_output)"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape element")))
+            .collect::<Result<_, _>>()?;
+        let data: Vec<i32> = resp
+            .get(&["output"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("reply missing output (peer ignored full_output)"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|n| n as i32)
+                    .ok_or_else(|| anyhow::anyhow!("bad output element"))
+            })
+            .collect::<Result<_, _>>()?;
+        let want = expected_shape(job);
+        anyhow::ensure!(
+            shape == want,
+            "peer output shape {shape:?} != expected {want:?}"
+        );
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "peer output length {} != shape {shape:?}",
+            data.len()
+        );
+        let compute = resp
+            .get(&["compute_cycles"])
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        let total = resp
+            .get(&["total_cycles"])
+            .and_then(Json::as_f64)
+            .unwrap_or(compute as f64) as u64;
+        Ok(Ok(BackendRun {
+            output: Tensor::from_vec(&shape, data),
+            cycles: CycleStats {
+                compute,
+                total,
+                ..Default::default()
+            },
+        }))
+    }
+}
+
+impl ConvBackend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            standard3x3: self.peer.standard,
+            depthwise: self.peer.depthwise,
+            pointwise_as_3x3: self.peer.pointwise,
+            accum: AccumMode::I32,
+            // The v2 wire rejects standard/pointwise specs violating
+            // §4.1 regardless of the peer's pool; the mask must mirror
+            // that, or jobs a local host worker could serve get routed
+            // here only to come back as peer errors.
+            paper_specs_only: true,
+            spec_allowlist: None,
+        }
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Remote {
+            class: self.peer.class,
+        }
+    }
+
+    fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+        job.validate()?;
+        if self.conn.is_none() {
+            // Reconnect after an earlier failure; the fresh handshake
+            // re-verifies the peer still speaks v2. The pool snapshotted
+            // this worker's capability at spawn, so a peer that comes
+            // back *narrower* can't be served honestly any more — fail
+            // loudly (every job errors with this message) instead of
+            // letting jobs silently bounce off the peer's own mask.
+            let (conn, fresh) = dial(&self.addr)?;
+            anyhow::ensure!(
+                (!self.peer.standard || fresh.standard)
+                    && (!self.peer.depthwise || fresh.depthwise)
+                    && (!self.peer.pointwise || fresh.pointwise),
+                "remote {}: peer restarted with a narrower capability than \
+                 this pool's routing snapshot; rebuild the pool",
+                self.addr
+            );
+            self.peer = fresh;
+            self.conn = Some(conn);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        match self.round_trip(id, job) {
+            Ok(Ok(run)) => Ok(run),
+            // A clean job-error frame arrived on an aligned stream: the
+            // job fails but the connection is healthy — no redial churn.
+            Ok(Err(job_err)) => Err(anyhow::anyhow!(
+                "remote {}: peer answered with a job error: {job_err}",
+                self.addr
+            )),
+            Err(e) => {
+                // Transport/protocol failure: fail this in-flight job
+                // and drop the connection; the next job redials instead
+                // of reusing a wedged or desynced stream.
+                self.conn = None;
+                Err(anyhow::anyhow!("remote {}: {e}", self.addr))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Batch;
+    use crate::coordinator::config::CoordinatorConfig;
+    use crate::coordinator::dispatch::CorePool;
+    use crate::coordinator::request::{ConvJob, Submission};
+    use crate::coordinator::tcp::TcpServer;
+    use crate::hw::IpCoreConfig;
+    use crate::model::LayerSpec;
+    use std::io::BufRead;
+    use std::net::TcpListener;
+    use std::sync::mpsc::channel;
+
+    /// A valid v2 greeting for hand-rolled fake peers.
+    fn hello_line() -> &'static str {
+        r#"{"hello":{"proto":2,"freq_hz":112000000,"cores":1,"workers":[{"backend":"sim-ipcore-i32","standard":true,"depthwise":true,"pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272}]}}"#
+    }
+
+    #[test]
+    fn connect_rejects_malformed_hello() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(s, "this is not a hello").unwrap();
+        });
+        let err = RemoteBackend::connect(&addr).unwrap_err();
+        assert!(err.to_string().contains("hello"), "{err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_rejects_wrong_protocol_revision() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(
+                s,
+                r#"{{"hello":{{"proto":1,"workers":[{{"backend":"x","standard":true,"accum":"i32"}}]}}}}"#
+            )
+            .unwrap();
+        });
+        let err = RemoteBackend::connect(&addr).unwrap_err();
+        assert!(err.to_string().contains("protocol"), "{err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_rejects_peer_without_i32_workers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(
+                s,
+                r#"{{"hello":{{"proto":2,"workers":[{{"backend":"sim-ipcore-wrap8","standard":true,"depthwise":false,"pointwise":true,"accum":"wrap8","quote":6272}}]}}}}"#
+            )
+            .unwrap();
+        });
+        let err = RemoteBackend::connect(&addr).unwrap_err();
+        assert!(err.to_string().contains("i32"), "{err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn mid_stream_disconnect_fails_the_job_then_reconnects() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            // Connection 1: greet, swallow one request, drop mid-stream.
+            {
+                let (mut s, _) = listener.accept().unwrap();
+                writeln!(s, "{}", hello_line()).unwrap();
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+            }
+            // Connection 2 (the reconnect): greet and answer properly.
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(s, "{}", hello_line()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let req = Json::parse(line.trim()).unwrap();
+            let id = req.get(&["id"]).unwrap().as_f64().unwrap();
+            // All-zero 1x3x3 -> k=4 job: the answer is four zero words.
+            let reply = Json::obj(vec![
+                ("id", Json::num(id)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("shape", Json::arr_u64([4u64, 1, 1])),
+                ("output", Json::arr_i64([0i64, 0, 0, 0])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+        });
+        let mut be = RemoteBackend::connect(&addr).unwrap();
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        // Job 1 fails (dropped peer), job 2 succeeds over the redial.
+        let err = be.run(&payload).unwrap_err();
+        assert!(err.to_string().contains("remote"), "{err}");
+        let run = be.run(&payload).unwrap();
+        assert_eq!(run.output.shape(), &[4, 1, 1]);
+        assert_eq!(run.output.data(), &[0, 0, 0, 0]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn clean_peer_job_error_keeps_the_connection() {
+        // The fake peer accepts exactly ONE connection: it errors job 1
+        // cleanly, then serves job 2 on the same stream. If the client
+        // wrongly redialled after the clean error, job 2 would have no
+        // server to connect to and this test would fail.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            drop(listener); // no second accept possible
+            writeln!(s, "{}", hello_line()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let id1 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_f64().unwrap();
+            let err = Json::obj(vec![
+                ("id", Json::num(id1)),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str("boom")),
+            ]);
+            writeln!(s, "{}", err.to_json()).unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let id2 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_f64().unwrap();
+            let reply = Json::obj(vec![
+                ("id", Json::num(id2)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("shape", Json::arr_u64([4u64, 1, 1])),
+                ("output", Json::arr_i64([0i64, 0, 0, 0])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+        });
+        let mut be = RemoteBackend::connect(&addr).unwrap();
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let err = be.run(&payload).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        let run = be.run(&payload).expect("same connection serves the next job");
+        assert_eq!(run.output.data(), &[0, 0, 0, 0]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn capability_and_cost_reflect_the_peer_hello() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_golden_workers(1),
+        )
+        .unwrap();
+        let be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        let cap = be.capability();
+        assert!(cap.standard3x3 && cap.depthwise && cap.pointwise_as_3x3);
+        assert_eq!(cap.accum, AccumMode::I32);
+        assert!(cap.paper_specs_only, "the wire applies the §4.1 gate");
+        assert_eq!(be.peer_workers(), 2);
+        // Pricing collapses to the fastest advertised tier (the sim
+        // core), not the golden worker beside it.
+        assert_eq!(
+            be.cost_model(),
+            CostModel::Remote {
+                class: RemotePeerClass::SimCycles
+            }
+        );
+        assert!(be.name().starts_with("remote@"));
+        drop(be);
+        server.stop();
+    }
+
+    #[test]
+    fn host_only_peer_prices_as_host_class() {
+        // A peer fronting only naive golden workers must advertise —
+        // and be priced as — host loops, keeping local silicon
+        // preferred in a mixed front pool.
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig {
+                n_cores: 0,
+                ..CoordinatorConfig::default().with_golden_workers(2)
+            },
+        )
+        .unwrap();
+        let be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(
+            be.cost_model(),
+            CostModel::Remote {
+                class: RemotePeerClass::HostMacs
+            }
+        );
+        drop(be);
+        server.stop();
+    }
+
+    #[test]
+    fn dead_peer_yields_error_results_from_the_pool_not_hangs() {
+        // The ISSUE's failure contract at pool level: a RemoteBackend
+        // whose peer died answers dispatched jobs with error results.
+        let server =
+            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+        let be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        server.stop();
+        let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(be)];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        let job = ConvJob::synthetic(1, QUICKSTART, 1);
+        pool.dispatch(Batch {
+            spec: job.spec,
+            weights_id: job.weights_id,
+            kind: job.kind,
+            accum: job.accum,
+            jobs: vec![Submission {
+                job,
+                reply: tx,
+                enqueued: std::time::Instant::now(),
+            }],
+        });
+        let res = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("an error result, not a hang");
+        assert!(res.error.is_some(), "{res:?}");
+        pool.shutdown();
+    }
+}

@@ -43,6 +43,10 @@ impl ConvBackend for SimBackend {
             depthwise: self.core.config.mode == AccumMode::I32,
             pointwise_as_3x3: true,
             accum: self.core.config.mode,
+            // run_layer rejects specs violating the §4.1 BRAM layout;
+            // the mask must say so, or the dispatcher routes jobs here
+            // that a host worker in the same pool would have served.
+            paper_specs_only: true,
             spec_allowlist: None,
         }
     }

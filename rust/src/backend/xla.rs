@@ -63,9 +63,10 @@ impl ConvBackend for XlaBackend {
             depthwise: false,
             pointwise_as_3x3: false,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             // The mask must agree with run(): only raw-conv specs the
             // artifact registry actually compiled. Anything else would
-            // route here, fail run()'s ensures, and panic the worker.
+            // route here, fail run()'s ensures, and fail the job.
             spec_allowlist: Some(self.served_specs()),
         }
     }
@@ -158,6 +159,7 @@ mod tests {
             depthwise: false,
             pointwise_as_3x3: false,
             accum: AccumMode::I32,
+            paper_specs_only: false,
             spec_allowlist: Some(vec![QUICKSTART]),
         };
         assert!(cap.supports(JobKind::Standard));

@@ -23,7 +23,7 @@ impl Default for BatchConfig {
 }
 
 /// Top-level coordinator configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Simulated IP cores (the paper deploys 1..=20 on a Pynq Z2).
     pub n_cores: usize,
@@ -39,6 +39,12 @@ pub struct CoordinatorConfig {
     pub im2col_workers: usize,
     /// Threads per im2col worker's scoped GEMM fan-out.
     pub im2col_worker_threads: usize,
+    /// Remote peers (`host:port`), each dialled at pool construction
+    /// and appended as one `backend::RemoteBackend` worker speaking
+    /// wire protocol v2 (`coordinator::tcp`) — whole machines joining
+    /// the pool behind the same capability-masked dispatch. An
+    /// unreachable peer is a construction error, not a silent absence.
+    pub remote_peers: Vec<String>,
     pub ip: IpCoreConfig,
     pub batch: BatchConfig,
     /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
@@ -54,6 +60,7 @@ impl Default for CoordinatorConfig {
             golden_fallback_workers: 0,
             im2col_workers: 0,
             im2col_worker_threads: 4,
+            remote_peers: Vec::new(),
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
@@ -86,6 +93,18 @@ impl CoordinatorConfig {
     /// Threads each im2col worker fans its GEMM across (min 1).
     pub fn with_im2col_worker_threads(mut self, threads: usize) -> Self {
         self.im2col_worker_threads = threads.max(1);
+        self
+    }
+
+    /// Append one remote peer (`host:port`) to dial into the pool.
+    pub fn with_remote_peer(mut self, addr: impl Into<String>) -> Self {
+        self.remote_peers.push(addr.into());
+        self
+    }
+
+    /// Replace the remote peer list.
+    pub fn with_remote_peers(mut self, peers: Vec<String>) -> Self {
+        self.remote_peers = peers;
         self
     }
 }
@@ -130,5 +149,17 @@ mod tests {
     #[should_panic(expected = "outside")]
     fn with_cores_rejects_21() {
         let _ = CoordinatorConfig::default().with_cores(21);
+    }
+
+    #[test]
+    fn remote_peers_default_empty_and_compose() {
+        assert!(CoordinatorConfig::default().remote_peers.is_empty());
+        let c = CoordinatorConfig::default()
+            .with_remote_peer("10.0.0.1:7420")
+            .with_remote_peer("10.0.0.2:7420");
+        assert_eq!(c.remote_peers, vec!["10.0.0.1:7420", "10.0.0.2:7420"]);
+        let d = CoordinatorConfig::default()
+            .with_remote_peers(vec!["a:1".into(), "b:2".into()]);
+        assert_eq!(d.remote_peers.len(), 2);
     }
 }

@@ -94,6 +94,12 @@ impl CorePool {
             .collect()
     }
 
+    /// Cost model per worker, in worker order (the wire protocol's
+    /// `hello` frame quotes these to remote coordinators).
+    pub fn worker_cost_models(&self) -> Vec<CostModel> {
+        self.workers.iter().map(|w| w.cost).collect()
+    }
+
     /// Outstanding queued work per worker, in each worker's own
     /// cost-model units (the quantity least-loaded dispatch compares).
     /// Observability + tests; values drop as workers complete jobs.
@@ -123,9 +129,34 @@ impl CorePool {
                     let batch_weights = batch.weights_id;
                     for sub in batch.jobs {
                         let reused = resident_weights == Some(batch_weights);
-                        let run = backend
-                            .run(&sub.job.payload(reused))
-                            .expect("batched job passed shape validation at submit");
+                        let run = match backend.run(&sub.job.payload(reused)) {
+                            Ok(run) => run,
+                            Err(e) => {
+                                // A failing backend (a dropped remote
+                                // peer, a wedged device) must *fail* its
+                                // in-flight jobs, never hang the pool:
+                                // release the queued cost and answer
+                                // with an error result.
+                                load_in_worker.fetch_sub(
+                                    cost.cost(&sub.job.spec, sub.job.kind) as i64,
+                                    Ordering::Relaxed,
+                                );
+                                metrics.record_failure();
+                                let _ = sub.reply.send(ConvResult {
+                                    id: sub.job.id,
+                                    spec: sub.job.spec,
+                                    kind: sub.job.kind,
+                                    output: crate::model::Tensor::zeros(&[0]),
+                                    cycles: Default::default(),
+                                    core: core_idx,
+                                    backend: name,
+                                    latency: sub.enqueued.elapsed(),
+                                    weights_reused: false,
+                                    error: Some(e.to_string()),
+                                });
+                                continue;
+                            }
+                        };
                         resident_weights = Some(batch_weights);
 
                         let latency = sub.enqueued.elapsed();
@@ -150,6 +181,7 @@ impl CorePool {
                             backend: name,
                             latency,
                             weights_reused: reused,
+                            error: None,
                         });
                     }
                 }
@@ -525,6 +557,7 @@ mod tests {
                 depthwise: true,
                 pointwise_as_3x3: true,
                 accum: AccumMode::I32,
+                paper_specs_only: false,
                 spec_allowlist: None,
             }
         }
@@ -606,6 +639,57 @@ mod tests {
             };
             assert_eq!(r.output.data(), want.data(), "job {}", r.id);
         }
+        pool.shutdown();
+    }
+
+    /// Test backend that fails every job (stands in for a dropped
+    /// remote peer or wedged device).
+    struct FailingBackend;
+
+    impl ConvBackend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing-test"
+        }
+        fn capability(&self) -> Capability {
+            Capability {
+                standard3x3: true,
+                depthwise: true,
+                pointwise_as_3x3: true,
+                accum: AccumMode::I32,
+                paper_specs_only: false,
+                spec_allowlist: None,
+            }
+        }
+        fn cost_model(&self) -> CostModel {
+            CostModel::HostMacs
+        }
+        fn run(&mut self, _job: &JobPayload) -> anyhow::Result<BackendRun> {
+            anyhow::bail!("simulated peer drop")
+        }
+    }
+
+    #[test]
+    fn failing_backend_answers_with_error_results_and_releases_load() {
+        let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(FailingBackend)];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        for i in 0..3u64 {
+            pool.dispatch(batch_of(ConvJob::synthetic(i, QUICKSTART, i), &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 3, "every job answered, none hang");
+        for r in &results {
+            let err = r.error.as_ref().expect("error result");
+            assert!(err.contains("simulated peer drop"), "{err}");
+            assert!(r.output.is_empty());
+        }
+        // Failed jobs must release their queued cost like completed ones.
+        assert_eq!(pool.worker_loads(), vec![0]);
+        assert_eq!(
+            pool.metrics.failed.load(std::sync::atomic::Ordering::Relaxed),
+            3
+        );
         pool.shutdown();
     }
 

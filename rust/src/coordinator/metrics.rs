@@ -59,6 +59,9 @@ impl LatencyHistogram {
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    /// Jobs a backend failed (answered with an error result) — e.g. a
+    /// dropped remote peer. Not counted in `completed`.
+    pub failed: AtomicU64,
     pub psums: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub weight_dma_skipped: AtomicU64,
@@ -78,6 +81,12 @@ impl Metrics {
             self.weight_dma_skipped.fetch_add(1, Ordering::Relaxed);
         }
         self.latency.record(latency);
+    }
+
+    /// Record a job a backend failed (the pool answered it with an
+    /// error result instead of numerics).
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Simulated GOPS in the paper's PSUM accounting, given the board

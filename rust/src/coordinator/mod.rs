@@ -26,8 +26,14 @@
 //! * [`metrics`] — request counters, simulated-cycle accounting, and a
 //!   latency histogram;
 //! * [`server`] — the closed-loop trace driver used by the benches and
-//!   the end-to-end example; builds heterogeneous pools from
-//!   [`CoordinatorConfig`].
+//!   the end-to-end example; [`server::build_pool`] turns a
+//!   [`CoordinatorConfig`] into the heterogeneous pool (sim cores,
+//!   host workers, and one `backend::RemoteBackend` per
+//!   `remote_peers` entry — whole TCP-served machines in the pool);
+//! * [`tcp`] — the network face: wire protocol v2 (newline-delimited
+//!   JSON with a capability-advertising `hello` handshake, kind-tagged
+//!   requests, opt-in full-output replies) in front of the same pool.
+//!   `repro fleet N` composes the two sides into a multi-machine demo.
 //!
 //! Everything is std-only (threads + mpsc): the offline build has no
 //! tokio, and the workloads here are CPU-bound simulation, not I/O.

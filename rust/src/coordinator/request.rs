@@ -50,10 +50,28 @@ pub fn weights_fingerprint_salted(spec: &LayerSpec, kind: JobKind, salt: u64) ->
     fnv1a(spec, kind, &[0x5A17_ED00, salt])
 }
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw bytes, continuing from `seed` — the one hash
+/// implementation behind every fingerprint in the coordinator (the
+/// spec-field fingerprints here, and the TCP front-end's weight-byte
+/// salting), so the scheme can't drift between files.
+pub(crate) fn fnv1a_bytes_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over raw bytes from the standard offset basis.
+pub(crate) fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    fnv1a_bytes_seeded(FNV_OFFSET, bytes)
+}
+
 fn fnv1a(spec: &LayerSpec, kind: JobKind, salt: &[u64]) -> u64 {
-    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = FNV_OFFSET;
     let kind_tag = match kind {
         JobKind::Standard => 1u64,
         JobKind::Depthwise => 2,
@@ -68,11 +86,9 @@ fn fnv1a(spec: &LayerSpec, kind: JobKind, salt: &[u64]) -> u64 {
         spec.pool as u64,
         kind_tag,
     ];
+    let mut h = FNV_OFFSET;
     for field in fields.iter().chain(salt) {
-        for byte in field.to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(FNV_PRIME);
-        }
+        h = fnv1a_bytes_seeded(h, &field.to_le_bytes());
     }
     h
 }
@@ -165,6 +181,11 @@ pub struct ConvResult {
     pub latency: Duration,
     /// Whether the weight DMA was skipped (batch reuse).
     pub weights_reused: bool,
+    /// `Some(reason)` when the backend failed the job instead of
+    /// computing it (e.g. a remote peer dropped mid-request). The job
+    /// is *answered* — a failed backend must never hang the pool — but
+    /// `output` is empty and carries no numerics.
+    pub error: Option<String>,
 }
 
 impl ConvResult {

@@ -4,22 +4,53 @@
 //! collects a report (latency quantiles, simulated GOPS, batching
 //! efficiency, per-backend job mix).
 //!
-//! The pool is built from [`CoordinatorConfig`]: `n_cores` simulated IP
-//! cores, plus `golden_fallback_workers` naive host workers, plus
-//! `im2col_workers` threaded im2col+GEMM workers — the heterogeneous
-//! deployment. Depthwise trace entries exercise the capability mask:
-//! they only ever route to depthwise-capable workers.
+//! The pool is built from [`CoordinatorConfig`] by [`build_pool`]:
+//! `n_cores` simulated IP cores, plus `golden_fallback_workers` naive
+//! host workers, plus `im2col_workers` threaded im2col+GEMM workers,
+//! plus one `RemoteBackend` per `remote_peers` entry (whole TCP-served
+//! machines) — the heterogeneous deployment. Depthwise trace entries
+//! exercise the capability mask: they only ever route to
+//! depthwise-capable workers. Jobs a backend fails (a dropped peer)
+//! come back as error results, counted in [`Report::n_errors`].
 
 use super::batcher::Batcher;
 use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
 use super::request::{ConvJob, ConvResult, Submission};
-use crate::backend::{ConvBackend, GoldenBackend, Im2colBackend, JobKind, SimBackend};
+use crate::backend::{
+    ConvBackend, GoldenBackend, Im2colBackend, JobKind, RemoteBackend, SimBackend,
+};
 use crate::model::trace::TraceEntry;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
+
+/// Build the worker pool a config describes: `n_cores` simulated IP
+/// cores, then golden / im2col host workers, then one
+/// [`RemoteBackend`] per remote peer — dialled now, so an unreachable
+/// peer is a construction error rather than a silently smaller pool.
+pub fn build_pool(config: &CoordinatorConfig) -> anyhow::Result<CorePool> {
+    let mut backends: Vec<Box<dyn ConvBackend>> = Vec::new();
+    for _ in 0..config.n_cores {
+        backends.push(Box::new(SimBackend::new(config.ip)));
+    }
+    for _ in 0..config.golden_fallback_workers {
+        backends.push(Box::new(GoldenBackend::new()));
+    }
+    for _ in 0..config.im2col_workers {
+        backends.push(Box::new(Im2colBackend::new(config.im2col_worker_threads)));
+    }
+    for peer in &config.remote_peers {
+        backends.push(Box::new(RemoteBackend::connect(peer)?));
+    }
+    anyhow::ensure!(
+        !backends.is_empty(),
+        "config describes an empty pool (no cores, workers or peers)"
+    );
+    Ok(CorePool::with_backends(backends, config.ip))
+}
 
 /// Serving report for one trace run.
 #[derive(Clone, Debug)]
@@ -38,7 +69,11 @@ pub struct Report {
     pub weight_dma_skip_rate: f64,
     /// Host-side throughput (requests/s) — the simulator's own speed.
     pub host_rps: f64,
-    /// Completed jobs per backend name (heterogeneous-pool routing).
+    /// Jobs answered with an error result (e.g. a dropped remote peer)
+    /// — answered, never lost, but carrying no numerics.
+    pub n_errors: usize,
+    /// Answered jobs per backend name (heterogeneous-pool routing;
+    /// remote workers appear as `remote@host:port`).
     pub backend_mix: Vec<(&'static str, usize)>,
 }
 
@@ -49,21 +84,15 @@ pub struct Server {
 }
 
 impl Server {
+    /// Build the pool the config describes; panics when a remote peer
+    /// is unreachable (use [`Self::try_new`] to handle that).
     pub fn new(config: CoordinatorConfig) -> Self {
-        let mut backends: Vec<Box<dyn ConvBackend>> = Vec::new();
-        for _ in 0..config.n_cores {
-            backends.push(Box::new(SimBackend::new(config.ip)));
-        }
-        for _ in 0..config.golden_fallback_workers {
-            backends.push(Box::new(GoldenBackend::new()));
-        }
-        for _ in 0..config.im2col_workers {
-            backends.push(Box::new(Im2colBackend::new(config.im2col_worker_threads)));
-        }
-        Server {
-            config,
-            pool: CorePool::with_backends(backends, config.ip),
-        }
+        Self::try_new(config).expect("coordinator pool construction")
+    }
+
+    pub fn try_new(config: CoordinatorConfig) -> anyhow::Result<Self> {
+        let pool = build_pool(&config)?;
+        Ok(Server { config, pool })
     }
 
     /// Run a whole trace closed-loop (submit all, await all). When
@@ -131,8 +160,12 @@ impl Server {
         assert_eq!(results.len(), trace.len(), "every request answered");
 
         let mut mix: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut n_errors = 0usize;
         for r in &results {
             *mix.entry(r.backend).or_default() += 1;
+            if r.error.is_some() {
+                n_errors += 1;
+            }
         }
 
         let m = &self.pool.metrics;
@@ -152,6 +185,7 @@ impl Server {
                 skipped as f64 / completed as f64
             },
             host_rps: results.len() as f64 / wall.as_secs_f64().max(1e-9),
+            n_errors,
             backend_mix: mix.into_iter().collect(),
         }
     }
@@ -170,12 +204,13 @@ impl Report {
             .collect::<Vec<_>>()
             .join(",");
         format!(
-            "requests={} cores={} wall={:?} host_rps={:.1}\n\
+            "requests={} cores={} wall={:?} host_rps={:.1} errors={}\n\
              sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% mix=[{}]",
             self.n_requests,
             self.n_cores,
             self.wall,
             self.host_rps,
+            self.n_errors,
             self.sim_gops_psum,
             self.total_psums,
             self.p50_us,
@@ -183,6 +218,32 @@ impl Report {
             self.weight_dma_skip_rate * 100.0,
             mix
         )
+    }
+
+    /// Machine-readable form (the `BENCH_serving.json` trajectory the
+    /// CLI emits for CI and benchmarking).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_requests", Json::num(self.n_requests as f64)),
+            ("n_cores", Json::num(self.n_cores as f64)),
+            ("n_errors", Json::num(self.n_errors as f64)),
+            ("wall_us", Json::num(self.wall.as_micros() as f64)),
+            ("host_rps", Json::num(self.host_rps)),
+            ("sim_gops_psum", Json::num(self.sim_gops_psum)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("total_psums", Json::num(self.total_psums as f64)),
+            ("weight_dma_skip_rate", Json::num(self.weight_dma_skip_rate)),
+            (
+                "backend_mix",
+                Json::obj(
+                    self.backend_mix
+                        .iter()
+                        .map(|(name, n)| (*name, Json::num(*n as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -283,6 +344,71 @@ mod tests {
         // No depthwise-incapable backend exists in this pool; routing
         // exclusion is covered in dispatch tests with a wrap8 worker.
         server.shutdown();
+    }
+
+    #[test]
+    fn report_to_json_is_machine_readable() {
+        let mut server = Server::new(CoordinatorConfig::default());
+        let report = server.run_trace(&small_trace(4));
+        let j = report.to_json();
+        assert_eq!(j.get(&["n_requests"]).unwrap().as_usize(), Some(4));
+        assert_eq!(j.get(&["n_errors"]).unwrap().as_usize(), Some(0));
+        assert!(j.get(&["host_rps"]).unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get(&["backend_mix", "sim-ipcore-i32"]).unwrap().as_usize(),
+            Some(4)
+        );
+        // And it round-trips through the emitter/parser.
+        let text = j.to_json();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        server.shutdown();
+    }
+
+    #[test]
+    fn remote_peers_join_the_pool_and_serve_a_mixed_trace() {
+        // The fleet acceptance scenario, in-library: two in-process TCP
+        // peers fronted by one remote-only pool. Every request is
+        // answered without error and the mix names the remote workers.
+        use crate::coordinator::tcp::TcpServer;
+        let peer_a = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2),
+        )
+        .expect("peer a");
+        let peer_b = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_im2col_workers(1),
+        )
+        .expect("peer b");
+        let cfg = CoordinatorConfig {
+            n_cores: 0,
+            ..CoordinatorConfig::default().with_remote_peers(vec![
+                peer_a.addr.to_string(),
+                peer_b.addr.to_string(),
+            ])
+        };
+        let mut front = Server::try_new(cfg).expect("front pool dials both peers");
+        let trace = generate(&TraceConfig {
+            n: 24,
+            mean_gap_us: 0,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.3,
+            seed: 41,
+        });
+        let report = front.run_trace(&trace);
+        assert_eq!(report.n_requests, 24);
+        assert_eq!(report.n_errors, 0, "{report:?}");
+        assert_eq!(report.n_cores, 2, "one pool worker per peer");
+        let served: usize = report.backend_mix.iter().map(|(_, n)| n).sum();
+        assert_eq!(served, 24);
+        assert!(
+            report.backend_mix.iter().all(|(name, _)| name.starts_with("remote@")),
+            "{:?}",
+            report.backend_mix
+        );
+        front.shutdown();
+        peer_a.stop();
+        peer_b.stop();
     }
 
     #[test]

@@ -1,39 +1,180 @@
-//! TCP front-end: newline-delimited JSON over a socket — the network
-//! face an edge gateway actually talks to, in front of the same
-//! batcher + core pool the in-process server uses.
+//! TCP front-end speaking **wire protocol v2**: newline-delimited JSON
+//! over a socket — the network face an edge gateway or a remote
+//! coordinator ([`crate::backend::RemoteBackend`]) talks to, in front
+//! of the same batcher + heterogeneous core pool the in-process server
+//! uses.
 //!
-//! Wire protocol (one JSON object per line, both directions):
+//! # Protocol v2 specification
+//!
+//! One JSON object per line in both directions. Four frame types:
+//!
+//! ## `hello` (server → client, first line after connect)
+//!
+//! The server introduces itself before reading anything, advertising
+//! every pool worker's capability so a remote coordinator can mask and
+//! weigh this peer honestly:
+//!
+//! ```text
+//! <- {"hello":{"proto":2,"freq_hz":112000000,"cores":3,"workers":[
+//!      {"backend":"sim-ipcore-i32","standard":true,"depthwise":true,
+//!       "pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272},
+//!      ...]}}
+//! ```
+//!
+//! `proto` is the protocol revision (clients must reject anything but
+//! 2). `model` is the worker's cost-model family
+//! ([`crate::backend::CostModel::family_tag`]) — a remote coordinator
+//! prices this pool's compute by its fastest advertised tier, so a
+//! host-workers-only peer is never mistaken for a rack of IP cores.
+//! `quote` is the worker's own cost-model estimate for the reference
+//! [`QUICKSTART`] standard job, in that backend's own units —
+//! observability for the mix, not a cross-backend comparable number.
+//!
+//! ## request (client → server)
 //!
 //! ```text
 //! -> {"id":1,"spec":{"c":8,"h":16,"w":16,"k":8},"seed":42}
-//! -> {"id":2,"spec":{...},"img":[...C*H*W u8...],
+//! -> {"id":2,"kind":"depthwise","spec":{"c":8,"h":10,"w":10,"k":8,"relu":true},
+//!     "seed":7,"full_output":true}
+//! -> {"id":3,"kind":"pointwise","spec":{...},"img":[...C*H*W u8...],
 //!     "weights":[...K*C*9 u8...],"bias":[...K i32...]}
-//! <- {"id":1,"ok":true,"core":0,"compute_cycles":6272,
-//!     "sim_us":56,"output_head":[...,8],"checksum":1234567}
-//! <- {"id":9,"ok":false,"error":"..."}
 //! ```
 //!
-//! `seed` requests synthesise deterministic tensors server-side (good
-//! for load generation); explicit-tensor requests carry real data. The
-//! checksum (sum of output words mod 2^31) lets load generators verify
-//! numerics without shipping whole feature maps back.
+//! * `kind` — `"standard"` (default), `"depthwise"` (weights `C*9`,
+//!   bias `C`, requires `k == c`; ReLU fuses when `spec.relu`), or
+//!   `"pointwise"` (a 1×1 conv pre-lowered to the 3×3 dataflow:
+//!   padded image + centre-tapped weights, standard shapes on the
+//!   wire). Pointwise jobs need explicit tensors — there is no
+//!   synthetic pointwise generator.
+//! * `seed` — synthesise deterministic tensors server-side (load
+//!   generation); explicit `img`/`weights`/`bias` carry real data.
+//! * `full_output` — opt into the whole output tensor in the reply.
+//!   Off by default: a load generator only needs the checksum, and a
+//!   v1 8-word head is useless for a backend that must return the
+//!   tensor.
+//!
+//! The wire serves production traffic only: every job requires I32
+//! accumulator semantics (wrap-8 replies stay an in-process,
+//! experiment-side concern).
+//!
+//! ## reply (server → client)
+//!
+//! ```text
+//! <- {"id":1,"ok":true,"kind":"standard","core":0,"backend":"sim-ipcore-i32",
+//!     "compute_cycles":6272,"total_cycles":6272,"sim_us":56,
+//!     "weights_reused":false,"output_head":[...8 words...],"checksum":1234567}
+//! <- {"id":2,"ok":true,...,"shape":[8,8,8],"output":[...i32 words...]}
+//! ```
+//!
+//! `shape`/`output` appear only when the request set `full_output`.
+//! The checksum (sum of output words mod 2^31) always lets clients
+//! verify numerics without shipping whole feature maps back.
+//!
+//! ## error (server → client)
+//!
+//! ```text
+//! <- {"id":9,"ok":false,"error":"spec violates §4.1 (K%4!=0 or too small)"}
+//! ```
+//!
+//! Malformed JSON, bad shapes, unservable kinds and *backend failures*
+//! (e.g. this peer's own remote sub-peer dropping) all answer with an
+//! error frame on the same id — a request never silently disappears.
+//!
+//! # Shutdown
+//!
+//! [`TcpServer::stop`] drains: it stops accepting, joins every
+//! per-connection handler thread (handlers poll the shutdown flag on a
+//! read timeout, so an idle keep-alive connection cannot block
+//! shutdown), and only then shuts the worker pool down — in-flight
+//! jobs complete and are answered before the pool dies.
 
+use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
-use super::request::{weights_fingerprint_salted, ConvJob, ConvResult, Submission};
+use super::request::{fnv1a_bytes, weights_fingerprint_salted, ConvJob, ConvResult, Submission};
 use crate::backend::JobKind;
-use crate::model::{LayerSpec, Tensor};
+use crate::model::{LayerSpec, Tensor, QUICKSTART};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Protocol revision advertised in the `hello` frame.
+pub const PROTO_VERSION: u64 = 2;
+
+/// How often blocked connection readers wake to poll the shutdown flag.
+const SHUTDOWN_POLL: Duration = Duration::from_millis(100);
+
+/// Ceiling on one reply write; a client that stops draining its socket
+/// loses the connection instead of wedging the handler thread.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Hard cap on one wire frame. An S52 `full_output` reply is ~5 MB of
+/// JSON text, so 64 MB never trips legitimately — it bounds memory (and
+/// guarantees eventual termination) against a peer that streams bytes
+/// without ever sending a newline, which would otherwise defeat the
+/// read-timeout shutdown poll and grow the line buffer forever.
+pub(crate) const MAX_LINE_BYTES: usize = 64 << 20;
+
+/// Outcome of one bounded line read.
+pub(crate) enum LineRead {
+    /// A full line is buffered in `buf` (newline consumed, excluded).
+    Line,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// `read_line` with a hard byte cap, accumulating into `buf` across
+/// calls: a read timeout surfaces as `Err` (`WouldBlock`/`TimedOut`)
+/// with every byte read so far preserved in `buf`, so retrying
+/// continues the same line; a line longer than `cap` fails with
+/// `InvalidData` instead of growing without bound.
+pub(crate) fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let (found, n) = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    buf.extend_from_slice(&available[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    (false, available.len())
+                }
+            }
+        };
+        r.consume(n);
+        if found {
+            return Ok(LineRead::Line);
+        }
+        if buf.len() > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("wire frame exceeds {cap} bytes without a newline"),
+            ));
+        }
+    }
+}
 
 /// Running TCP server handle.
 pub struct TcpServer {
     pub addr: std::net::SocketAddr,
     listener_thread: std::thread::JoinHandle<()>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    /// Per-connection handler threads, tracked so [`Self::stop`] can
+    /// drain them instead of racing detached threads.
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    pool: Arc<CorePool>,
 }
 
 fn parse_spec(j: &Json) -> Result<LayerSpec, String> {
@@ -47,6 +188,21 @@ fn parse_spec(j: &Json) -> Result<LayerSpec, String> {
         spec = spec.with_relu();
     }
     Ok(spec)
+}
+
+fn parse_kind(req: &Json) -> Result<JobKind, String> {
+    match req.get(&["kind"]).and_then(Json::as_str) {
+        None => Ok(JobKind::Standard),
+        // One mapping, shared with the emit side: JobKind::tag().
+        Some(s) => [
+            JobKind::Standard,
+            JobKind::Depthwise,
+            JobKind::PointwiseAs3x3,
+        ]
+        .into_iter()
+        .find(|k| k.tag() == s)
+        .ok_or_else(|| format!("unknown kind '{s}' (expect standard|depthwise|pointwise)")),
+    }
 }
 
 fn parse_u8_array(j: &Json, want_len: usize, name: &str) -> Result<Vec<u8>, String> {
@@ -64,67 +220,108 @@ fn parse_u8_array(j: &Json, want_len: usize, name: &str) -> Result<Vec<u8>, Stri
         .collect()
 }
 
-/// Build a ConvJob from one request line.
+/// Build a ConvJob from one request line (any kind, v2 fields).
 fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
     let spec = parse_spec(req.get(&["spec"]).ok_or("missing spec")?)?;
-    if !spec.paper_compatible() {
-        return Err(format!("spec violates §4.1 (K%4!=0 or too small): {spec:?}"));
+    let kind = parse_kind(req)?;
+    match kind {
+        JobKind::Standard | JobKind::PointwiseAs3x3 => {
+            if !spec.paper_compatible() {
+                return Err(format!("spec violates §4.1 (K%4!=0 or too small): {spec:?}"));
+            }
+        }
+        JobKind::Depthwise => {
+            if spec.k != spec.c {
+                return Err(format!("depthwise spec needs K == C: {spec:?}"));
+            }
+            if spec.h < 3 || spec.w < 3 {
+                return Err(format!("depthwise spec too small for a 3x3 window: {spec:?}"));
+            }
+        }
     }
+    // Output-channel count: K for standard/pointwise, C for depthwise.
+    let out_ch = match kind {
+        JobKind::Depthwise => spec.c,
+        _ => spec.k,
+    };
     if let Some(img_j) = req.get(&["img"]) {
         let img = parse_u8_array(img_j, spec.c * spec.h * spec.w, "img")?;
+        let weight_len = match kind {
+            JobKind::Depthwise => spec.c * 9,
+            _ => spec.k * spec.c * 9,
+        };
         let wts = parse_u8_array(
             req.get(&["weights"]).ok_or("missing weights")?,
-            spec.k * spec.c * 9,
+            weight_len,
             "weights",
         )?;
         let bias_arr = req
             .get(&["bias"])
             .and_then(Json::as_arr)
             .ok_or("missing bias")?;
-        if bias_arr.len() != spec.k {
-            return Err(format!("bias length {} != {}", bias_arr.len(), spec.k));
+        if bias_arr.len() != out_ch {
+            return Err(format!("bias length {} != {}", bias_arr.len(), out_ch));
         }
         let bias: Vec<i32> = bias_arr
             .iter()
             .map(|v| v.as_f64().map(|n| n as i32).ok_or("bias element"))
             .collect::<Result<_, _>>()?;
+        let weights = match kind {
+            JobKind::Depthwise => Tensor::from_vec(&[spec.c, 3, 3], wts),
+            _ => Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
+        };
+        // Explicit tensors: fingerprint the actual weight bytes (folded
+        // into the FNV state as salt, so it can't alias a synthetic
+        // per-spec set). Identical weights batched consecutively
+        // legitimately skip the weight DMA; different weights never
+        // share an id — request ids (which restart at 1 per client
+        // connection) play no part, so two clients can't collide.
+        let weights_id = weights_fingerprint_salted(&spec, kind, fnv1a_bytes(weights.data()));
         Ok(ConvJob {
             id,
             spec,
-            kind: JobKind::Standard,
+            kind,
             // The wire protocol serves production traffic only; wrap-8
             // replies stay an in-process (experiment) concern.
             accum: crate::hw::AccumMode::I32,
             img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
-            weights: Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
+            weights,
             bias,
-            // Explicit tensors: a unique weight set per request; the id
-            // is hashed into the fingerprint (not XOR-ed) so no id can
-            // alias a synthetic per-spec weight set.
-            weights_id: weights_fingerprint_salted(&spec, JobKind::Standard, id),
+            weights_id,
         })
     } else {
         let seed = req
             .get(&["seed"])
             .and_then(Json::as_f64)
             .ok_or("need seed or img/weights/bias")? as u64;
-        Ok(ConvJob::synthetic(id, spec, seed))
+        match kind {
+            JobKind::Standard => Ok(ConvJob::synthetic(id, spec, seed)),
+            JobKind::Depthwise => Ok(ConvJob::synthetic_depthwise(id, spec, seed)),
+            JobKind::PointwiseAs3x3 => {
+                Err("pointwise jobs need explicit pre-lowered tensors, not a seed".into())
+            }
+        }
     }
 }
 
-fn response_json(r: &ConvResult, freq_hz: u64) -> Json {
+fn response_json(r: &ConvResult, freq_hz: u64, full_output: bool) -> Json {
+    if let Some(err) = &r.error {
+        return error_json(r.id, err);
+    }
     let head: Vec<i64> = r.output.data().iter().take(8).map(|&v| v as i64).collect();
     let checksum = r
         .output
         .data()
         .iter()
         .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::num(r.id as f64)),
         ("ok", Json::Bool(true)),
+        ("kind", Json::str(r.kind.tag())),
         ("core", Json::num(r.core as f64)),
         ("backend", Json::str(r.backend)),
         ("compute_cycles", Json::num(r.cycles.compute as f64)),
+        ("total_cycles", Json::num(r.cycles.total as f64)),
         (
             "sim_us",
             Json::num((r.cycles.total as f64 / freq_hz as f64 * 1e6).round()),
@@ -132,7 +329,18 @@ fn response_json(r: &ConvResult, freq_hz: u64) -> Json {
         ("weights_reused", Json::Bool(r.weights_reused)),
         ("output_head", Json::arr_i64(head)),
         ("checksum", Json::num(checksum as f64)),
-    ])
+    ];
+    if full_output {
+        fields.push((
+            "shape",
+            Json::arr_u64(r.output.shape().iter().map(|&d| d as u64)),
+        ));
+        fields.push((
+            "output",
+            Json::arr_i64(r.output.data().iter().map(|&v| v as i64)),
+        ));
+    }
+    Json::obj(fields)
 }
 
 fn error_json(id: u64, msg: &str) -> Json {
@@ -143,71 +351,179 @@ fn error_json(id: u64, msg: &str) -> Json {
     ])
 }
 
-fn handle_connection(stream: TcpStream, pool: Arc<CorePool>, next_id: Arc<AtomicU64>) {
+/// The capability advertisement every connection opens with.
+fn hello_json(pool: &CorePool) -> Json {
+    let quotes = pool.worker_cost_models();
+    let workers: Vec<Json> = pool
+        .worker_capabilities()
+        .iter()
+        .zip(&quotes)
+        .map(|((name, cap), cost)| {
+            Json::obj(vec![
+                ("backend", Json::str(*name)),
+                ("standard", Json::Bool(cap.standard3x3)),
+                ("depthwise", Json::Bool(cap.depthwise)),
+                ("pointwise", Json::Bool(cap.pointwise_as_3x3)),
+                (
+                    "accum",
+                    Json::str(match cap.accum {
+                        crate::hw::AccumMode::I32 => "i32",
+                        crate::hw::AccumMode::Wrap8 => "wrap8",
+                    }),
+                ),
+                ("model", Json::str(cost.family_tag())),
+                (
+                    "quote",
+                    Json::num(cost.cost(&QUICKSTART, JobKind::Standard) as f64),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![(
+        "hello",
+        Json::obj(vec![
+            ("proto", Json::num(PROTO_VERSION as f64)),
+            ("freq_hz", Json::num(pool.ip_config().freq_hz as f64)),
+            ("cores", Json::num(pool.n_cores() as f64)),
+            ("workers", Json::Arr(workers)),
+        ]),
+    )])
+}
+
+/// Parse, dispatch and answer one request line.
+fn process_line(line: &str, pool: &CorePool, fallback_id: u64, freq: u64) -> Json {
+    let req = match Json::parse(line) {
+        Err(e) => return error_json(fallback_id, &format!("bad json: {e}")),
+        Ok(req) => req,
+    };
+    let req_id = req
+        .get(&["id"])
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .unwrap_or(fallback_id);
+    let full_output = req
+        .get(&["full_output"])
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let job = match job_from_request(req_id, &req) {
+        Err(e) => return error_json(req_id, &e),
+        Ok(job) => job,
+    };
+    let (tx, rx) = channel();
+    let spec = job.spec;
+    let weights_id = job.weights_id;
+    let kind = job.kind;
+    let accum = job.accum;
+    let batch = super::batcher::Batch {
+        spec,
+        weights_id,
+        kind,
+        accum,
+        jobs: vec![Submission {
+            job,
+            reply: tx,
+            enqueued: std::time::Instant::now(),
+        }],
+    };
+    // An unroutable job (e.g. depthwise against a standard-only pool)
+    // is a client error on the wire, not a deployment panic.
+    if let Err(back) = pool.try_dispatch(batch) {
+        return error_json(
+            req_id,
+            &format!(
+                "no backend in this pool serves {:?} jobs in {:?} accum mode",
+                back.kind, back.accum
+            ),
+        );
+    }
+    match rx.recv() {
+        Ok(result) => response_json(&result, freq, full_output),
+        Err(_) => error_json(req_id, "worker dropped"),
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    pool: Arc<CorePool>,
+    next_id: Arc<AtomicU64>,
+    hello_line: Arc<String>,
+    shutdown: Arc<AtomicBool>,
+) {
     let freq = pool.ip_config().freq_hz;
-    let peer = stream.peer_addr().ok();
+    stream.set_nodelay(true).ok();
+    // Readers wake periodically to poll the shutdown flag, so stop()
+    // can drain handlers even while clients hold idle connections open.
+    stream.set_read_timeout(Some(SHUTDOWN_POLL)).ok();
+    // Bounded writes too: a client that stops reading a multi-megabyte
+    // full_output reply must fail its connection, not park this handler
+    // (and block stop()) on a full TCP send buffer forever.
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
+    if writeln!(writer, "{hello_line}").is_err() {
+        return;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
         }
-        let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let reply = match Json::parse(&line) {
-            Err(e) => error_json(id, &format!("bad json: {e}")),
-            Ok(req) => {
-                let req_id = req
-                    .get(&["id"])
-                    .and_then(Json::as_f64)
-                    .map(|n| n as u64)
-                    .unwrap_or(id);
-                match job_from_request(req_id, &req) {
-                    Err(e) => error_json(req_id, &e),
-                    Ok(job) => {
-                        let (tx, rx) = channel();
-                        let spec = job.spec;
-                        let weights_id = job.weights_id;
-                        let kind = job.kind;
-                        let accum = job.accum;
-                        pool.dispatch(super::batcher::Batch {
-                            spec,
-                            weights_id,
-                            kind,
-                            accum,
-                            jobs: vec![Submission {
-                                job,
-                                reply: tx,
-                                enqueued: std::time::Instant::now(),
-                            }],
-                        });
-                        match rx.recv() {
-                            Ok(result) => response_json(&result, freq),
-                            Err(_) => error_json(req_id, "worker dropped"),
-                        }
+        match read_line_capped(&mut reader, &mut buf, MAX_LINE_BYTES) {
+            Ok(LineRead::Eof) => break, // client closed the connection
+            Ok(LineRead::Line) => {
+                let reply = {
+                    let line = String::from_utf8_lossy(&buf);
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        None
+                    } else {
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        Some(process_line(trimmed, &pool, id, freq))
+                    }
+                };
+                buf.clear();
+                if let Some(reply) = reply {
+                    if writeln!(writer, "{}", reply.to_json()).is_err() {
+                        break;
                     }
                 }
             }
-        };
-        if writeln!(writer, "{}", reply.to_json()).is_err() {
-            break;
+            // Read timeout: loop to re-check shutdown. Partial-line
+            // bytes stay accumulated in `buf`, so mid-line timeouts
+            // lose nothing.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            // Includes an over-cap frame: drop the connection.
+            Err(_) => break,
         }
     }
-    let _ = peer; // connection closed
 }
 
 impl TcpServer {
-    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
-    pub fn start(addr: &str, n_cores: usize, ip: crate::hw::IpCoreConfig) -> anyhow::Result<Self> {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port). The
+    /// pool is whatever the config describes — simulated IP cores,
+    /// golden / im2col host workers, even this peer's own remote peers.
+    pub fn start(addr: &str, config: CoordinatorConfig) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let pool = Arc::new(CorePool::new(n_cores, ip));
+        let pool = Arc::new(super::server::build_pool(&config)?);
+        let hello_line = Arc::new(hello_json(&pool).to_json());
         let next_id = Arc::new(AtomicU64::new(1));
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
         let shutdown_flag = Arc::clone(&shutdown);
+        let conns_in_listener = Arc::clone(&conns);
+        let pool_in_listener = Arc::clone(&pool);
         listener.set_nonblocking(true)?;
         let listener_thread = std::thread::Builder::new()
             .name("repro-tcp".into())
@@ -219,12 +535,21 @@ impl TcpServer {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             stream.set_nonblocking(false).ok();
-                            let pool = Arc::clone(&pool);
+                            let pool = Arc::clone(&pool_in_listener);
                             let next_id = Arc::clone(&next_id);
-                            std::thread::spawn(move || handle_connection(stream, pool, next_id));
+                            let hello = Arc::clone(&hello_line);
+                            let shutdown = Arc::clone(&shutdown_flag);
+                            let handle = std::thread::spawn(move || {
+                                handle_connection(stream, pool, next_id, hello, shutdown)
+                            });
+                            let mut conns = conns_in_listener.lock().unwrap();
+                            // Reap finished handlers so long-lived
+                            // servers don't accumulate dead handles.
+                            conns.retain(|h| !h.is_finished());
+                            conns.push(handle);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            std::thread::sleep(Duration::from_millis(10));
                         }
                         Err(_) => break,
                     }
@@ -234,22 +559,55 @@ impl TcpServer {
             addr: local,
             listener_thread,
             shutdown,
+            conns,
+            pool,
         })
     }
 
-    /// Stop accepting connections (in-flight requests drain).
+    /// The capability line every connection is greeted with (tests and
+    /// observability).
+    pub fn hello(&self) -> Json {
+        hello_json(&self.pool)
+    }
+
+    /// Stop accepting, drain every connection handler (in-flight
+    /// requests are answered first), then shut the pool down.
     pub fn stop(self) {
         self.shutdown.store(true, Ordering::Relaxed);
         let _ = self.listener_thread.join();
+        loop {
+            let handle = self.conns.lock().unwrap().pop();
+            match handle {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        // All other Arc holders have exited; shut the workers down
+        // cleanly rather than leaking them to process teardown.
+        if let Ok(pool) = Arc::try_unwrap(self.pool) {
+            pool.shutdown();
+        }
     }
 }
 
-/// Blocking one-shot client (used by tests, examples and `repro client`).
+/// Blocking one-shot client (used by tests, examples and load
+/// generators): connect, swallow the `hello` greeting, send one
+/// request, return its reply.
 pub fn request_once(addr: &std::net::SocketAddr, body: &Json) -> anyhow::Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
     writeln!(stream, "{}", body.to_json())?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    reader.read_line(&mut line)?; // hello frame
+    let hello = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad hello: {e}"))?;
+    anyhow::ensure!(
+        hello.get(&["hello"]).is_some(),
+        "server did not open with a hello frame"
+    );
+    line.clear();
     reader.read_line(&mut line)?;
     Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
 }
@@ -257,11 +615,65 @@ pub fn request_once(addr: &std::net::SocketAddr, body: &Json) -> anyhow::Result<
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hw::IpCoreConfig;
+    use crate::hw::depthwise::golden_depthwise3x3;
     use crate::model::{golden, QUICKSTART};
+    use crate::util::prng::Prng;
+
+    fn start_n(cores: usize) -> TcpServer {
+        TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(cores),
+        )
+        .expect("bind")
+    }
 
     fn start() -> TcpServer {
-        TcpServer::start("127.0.0.1:0", 2, IpCoreConfig::default()).expect("bind")
+        start_n(2)
+    }
+
+    /// Raw client helper: connect, return (hello frame, stream, reader).
+    fn connect_raw(
+        addr: std::net::SocketAddr,
+    ) -> (Json, TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        (Json::parse(&line).unwrap(), stream, reader)
+    }
+
+    #[test]
+    fn handshake_advertises_pool_capability() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default()
+                .with_cores(1)
+                .with_im2col_workers(1),
+        )
+        .unwrap();
+        let (hello, _stream, _reader) = connect_raw(server.addr);
+        let h = hello.get(&["hello"]).expect("hello frame");
+        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
+        assert_eq!(h.get(&["cores"]).unwrap().as_usize(), Some(2));
+        assert!(h.get(&["freq_hz"]).unwrap().as_f64().unwrap() > 0.0);
+        let workers = h.get(&["workers"]).unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        let names: Vec<&str> = workers
+            .iter()
+            .map(|w| w.get(&["backend"]).unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["sim-ipcore-i32", "im2col-cpu"]);
+        let models: Vec<&str> = workers
+            .iter()
+            .map(|w| w.get(&["model"]).unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(models, vec!["sim-cycles", "im2col"]);
+        for w in workers {
+            assert_eq!(w.get(&["accum"]).unwrap().as_str(), Some("i32"));
+            assert_eq!(w.get(&["depthwise"]).unwrap().as_bool(), Some(true));
+            assert!(w.get(&["quote"]).unwrap().as_f64().unwrap() >= 1.0);
+        }
+        server.stop();
     }
 
     #[test]
@@ -274,10 +686,13 @@ mod tests {
         let resp = request_once(&server.addr, &req).unwrap();
         assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true));
         assert_eq!(resp.get(&["id"]).unwrap().as_usize(), Some(7));
+        assert_eq!(resp.get(&["kind"]).unwrap().as_str(), Some("standard"));
         assert_eq!(
             resp.get(&["compute_cycles"]).unwrap().as_usize(),
             Some(6272)
         );
+        // No full output unless asked for.
+        assert!(resp.get(&["output"]).is_none());
         // Checksum matches a local recomputation of the same seed.
         let job = ConvJob::synthetic(7, QUICKSTART, 42);
         let want = golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false);
@@ -327,6 +742,157 @@ mod tests {
     }
 
     #[test]
+    fn full_output_round_trips_the_whole_tensor() {
+        let server = start();
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(91);
+        let img = rng.bytes_below(spec.c * spec.h * spec.w, 256);
+        let wts = rng.bytes_below(spec.k * spec.c * 9, 256);
+        let bias: Vec<i64> = (0..spec.k).map(|_| rng.range_i64(-20, 20)).collect();
+        let req = Json::obj(vec![
+            ("id", Json::num(5u32)),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("c", Json::num(2u32)),
+                    ("h", Json::num(5u32)),
+                    ("w", Json::num(5u32)),
+                    ("k", Json::num(4u32)),
+                ]),
+            ),
+            ("img", Json::arr_u64(img.iter().map(|&v| v as u64))),
+            ("weights", Json::arr_u64(wts.iter().map(|&v| v as u64))),
+            ("bias", Json::arr_i64(bias.clone())),
+            ("full_output", Json::Bool(true)),
+        ]);
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        let shape: Vec<usize> = resp
+            .get(&["shape"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(shape, vec![4, 3, 3]);
+        let got: Vec<i32> = resp
+            .get(&["output"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let img_t = Tensor::from_vec(&[2, 5, 5], img);
+        let wts_t = Tensor::from_vec(&[4, 2, 3, 3], wts);
+        let bias_i32: Vec<i32> = bias.iter().map(|&b| b as i32).collect();
+        let want = golden::conv3x3_i32(&img_t, &wts_t, &bias_i32, false);
+        assert_eq!(got, want.data(), "full tensor must survive the wire");
+        server.stop();
+    }
+
+    #[test]
+    fn depthwise_over_the_wire_matches_golden() {
+        let server = start();
+        let c = 8usize;
+        let (h, w) = (10usize, 10usize);
+        let mut rng = Prng::new(92);
+        let img = rng.bytes_below(c * h * w, 256);
+        let wts = rng.bytes_below(c * 9, 256);
+        let bias: Vec<i64> = (0..c).map(|_| rng.range_i64(-100, 100)).collect();
+        let req = Json::obj(vec![
+            ("id", Json::num(6u32)),
+            ("kind", Json::str("depthwise")),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("c", Json::num(c as u32)),
+                    ("h", Json::num(h as u32)),
+                    ("w", Json::num(w as u32)),
+                    ("k", Json::num(c as u32)),
+                    ("relu", Json::Bool(true)),
+                ]),
+            ),
+            ("img", Json::arr_u64(img.iter().map(|&v| v as u64))),
+            ("weights", Json::arr_u64(wts.iter().map(|&v| v as u64))),
+            ("bias", Json::arr_i64(bias.clone())),
+            ("full_output", Json::Bool(true)),
+        ]);
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get(&["kind"]).unwrap().as_str(), Some("depthwise"));
+        let got: Vec<i32> = resp
+            .get(&["output"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let img_t = Tensor::from_vec(&[c, h, w], img);
+        let wts_t = Tensor::from_vec(&[c, 3, 3], wts);
+        let bias_i32: Vec<i32> = bias.iter().map(|&b| b as i32).collect();
+        let want = golden_depthwise3x3(&img_t, &wts_t, &bias_i32, true);
+        assert_eq!(got, want.data(), "depthwise+relu must survive the wire");
+        server.stop();
+    }
+
+    #[test]
+    fn synthetic_depthwise_seed_request_works() {
+        let server = start();
+        let req = Json::parse(
+            r#"{"id":8,"kind":"depthwise","spec":{"c":8,"h":10,"w":10,"k":8},"seed":3}"#,
+        )
+        .unwrap();
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        let job = ConvJob::synthetic_depthwise(8, LayerSpec::new(8, 10, 10, 8), 3);
+        let want = golden_depthwise3x3(&job.img, &job.weights, &job.bias, false);
+        let checksum = want
+            .data()
+            .iter()
+            .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
+        assert_eq!(
+            resp.get(&["checksum"]).unwrap().as_f64(),
+            Some(checksum as f64)
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn explicit_weight_sets_fingerprint_by_bytes_not_request_id() {
+        // Request ids restart at 1 per client connection, so they must
+        // play no part in the weight fingerprint: same weight bytes
+        // share an id (legitimate DMA reuse), different bytes never do.
+        let req = |id: u64, w0: u64| {
+            Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                (
+                    "spec",
+                    Json::obj(vec![
+                        ("c", Json::num(1u32)),
+                        ("h", Json::num(4u32)),
+                        ("w", Json::num(4u32)),
+                        ("k", Json::num(4u32)),
+                    ]),
+                ),
+                ("img", Json::arr_u64(vec![0u64; 16])),
+                (
+                    "weights",
+                    Json::arr_u64((0..36u64).map(|i| if i == 0 { w0 } else { 1 })),
+                ),
+                ("bias", Json::arr_i64([0, 0, 0, 0])),
+            ])
+        };
+        let a = job_from_request(1, &req(1, 5)).unwrap();
+        let b = job_from_request(2, &req(2, 5)).unwrap();
+        let c = job_from_request(3, &req(3, 6)).unwrap();
+        assert_eq!(a.weights_id, b.weights_id, "same bytes, different request ids");
+        assert_ne!(a.weights_id, c.weights_id, "different bytes must never alias");
+    }
+
+    #[test]
     fn bad_requests_get_errors_not_disconnects() {
         let server = start();
         for bad in [
@@ -334,11 +900,17 @@ mod tests {
             r#"{"id":1}"#,
             r#"{"id":2,"spec":{"c":4,"h":8,"w":8,"k":6},"seed":1}"#, // K%4
             r#"{"id":3,"spec":{"c":1,"h":4,"w":4,"k":4},"img":[1,2,3]}"#, // short
+            r#"{"id":4,"kind":"depthwise","spec":{"c":4,"h":8,"w":8,"k":8},"seed":1}"#, // K != C
+            r#"{"id":5,"kind":"pointwise","spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#, // no synth
+            r#"{"id":6,"kind":"transposed","spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#,
         ] {
             let mut stream = TcpStream::connect(server.addr).unwrap();
-            writeln!(stream, "{bad}").unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
             let mut line = String::new();
-            BufReader::new(stream).read_line(&mut line).unwrap();
+            reader.read_line(&mut line).unwrap(); // hello
+            writeln!(stream, "{bad}").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
             let resp = Json::parse(&line).unwrap();
             assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{bad}");
             assert!(resp.get(&["error"]).is_some());
@@ -349,7 +921,7 @@ mod tests {
     #[test]
     fn multiple_requests_per_connection() {
         let server = start();
-        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let (_hello, mut stream, reader) = connect_raw(server.addr);
         for i in 0..3 {
             writeln!(
                 stream,
@@ -357,7 +929,6 @@ mod tests {
             )
             .unwrap();
         }
-        let reader = BufReader::new(stream.try_clone().unwrap());
         let mut seen = Vec::new();
         for line in reader.lines().take(3) {
             let resp = Json::parse(&line.unwrap()).unwrap();
@@ -368,5 +939,19 @@ mod tests {
         assert_eq!(seen, vec![0, 1, 2]);
         drop(stream);
         server.stop();
+    }
+
+    #[test]
+    fn stop_drains_idle_connections_instead_of_hanging() {
+        let server = start_n(1);
+        // An idle keep-alive client: no request, connection held open.
+        let (_hello, stream, _reader) = connect_raw(server.addr);
+        let t0 = std::time::Instant::now();
+        server.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() must drain handlers via the shutdown poll, not block on the idle client"
+        );
+        drop(stream);
     }
 }

@@ -19,18 +19,22 @@
 //!   IP core (standard, pointwise-as-3×3 and depthwise through one
 //!   entry point), the naive golden anchor, the threaded im2col+GEMM
 //!   host worker ([`backend::Im2colBackend`], the serious CPU
-//!   fallback), and the XLA path — each reporting a capability
-//!   descriptor and a dispatch cost model. The parity contract
-//!   (bit-identical i32 outputs across backends, every kind, both
-//!   accumulator modes) is enforced by the unified harness in
-//!   `rust/tests/backend_parity.rs`.
+//!   fallback), the XLA path, and whole remote machines over TCP
+//!   ([`backend::RemoteBackend`], wire protocol v2) — each reporting a
+//!   capability descriptor and a dispatch cost model. The parity
+//!   contract (bit-identical i32 outputs across backends, every kind,
+//!   both accumulator modes) is enforced by the unified harness in
+//!   `rust/tests/backend_parity.rs` — for the remote backend,
+//!   end-to-end over a real socket.
 //! * [`coordinator`] — the serving layer: kind- and accum-tagged
 //!   requests, weight-stationary batching, a heterogeneous worker pool
 //!   (`Box<dyn ConvBackend>` per worker — e.g. the paper's 20 simulated
 //!   cores plus `golden_fallback_workers`/`im2col_workers` host
-//!   workers) with capability-masked, cost-weighted least-loaded
-//!   dispatch, a CNN layer scheduler that chains output BRAMs into the
-//!   next layer's input (§4.1), and a JSON-over-TCP front end.
+//!   workers plus `remote_peers` fleet members) with capability-masked,
+//!   cost-weighted least-loaded dispatch, a CNN layer scheduler that
+//!   chains output BRAMs into the next layer's input (§4.1), and a
+//!   JSON-over-TCP front end speaking wire protocol v2 (`repro fleet N`
+//!   composes both sides into a multi-machine demo).
 //!
 //! Experiment index (DESIGN.md §4): Fig. 6 → [`hw::waveform`] +
 //! `examples/waveform_repro.rs`; Table 1 → [`hw::resource`]; §5.2

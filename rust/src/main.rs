@@ -10,11 +10,20 @@
 //! repro simulate --c C --h H --w W --k K [--wrap8] [--no-pipeline] [--dma]
 //!                                       run one layer on the simulated IP core
 //! repro infer [--seed S] [--xla]        edge CNN inference: hw-sim vs golden (vs XLA)
-//! repro serve [--cores N] [--golden N] [--im2col N] [--requests N] [--s52 F] [--dw F]
+//! repro serve [--cores N] [--golden N] [--im2col N] [--remote host:port[,host:port...]]
+//!             [--requests N] [--s52 F] [--dw F] [--bench-json PATH]
 //!                                       closed-loop trace through the coordinator
 //!                                       (--golden adds naive CPU fallback workers,
 //!                                        --im2col adds threaded im2col+GEMM workers,
-//!                                        --dw mixes in depthwise jobs)
+//!                                        --remote dials wire-protocol-v2 peers into
+//!                                        the pool, --dw mixes in depthwise jobs);
+//!                                       writes a machine-readable BENCH_serving.json
+//! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N]
+//!                                       serve wire protocol v2 over TCP
+//! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
+//!                                       multi-machine demo: spawn N in-process TCP
+//!                                       peers, front them with one remote-core pool,
+//!                                       run a mixed trace through the fleet
 //! repro artifacts                       list the AOT artifact registry
 //! ```
 
@@ -30,7 +39,7 @@ use repro::paper;
 use repro::util::cli::Args;
 use repro::util::prng::Prng;
 
-const USAGE: &str = "usage: repro <waveform|table1|throughput|simulate|infer|serve|serve-tcp|artifacts|capacity|energy|mobilenet> [options]
+const USAGE: &str = "usage: repro <waveform|table1|throughput|simulate|infer|serve|serve-tcp|fleet|artifacts|capacity|energy|mobilenet> [options]
 run `repro help` or see rust/src/main.rs docs for per-command options";
 
 fn main() {
@@ -56,6 +65,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "artifacts" => cmd_artifacts(),
         "capacity" => cmd_capacity(&args),
         "energy" => cmd_energy(&args),
@@ -209,6 +219,39 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--bench-json PATH` (default `BENCH_serving.json`): the serving
+/// trajectory in machine-readable form, for CI and benchmark history.
+fn write_bench_json(args: &Args, report: &repro::coordinator::server::Report) -> anyhow::Result<()> {
+    let path = args.get("bench-json").unwrap_or("BENCH_serving.json");
+    std::fs::write(path, format!("{}\n", report.to_json().to_json()))?;
+    println!("bench trajectory written to {path}");
+    Ok(())
+}
+
+/// Shared serve/fleet front-pool construction: local workers plus any
+/// comma-separated `--remote` peers. `cores == 0` means no local sim
+/// cores (a pure remote fan-out front).
+fn front_config(cores: usize, golden: usize, im2col: usize, remote: Option<&str>) -> anyhow::Result<CoordinatorConfig> {
+    anyhow::ensure!(
+        cores <= repro::paper::MAX_CORES_Z2,
+        "core count {cores} outside the paper's 0..=20 deployment range"
+    );
+    let mut config = CoordinatorConfig::default()
+        .with_golden_workers(golden)
+        .with_im2col_workers(im2col);
+    config.n_cores = cores;
+    if let Some(peers) = remote {
+        config = config.with_remote_peers(
+            peers
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        );
+    }
+    Ok(config)
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
     let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
@@ -223,15 +266,87 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         depthwise_fraction: dw,
         seed: 11,
     });
-    let mut server = Server::new(
-        CoordinatorConfig::default()
-            .with_cores(cores)
-            .with_golden_workers(golden)
-            .with_im2col_workers(im2col),
-    );
+    let mut server = Server::try_new(front_config(cores, golden, im2col, args.get("remote"))?)?;
     let report = server.run_trace(&trace);
     println!("{}", report.render());
+    write_bench_json(args, &report)?;
     server.shutdown();
+    Ok(())
+}
+
+/// The multi-machine demo, runnable in CI: spawn N in-process wire-v2
+/// TCP peers, front them with one pool of `RemoteBackend` workers, and
+/// push a mixed trace through the fleet. Exits non-zero unless every
+/// request is answered without error and remote workers served traffic.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use repro::coordinator::tcp::TcpServer;
+    let n = match args.positional.get(1) {
+        None => 2,
+        Some(s) => s
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("fleet expects a peer count, e.g. `repro fleet 2`"))?,
+    };
+    anyhow::ensure!(n >= 1, "fleet needs at least one peer");
+    let peer_cores = args.get_usize("peer-cores", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let peer_im2col = args.get_usize("peer-im2col", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let cores = args.get_usize("cores", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let requests = args.get_usize("requests", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let s52 = args.get_f64("s52", 0.05).map_err(|e| anyhow::anyhow!(e))?;
+    let dw = args.get_f64("dw", 0.25).map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut peers = Vec::new();
+    for _ in 0..n {
+        // Same constructor as the front: --peer-cores 0 with im2col
+        // workers is a legitimate host-only peer, and a fully empty
+        // peer errors cleanly instead of panicking.
+        peers.push(TcpServer::start(
+            "127.0.0.1:0",
+            front_config(peer_cores, 0, peer_im2col, None)?,
+        )?);
+    }
+    let peer_addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
+    println!(
+        "fleet: {n} in-process wire-v2 peers ({peer_cores} sim cores{} each) at {}",
+        if peer_im2col > 0 {
+            format!(" + {peer_im2col} im2col workers")
+        } else {
+            String::new()
+        },
+        peer_addrs.join(", ")
+    );
+
+    let mut config = front_config(cores, 0, 0, None)?;
+    config = config.with_remote_peers(peer_addrs);
+    let mut front = Server::try_new(config)?;
+    let trace = generate(&TraceConfig {
+        n: requests,
+        mean_gap_us: 0,
+        s52_fraction: s52,
+        depthwise_fraction: dw,
+        seed: 17,
+    });
+    let report = front.run_trace(&trace);
+    println!("{}", report.render());
+    write_bench_json(args, &report)?;
+    let served_remote = report
+        .backend_mix
+        .iter()
+        .any(|(name, _)| name.starts_with("remote@"));
+    front.shutdown();
+    for p in peers {
+        p.stop();
+    }
+    anyhow::ensure!(
+        report.n_errors == 0,
+        "fleet run had {} job errors",
+        report.n_errors
+    );
+    anyhow::ensure!(
+        served_remote,
+        "no remote worker served traffic: {:?}",
+        report.backend_mix
+    );
+    println!("fleet OK: every request answered; remote workers in the mix");
     Ok(())
 }
 
@@ -317,9 +432,12 @@ fn cmd_serve_tcp(args: &Args) -> anyhow::Result<()> {
     use repro::coordinator::tcp::TcpServer;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7420");
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
-    let server = TcpServer::start(addr, cores, IpCoreConfig::default())?;
+    let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let im2col = args.get_usize("im2col", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let server = TcpServer::start(addr, front_config(cores, golden, im2col, args.get("remote"))?)?;
     println!(
-        "serving newline-delimited JSON on {} with {cores} simulated IP cores",
+        "serving wire protocol v2 (newline-delimited JSON) on {} \
+         ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
         server.addr
     );
     println!(r#"try: echo '{{"id":1,"spec":{{"c":8,"h":16,"w":16,"k":8}},"seed":42}}' | nc {} {}"#,

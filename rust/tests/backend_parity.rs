@@ -1,11 +1,14 @@
 //! Unified backend parity harness: ONE property suite, run over every
 //! `ConvBackend` the build can construct — the cycle-accurate simulator,
 //! the naive golden fallback, the threaded im2col+GEMM backend at
-//! several thread counts, and (when the runtime is linked and artifacts
-//! exist) the XLA path. For identical integer inputs every backend must
-//! produce **bit-identical** i32 outputs across randomized specs, all
-//! three job kinds (standard, depthwise, pointwise-as-3×3) and both
-//! accumulator modes (wrap-8 silicon vs production I32).
+//! several thread counts, a `RemoteBackend` over a real socket to an
+//! in-process wire-protocol-v2 server, and (when the runtime is linked
+//! and artifacts exist) the XLA path. For identical integer inputs
+//! every backend must produce **bit-identical** i32 outputs across
+//! randomized specs, all three job kinds (standard, depthwise,
+//! pointwise-as-3×3) and both accumulator modes (wrap-8 silicon vs
+//! production I32). For the remote leg that parity is end-to-end: the
+//! tensors cross the wire both ways.
 //!
 //! Each case asks every backend whether it `allows` the (spec, kind,
 //! accum) triple — exactly the dispatcher's routing predicate — so a
@@ -16,17 +19,40 @@
 //! seed so failures reproduce exactly.
 
 use repro::backend::{
-    ConvBackend, GoldenBackend, Im2colBackend, JobKind, JobPayload, SimBackend, XlaBackend,
+    ConvBackend, GoldenBackend, Im2colBackend, JobKind, JobPayload, RemoteBackend, SimBackend,
+    XlaBackend,
 };
+use repro::coordinator::tcp::TcpServer;
+use repro::coordinator::CoordinatorConfig;
 use repro::hw::depthwise::{golden_depthwise3x3, golden_pointwise, pad1, pointwise_as_3x3};
 use repro::hw::{AccumMode, IpCoreConfig};
 use repro::model::{golden, LayerSpec, Tensor};
 use repro::util::prng::Prng;
 
+/// The backend set under test, plus the in-process TCP server the
+/// remote leg dials (kept alive for the suite, stopped at the end).
+struct Fleet {
+    backends: Vec<Box<dyn ConvBackend>>,
+    server: Option<TcpServer>,
+}
+
+impl Fleet {
+    fn stop(&mut self) {
+        // Drop the backends first so the remote connection closes and
+        // the server's handler drains on EOF.
+        self.backends.clear();
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+    }
+}
+
 /// Every backend the suite can construct offline, in I32 (production)
 /// mode. XLA joins when the feature is linked and artifacts exist; its
-/// spec allowlist keeps it out of cases it never compiled.
-fn all_backends() -> Vec<Box<dyn ConvBackend>> {
+/// spec allowlist keeps it out of cases it never compiled. The remote
+/// leg runs against a real socket: an in-process v2 server fronting a
+/// small heterogeneous pool (2 sim cores + 1 im2col worker).
+fn all_backends() -> Fleet {
     let mut v: Vec<Box<dyn ConvBackend>> = vec![
         Box::new(SimBackend::new(IpCoreConfig::default())),
         Box::new(GoldenBackend::new()),
@@ -37,7 +63,18 @@ fn all_backends() -> Vec<Box<dyn ConvBackend>> {
         Ok(b) => v.push(Box::new(b)),
         Err(e) => eprintln!("parity harness runs without the xla leg: {e}"),
     }
-    v
+    let server = TcpServer::start(
+        "127.0.0.1:0",
+        CoordinatorConfig::default().with_cores(2).with_im2col_workers(1),
+    )
+    .expect("in-process wire-v2 server for the remote leg");
+    let remote = RemoteBackend::connect(&server.addr.to_string())
+        .expect("remote backend handshake");
+    v.push(Box::new(remote));
+    Fleet {
+        backends: v,
+        server: Some(server),
+    }
 }
 
 /// Run `payload` on every backend that claims it (the dispatcher's own
@@ -96,7 +133,7 @@ fn arb_case(rng: &mut Prng, spec: &LayerSpec) -> (Tensor<u8>, Tensor<u8>, Vec<i3
 
 #[test]
 fn prop_standard_jobs_agree_across_all_backends() {
-    let mut backends = all_backends();
+    let mut fleet = all_backends();
     for seed in 0..50u64 {
         let mut rng = Prng::new(seed);
         let spec = arb_spec(&mut rng);
@@ -110,15 +147,17 @@ fn prop_standard_jobs_agree_across_all_backends() {
             bias: &bias,
             weights_resident: false,
         };
-        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
-        // sim + golden + im2col×2 at minimum (xla only on its own specs).
-        assert!(ran >= 4, "seed {seed}: only {ran} backends ran");
+        let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
+        // sim + golden + im2col×2 + remote at minimum (xla only on its
+        // own specs).
+        assert!(ran >= 5, "seed {seed}: only {ran} backends ran");
     }
+    fleet.stop();
 }
 
 #[test]
 fn prop_depthwise_jobs_agree_across_all_backends() {
-    let mut backends = all_backends();
+    let mut fleet = all_backends();
     for seed in 100..140u64 {
         let mut rng = Prng::new(seed);
         let c = *rng.choose(&[1usize, 3, 4, 8, 16]);
@@ -142,14 +181,15 @@ fn prop_depthwise_jobs_agree_across_all_backends() {
             bias: &bias,
             weights_resident: false,
         };
-        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed} c={c} h={h} w={w} relu={}", spec.relu));
-        assert!(ran >= 4, "seed {seed}: only {ran} backends ran depthwise");
+        let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} c={c} h={h} w={w} relu={}", spec.relu));
+        assert!(ran >= 5, "seed {seed}: only {ran} backends ran depthwise");
     }
+    fleet.stop();
 }
 
 #[test]
 fn prop_pointwise_as_3x3_jobs_agree_across_all_backends_and_reference() {
-    let mut backends = all_backends();
+    let mut fleet = all_backends();
     for seed in 200..230u64 {
         let mut rng = Prng::new(seed);
         let c = *rng.choose(&[2usize, 4, 8]);
@@ -175,18 +215,20 @@ fn prop_pointwise_as_3x3_jobs_agree_across_all_backends_and_reference() {
             bias: &bias,
             weights_resident: false,
         };
-        let ran = assert_parity(&mut backends, &payload, AccumMode::I32, &want, &format!("seed {seed}: vs direct 1x1"));
-        assert!(ran >= 4, "seed {seed}: only {ran} backends ran pointwise");
+        let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed}: vs direct 1x1"));
+        assert!(ran >= 5, "seed {seed}: only {ran} backends ran pointwise");
     }
+    fleet.stop();
 }
 
 #[test]
 fn prop_wrap8_jobs_route_only_to_wrap8_silicon_and_match_reference() {
     // The other accumulator mode: a wrap-8 job must be declined by every
-    // I32 backend (exactly what the dispatcher's accum mask enforces)
-    // and served bit-exactly by the wrap-8 core — widened mod-256 values
-    // of the conv3x3_wrap8 reference.
-    let mut i32_backends = all_backends();
+    // I32 backend — including the remote leg, whose wire serves I32
+    // production traffic only (exactly what the dispatcher's accum mask
+    // enforces) — and served bit-exactly by the wrap-8 core: widened
+    // mod-256 values of the conv3x3_wrap8 reference.
+    let mut fleet = all_backends();
     let mut wrap8 = SimBackend::new(IpCoreConfig {
         mode: AccumMode::Wrap8,
         ..Default::default()
@@ -207,7 +249,7 @@ fn prop_wrap8_jobs_route_only_to_wrap8_silicon_and_match_reference() {
             weights_resident: false,
         };
 
-        for be in i32_backends.iter_mut() {
+        for be in fleet.backends.iter_mut() {
             assert!(
                 !be.capability().allows(&spec, JobKind::Standard, AccumMode::Wrap8),
                 "seed {seed}: {} must decline wrap8 traffic",
@@ -221,6 +263,7 @@ fn prop_wrap8_jobs_route_only_to_wrap8_silicon_and_match_reference() {
         let want = golden::conv3x3_wrap8(&img, &wts, &bias8).map(|v| v as i32);
         assert_eq!(run.output.data(), want.data(), "seed {seed} spec {spec:?}");
     }
+    fleet.stop();
 }
 
 #[test]
