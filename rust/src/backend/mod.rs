@@ -57,6 +57,52 @@ use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
 use crate::model::{LayerSpec, Tensor};
 use crate::paper::{CYCLES_PER_PSUM_GROUP, N_CORES, N_PCORES};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared liveness flag for a backend whose availability can change at
+/// runtime (today: [`remote::RemoteBackend`], whose probe thread flips
+/// it as the peer comes and goes). The dispatcher reads it on every
+/// routing decision: an unhealthy worker is masked out *preferentially*
+/// — if healthy capable workers exist they absorb the traffic, but a
+/// pool whose only capable workers are all unhealthy still routes to
+/// them (degraded capacity must never become lost correctness; the
+/// failover retry path covers the jobs that then fail).
+#[derive(Debug)]
+pub struct WorkerHealth {
+    healthy: AtomicBool,
+    /// Unhealthy→healthy transitions observed (a revived peer counts
+    /// once per outage it comes back from). Flows into
+    /// `Report::n_recovered_peers`.
+    recoveries: AtomicU64,
+}
+
+impl WorkerHealth {
+    pub fn new() -> Arc<Self> {
+        Arc::new(WorkerHealth {
+            healthy: AtomicBool::new(true),
+            recoveries: AtomicU64::new(0),
+        })
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    /// Set the flag, counting false→true edges as recoveries. Multiple
+    /// observers (probe thread, the job path itself) may call this
+    /// concurrently; `swap` makes each edge count exactly once.
+    pub fn set_healthy(&self, healthy: bool) {
+        let was = self.healthy.swap(healthy, Ordering::Relaxed);
+        if healthy && !was {
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::Relaxed)
+    }
+}
 
 /// What kind of convolution a job asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -403,6 +449,14 @@ pub trait ConvBackend: Send {
 
     /// Dispatcher-side cost estimator for this backend.
     fn cost_model(&self) -> CostModel;
+
+    /// Shared liveness flag, for backends whose availability changes at
+    /// runtime (the remote backend's probe thread flips it). `None` —
+    /// the default — means "always considered healthy"; local backends
+    /// don't fail partially.
+    fn health(&self) -> Option<Arc<WorkerHealth>> {
+        None
+    }
 
     /// Estimated cost of one job (provided: delegates to the model).
     fn cost(&self, spec: &LayerSpec, kind: JobKind) -> u64 {

@@ -19,13 +19,24 @@
 //!
 //! Failure semantics: a dropped peer **fails its in-flight job and
 //! drops the connection**; the next job redials (re-running the
-//! handshake). The pool worker loop turns the `Err` into an error
-//! reply on the job's channel, so a dead machine degrades that job —
-//! it never hangs the pool. The `weights_resident` DMA discount does
-//! not cross the wire: every remote job pays its own transfer.
+//! handshake), and the pool's failover retry re-enqueues the failed job
+//! on a capable sibling. The `weights_resident` DMA discount does not
+//! cross the wire: every remote job pays its own transfer.
+//!
+//! **Health:** each backend runs a background probe thread
+//! ([`HEALTH_PROBE_INTERVAL`]) that re-dials the peer on its own
+//! short-lived connection, checks the fresh `hello` is no narrower than
+//! the pool's routing snapshot, and — when the peer advertises the
+//! `ping` feature in its hello — round-trips a `ping` control frame.
+//! The result lands in a shared [`WorkerHealth`] flag the dispatcher
+//! reads: a dead peer is routed *around* while healthy siblings exist
+//! (degraded capacity, not lost correctness), and a revived peer
+//! rejoins routing as soon as one probe succeeds — no job has to fail
+//! to discover it came back.
 
 use super::{
     BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, RemotePeerClass,
+    WorkerHealth,
 };
 use crate::coordinator::tcp::{read_line_capped, LineRead, MAX_LINE_BYTES, PROTO_VERSION};
 use crate::hw::ip_core::CycleStats;
@@ -34,6 +45,9 @@ use crate::model::{Tensor, QUICKSTART};
 use crate::util::json::Json;
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Hard ceiling on waiting for one reply. A peer that stalls past this
@@ -48,6 +62,11 @@ pub const REMOTE_REPLY_TIMEOUT: Duration = Duration::from_secs(30);
 /// seconds, not stall the pool worker for the kernel's multi-minute
 /// default connect timeout.
 pub const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How often the background health probe re-validates the peer
+/// ([`RemoteBackend::connect`] uses this; tests and the chaos harness
+/// shorten it via [`RemoteBackend::connect_with_probe`]).
+pub const HEALTH_PROBE_INTERVAL: Duration = Duration::from_millis(250);
 
 struct Conn {
     writer: TcpStream,
@@ -65,6 +84,26 @@ struct PeerInfo {
     /// The fastest compute tier among those workers — what
     /// [`CostModel::Remote`] prices the peer's compute as.
     class: RemotePeerClass,
+    /// Peer advertised the `ping` control frame in its hello (feature
+    /// negotiation — plain v2 peers lack the flag and are never pinged).
+    ping: bool,
+}
+
+/// The capability flags routing snapshotted at construction; the probe
+/// treats a peer that comes back narrower than this as unhealthy.
+#[derive(Clone, Copy)]
+struct CapSnapshot {
+    standard: bool,
+    depthwise: bool,
+    pointwise: bool,
+}
+
+impl CapSnapshot {
+    fn covered_by(&self, fresh: &PeerInfo) -> bool {
+        (!self.standard || fresh.standard)
+            && (!self.depthwise || fresh.depthwise)
+            && (!self.pointwise || fresh.pointwise)
+    }
 }
 
 /// One remote machine as a pool worker.
@@ -76,6 +115,11 @@ pub struct RemoteBackend {
     peer: PeerInfo,
     conn: Option<Conn>,
     next_id: u64,
+    /// Shared with the dispatcher (via [`ConvBackend::health`]) and the
+    /// probe thread.
+    health: Arc<WorkerHealth>,
+    probe_stop: Arc<AtomicBool>,
+    probe: Option<JoinHandle<()>>,
 }
 
 fn parse_hello(line: &str) -> Result<PeerInfo, String> {
@@ -99,6 +143,10 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         pointwise: false,
         workers: 0,
         class: RemotePeerClass::HostMacs,
+        // Feature negotiation rides on the hello: peers that can answer
+        // `ping` control frames say so; plain v2 peers simply lack the
+        // flag and are never sent one.
+        ping: h.get(&["ping"]).and_then(Json::as_bool).unwrap_or(false),
     };
     let mut classes: Vec<RemotePeerClass> = Vec::new();
     for w in workers {
@@ -200,20 +248,121 @@ fn expected_shape(job: &JobPayload) -> Vec<usize> {
     }
 }
 
+/// One health probe: fresh dial, hello validation against the routing
+/// snapshot, and — when the peer negotiated it — a `ping` round trip.
+/// Runs on its own short-lived connection so it never desyncs the job
+/// stream.
+fn probe_once(addr: &str, snapshot: CapSnapshot) -> bool {
+    let Ok((mut conn, fresh)) = dial(addr) else {
+        return false;
+    };
+    if !snapshot.covered_by(&fresh) {
+        // The peer restarted narrower than the pool's routing snapshot:
+        // jobs routed by the old mask would bounce — treat as down.
+        return false;
+    }
+    if !fresh.ping {
+        // Plain v2 peer: the hello round trip itself is the probe.
+        return true;
+    }
+    if writeln!(conn.writer, "{}", Json::obj(vec![("ping", Json::num(1.0))]).to_json()).is_err() {
+        return false;
+    }
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match read_line_capped(&mut conn.reader, &mut buf, MAX_LINE_BYTES) {
+            Ok(LineRead::Line) => {}
+            _ => return false,
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(trimmed) else {
+            return false;
+        };
+        if j.get(&["hello"]).is_some() {
+            continue; // stray greeting; keep draining
+        }
+        return j.get(&["pong"]).and_then(Json::as_f64).is_some();
+    }
+}
+
+fn spawn_probe(
+    addr: String,
+    snapshot: CapSnapshot,
+    health: Arc<WorkerHealth>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("probe-{addr}"))
+        .spawn(move || {
+            // Sleep in short ticks so Drop never waits a full interval
+            // to join this thread.
+            let tick = Duration::from_millis(25).min(interval).max(Duration::from_millis(1));
+            let mut slept = Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                slept += tick;
+                if slept < interval {
+                    continue;
+                }
+                slept = Duration::ZERO;
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                health.set_healthy(probe_once(&addr, snapshot));
+            }
+        })
+        .expect("spawn remote health probe")
+}
+
 impl RemoteBackend {
     /// Dial `addr` (`host:port`) and perform the v2 handshake. Errors
     /// when the peer is unreachable, greets with anything but a valid
     /// v2 `hello`, or fronts no I32-capable workers.
     pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        Self::connect_with_probe(addr, HEALTH_PROBE_INTERVAL)
+    }
+
+    /// [`Self::connect`] with an explicit health-probe interval (the
+    /// chaos harness and tests shorten it to observe flaps quickly).
+    pub fn connect_with_probe(addr: &str, probe_interval: Duration) -> anyhow::Result<Self> {
         let (conn, peer) = dial(addr)?;
         let name: &'static str = Box::leak(format!("remote@{addr}").into_boxed_str());
+        let health = WorkerHealth::new();
+        let probe_stop = Arc::new(AtomicBool::new(false));
+        let snapshot = CapSnapshot {
+            standard: peer.standard,
+            depthwise: peer.depthwise,
+            pointwise: peer.pointwise,
+        };
+        let probe = spawn_probe(
+            addr.to_string(),
+            snapshot,
+            Arc::clone(&health),
+            Arc::clone(&probe_stop),
+            probe_interval,
+        );
         Ok(RemoteBackend {
             addr: addr.to_string(),
             name,
             peer,
             conn: Some(conn),
             next_id: 1,
+            health,
+            probe_stop,
+            probe: Some(probe),
         })
+    }
+
+    /// The shared liveness flag (what [`ConvBackend::health`] exposes
+    /// to the pool); public for harnesses that poll recovery.
+    pub fn health_flag(&self) -> Arc<WorkerHealth> {
+        Arc::clone(&self.health)
     }
 
     /// The peer address this backend fronts.
@@ -343,6 +492,10 @@ impl ConvBackend for RemoteBackend {
         }
     }
 
+    fn health(&self) -> Option<Arc<WorkerHealth>> {
+        Some(Arc::clone(&self.health))
+    }
+
     fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
         job.validate()?;
         if self.conn.is_none() {
@@ -352,24 +505,37 @@ impl ConvBackend for RemoteBackend {
             // back *narrower* can't be served honestly any more — fail
             // loudly (every job errors with this message) instead of
             // letting jobs silently bounce off the peer's own mask.
-            let (conn, fresh) = dial(&self.addr)?;
-            anyhow::ensure!(
-                (!self.peer.standard || fresh.standard)
-                    && (!self.peer.depthwise || fresh.depthwise)
-                    && (!self.peer.pointwise || fresh.pointwise),
-                "remote {}: peer restarted with a narrower capability than \
-                 this pool's routing snapshot; rebuild the pool",
-                self.addr
-            );
+            let (conn, fresh) = match dial(&self.addr) {
+                Ok(ok) => ok,
+                Err(e) => {
+                    self.health.set_healthy(false);
+                    return Err(e);
+                }
+            };
+            if !((!self.peer.standard || fresh.standard)
+                && (!self.peer.depthwise || fresh.depthwise)
+                && (!self.peer.pointwise || fresh.pointwise))
+            {
+                self.health.set_healthy(false);
+                anyhow::bail!(
+                    "remote {}: peer restarted with a narrower capability than \
+                     this pool's routing snapshot; rebuild the pool",
+                    self.addr
+                );
+            }
             self.peer = fresh;
             self.conn = Some(conn);
         }
         let id = self.next_id;
         self.next_id += 1;
         match self.round_trip(id, job) {
-            Ok(Ok(run)) => Ok(run),
+            Ok(Ok(run)) => {
+                self.health.set_healthy(true);
+                Ok(run)
+            }
             // A clean job-error frame arrived on an aligned stream: the
-            // job fails but the connection is healthy — no redial churn.
+            // job fails but the connection is healthy — no redial churn,
+            // and no health flap either.
             Ok(Err(job_err)) => Err(anyhow::anyhow!(
                 "remote {}: peer answered with a job error: {job_err}",
                 self.addr
@@ -377,10 +543,22 @@ impl ConvBackend for RemoteBackend {
             Err(e) => {
                 // Transport/protocol failure: fail this in-flight job
                 // and drop the connection; the next job redials instead
-                // of reusing a wedged or desynced stream.
+                // of reusing a wedged or desynced stream. Mark the peer
+                // unhealthy right away so the dispatcher routes around
+                // it without waiting for the next probe tick.
                 self.conn = None;
+                self.health.set_healthy(false);
                 Err(anyhow::anyhow!("remote {}: {e}", self.addr))
             }
+        }
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        self.probe_stop.store(true, Ordering::Relaxed);
+        if let Some(probe) = self.probe.take() {
+            let _ = probe.join();
         }
     }
 }

@@ -6,9 +6,15 @@
 //! in PSUMs, the same unit the dispatcher balances by) and offers the
 //! two standard policies: reject-on-full (load shedding, the serving
 //! answer) and block-until-drained (batch/offline answer).
+//!
+//! Blocked submitters are never wedged forever: [`AdmissionController::
+//! shutdown`] wakes them all with `Rejected` (a stopping server must
+//! not hang its clients), and [`AdmissionController::admit_deadline`]
+//! bounds an individual wait.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// What to do when the in-flight budget is exhausted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,11 +32,20 @@ pub enum Admission {
     Rejected,
 }
 
+#[derive(Debug)]
+struct State {
+    inflight: u64,
+    /// Once set, every admit — current waiters included — returns
+    /// `Rejected`. Lives under the same mutex as `inflight` so a
+    /// shutdown signal can never race a waiter back to sleep.
+    shutting_down: bool,
+}
+
 /// Bounded in-flight work counter.
 #[derive(Debug)]
 pub struct AdmissionController {
     max_inflight_psums: u64,
-    inflight: Mutex<u64>,
+    state: Mutex<State>,
     freed: Condvar,
     pub admitted: AtomicU64,
     pub rejected: AtomicU64,
@@ -40,7 +55,10 @@ impl AdmissionController {
     pub fn new(max_inflight_psums: u64) -> Self {
         AdmissionController {
             max_inflight_psums,
-            inflight: Mutex::new(0),
+            state: Mutex::new(State {
+                inflight: 0,
+                shutting_down: false,
+            }),
             freed: Condvar::new(),
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -49,14 +67,30 @@ impl AdmissionController {
 
     /// Try to admit `psums` of work under `policy`.
     pub fn admit(&self, psums: u64, policy: Policy) -> Admission {
-        let mut inflight = self.inflight.lock().expect("admission lock");
+        self.admit_inner(psums, policy, None)
+    }
+
+    /// [`Policy::Block`] admit that waits at most `deadline` before
+    /// giving up with `Rejected` — for submitters that cannot afford to
+    /// park forever behind a wedged pool.
+    pub fn admit_deadline(&self, psums: u64, deadline: Duration) -> Admission {
+        self.admit_inner(psums, Policy::Block, Some(deadline))
+    }
+
+    fn admit_inner(&self, psums: u64, policy: Policy, deadline: Option<Duration>) -> Admission {
+        let start = Instant::now();
+        let mut state = self.state.lock().expect("admission lock");
         loop {
+            if state.shutting_down {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Admission::Rejected;
+            }
             // A single oversized job is admitted when idle rather than
             // deadlocking forever.
-            let fits = *inflight + psums <= self.max_inflight_psums
-                || (*inflight == 0 && psums > self.max_inflight_psums);
+            let fits = state.inflight + psums <= self.max_inflight_psums
+                || (state.inflight == 0 && psums > self.max_inflight_psums);
             if fits {
-                *inflight += psums;
+                state.inflight += psums;
                 self.admitted.fetch_add(1, Ordering::Relaxed);
                 return Admission::Admitted;
             }
@@ -65,23 +99,49 @@ impl AdmissionController {
                     self.rejected.fetch_add(1, Ordering::Relaxed);
                     return Admission::Rejected;
                 }
-                Policy::Block => {
-                    inflight = self.freed.wait(inflight).expect("admission wait");
-                }
+                Policy::Block => match deadline {
+                    None => {
+                        state = self.freed.wait(state).expect("admission wait");
+                    }
+                    Some(d) => {
+                        let Some(remaining) = d.checked_sub(start.elapsed()) else {
+                            self.rejected.fetch_add(1, Ordering::Relaxed);
+                            return Admission::Rejected;
+                        };
+                        let (s, _timed_out) = self
+                            .freed
+                            .wait_timeout(state, remaining)
+                            .expect("admission wait");
+                        // Loop re-checks capacity, shutdown and the
+                        // deadline — a timed-out wake that finds
+                        // capacity still admits.
+                        state = s;
+                    }
+                },
             }
         }
     }
 
     /// Mark `psums` of admitted work complete.
     pub fn complete(&self, psums: u64) {
-        let mut inflight = self.inflight.lock().expect("admission lock");
-        *inflight = inflight.saturating_sub(psums);
-        drop(inflight);
+        let mut state = self.state.lock().expect("admission lock");
+        state.inflight = state.inflight.saturating_sub(psums);
+        drop(state);
+        self.freed.notify_all();
+    }
+
+    /// Wake every blocked submitter with `Rejected` and refuse all
+    /// further work — a stopping server must not wedge its clients on a
+    /// Condvar that will never signal again.
+    pub fn shutdown(&self) {
+        let mut state = self.state.lock().expect("admission lock");
+        state.shutting_down = true;
+        drop(state);
         self.freed.notify_all();
     }
 
     pub fn inflight(&self) -> u64 {
-        *self.inflight.lock().expect("admission lock")
+        self.state.lock().expect("admission lock").inflight
     }
 
     pub fn capacity(&self) -> u64 {
@@ -133,6 +193,56 @@ mod tests {
         ac.complete(50);
         assert_eq!(waiter.join().unwrap(), Admission::Admitted);
         assert_eq!(ac.inflight(), 20);
+    }
+
+    #[test]
+    fn shutdown_wakes_blocked_submitters() {
+        // The satellite bug: Block waited on a Condvar with no shutdown
+        // signal, so a stopping server wedged its submitters forever.
+        let ac = Arc::new(AdmissionController::new(50));
+        assert_eq!(ac.admit(50, Policy::Block), Admission::Admitted);
+        let ac2 = Arc::clone(&ac);
+        let waiter = std::thread::spawn(move || ac2.admit(20, Policy::Block));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!waiter.is_finished(), "submitter must be blocked");
+        ac.shutdown();
+        assert_eq!(waiter.join().unwrap(), Admission::Rejected);
+        // After shutdown nothing is admitted, even with capacity free.
+        ac.complete(50);
+        assert_eq!(ac.admit(1, Policy::Block), Admission::Rejected);
+    }
+
+    #[test]
+    fn admit_deadline_gives_up_in_bounded_time() {
+        let ac = AdmissionController::new(10);
+        assert_eq!(ac.admit(10, Policy::Block), Admission::Admitted);
+        let t0 = Instant::now();
+        assert_eq!(
+            ac.admit_deadline(5, Duration::from_millis(50)),
+            Admission::Rejected
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "deadline admit must not wedge"
+        );
+        assert_eq!(ac.inflight(), 10, "rejected work is not charged");
+    }
+
+    #[test]
+    fn admit_deadline_admits_when_capacity_frees_in_time() {
+        let ac = Arc::new(AdmissionController::new(10));
+        assert_eq!(ac.admit(10, Policy::Block), Admission::Admitted);
+        let ac2 = Arc::clone(&ac);
+        let releaser = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            ac2.complete(10);
+        });
+        assert_eq!(
+            ac.admit_deadline(5, Duration::from_secs(30)),
+            Admission::Admitted
+        );
+        releaser.join().unwrap();
+        assert_eq!(ac.inflight(), 5);
     }
 
     #[test]

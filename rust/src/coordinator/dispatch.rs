@@ -8,44 +8,249 @@
 //! 1. **capability-masked** — a batch of depthwise jobs is only offered
 //!    to workers whose backend supports depthwise (wrap-8 cores and the
 //!    XLA path decline them);
-//! 2. **cost-weighted least-loaded** — queue depth is measured in each
+//! 2. **health-aware** — workers whose backend exposes a
+//!    [`WorkerHealth`] flag (remote peers with a probe thread) are
+//!    skipped while unhealthy, as long as a healthy capable sibling
+//!    exists. Health degrades capacity, never correctness: a pool whose
+//!    capable workers are all unhealthy still routes to them;
+//! 3. **cost-weighted least-loaded** — queue depth is measured in each
 //!    backend's own [`CostModel`] units (closed-form cycles for IP
 //!    cores, modelled MACs for host fallback), so a big S52 layer
 //!    counts for more than an edge-CNN layer and slow fallback workers
 //!    fill only after the accelerators queue up.
+//!
+//! **Failover:** when a backend fails a job (a dropped remote peer, a
+//! wedged device), the worker releases its queue charge and re-enqueues
+//! the job on the least-loaded capable sibling it has not tried yet —
+//! up to [`MAX_DISPATCH_ATTEMPTS`] workers total. Only when attempts
+//! are exhausted, or no untried capable worker exists, does the pool
+//! answer an error result. A flapping machine therefore degrades
+//! capacity instead of erroring user requests.
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
-use super::request::ConvResult;
-use crate::backend::{Capability, ConvBackend, CostModel, SimBackend};
-use crate::hw::IpCoreConfig;
+use super::request::{ConvResult, Submission};
+use crate::backend::{Capability, ConvBackend, CostModel, JobKind, SimBackend, WorkerHealth};
+use crate::hw::{AccumMode, IpCoreConfig};
+use crate::model::LayerSpec;
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+/// Upper bound on how many workers one job may be offered before the
+/// pool gives up and answers an error result: the initial dispatch plus
+/// up to two failover hops.
+pub const MAX_DISPATCH_ATTEMPTS: usize = 3;
+
 enum WorkerMsg {
-    Run(Batch),
+    /// A closed batch, plus the indices of workers that already failed
+    /// these jobs (empty on first dispatch) — failover excludes them.
+    Run(Batch, Vec<usize>),
     Shutdown,
 }
 
-struct Worker {
+struct WorkerEntry {
     tx: Sender<WorkerMsg>,
-    handle: JoinHandle<()>,
     /// Outstanding modelled work (backend cost units), for least-loaded
-    /// dispatch.
-    load: Arc<AtomicI64>,
+    /// dispatch. Plain atomic — the whole table is shared via one Arc.
+    load: AtomicI64,
     /// Capability snapshot taken before the backend moved into its
     /// thread; drives the dispatch mask.
     capability: Capability,
     /// Cost model snapshot; weighs this worker's queue.
     cost: CostModel,
     name: &'static str,
+    /// Liveness flag for backends that can flap (remote peers); `None`
+    /// means always healthy.
+    health: Option<Arc<WorkerHealth>>,
+}
+
+impl WorkerEntry {
+    fn is_healthy(&self) -> bool {
+        self.health.as_ref().map_or(true, |h| h.is_healthy())
+    }
+}
+
+/// The routing table the pool front shares with every worker thread.
+/// Failover needs workers to re-enqueue failed jobs on siblings, so
+/// selection and load accounting live here rather than on [`CorePool`].
+struct WorkerTable {
+    entries: Vec<WorkerEntry>,
+    metrics: Arc<Metrics>,
+}
+
+impl WorkerTable {
+    /// Least-loaded capable worker outside `exclude`. Unhealthy workers
+    /// are skipped while any healthy capable candidate remains; when
+    /// every capable candidate is unhealthy the pick falls back to them
+    /// (failover covers the jobs that then fail), so health can never
+    /// make a routable batch unroutable.
+    fn pick(
+        &self,
+        spec: &LayerSpec,
+        kind: JobKind,
+        accum: AccumMode,
+        exclude: &[usize],
+    ) -> Option<usize> {
+        let candidate = |require_healthy: bool| {
+            self.entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    !exclude.contains(i)
+                        && (!require_healthy || e.is_healthy())
+                        && e.capability.allows(spec, kind, accum)
+                })
+                .min_by_key(|(_, e)| e.load.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+        };
+        candidate(true).or_else(|| candidate(false))
+    }
+
+    /// Charge worker `idx`'s queue for every job in `batch` and send it.
+    /// Hands the batch back (charge undone) if the worker already shut
+    /// down — only possible when a failover hop races pool teardown.
+    fn send_batch(&self, idx: usize, batch: Batch, tried: Vec<usize>) -> Result<(), Batch> {
+        let entry = &self.entries[idx];
+        let total: i64 = batch
+            .jobs
+            .iter()
+            .map(|s| entry.cost.cost(&s.job.spec, s.job.kind) as i64)
+            .sum();
+        entry.load.fetch_add(total, Ordering::Relaxed);
+        match entry.tx.send(WorkerMsg::Run(batch, tried)) {
+            Ok(()) => Ok(()),
+            Err(rejected) => {
+                entry.load.fetch_sub(total, Ordering::Relaxed);
+                match rejected.0 {
+                    WorkerMsg::Run(batch, _) => Err(batch),
+                    WorkerMsg::Shutdown => unreachable!("we sent Run"),
+                }
+            }
+        }
+    }
+
+    /// Failover hop: re-enqueue one failed submission on the
+    /// least-loaded capable worker not yet tried. Hands the submission
+    /// back when no such worker exists (or the target shut down first).
+    fn redispatch(&self, sub: Submission, tried: &[usize]) -> Result<(), Submission> {
+        let Some(idx) = self.pick(&sub.job.spec, sub.job.kind, sub.job.accum, tried) else {
+            return Err(sub);
+        };
+        let batch = Batch {
+            spec: sub.job.spec,
+            weights_id: sub.job.weights_id,
+            kind: sub.job.kind,
+            accum: sub.job.accum,
+            jobs: vec![sub],
+        };
+        self.send_batch(idx, batch, tried.to_vec())
+            .map_err(|mut batch| batch.jobs.pop().expect("the one submission we packed"))
+    }
+
+    /// Terminal failure: attempts exhausted or no sibling to try.
+    fn fail(&self, core_idx: usize, name: &'static str, sub: Submission, err: &str) {
+        self.metrics.record_failure();
+        // Receiver may have hung up (fire-and-forget); fine.
+        let _ = sub.reply.send(ConvResult {
+            id: sub.job.id,
+            spec: sub.job.spec,
+            kind: sub.job.kind,
+            output: crate::model::Tensor::zeros(&[0]),
+            cycles: Default::default(),
+            core: core_idx,
+            backend: name,
+            latency: sub.enqueued.elapsed(),
+            weights_reused: false,
+            error: Some(err.to_string()),
+        });
+    }
+}
+
+/// Run one batch on this worker's backend, failing individual jobs over
+/// to siblings via the shared table when the backend errors.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    backend: &mut dyn ConvBackend,
+    resident_weights: &mut Option<u64>,
+    table: &WorkerTable,
+    core_idx: usize,
+    name: &'static str,
+    cost: CostModel,
+    batch: Batch,
+    tried: Vec<usize>,
+) {
+    // Weight-stationary across the batch: first job pays the weight
+    // DMA, the rest reuse the resident set (backends that model DMA
+    // apply the discount).
+    let batch_weights = batch.weights_id;
+    for sub in batch.jobs {
+        let reused = *resident_weights == Some(batch_weights);
+        let run = match backend.run(&sub.job.payload(reused)) {
+            Ok(run) => run,
+            Err(e) => {
+                // Release this queue's charge, then fail over: offer
+                // the job to the next-cheapest capable sibling not yet
+                // tried. Only when attempts are exhausted — or no such
+                // sibling exists — does the pool answer an error
+                // result.
+                table.entries[core_idx].load.fetch_sub(
+                    cost.cost(&sub.job.spec, sub.job.kind) as i64,
+                    Ordering::Relaxed,
+                );
+                let mut tried_now = tried.clone();
+                tried_now.push(core_idx);
+                let give_up = if tried_now.len() < MAX_DISPATCH_ATTEMPTS {
+                    match table.redispatch(sub, &tried_now) {
+                        Ok(()) => {
+                            table.metrics.record_retry();
+                            None
+                        }
+                        Err(sub) => Some(sub),
+                    }
+                } else {
+                    Some(sub)
+                };
+                if let Some(sub) = give_up {
+                    table.fail(core_idx, name, sub, &e.to_string());
+                }
+                continue;
+            }
+        };
+        *resident_weights = Some(batch_weights);
+
+        let latency = sub.enqueued.elapsed();
+        table.metrics.record_completion(
+            sub.job.psums(),
+            run.cycles.total.max(run.cycles.compute),
+            latency,
+            reused,
+        );
+        table.entries[core_idx].load.fetch_sub(
+            cost.cost(&sub.job.spec, sub.job.kind) as i64,
+            Ordering::Relaxed,
+        );
+        // Receiver may have hung up (fire-and-forget); fine.
+        let _ = sub.reply.send(ConvResult {
+            id: sub.job.id,
+            spec: sub.job.spec,
+            kind: sub.job.kind,
+            output: run.output,
+            cycles: run.cycles,
+            core: core_idx,
+            backend: name,
+            latency,
+            weights_reused: reused,
+            error: None,
+        });
+    }
 }
 
 /// Pool of conv-backend workers (simulated IP cores by default).
 pub struct CorePool {
-    workers: Vec<Worker>,
+    table: Arc<WorkerTable>,
+    handles: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     config: IpCoreConfig,
 }
@@ -66,20 +271,44 @@ impl CorePool {
     pub fn with_backends(backends: Vec<Box<dyn ConvBackend>>, config: IpCoreConfig) -> Self {
         assert!(!backends.is_empty(), "pool needs at least one backend");
         let metrics = Arc::new(Metrics::new());
-        let workers = backends
+        // Build the full routing table before any worker starts:
+        // failover needs every worker to see every sibling's entry.
+        let mut receivers = Vec::with_capacity(backends.len());
+        let entries = backends
+            .iter()
+            .map(|b| {
+                let (tx, rx) = channel::<WorkerMsg>();
+                receivers.push(rx);
+                WorkerEntry {
+                    tx,
+                    load: AtomicI64::new(0),
+                    capability: b.capability(),
+                    cost: b.cost_model(),
+                    name: b.name(),
+                    health: b.health(),
+                }
+            })
+            .collect();
+        let table = Arc::new(WorkerTable {
+            entries,
+            metrics: Arc::clone(&metrics),
+        });
+        let handles = backends
             .into_iter()
+            .zip(receivers)
             .enumerate()
-            .map(|(idx, backend)| Self::spawn_worker(idx, backend, Arc::clone(&metrics)))
+            .map(|(idx, (backend, rx))| Self::spawn_worker(idx, backend, rx, Arc::clone(&table)))
             .collect();
         CorePool {
-            workers,
+            table,
+            handles,
             metrics,
             config,
         }
     }
 
     pub fn n_cores(&self) -> usize {
-        self.workers.len()
+        self.table.entries.len()
     }
 
     pub fn ip_config(&self) -> IpCoreConfig {
@@ -88,7 +317,8 @@ impl CorePool {
 
     /// `(name, capability)` per worker, in worker order.
     pub fn worker_capabilities(&self) -> Vec<(&'static str, Capability)> {
-        self.workers
+        self.table
+            .entries
             .iter()
             .map(|w| (w.name, w.capability.clone()))
             .collect()
@@ -97,133 +327,98 @@ impl CorePool {
     /// Cost model per worker, in worker order (the wire protocol's
     /// `hello` frame quotes these to remote coordinators).
     pub fn worker_cost_models(&self) -> Vec<CostModel> {
-        self.workers.iter().map(|w| w.cost).collect()
+        self.table.entries.iter().map(|w| w.cost).collect()
     }
 
     /// Outstanding queued work per worker, in each worker's own
     /// cost-model units (the quantity least-loaded dispatch compares).
     /// Observability + tests; values drop as workers complete jobs.
     pub fn worker_loads(&self) -> Vec<i64> {
-        self.workers
+        self.table
+            .entries
             .iter()
             .map(|w| w.load.load(Ordering::Relaxed))
             .collect()
     }
 
-    fn spawn_worker(core_idx: usize, backend: Box<dyn ConvBackend>, metrics: Arc<Metrics>) -> Worker {
-        let capability = backend.capability();
-        let cost = backend.cost_model();
+    /// Liveness per worker, in worker order. Workers without a health
+    /// flag (local backends) always read healthy.
+    pub fn worker_health(&self) -> Vec<bool> {
+        self.table.entries.iter().map(|w| w.is_healthy()).collect()
+    }
+
+    /// Unhealthy→healthy transitions summed over every worker that
+    /// exposes a health flag — "how many times did a peer come back".
+    pub fn recovered_peers(&self) -> u64 {
+        self.table
+            .entries
+            .iter()
+            .filter_map(|w| w.health.as_ref())
+            .map(|h| h.recoveries())
+            .sum()
+    }
+
+    fn spawn_worker(
+        core_idx: usize,
+        backend: Box<dyn ConvBackend>,
+        rx: Receiver<WorkerMsg>,
+        table: Arc<WorkerTable>,
+    ) -> JoinHandle<()> {
         let name = backend.name();
-        let (tx, rx) = channel::<WorkerMsg>();
-        let load = Arc::new(AtomicI64::new(0));
-        let load_in_worker = Arc::clone(&load);
-        let handle = std::thread::Builder::new()
+        let cost = backend.cost_model();
+        std::thread::Builder::new()
             .name(format!("conv-{name}-{core_idx}"))
             .spawn(move || {
                 let mut backend = backend;
                 let mut resident_weights: Option<u64> = None;
-                while let Ok(WorkerMsg::Run(batch)) = rx.recv() {
-                    // Weight-stationary across the batch: first job pays
-                    // the weight DMA, the rest reuse the resident set
-                    // (backends that model DMA apply the discount).
-                    let batch_weights = batch.weights_id;
-                    for sub in batch.jobs {
-                        let reused = resident_weights == Some(batch_weights);
-                        let run = match backend.run(&sub.job.payload(reused)) {
-                            Ok(run) => run,
-                            Err(e) => {
-                                // A failing backend (a dropped remote
-                                // peer, a wedged device) must *fail* its
-                                // in-flight jobs, never hang the pool:
-                                // release the queued cost and answer
-                                // with an error result.
-                                load_in_worker.fetch_sub(
-                                    cost.cost(&sub.job.spec, sub.job.kind) as i64,
-                                    Ordering::Relaxed,
-                                );
-                                metrics.record_failure();
-                                let _ = sub.reply.send(ConvResult {
-                                    id: sub.job.id,
-                                    spec: sub.job.spec,
-                                    kind: sub.job.kind,
-                                    output: crate::model::Tensor::zeros(&[0]),
-                                    cycles: Default::default(),
-                                    core: core_idx,
-                                    backend: name,
-                                    latency: sub.enqueued.elapsed(),
-                                    weights_reused: false,
-                                    error: Some(e.to_string()),
-                                });
-                                continue;
-                            }
-                        };
-                        resident_weights = Some(batch_weights);
-
-                        let latency = sub.enqueued.elapsed();
-                        metrics.record_completion(
-                            sub.job.psums(),
-                            run.cycles.total.max(run.cycles.compute),
-                            latency,
-                            reused,
-                        );
-                        load_in_worker.fetch_sub(
-                            cost.cost(&sub.job.spec, sub.job.kind) as i64,
-                            Ordering::Relaxed,
-                        );
-                        // Receiver may have hung up (fire-and-forget); fine.
-                        let _ = sub.reply.send(ConvResult {
-                            id: sub.job.id,
-                            spec: sub.job.spec,
-                            kind: sub.job.kind,
-                            output: run.output,
-                            cycles: run.cycles,
-                            core: core_idx,
-                            backend: name,
-                            latency,
-                            weights_reused: reused,
-                            error: None,
-                        });
+                loop {
+                    match rx.recv() {
+                        Ok(WorkerMsg::Run(batch, tried)) => run_batch(
+                            &mut *backend,
+                            &mut resident_weights,
+                            &table,
+                            core_idx,
+                            name,
+                            cost,
+                            batch,
+                            tried,
+                        ),
+                        Ok(WorkerMsg::Shutdown) | Err(_) => break,
                     }
                 }
+                // Failover hops from still-draining siblings can land
+                // behind the Shutdown marker: serve them instead of
+                // dropping their replies.
+                while let Ok(WorkerMsg::Run(batch, tried)) = rx.try_recv() {
+                    run_batch(
+                        &mut *backend,
+                        &mut resident_weights,
+                        &table,
+                        core_idx,
+                        name,
+                        cost,
+                        batch,
+                        tried,
+                    );
+                }
             })
-            .expect("spawn conv worker");
-        Worker {
-            tx,
-            handle,
-            load,
-            capability,
-            cost,
-            name,
-        }
+            .expect("spawn conv worker")
     }
 
-    /// Dispatch a closed batch to the least-loaded *capable* worker.
-    /// Returns the batch untouched when no worker in the pool can serve
-    /// its (spec, kind, accum) — kind mask, accumulator-mode match and
-    /// any backend spec allowlist.
+    /// Dispatch a closed batch to the least-loaded *capable* worker
+    /// (healthy ones preferred). Returns the batch untouched when no
+    /// worker in the pool can serve its (spec, kind, accum) — kind
+    /// mask, accumulator-mode match and any backend spec allowlist.
     pub fn try_dispatch(&self, batch: Batch) -> Result<(), Batch> {
-        let kind = batch.kind;
-        let worker = self
-            .workers
-            .iter()
-            .filter(|w| w.capability.allows(&batch.spec, kind, batch.accum))
-            .min_by_key(|w| w.load.load(Ordering::Relaxed));
-        let Some(worker) = worker else {
+        let Some(idx) = self
+            .table
+            .pick(&batch.spec, batch.kind, batch.accum, &[])
+        else {
             return Err(batch);
         };
-        let total: i64 = batch
-            .jobs
-            .iter()
-            .map(|s| worker.cost.cost(&s.job.spec, s.job.kind) as i64)
-            .sum();
-        worker.load.fetch_add(total, Ordering::Relaxed);
-        self.metrics
-            .requests
-            .fetch_add(batch.jobs.len() as u64, Ordering::Relaxed);
-        worker
-            .tx
-            .send(WorkerMsg::Run(batch))
-            .expect("worker alive while pool alive");
+        let n_jobs = batch.jobs.len() as u64;
+        self.table.send_batch(idx, batch, Vec::new())?;
+        self.metrics.requests.fetch_add(n_jobs, Ordering::Relaxed);
         Ok(())
     }
 
@@ -235,18 +430,18 @@ impl CorePool {
                 "no backend in the pool supports {:?} jobs in {:?} accum mode ({} workers)",
                 batch.kind,
                 batch.accum,
-                self.workers.len()
+                self.table.entries.len()
             );
         }
     }
 
     /// Graceful shutdown: drain queues, join threads.
     pub fn shutdown(self) {
-        for w in &self.workers {
-            let _ = w.tx.send(WorkerMsg::Shutdown);
+        for e in &self.table.entries {
+            let _ = e.tx.send(WorkerMsg::Shutdown);
         }
-        for w in self.workers {
-            let _ = w.handle.join();
+        for h in self.handles {
+            let _ = h.join();
         }
     }
 }
@@ -669,7 +864,37 @@ mod tests {
     }
 
     #[test]
-    fn failing_backend_answers_with_error_results_and_releases_load() {
+    fn failing_worker_fails_over_to_capable_sibling() {
+        // The tentpole contract: a worker that fails a job no longer
+        // surfaces the error — the job is re-enqueued on the capable
+        // sibling and *succeeds*. Ties in least-loaded selection go to
+        // worker 0, so the single job deterministically hits the
+        // failing worker first.
+        let backends: Vec<Box<dyn ConvBackend>> =
+            vec![Box::new(FailingBackend), Box::new(GoldenBackend::new())];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        let job = ConvJob::synthetic(7, QUICKSTART, 7);
+        let want = golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false);
+        pool.dispatch(batch_of(job, &tx));
+        let res = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(res.error.is_none(), "failover must rescue the job: {:?}", res.error);
+        assert_eq!(res.backend, "golden-cpu");
+        assert_eq!(res.output.data(), want.data());
+        // One failover hop, zero terminal failures; both queues drained.
+        let m = &pool.metrics;
+        assert_eq!(m.retried.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(pool.worker_loads(), vec![0, 0]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn lone_failing_worker_answers_error_results_and_releases_load() {
+        // With no capable sibling there is nothing to fail over to: the
+        // old contract holds — every job answered with an error result,
+        // load released, nothing hangs.
         let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(FailingBackend)];
         let pool = CorePool::with_backends(backends, IpCoreConfig::default());
         let (tx, rx) = channel();
@@ -686,10 +911,105 @@ mod tests {
         }
         // Failed jobs must release their queued cost like completed ones.
         assert_eq!(pool.worker_loads(), vec![0]);
+        let m = &pool.metrics;
+        assert_eq!(m.failed.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(m.retried.load(std::sync::atomic::Ordering::Relaxed), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn all_failing_pool_exhausts_bounded_attempts_then_errors() {
+        // Four capable workers, all failing: the job must stop after
+        // MAX_DISPATCH_ATTEMPTS distinct workers (initial + 2 hops),
+        // answer exactly one error result, and leave every queue empty
+        // — not ping-pong forever.
+        let backends: Vec<Box<dyn ConvBackend>> = (0..4)
+            .map(|_| Box::new(FailingBackend) as Box<dyn ConvBackend>)
+            .collect();
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let (tx, rx) = channel();
+        pool.dispatch(batch_of(ConvJob::synthetic(1, QUICKSTART, 1), &tx));
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 1, "exactly one (error) answer");
+        assert!(results[0].error.is_some());
+        let m = &pool.metrics;
         assert_eq!(
-            pool.metrics.failed.load(std::sync::atomic::Ordering::Relaxed),
-            3
+            m.retried.load(std::sync::atomic::Ordering::Relaxed) as usize,
+            MAX_DISPATCH_ATTEMPTS - 1
         );
+        assert_eq!(m.failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(pool.worker_loads(), vec![0, 0, 0, 0]);
+        pool.shutdown();
+    }
+
+    /// Golden-equivalent backend carrying a controllable health flag —
+    /// stands in for a remote peer whose probe thread flips liveness.
+    struct HealthyBackend {
+        inner: GoldenBackend,
+        health: Arc<WorkerHealth>,
+    }
+
+    impl ConvBackend for HealthyBackend {
+        fn name(&self) -> &'static str {
+            "healthy-test"
+        }
+        fn capability(&self) -> Capability {
+            self.inner.capability()
+        }
+        fn cost_model(&self) -> CostModel {
+            self.inner.cost_model()
+        }
+        fn health(&self) -> Option<Arc<WorkerHealth>> {
+            Some(Arc::clone(&self.health))
+        }
+        fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+            self.inner.run(job)
+        }
+    }
+
+    #[test]
+    fn unhealthy_worker_is_routed_around_while_a_healthy_sibling_exists() {
+        let h0 = WorkerHealth::new();
+        let h1 = WorkerHealth::new();
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(HealthyBackend {
+                inner: GoldenBackend::new(),
+                health: Arc::clone(&h0),
+            }),
+            Box::new(HealthyBackend {
+                inner: GoldenBackend::new(),
+                health: Arc::clone(&h1),
+            }),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        // Worker 0 goes unhealthy: traffic that would tie-break onto it
+        // must route to worker 1 instead.
+        h0.set_healthy(false);
+        assert_eq!(pool.worker_health(), vec![false, true]);
+        let (tx, rx) = channel();
+        for i in 0..4u64 {
+            pool.dispatch(batch_of(ConvJob::synthetic(i, QUICKSTART, i), &tx));
+        }
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert!(r.error.is_none());
+            assert_eq!(r.core, 1, "job {} routed to the unhealthy worker", r.id);
+        }
+        // All-unhealthy pool: capacity degrades, correctness does not —
+        // jobs still route (and here still succeed).
+        h1.set_healthy(false);
+        let (tx, rx) = channel();
+        pool.dispatch(batch_of(ConvJob::synthetic(9, QUICKSTART, 9), &tx));
+        drop(tx);
+        let res = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(res.error.is_none());
+        // Recovery edges are counted once per outage.
+        h0.set_healthy(true);
+        h0.set_healthy(true);
+        assert_eq!(pool.recovered_peers(), 1);
         pool.shutdown();
     }
 

@@ -60,8 +60,17 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     /// Jobs a backend failed (answered with an error result) — e.g. a
-    /// dropped remote peer. Not counted in `completed`.
+    /// dropped remote peer. Not counted in `completed`. With failover
+    /// this counts *terminal* failures only: a job that fails on one
+    /// worker and succeeds on a sibling counts in `retried` and
+    /// `completed`, not here.
     pub failed: AtomicU64,
+    /// Failover hops: a worker failed a job and the pool re-enqueued it
+    /// on a capable sibling. One job can contribute several hops.
+    pub retried: AtomicU64,
+    /// Requests refused up front by admission control (the client got a
+    /// fast `rejected` answer instead of queueing).
+    pub shed: AtomicU64,
     pub psums: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub weight_dma_skipped: AtomicU64,
@@ -83,10 +92,20 @@ impl Metrics {
         self.latency.record(latency);
     }
 
-    /// Record a job a backend failed (the pool answered it with an
-    /// error result instead of numerics).
+    /// Record a job a backend failed terminally (the pool answered it
+    /// with an error result instead of numerics).
     pub fn record_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one failover hop (job re-enqueued on a sibling worker).
+    pub fn record_retry(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request shed by admission control.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Simulated GOPS in the paper's PSUM accounting, given the board

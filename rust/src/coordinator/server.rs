@@ -32,6 +32,14 @@ use std::time::{Duration, Instant};
 /// [`RemoteBackend`] per remote peer — dialled now, so an unreachable
 /// peer is a construction error rather than a silently smaller pool.
 pub fn build_pool(config: &CoordinatorConfig) -> anyhow::Result<CorePool> {
+    // Misconfiguration is a construction error, not a runtime panic or
+    // a silently wedged deployment.
+    if let Some(0) = config.max_inflight_psums {
+        anyhow::bail!(
+            "max_inflight_psums = 0 admits no concurrent work; \
+             use None for an unbounded pool or a positive budget"
+        );
+    }
     let mut backends: Vec<Box<dyn ConvBackend>> = Vec::new();
     for _ in 0..config.n_cores {
         backends.push(Box::new(SimBackend::new(config.ip)));
@@ -72,6 +80,15 @@ pub struct Report {
     /// Jobs answered with an error result (e.g. a dropped remote peer)
     /// — answered, never lost, but carrying no numerics.
     pub n_errors: usize,
+    /// Requests refused up front by admission control (fast rejection,
+    /// never queued; not counted in `n_requests`' answered results).
+    pub n_shed: usize,
+    /// Failover hops: jobs a worker failed that the pool re-enqueued on
+    /// a capable sibling (one job can contribute several hops).
+    pub n_retried: usize,
+    /// Unhealthy→healthy transitions observed across the pool's
+    /// health-tracked (remote) workers — peers that came back.
+    pub n_recovered_peers: u64,
     /// Answered jobs per backend name (heterogeneous-pool routing;
     /// remote workers appear as `remote@host:port`).
     pub backend_mix: Vec<(&'static str, usize)>,
@@ -99,12 +116,34 @@ impl Server {
     /// `max_inflight_psums` is set, submission blocks on backpressure
     /// while a collector thread drains completions.
     pub fn run_trace(&mut self, trace: &[TraceEntry]) -> Report {
-        use super::backpressure::{AdmissionController, Policy};
+        self.run_trace_with(trace, &mut |_| {})
+    }
+
+    /// Like [`Self::run_trace`], but paces submission by each entry's
+    /// `arrival_us` (so the trace is an open-loop arrival process, not
+    /// an instantaneous burst) and calls `on_entry(i)` just before
+    /// submitting entry `i` — the chaos harness's hook for killing and
+    /// reviving peers mid-trace. Blocked admission waits are bounded by
+    /// a backstop deadline: a wedged pool sheds instead of hanging the
+    /// run, and shed entries are reported in [`Report::n_shed`] rather
+    /// than answered.
+    pub fn run_trace_with(
+        &mut self,
+        trace: &[TraceEntry],
+        on_entry: &mut dyn FnMut(usize),
+    ) -> Report {
+        use super::backpressure::{Admission, AdmissionController, Policy};
         use std::sync::Arc;
+
+        /// How long a Block-policy submitter waits for the pool to
+        /// drain before shedding the entry. Generous enough that only a
+        /// genuinely wedged pool ever trips it.
+        const ADMIT_BACKSTOP: Duration = Duration::from_secs(60);
 
         let mut batcher = Batcher::new(self.config.batch);
         let (tx, rx) = channel::<ConvResult>();
         let start = Instant::now();
+        let mut n_shed = 0usize;
 
         let admission = self
             .config
@@ -127,14 +166,30 @@ impl Server {
         };
 
         for (i, entry) in trace.iter().enumerate() {
+            on_entry(i);
+            // Open-loop pacing: wait out the gap to this entry's
+            // arrival time (arrival_us is absolute from trace start; a
+            // mean_gap_us=0 trace degenerates to the old burst).
+            let due = Duration::from_micros(entry.arrival_us);
+            if let Some(wait) = due.checked_sub(start.elapsed()) {
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+            }
             if let Some(ac) = &admission {
                 // Admitted-but-unbatched work can't complete; flush open
                 // batches before blocking or the budget never frees.
-                if ac.admit(entry.psums(), Policy::Reject) == super::backpressure::Admission::Rejected {
+                if ac.admit(entry.psums(), Policy::Reject) == Admission::Rejected {
                     for open in batcher.flush() {
                         self.pool.dispatch(open);
                     }
-                    ac.admit(entry.psums(), Policy::Block);
+                    if ac.admit_deadline(entry.psums(), ADMIT_BACKSTOP) == Admission::Rejected {
+                        // Wedged (or shutting-down) pool: shed rather
+                        // than hang the submitter forever.
+                        self.pool.metrics.record_shed();
+                        n_shed += 1;
+                        continue;
+                    }
                 }
             }
             let job = match entry.kind {
@@ -157,7 +212,11 @@ impl Server {
 
         let results = collector.join().expect("collector thread");
         let wall = start.elapsed();
-        assert_eq!(results.len(), trace.len(), "every request answered");
+        assert_eq!(
+            results.len(),
+            trace.len() - n_shed,
+            "every admitted request answered"
+        );
 
         let mut mix: BTreeMap<&'static str, usize> = BTreeMap::new();
         let mut n_errors = 0usize;
@@ -186,6 +245,9 @@ impl Server {
             },
             host_rps: results.len() as f64 / wall.as_secs_f64().max(1e-9),
             n_errors,
+            n_shed: m.shed.load(Ordering::Relaxed) as usize,
+            n_retried: m.retried.load(Ordering::Relaxed) as usize,
+            n_recovered_peers: self.pool.recovered_peers(),
             backend_mix: mix.into_iter().collect(),
         }
     }
@@ -204,13 +266,16 @@ impl Report {
             .collect::<Vec<_>>()
             .join(",");
         format!(
-            "requests={} cores={} wall={:?} host_rps={:.1} errors={}\n\
+            "requests={} cores={} wall={:?} host_rps={:.1} errors={} shed={} retried={} recovered_peers={}\n\
              sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% mix=[{}]",
             self.n_requests,
             self.n_cores,
             self.wall,
             self.host_rps,
             self.n_errors,
+            self.n_shed,
+            self.n_retried,
+            self.n_recovered_peers,
             self.sim_gops_psum,
             self.total_psums,
             self.p50_us,
@@ -227,6 +292,9 @@ impl Report {
             ("n_requests", Json::num(self.n_requests as f64)),
             ("n_cores", Json::num(self.n_cores as f64)),
             ("n_errors", Json::num(self.n_errors as f64)),
+            ("n_shed", Json::num(self.n_shed as f64)),
+            ("n_retried", Json::num(self.n_retried as f64)),
+            ("n_recovered_peers", Json::num(self.n_recovered_peers as f64)),
             ("wall_us", Json::num(self.wall.as_micros() as f64)),
             ("host_rps", Json::num(self.host_rps)),
             ("sim_gops_psum", Json::num(self.sim_gops_psum)),
@@ -347,12 +415,74 @@ mod tests {
     }
 
     #[test]
+    fn build_pool_rejects_zero_total_workers() {
+        let cfg = CoordinatorConfig {
+            n_cores: 0,
+            ..CoordinatorConfig::default()
+        };
+        let err = build_pool(&cfg).expect_err("empty pool must not build");
+        assert!(err.to_string().contains("empty pool"), "{err}");
+    }
+
+    #[test]
+    fn build_pool_rejects_unreachable_remote_peer() {
+        // Port 1 is essentially never bound; dialling must surface a
+        // clean construction error, not a panic or a silent absence.
+        let cfg = CoordinatorConfig {
+            n_cores: 0,
+            ..CoordinatorConfig::default().with_remote_peer("127.0.0.1:1")
+        };
+        assert!(build_pool(&cfg).is_err(), "dead peer must fail construction");
+    }
+
+    #[test]
+    fn build_pool_rejects_zero_admission_budget() {
+        let cfg = CoordinatorConfig {
+            max_inflight_psums: Some(0),
+            ..CoordinatorConfig::default()
+        };
+        let err = build_pool(&cfg).expect_err("zero budget must not build");
+        assert!(err.to_string().contains("max_inflight_psums"), "{err}");
+        // Same config through the server front door: clean error too.
+        assert!(Server::try_new(cfg).is_err());
+    }
+
+    #[test]
+    fn paced_trace_respects_arrival_times() {
+        let mut server = Server::new(CoordinatorConfig::default());
+        // 8 entries, ~2 ms mean gap: the run cannot finish faster than
+        // the last arrival.
+        let trace = generate(&TraceConfig {
+            n: 8,
+            mean_gap_us: 2000,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.0,
+            seed: 9,
+        });
+        let last_arrival = trace.last().unwrap().arrival_us;
+        assert!(last_arrival > 0);
+        let mut seen = Vec::new();
+        let report = server.run_trace_with(&trace, &mut |i| seen.push(i));
+        assert_eq!(report.n_requests, 8);
+        assert_eq!(seen, (0..8).collect::<Vec<_>>(), "hook fires per entry, in order");
+        assert!(
+            report.wall >= Duration::from_micros(last_arrival),
+            "paced run finished before its last arrival: {:?} < {last_arrival}us",
+            report.wall
+        );
+        server.shutdown();
+    }
+
+    #[test]
     fn report_to_json_is_machine_readable() {
         let mut server = Server::new(CoordinatorConfig::default());
         let report = server.run_trace(&small_trace(4));
         let j = report.to_json();
         assert_eq!(j.get(&["n_requests"]).unwrap().as_usize(), Some(4));
         assert_eq!(j.get(&["n_errors"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.get(&["n_shed"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.get(&["n_retried"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.get(&["n_recovered_peers"]).unwrap().as_usize(), Some(0));
         assert!(j.get(&["host_rps"]).unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(
             j.get(&["backend_mix", "sim-ipcore-i32"]).unwrap().as_usize(),

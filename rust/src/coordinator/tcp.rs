@@ -80,6 +80,43 @@
 //! (e.g. this peer's own remote sub-peer dropping) all answer with an
 //! error frame on the same id — a request never silently disappears.
 //!
+//! ## rejected (server → client)
+//!
+//! ```text
+//! <- {"id":9,"ok":false,"rejected":true,
+//!     "error":"admission: 2048 PSUMs would exceed the in-flight budget"}
+//! ```
+//!
+//! Load shedding. When the server runs with an in-flight PSUM budget
+//! ([`CoordinatorConfig::max_inflight_psums`]) and a request's cost
+//! quote would blow it, the server answers *immediately* with
+//! `"rejected":true` instead of queueing — the fast-error admission
+//! answer. Clients that predate the field still see a well-formed
+//! error frame (`ok:false`, same id); the extra key is ignored.
+//!
+//! ## `ping` (client → server) / `pong` (server → client) — negotiated
+//!
+//! ```text
+//! -> {"ping":1}
+//! <- {"pong":1}
+//! ```
+//!
+//! Lightweight health probe (no `id`, echoes the ping's sequence
+//! number). Feature-negotiated via the hello: a server that answers
+//! pings advertises `"ping":true` inside its `hello` object; clients
+//! must not send `ping` frames to peers whose hello lacks the flag
+//! (plain v2 peers would treat them as malformed requests). Pings are
+//! answered before admission control — probing a saturated server must
+//! not be shed.
+//!
+//! # Version negotiation
+//!
+//! `proto` stays 2 — peers reject any other revision outright.
+//! Capabilities *within* v2 are negotiated by the presence of hello
+//! fields (`"ping":true` today): unknown hello fields, unknown request
+//! fields and unknown reply fields must all be ignored, so a newer
+//! server interoperates with an older client and vice versa.
+//!
 //! # Shutdown
 //!
 //! [`TcpServer::stop`] drains: it stops accepting, joins every
@@ -88,6 +125,7 @@
 //! shutdown), and only then shuts the worker pool down — in-flight
 //! jobs complete and are answered before the pool dies.
 
+use super::backpressure::{Admission, AdmissionController, Policy};
 use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
 use super::request::{fnv1a_bytes, weights_fingerprint_salted, ConvJob, ConvResult, Submission};
@@ -171,9 +209,21 @@ pub struct TcpServer {
     pub addr: std::net::SocketAddr,
     listener_thread: std::thread::JoinHandle<()>,
     shutdown: Arc<AtomicBool>,
+    /// Chaos switch: while set, the accept loop drops new connections
+    /// and [`Self::set_down`] has severed every live one.
+    down: Arc<AtomicBool>,
     /// Per-connection handler threads, tracked so [`Self::stop`] can
     /// drain them instead of racing detached threads.
     conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    /// One monitor clone per live connection's socket, registered
+    /// *before* the handler greets the client, so [`Self::set_down`]
+    /// can sever every connection a client has seen a hello on. Each
+    /// handler holds its monitor's other `Arc` until it exits, which is
+    /// how the listener prunes dead entries (`strong_count == 1`).
+    live: Arc<Mutex<Vec<Arc<TcpStream>>>>,
+    /// In-flight PSUM budget (admission control), present when the
+    /// config sets `max_inflight_psums`.
+    admission: Option<Arc<AdmissionController>>,
     pool: Arc<CorePool>,
 }
 
@@ -383,6 +433,9 @@ fn hello_json(pool: &CorePool) -> Json {
         "hello",
         Json::obj(vec![
             ("proto", Json::num(PROTO_VERSION as f64)),
+            // In-revision feature flag (see "Version negotiation"):
+            // this server answers `ping` control frames.
+            ("ping", Json::Bool(true)),
             ("freq_hz", Json::num(pool.ip_config().freq_hz as f64)),
             ("cores", Json::num(pool.n_cores() as f64)),
             ("workers", Json::Arr(workers)),
@@ -391,11 +444,22 @@ fn hello_json(pool: &CorePool) -> Json {
 }
 
 /// Parse, dispatch and answer one request line.
-fn process_line(line: &str, pool: &CorePool, fallback_id: u64, freq: u64) -> Json {
+fn process_line(
+    line: &str,
+    pool: &CorePool,
+    fallback_id: u64,
+    freq: u64,
+    admission: Option<&AdmissionController>,
+) -> Json {
     let req = match Json::parse(line) {
         Err(e) => return error_json(fallback_id, &format!("bad json: {e}")),
         Ok(req) => req,
     };
+    // Ping control frame: answered before job parsing and before
+    // admission — a health probe must stay cheap and is never shed.
+    if let Some(seq) = req.get(&["ping"]).and_then(Json::as_f64) {
+        return Json::obj(vec![("pong", Json::num(seq))]);
+    }
     let req_id = req
         .get(&["id"])
         .and_then(Json::as_f64)
@@ -409,6 +473,26 @@ fn process_line(line: &str, pool: &CorePool, fallback_id: u64, freq: u64) -> Jso
         Err(e) => return error_json(req_id, &e),
         Ok(job) => job,
     };
+    // Admission control gates on the job's PSUM quote (the unit the
+    // dispatcher balances by) with the fast-reject serving policy: an
+    // over-budget request gets a `rejected` frame now, not a queue slot.
+    let psums = job.psums();
+    if let Some(ac) = admission {
+        if ac.admit(psums, Policy::Reject) == Admission::Rejected {
+            pool.metrics.record_shed();
+            let msg = format!(
+                "admission: {psums} PSUMs would exceed the in-flight budget ({}/{} in flight)",
+                ac.inflight(),
+                ac.capacity()
+            );
+            return Json::obj(vec![
+                ("id", Json::num(req_id as f64)),
+                ("ok", Json::Bool(false)),
+                ("rejected", Json::Bool(true)),
+                ("error", Json::str(&msg)),
+            ]);
+        }
+    }
     let (tx, rx) = channel();
     let spec = job.spec;
     let weights_id = job.weights_id;
@@ -428,6 +512,9 @@ fn process_line(line: &str, pool: &CorePool, fallback_id: u64, freq: u64) -> Jso
     // An unroutable job (e.g. depthwise against a standard-only pool)
     // is a client error on the wire, not a deployment panic.
     if let Err(back) = pool.try_dispatch(batch) {
+        if let Some(ac) = admission {
+            ac.complete(psums);
+        }
         return error_json(
             req_id,
             &format!(
@@ -436,10 +523,14 @@ fn process_line(line: &str, pool: &CorePool, fallback_id: u64, freq: u64) -> Jso
             ),
         );
     }
-    match rx.recv() {
+    let reply = match rx.recv() {
         Ok(result) => response_json(&result, freq, full_output),
         Err(_) => error_json(req_id, "worker dropped"),
+    };
+    if let Some(ac) = admission {
+        ac.complete(psums);
     }
+    reply
 }
 
 fn handle_connection(
@@ -448,6 +539,11 @@ fn handle_connection(
     next_id: Arc<AtomicU64>,
     hello_line: Arc<String>,
     shutdown: Arc<AtomicBool>,
+    down: Arc<AtomicBool>,
+    admission: Option<Arc<AdmissionController>>,
+    // Held (not used) until this handler returns: the listener prunes
+    // the chaos-kill registry by the monitor's refcount.
+    _monitor: Arc<TcpStream>,
 ) {
     let freq = pool.ip_config().freq_hz;
     stream.set_nodelay(true).ok();
@@ -468,7 +564,7 @@ fn handle_connection(
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
     loop {
-        if shutdown.load(Ordering::Relaxed) {
+        if shutdown.load(Ordering::Relaxed) || down.load(Ordering::Relaxed) {
             break;
         }
         match read_line_capped(&mut reader, &mut buf, MAX_LINE_BYTES) {
@@ -481,7 +577,7 @@ fn handle_connection(
                         None
                     } else {
                         let id = next_id.fetch_add(1, Ordering::Relaxed);
-                        Some(process_line(trimmed, &pool, id, freq))
+                        Some(process_line(trimmed, &pool, id, freq, admission.as_deref()))
                     }
                 };
                 buf.clear();
@@ -516,14 +612,22 @@ impl TcpServer {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let pool = Arc::new(super::server::build_pool(&config)?);
+        let admission = config
+            .max_inflight_psums
+            .map(|m| Arc::new(AdmissionController::new(m)));
         let hello_line = Arc::new(hello_json(&pool).to_json());
         let next_id = Arc::new(AtomicU64::new(1));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let down = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
             Arc::new(Mutex::new(Vec::new()));
+        let live: Arc<Mutex<Vec<Arc<TcpStream>>>> = Arc::new(Mutex::new(Vec::new()));
         let shutdown_flag = Arc::clone(&shutdown);
+        let down_flag = Arc::clone(&down);
         let conns_in_listener = Arc::clone(&conns);
+        let live_in_listener = Arc::clone(&live);
         let pool_in_listener = Arc::clone(&pool);
+        let admission_in_listener = admission.clone();
         listener.set_nonblocking(true)?;
         let listener_thread = std::thread::Builder::new()
             .name("repro-tcp".into())
@@ -534,13 +638,38 @@ impl TcpServer {
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // Chaos: a "dead" peer accepts nothing. The
+                            // socket closes without a hello, which a
+                            // dialing client reads as connection refused.
+                            if down_flag.load(Ordering::Relaxed) {
+                                drop(stream);
+                                continue;
+                            }
                             stream.set_nonblocking(false).ok();
+                            let monitor = match stream.try_clone() {
+                                Ok(m) => Arc::new(m),
+                                Err(_) => continue,
+                            };
+                            // Register the monitor before the handler
+                            // can greet: once a client sees the hello,
+                            // set_down is guaranteed to find (and can
+                            // sever) this connection.
+                            {
+                                let mut live = live_in_listener.lock().unwrap();
+                                live.retain(|s| Arc::strong_count(s) > 1);
+                                live.push(Arc::clone(&monitor));
+                            }
                             let pool = Arc::clone(&pool_in_listener);
                             let next_id = Arc::clone(&next_id);
                             let hello = Arc::clone(&hello_line);
                             let shutdown = Arc::clone(&shutdown_flag);
+                            let down = Arc::clone(&down_flag);
+                            let admission = admission_in_listener.clone();
                             let handle = std::thread::spawn(move || {
-                                handle_connection(stream, pool, next_id, hello, shutdown)
+                                handle_connection(
+                                    stream, pool, next_id, hello, shutdown, down, admission,
+                                    monitor,
+                                )
                             });
                             let mut conns = conns_in_listener.lock().unwrap();
                             // Reap finished handlers so long-lived
@@ -559,7 +688,10 @@ impl TcpServer {
             addr: local,
             listener_thread,
             shutdown,
+            down,
             conns,
+            live,
+            admission,
             pool,
         })
     }
@@ -570,10 +702,45 @@ impl TcpServer {
         hello_json(&self.pool)
     }
 
+    /// This server's serving metrics (chaos harnesses and tests assert
+    /// per-peer completion/shed counts through this).
+    pub fn metrics(&self) -> Arc<super::metrics::Metrics> {
+        Arc::clone(&self.pool.metrics)
+    }
+
+    /// The admission controller, when the config set an in-flight PSUM
+    /// budget (tests pre-load it to exercise shedding deterministically).
+    pub fn admission(&self) -> Option<Arc<AdmissionController>> {
+        self.admission.clone()
+    }
+
+    /// Chaos hook: simulate this peer crashing (`down = true`) and
+    /// coming back (`down = false`) without releasing the port. While
+    /// down, every live connection is severed mid-stream and the accept
+    /// loop drops new connections before the hello — exactly what a
+    /// dialing client sees from a crashed process. Reviving restores
+    /// service for *new* connections; severed ones stay dead (clients
+    /// must redial, as they would after a real crash).
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::Relaxed);
+        if down {
+            let live = self.live.lock().unwrap();
+            for s in live.iter() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+
     /// Stop accepting, drain every connection handler (in-flight
     /// requests are answered first), then shut the pool down.
     pub fn stop(self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        // Unwedge any submitter parked on the admission Condvar before
+        // joining handlers — a stopping server must not hang on its own
+        // backpressure.
+        if let Some(ac) = &self.admission {
+            ac.shutdown();
+        }
         let _ = self.listener_thread.join();
         loop {
             let handle = self.conns.lock().unwrap().pop();
@@ -654,6 +821,8 @@ mod tests {
         let (hello, _stream, _reader) = connect_raw(server.addr);
         let h = hello.get(&["hello"]).expect("hello frame");
         assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
+        // In-revision feature flag: this server answers pings.
+        assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["cores"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["freq_hz"]).unwrap().as_f64().unwrap() > 0.0);
         let workers = h.get(&["workers"]).unwrap().as_arr().unwrap();
@@ -938,6 +1107,89 @@ mod tests {
         seen.sort();
         assert_eq!(seen, vec![0, 1, 2]);
         drop(stream);
+        server.stop();
+    }
+
+    #[test]
+    fn ping_round_trips_a_pong() {
+        let server = start_n(1);
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        writeln!(stream, r#"{{"ping":7}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get(&["pong"]).unwrap().as_usize(), Some(7));
+        assert!(resp.get(&["id"]).is_none(), "pongs carry no id");
+        // The connection still serves normal requests afterwards.
+        writeln!(stream, r#"{{"id":1,"spec":{{"c":4,"h":8,"w":8,"k":4}},"seed":1}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true));
+        server.stop();
+    }
+
+    #[test]
+    fn over_budget_request_gets_fast_rejected_frame() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig {
+                max_inflight_psums: Some(100),
+                ..CoordinatorConfig::default().with_cores(1)
+            },
+        )
+        .unwrap();
+        let ac = server.admission().expect("budgeted server has a controller");
+        // Deterministically saturate the budget, as concurrent in-flight
+        // work would.
+        use crate::coordinator::backpressure::{Admission, Policy};
+        assert_eq!(ac.admit(100, Policy::Reject), Admission::Admitted);
+        let req = Json::parse(r#"{"id":3,"spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#).unwrap();
+        let t0 = std::time::Instant::now();
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "rejection must be fast, not queued"
+        );
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert_eq!(resp.get(&["rejected"]).unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get(&["id"]).unwrap().as_usize(), Some(3));
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("admission:"));
+        assert_eq!(server.metrics().shed.load(Ordering::Relaxed), 1);
+        // Budget frees -> the same request is served.
+        ac.complete(100);
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(ac.inflight(), 0, "served request released its charge");
+        server.stop();
+    }
+
+    #[test]
+    fn set_down_severs_connections_and_revive_restores_service() {
+        let server = start_n(1);
+        let (_hello, _stream, mut reader) = connect_raw(server.addr);
+        server.set_down(true);
+        // The live connection is severed mid-stream: the client reads
+        // EOF (or a reset), never a reply.
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "severed connection must not produce data: {line:?}");
+        // New connections are dropped before the hello greeting.
+        let s2 = TcpStream::connect(server.addr).unwrap();
+        let mut r2 = BufReader::new(s2);
+        let mut l2 = String::new();
+        let n2 = r2.read_line(&mut l2).unwrap_or(0);
+        assert_eq!(n2, 0, "a down server must not greet: {l2:?}");
+        // Revive: fresh connections are served again.
+        server.set_down(false);
+        let req = Json::parse(r#"{"id":1,"spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#).unwrap();
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
         server.stop();
     }
 

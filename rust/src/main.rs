@@ -21,9 +21,18 @@
 //! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N]
 //!                                       serve wire protocol v2 over TCP
 //! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
+//!             [--gap-us G] [--max-inflight P]
+//!             [--kill-peer-after K] [--revive-after M]
 //!                                       multi-machine demo: spawn N in-process TCP
 //!                                       peers, front them with one remote-core pool,
-//!                                       run a mixed trace through the fleet
+//!                                       run a mixed trace through the fleet.
+//!                                       Chaos mode: --kill-peer-after K severs the
+//!                                       last peer just before trace entry K (its
+//!                                       port stays bound, connections drop);
+//!                                       --revive-after M brings it back at entry M
+//!                                       and the run then proves the revived peer
+//!                                       serves traffic again. Exits non-zero unless
+//!                                       every non-shed request succeeds.
 //! repro artifacts                       list the AOT artifact registry
 //! ```
 
@@ -274,12 +283,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The multi-machine demo, runnable in CI: spawn N in-process wire-v2
-/// TCP peers, front them with one pool of `RemoteBackend` workers, and
-/// push a mixed trace through the fleet. Exits non-zero unless every
-/// request is answered without error and remote workers served traffic.
+/// The multi-machine demo and chaos harness, runnable in CI: spawn N
+/// in-process wire-v2 TCP peers, front them with one pool of
+/// `RemoteBackend` workers, and push a mixed trace through the fleet —
+/// optionally killing (and reviving) the last peer mid-trace. Exits
+/// non-zero unless every non-shed request succeeds; with a revive, it
+/// additionally proves the revived peer serves traffic again.
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use repro::coordinator::tcp::TcpServer;
+    use std::sync::atomic::Ordering;
     let n = match args.positional.get(1) {
         None => 2,
         Some(s) => s
@@ -293,6 +305,30 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 64).map_err(|e| anyhow::anyhow!(e))?;
     let s52 = args.get_f64("s52", 0.05).map_err(|e| anyhow::anyhow!(e))?;
     let dw = args.get_f64("dw", 0.25).map_err(|e| anyhow::anyhow!(e))?;
+    let gap_us = args.get_u64("gap-us", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let opt_entry = |key: &str| -> anyhow::Result<Option<usize>> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects a trace-entry index")),
+        }
+    };
+    let kill_after = opt_entry("kill-peer-after")?;
+    let revive_after = opt_entry("revive-after")?;
+    if let Some(k) = kill_after {
+        anyhow::ensure!(n >= 2, "chaos mode needs at least two peers to fail over between");
+        anyhow::ensure!(k < requests, "--kill-peer-after {k} is past the end of the trace");
+        if let Some(m) = revive_after {
+            anyhow::ensure!(m > k, "--revive-after must come after --kill-peer-after");
+        }
+    } else {
+        anyhow::ensure!(
+            revive_after.is_none(),
+            "--revive-after without --kill-peer-after"
+        );
+    }
 
     let mut peers = Vec::new();
     for _ in 0..n {
@@ -317,21 +353,69 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     let mut config = front_config(cores, 0, 0, None)?;
     config = config.with_remote_peers(peer_addrs);
+    if let Some(m) = args.get("max-inflight") {
+        config.max_inflight_psums = Some(
+            m.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--max-inflight expects a PSUM budget"))?,
+        );
+    }
     let mut front = Server::try_new(config)?;
     let trace = generate(&TraceConfig {
         n: requests,
-        mean_gap_us: 0,
+        mean_gap_us: gap_us,
         s52_fraction: s52,
         depthwise_fraction: dw,
         seed: 17,
     });
-    let report = front.run_trace(&trace);
+    // The chaos target is always the *last* peer: with default flags it
+    // never serves alone, so siblings exist to fail over onto.
+    let report = front.run_trace_with(&trace, &mut |i| {
+        if kill_after == Some(i) {
+            println!("chaos: killing peer {} before entry {i}", n - 1);
+            peers[n - 1].set_down(true);
+        }
+        if revive_after == Some(i) {
+            println!("chaos: reviving peer {} before entry {i}", n - 1);
+            peers[n - 1].set_down(false);
+        }
+    });
     println!("{}", report.render());
     write_bench_json(args, &report)?;
     let served_remote = report
         .backend_mix
         .iter()
         .any(|(name, _)| name.starts_with("remote@"));
+
+    // With a revive, prove recovery end to end: keep pushing small
+    // traffic waves until the revived peer answers some of them (the
+    // front's health probe needs a beat to re-dial and flip it back).
+    let mut revived_served = revive_after.is_none();
+    if revive_after.is_some() {
+        // A revive index past the trace end never fired during the run;
+        // apply it now (idempotent otherwise) so recovery is exercised.
+        peers[n - 1].set_down(false);
+        let before = peers[n - 1].metrics().completed.load(Ordering::Relaxed);
+        for _wave in 0..50 {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let wave = generate(&TraceConfig {
+                n: 4,
+                mean_gap_us: 0,
+                s52_fraction: 0.0,
+                depthwise_fraction: 0.0,
+                seed: 99,
+            });
+            let r = front.run_trace(&wave);
+            anyhow::ensure!(r.n_errors == 0, "recovery wave had {} job errors", r.n_errors);
+            if peers[n - 1].metrics().completed.load(Ordering::Relaxed) > before {
+                revived_served = true;
+                break;
+            }
+        }
+        println!(
+            "chaos: revived peer served traffic again: {revived_served}"
+        );
+    }
+
     front.shutdown();
     for p in peers {
         p.stop();
@@ -346,7 +430,18 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "no remote worker served traffic: {:?}",
         report.backend_mix
     );
-    println!("fleet OK: every request answered; remote workers in the mix");
+    anyhow::ensure!(
+        revived_served,
+        "revived peer never served traffic again"
+    );
+    if kill_after.is_some() {
+        println!(
+            "fleet OK under chaos: every non-shed request answered (shed={}, retried={}, recovered_peers={})",
+            report.n_shed, report.n_retried, report.n_recovered_peers
+        );
+    } else {
+        println!("fleet OK: every request answered; remote workers in the mix");
+    }
     Ok(())
 }
 

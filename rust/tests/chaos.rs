@@ -1,0 +1,234 @@
+//! Chaos leg of the parity harness: the failure-tolerant serving front
+//! under a mid-trace peer kill.
+//!
+//! Three in-process wire-v2 peers join one remote-only front pool. One
+//! peer is severed mid-trace (its port stays bound — connections drop,
+//! exactly a crashed process) and later revived. The invariants:
+//!
+//! * every admitted request completes **bit-identical** to
+//!   `GoldenBackend` on the same tensors — failover hops may change
+//!   which worker answers, never the numerics (the parity harness's
+//!   contract, extended through dispatcher retries);
+//! * a failing worker's jobs are re-enqueued on capable siblings
+//!   (`retried` counts hops, `failed` stays zero);
+//! * the killed peer's worker is marked unhealthy by the background
+//!   probe and masked out of routing — degraded capacity, not
+//!   correctness;
+//! * after revival the probe flips it healthy again (`recovered_peers`)
+//!   and the peer serves fresh traffic.
+
+use repro::backend::{ConvBackend, GoldenBackend, JobKind};
+use repro::coordinator::batcher::Batch;
+use repro::coordinator::request::{ConvJob, ConvResult, Submission};
+use repro::coordinator::server::build_pool;
+use repro::coordinator::tcp::TcpServer;
+use repro::coordinator::{CoordinatorConfig, Server};
+use repro::model::trace::{generate, TraceConfig};
+use repro::model::Tensor;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+const N_PEERS: usize = 3;
+const N_REQUESTS: usize = 48;
+const KILL_AT: usize = 16;
+const REVIVE_AT: usize = 32;
+
+fn start_fleet() -> (Vec<TcpServer>, CoordinatorConfig) {
+    let mut peers = Vec::new();
+    for _ in 0..N_PEERS {
+        peers.push(
+            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
+                .expect("in-process wire-v2 peer"),
+        );
+    }
+    let addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
+    let config = CoordinatorConfig {
+        n_cores: 0,
+        ..CoordinatorConfig::default().with_remote_peers(addrs)
+    };
+    (peers, config)
+}
+
+/// Wrap one synthetic trace entry as a single-job batch plus the
+/// golden-reference output for its exact tensors.
+fn entry_to_case(
+    i: usize,
+    entry: &repro::model::trace::TraceEntry,
+    golden: &mut GoldenBackend,
+) -> (Batch, Receiver<ConvResult>, Tensor<i32>) {
+    let job = match entry.kind {
+        JobKind::Depthwise => ConvJob::synthetic_depthwise(i as u64, entry.spec, entry.seed),
+        _ => ConvJob::synthetic(i as u64, entry.spec, entry.seed),
+    };
+    let want = golden
+        .run(&job.payload(false))
+        .expect("golden reference")
+        .output;
+    let (tx, rx) = channel();
+    let batch = Batch {
+        spec: job.spec,
+        weights_id: job.weights_id,
+        kind: job.kind,
+        accum: job.accum,
+        jobs: vec![Submission {
+            job,
+            reply: tx,
+            enqueued: Instant::now(),
+        }],
+    };
+    (batch, rx, want)
+}
+
+#[test]
+fn killed_peer_mid_trace_fails_over_bit_identically_then_revives() {
+    let (peers, config) = start_fleet();
+    let pool = build_pool(&config).expect("front pool dials all three peers");
+    let mut golden = GoldenBackend::new();
+    let trace = generate(&TraceConfig {
+        n: N_REQUESTS,
+        mean_gap_us: 0,
+        s52_fraction: 0.0, // keep the burst fast; shapes still mixed
+        depthwise_fraction: 0.25,
+        seed: 61,
+    });
+
+    // Submit the whole trace, severing the last peer just before entry
+    // KILL_AT and reviving it before entry REVIVE_AT.
+    let mut pending = Vec::new();
+    for (i, entry) in trace.iter().enumerate() {
+        if i == KILL_AT {
+            peers[N_PEERS - 1].set_down(true);
+        }
+        if i == REVIVE_AT {
+            peers[N_PEERS - 1].set_down(false);
+        }
+        let (batch, rx, want) = entry_to_case(i, entry, &mut golden);
+        assert!(
+            pool.try_dispatch(batch).is_ok(),
+            "remote pool routes all kinds (entry {i})"
+        );
+        pending.push((i, rx, want));
+    }
+
+    // Every request is answered with the reference numerics — failover
+    // may move jobs between peers but never changes a single bit.
+    for (i, rx, want) in pending {
+        let result = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("entry {i} never answered: {e}"));
+        assert!(
+            result.error.is_none(),
+            "entry {i} answered with an error despite failover: {:?}",
+            result.error
+        );
+        assert_eq!(
+            result.output.data(),
+            want.data(),
+            "entry {i}: failover changed the numerics"
+        );
+    }
+
+    let retried = pool.metrics.retried.load(Ordering::Relaxed);
+    let failed = pool.metrics.failed.load(Ordering::Relaxed);
+    let completed = pool.metrics.completed.load(Ordering::Relaxed);
+    assert_eq!(completed, N_REQUESTS as u64, "every job completed");
+    assert_eq!(failed, 0, "failover must leave no terminal failures");
+    assert!(
+        retried >= 1,
+        "the killed peer was load-balanced traffic; at least one job must have hopped"
+    );
+
+    // The probe notices the revival: the worker flips back healthy and
+    // the recovery edge is counted.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let health = pool.worker_health();
+        if *health.last().unwrap() && pool.recovered_peers() >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "probe never marked the revived peer healthy again: {health:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // And the revived peer serves fresh traffic: push bursts until its
+    // own server answers some of them (bounded, not first-try — load
+    // balancing decides which worker each job lands on).
+    let before = peers[N_PEERS - 1].metrics().completed.load(Ordering::Relaxed);
+    let mut served = false;
+    'waves: for wave in 0..50u64 {
+        let wave_trace = generate(&TraceConfig {
+            n: 8,
+            mean_gap_us: 0,
+            s52_fraction: 0.0,
+            depthwise_fraction: 0.0,
+            seed: 7000 + wave,
+        });
+        let mut rxs = Vec::new();
+        for (j, entry) in wave_trace.iter().enumerate() {
+            let (batch, rx, want) = entry_to_case(j, entry, &mut golden);
+            assert!(pool.try_dispatch(batch).is_ok(), "routable wave");
+            rxs.push((rx, want));
+        }
+        for (rx, want) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(60)).expect("wave answered");
+            assert!(r.error.is_none(), "wave job errored post-revive: {:?}", r.error);
+            assert_eq!(r.output.data(), want.data(), "wave numerics");
+        }
+        if peers[N_PEERS - 1].metrics().completed.load(Ordering::Relaxed) > before {
+            served = true;
+            break 'waves;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(served, "revived peer never served traffic again");
+
+    pool.shutdown();
+    for p in peers {
+        p.stop();
+    }
+}
+
+#[test]
+fn run_trace_with_chaos_hook_answers_every_request() {
+    // The same scenario through the serving front the CLI drives:
+    // `Server::run_trace_with` kills and revives the last peer via the
+    // per-entry hook, and the report proves no request was lost.
+    let (peers, config) = start_fleet();
+    let mut front = Server::try_new(config).expect("front pool");
+    let trace = generate(&TraceConfig {
+        n: N_REQUESTS,
+        mean_gap_us: 0,
+        s52_fraction: 0.0,
+        depthwise_fraction: 0.25,
+        seed: 62,
+    });
+    let report = front.run_trace_with(&trace, &mut |i| {
+        if i == KILL_AT {
+            peers[N_PEERS - 1].set_down(true);
+        }
+        if i == REVIVE_AT {
+            peers[N_PEERS - 1].set_down(false);
+        }
+    });
+    assert_eq!(report.n_requests, N_REQUESTS);
+    assert_eq!(report.n_errors, 0, "failover must absorb the kill: {report:?}");
+    assert_eq!(report.n_shed, 0, "no admission budget configured");
+    let served: usize = report.backend_mix.iter().map(|(_, n)| n).sum();
+    assert_eq!(served, N_REQUESTS);
+    assert!(
+        report
+            .backend_mix
+            .iter()
+            .all(|(name, _)| name.starts_with("remote@")),
+        "{:?}",
+        report.backend_mix
+    );
+    front.shutdown();
+    for p in peers {
+        p.stop();
+    }
+}
