@@ -5,8 +5,10 @@
 //! GOPS/core, 4.48 GOPS at 20 cores). This example scales past the
 //! board: N in-process `TcpServer` peers — each simulating a small
 //! board — are fronted by a single pool of `RemoteBackend` workers
-//! speaking wire protocol v2, and the same mixed trace is pushed
-//! through fleets of growing size.
+//! speaking wire protocol v3 (binary tensor frames, pipelined batch
+//! submission), and the same mixed trace is pushed through fleets of
+//! growing size. The run *asserts* the headline: throughput must
+//! strictly increase 1 → 2 → 4 peers, or the exit code is nonzero.
 //!
 //! ```bash
 //! cargo run --release --example fleet_scaling -- [--requests N] [--peer-cores N]
@@ -44,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         "peers", "host_rps", "sim_gops_psum", "p50_us", "p99_us"
     );
 
+    let mut rps_by_fleet: Vec<(usize, f64)> = Vec::new();
     for n_peers in [1usize, 2, 4] {
         let peers: Vec<TcpServer> = (0..n_peers)
             .map(|_| {
@@ -76,16 +79,32 @@ fn main() -> anyhow::Result<()> {
             "{:>6} {:>12.1} {:>14.4} {:>9} {:>9}  [{mix}]",
             n_peers, report.host_rps, report.sim_gops_psum, report.p50_us, report.p99_us
         );
+        rps_by_fleet.push((n_peers, report.host_rps));
         front.shutdown();
         for p in peers {
             p.stop();
         }
     }
 
+    // The scaling contract itself: each doubling of the fleet must beat
+    // the previous throughput outright. Pipelined v3 transport keeps
+    // every peer's workers busy, so this holds with headroom; a
+    // regression to serial round trips flattens the curve and fails
+    // here.
+    for pair in rps_by_fleet.windows(2) {
+        let ((n_prev, rps_prev), (n_cur, rps_cur)) = (pair[0], pair[1]);
+        anyhow::ensure!(
+            rps_cur > rps_prev,
+            "throughput did not scale: {n_prev} peers -> {rps_prev:.1} rps, \
+             {n_cur} peers -> {rps_cur:.1} rps"
+        );
+    }
+    println!("\nthroughput strictly increased with fleet size: OK");
+
     println!(
-        "\nEvery request crossed a real socket: explicit tensors out, full \
-         output tensors back, checksum-free bit-exact numerics enforced by \
-         the same parity harness that covers local backends."
+        "\nEvery request crossed a real socket: binary tensor frames out, \
+         binary output tensors back, bit-exact numerics enforced by the \
+         same parity harness that covers local backends."
     );
     Ok(())
 }

@@ -27,9 +27,11 @@
 //! * [`xla::XlaBackend`] — the AOT Pallas/HLO artifacts under PJRT
 //!   (available when the `xla` feature is linked and artifacts exist);
 //! * [`remote::RemoteBackend`] — a whole remote machine behind the
-//!   TCP wire protocol v2 ([`crate::coordinator::tcp`]): the peer's
+//!   TCP wire protocol v3 ([`crate::coordinator::tcp`]): the peer's
 //!   `hello` handshake advertises its capability, and the pool treats
-//!   it as one more capability-masked worker.
+//!   it as one more capability-masked worker. Batches pipeline across
+//!   the socket ([`ConvBackend::run_batch`]) with tensors in binary
+//!   frames, so the peer's whole worker width is actually reachable.
 //!
 //! The parity contract: for identical integer inputs every backend
 //! produces bit-identical i32 outputs (`rust/tests/backend_parity.rs`).
@@ -216,19 +218,22 @@ pub enum CostModel {
     /// GEMM MACs plus the patch-matrix lowering traffic, retired at
     /// [`IM2COL_MACS_PER_UNIT`] MACs per unit per worker thread.
     Im2col { threads: u64 },
-    /// A whole remote machine behind the TCP wire protocol v2
+    /// A whole remote machine behind the TCP wire protocol v3
     /// ([`remote::RemoteBackend`]): the peer's `hello` handshake
     /// advertises what its workers *are* (each worker's cost-model
     /// family), so the quote is the job's cost under the peer's fastest
-    /// advertised tier ([`RemotePeerClass`]) plus the wire traffic
-    /// (request tensors out, `full_output` reply back) retired at
-    /// [`REMOTE_WORDS_PER_UNIT`] words per unit. A peer fronting only
-    /// naive host workers therefore quotes host-loop prices, not
-    /// FPGA-core prices. The quote deliberately does NOT divide by the
-    /// peer's worker count: one connection serves one job at a time, so
-    /// until requests are pipelined (ROADMAP) a wider peer drains a
-    /// queue no faster than a single worker of its tier.
-    Remote { class: RemotePeerClass },
+    /// advertised tier ([`RemotePeerClass`]) **divided by the peer's
+    /// advertised worker width** — batches now pipeline down one socket
+    /// with a bounded in-flight window, so a wider peer genuinely
+    /// drains a queue faster — plus the wire traffic (request tensors
+    /// out, `full_output` reply back) retired at
+    /// [`REMOTE_WORDS_PER_UNIT`] words per unit. The wire term does NOT
+    /// divide: the socket is one serial byte stream no matter how many
+    /// workers sit behind it, so transfer keeps a remote peer behind a
+    /// local core of the same tier on small pools. A peer fronting only
+    /// naive host workers quotes host-loop prices, not FPGA-core
+    /// prices.
+    Remote { workers: u64, class: RemotePeerClass },
 }
 
 /// The compute tier a remote peer's `hello` advertised (its workers'
@@ -334,10 +339,14 @@ impl CostModel {
                 };
                 ((macs + lowering) / (IM2COL_MACS_PER_UNIT * threads.max(1))).max(1)
             }
-            (CostModel::Remote { class }, kind) => {
-                // Serial service over one socket: one worker of the
-                // peer's fastest tier is the honest compute term.
-                let compute_share = class.model().cost(spec, kind);
+            (CostModel::Remote { workers, class }, kind) => {
+                // Pipelined service over one socket: the peer fans a
+                // batch across its whole worker width, so the honest
+                // compute term is one worker's cost divided by that
+                // width (never rounded to zero — a remote job is never
+                // free).
+                let compute_share =
+                    (class.model().cost(spec, kind) / workers.max(1)).max(1);
                 // Request ships image + weights; the full_output reply
                 // ships one word per output element (windows × output
                 // channels — NOT per PSUM, which would overcharge the
@@ -468,6 +477,20 @@ pub trait ConvBackend: Send {
     /// layer); depthwise fuses ReLU when `spec.relu` is set, matching
     /// the core's depthwise entry point.
     fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun>;
+
+    /// Execute a whole same-shape batch, returning one result per job
+    /// in order. The default runs jobs serially through [`Self::run`]
+    /// — correct for every local backend, where the unit of execution
+    /// is the kernel invocation. Transports override it to exploit
+    /// batch structure: [`remote::RemoteBackend`] writes the whole
+    /// batch down the socket in one buffered burst and reads replies
+    /// asynchronously, so the peer's worker width actually overlaps.
+    ///
+    /// Per-job `Err`s are independent: the dispatcher fails over each
+    /// errored job individually while keeping the batch's successes.
+    fn run_batch(&mut self, jobs: &[JobPayload]) -> Vec<anyhow::Result<BackendRun>> {
+        jobs.iter().map(|j| self.run(j)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -604,6 +627,7 @@ mod tests {
 
     fn remote_sim() -> CostModel {
         CostModel::Remote {
+            workers: 1,
             class: RemotePeerClass::SimCycles,
         }
     }
@@ -640,11 +664,35 @@ mod tests {
         // are what make that honest.
         let sim = CostModel::SimCycles.cost(&QUICKSTART, JobKind::Standard);
         let q = |class: RemotePeerClass| {
-            CostModel::Remote { class }.cost(&QUICKSTART, JobKind::Standard)
+            CostModel::Remote { workers: 1, class }.cost(&QUICKSTART, JobKind::Standard)
         };
         assert!(q(RemotePeerClass::HostMacs) > sim);
         assert!(q(RemotePeerClass::SimCycles) < q(RemotePeerClass::Im2col));
         assert!(q(RemotePeerClass::Im2col) < q(RemotePeerClass::HostMacs));
+    }
+
+    #[test]
+    fn remote_quote_divides_compute_by_worker_width_but_not_wire() {
+        // Pipelined batches reach every worker behind the socket, so a
+        // wider peer quotes cheaper — but only the compute share
+        // divides. The wire term is the same serial byte stream at any
+        // width, so the quote floors at transfer cost instead of
+        // pretending an infinitely wide peer is free.
+        let q = |workers: u64| {
+            CostModel::Remote {
+                workers,
+                class: RemotePeerClass::SimCycles,
+            }
+            .cost(&S52, JobKind::Standard)
+        };
+        assert!(q(4) < q(1), "width must cheapen the quote: {} vs {}", q(4), q(1));
+        assert!(q(2) < q(1) && q(4) < q(2), "monotone in width");
+        // At absurd widths the compute share floors at 1 and the quote
+        // converges to the wire term, which is far above zero.
+        let wire_floor = q(1_000_000);
+        assert!(wire_floor > 100, "quote keeps the wire term: {wire_floor}");
+        // Degenerate width never divides by zero or quotes zero.
+        assert!(q(0) >= 1 && q(0) == q(1));
     }
 
     #[test]

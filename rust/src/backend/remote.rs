@@ -1,5 +1,5 @@
 //! [`ConvBackend`] over a persistent TCP connection to a wire-protocol
-//! v2 peer ([`crate::coordinator::tcp`]) — the remote-core backend that
+//! v3 peer ([`crate::coordinator::tcp`]) — the remote-core backend that
 //! turns N TCP-served machines into one heterogeneous pool.
 //!
 //! The paper scales by replicating its IP core on one board; this
@@ -11,24 +11,40 @@
 //! the host-side scheduler shape the FPGA-CNN survey literature
 //! prescribes for multi-accelerator deployments.
 //!
-//! Per job, the backend ships the explicit tensors across the socket
-//! with `"full_output":true` and reconstructs the reply tensor, so the
-//! parity contract holds end-to-end over the wire: bit-identical i32
-//! outputs for standard, depthwise and pointwise-as-3×3 jobs
-//! (`rust/tests/backend_parity.rs` runs it as just another backend).
+//! **Framing negotiation:** a peer whose hello carries `"bin":true`
+//! gets length-prefixed binary tensor frames both ways (the v3 fast
+//! path — no per-element JSON on the `full_output` hot path); a legacy
+//! peer (proto 2, no flag) transparently gets the old JSON-array
+//! tensors. Outputs are bit-identical either way, so the parity
+//! contract holds end-to-end over the wire for standard, depthwise and
+//! pointwise-as-3×3 jobs (`rust/tests/backend_parity.rs` runs it as
+//! just another backend, in both modes).
 //!
-//! Failure semantics: a dropped peer **fails its in-flight job and
-//! drops the connection**; the next job redials (re-running the
-//! handshake), and the pool's failover retry re-enqueues the failed job
-//! on a capable sibling. The `weights_resident` DMA discount does not
-//! cross the wire: every remote job pays its own transfer.
+//! **Pipelining:** [`ConvBackend::run_batch`] writes a whole same-shape
+//! batch in buffered bursts and reads the replies asynchronously —
+//! up to [`REMOTE_PIPELINE_WINDOW`] jobs in flight, id-matched, reply
+//! order free. That keeps every worker behind the peer busy instead of
+//! round-tripping one job per RTT, which is what lets
+//! [`CostModel::Remote`] honestly divide its compute quote by the
+//! peer's advertised worker width. `run` (single job) remains the
+//! strict request/reply special case.
+//!
+//! Failure semantics: a dropped peer **fails its unanswered in-flight
+//! jobs and drops the connection**; the next job redials (re-running
+//! the handshake), and the pool's failover retry re-enqueues failed
+//! jobs on capable siblings. A *clean* per-job error frame fails only
+//! that job and keeps the connection. The `weights_resident` DMA
+//! discount does not cross the wire: every remote job pays its own
+//! transfer.
 //!
 //! **Health:** each backend runs a background probe thread
 //! ([`HEALTH_PROBE_INTERVAL`]) that re-dials the peer on its own
 //! short-lived connection, checks the fresh `hello` is no narrower than
 //! the pool's routing snapshot, and — when the peer advertises the
 //! `ping` feature in its hello — round-trips a `ping` control frame.
-//! The result lands in a shared [`WorkerHealth`] flag the dispatcher
+//! Because the probe never shares the job connection, it coexists with
+//! any number of in-flight pipelined frames by construction. The
+//! result lands in a shared [`WorkerHealth`] flag the dispatcher
 //! reads: a dead peer is routed *around* while healthy siblings exist
 //! (degraded capacity, not lost correctness), and a revived peer
 //! rejoins routing as soon as one probe succeeds — no job has to fail
@@ -38,12 +54,16 @@ use super::{
     BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, RemotePeerClass,
     WorkerHealth,
 };
-use crate::coordinator::tcp::{read_line_capped, LineRead, MAX_LINE_BYTES, PROTO_VERSION};
+use crate::coordinator::tcp::{
+    decode_i32_le, encode_request_frame, read_line_capped, LineRead, MAX_BIN_BYTES,
+    MAX_LINE_BYTES, PROTO_V2, PROTO_VERSION,
+};
 use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
 use crate::model::{Tensor, QUICKSTART};
 use crate::util::json::Json;
-use std::io::{BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -68,6 +88,13 @@ pub const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 /// shorten it via [`RemoteBackend::connect_with_probe`]).
 pub const HEALTH_PROBE_INTERVAL: Duration = Duration::from_millis(250);
 
+/// Client-side pipelining window: how many batch jobs this backend
+/// keeps in flight on one connection before waiting for a reply.
+/// Deliberately below the server's per-connection cap
+/// ([`crate::coordinator::tcp::MAX_CONN_INFLIGHT`], 64) so a
+/// well-behaved client never feels the server stop reading its socket.
+pub const REMOTE_PIPELINE_WINDOW: usize = 16;
+
 struct Conn {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
@@ -87,6 +114,9 @@ struct PeerInfo {
     /// Peer advertised the `ping` control frame in its hello (feature
     /// negotiation — plain v2 peers lack the flag and are never pinged).
     ping: bool,
+    /// Peer advertised binary tensor framing (`"bin":true` in the
+    /// hello). Off → this backend stays on v2 JSON tensors.
+    bin: bool,
 }
 
 /// The capability flags routing snapshotted at construction; the probe
@@ -128,9 +158,9 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         .get(&["hello"])
         .ok_or("first frame from peer is not a hello")?;
     let proto = h.get(&["proto"]).and_then(Json::as_f64).unwrap_or(0.0) as u64;
-    if proto != PROTO_VERSION {
+    if proto != PROTO_VERSION && proto != PROTO_V2 {
         return Err(format!(
-            "peer speaks wire protocol {proto}, this backend needs {PROTO_VERSION}"
+            "peer speaks wire protocol {proto}, this backend needs {PROTO_V2} or {PROTO_VERSION}"
         ));
     }
     let workers = h
@@ -145,8 +175,9 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         class: RemotePeerClass::HostMacs,
         // Feature negotiation rides on the hello: peers that can answer
         // `ping` control frames say so; plain v2 peers simply lack the
-        // flag and are never sent one.
+        // flag and are never sent one. Same for binary tensor framing.
         ping: h.get(&["ping"]).and_then(Json::as_bool).unwrap_or(false),
+        bin: h.get(&["bin"]).and_then(Json::as_bool).unwrap_or(false),
     };
     let mut classes: Vec<RemotePeerClass> = Vec::new();
     for w in workers {
@@ -216,28 +247,19 @@ fn dial(addr: &str) -> anyhow::Result<(Conn, PeerInfo)> {
     Ok((Conn { writer, reader }, peer))
 }
 
-fn request_json(id: u64, job: &JobPayload) -> Json {
-    let mut spec = vec![
-        ("c", Json::num(job.spec.c as f64)),
-        ("h", Json::num(job.spec.h as f64)),
-        ("w", Json::num(job.spec.w as f64)),
-        ("k", Json::num(job.spec.k as f64)),
-    ];
-    if job.spec.relu {
-        spec.push(("relu", Json::Bool(true)));
-    }
-    Json::obj(vec![
-        ("id", Json::num(id as f64)),
-        ("kind", Json::str(job.kind.tag())),
-        ("spec", Json::obj(spec)),
-        ("img", Json::arr_u64(job.img.data().iter().map(|&v| v as u64))),
-        (
-            "weights",
-            Json::arr_u64(job.weights.data().iter().map(|&v| v as u64)),
-        ),
-        ("bias", Json::arr_i64(job.bias.iter().map(|&v| v as i64))),
-        ("full_output", Json::Bool(true)),
-    ])
+/// Encode one job as a complete request frame in the negotiated
+/// encoding (header line + binary bodies when `bin`).
+fn job_frame(id: u64, job: &JobPayload, bin: bool) -> Vec<u8> {
+    encode_request_frame(
+        id,
+        job.kind,
+        job.spec,
+        job.img.data(),
+        job.weights.data(),
+        job.bias,
+        true, // full_output: the backend must reconstruct the tensor
+        bin,
+    )
 }
 
 fn expected_shape(job: &JobPayload) -> Vec<usize> {
@@ -248,10 +270,112 @@ fn expected_shape(job: &JobPayload) -> Vec<usize> {
     }
 }
 
+/// Read one complete reply frame off the connection: the JSON header
+/// line plus, when it declares `bin_output`, the decoded i32 body.
+/// The body is consumed *with* its header unconditionally — even a
+/// frame the caller will discard as stale must not leave its bytes in
+/// the stream, or every later header would desync.
+fn read_reply_frame(conn: &mut Conn) -> anyhow::Result<(Json, Option<Vec<i32>>)> {
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match read_line_capped(&mut conn.reader, &mut buf, MAX_LINE_BYTES)? {
+            LineRead::Eof => anyhow::bail!("peer closed the connection mid-request"),
+            LineRead::Line => {}
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let j = Json::parse(trimmed).map_err(|e| anyhow::anyhow!("unparseable reply: {e}"))?;
+        let body = match j.get(&["bin_output"]).and_then(Json::as_u64) {
+            None => None,
+            Some(n) => {
+                let n = usize::try_from(n)
+                    .ok()
+                    .filter(|&n| n <= MAX_BIN_BYTES)
+                    .ok_or_else(|| anyhow::anyhow!("bin_output {n} exceeds the frame cap"))?;
+                let mut body = vec![0u8; n];
+                conn.reader.read_exact(&mut body)?;
+                Some(decode_i32_le(&body))
+            }
+        };
+        return Ok((j, body));
+    }
+}
+
+/// Interpret one id-matched reply. The outer `Err` is a protocol
+/// failure (caller must treat the stream as desynced and drop the
+/// connection); the inner `Err(String)` is a *clean* job error the
+/// peer answered on a healthy, still-aligned stream.
+fn decode_reply(
+    resp: &Json,
+    body: Option<Vec<i32>>,
+    job: &JobPayload,
+) -> anyhow::Result<Result<BackendRun, String>> {
+    if resp.get(&["ok"]).and_then(Json::as_bool) != Some(true) {
+        let msg = resp
+            .get(&["error"])
+            .and_then(Json::as_str)
+            .unwrap_or("unspecified peer error");
+        return Ok(Err(msg.to_string()));
+    }
+    let shape: Vec<usize> = resp
+        .get(&["shape"])
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("reply missing shape (peer ignored full_output)"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape element")))
+        .collect::<Result<_, _>>()?;
+    let data: Vec<i32> = match body {
+        // Binary body: already decoded i32-LE words.
+        Some(words) => words,
+        // JSON tensor reply (v2 peers, or non-bin requests).
+        None => resp
+            .get(&["output"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("reply missing output (peer ignored full_output)"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|n| n as i32)
+                    .ok_or_else(|| anyhow::anyhow!("bad output element"))
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let want = expected_shape(job);
+    anyhow::ensure!(
+        shape == want,
+        "peer output shape {shape:?} != expected {want:?}"
+    );
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "peer output length {} != shape {shape:?}",
+        data.len()
+    );
+    let compute = resp
+        .get(&["compute_cycles"])
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as u64;
+    let total = resp
+        .get(&["total_cycles"])
+        .and_then(Json::as_f64)
+        .unwrap_or(compute as f64) as u64;
+    Ok(Ok(BackendRun {
+        output: Tensor::from_vec(&shape, data),
+        cycles: CycleStats {
+            compute,
+            total,
+            ..Default::default()
+        },
+    }))
+}
+
 /// One health probe: fresh dial, hello validation against the routing
 /// snapshot, and — when the peer negotiated it — a `ping` round trip.
 /// Runs on its own short-lived connection so it never desyncs the job
-/// stream.
+/// stream, however many pipelined frames are in flight there.
 fn probe_once(addr: &str, snapshot: CapSnapshot) -> bool {
     let Ok((mut conn, fresh)) = dial(addr) else {
         return false;
@@ -321,9 +445,9 @@ fn spawn_probe(
 }
 
 impl RemoteBackend {
-    /// Dial `addr` (`host:port`) and perform the v2 handshake. Errors
-    /// when the peer is unreachable, greets with anything but a valid
-    /// v2 `hello`, or fronts no I32-capable workers.
+    /// Dial `addr` (`host:port`) and perform the handshake. Errors when
+    /// the peer is unreachable, greets with anything but a valid v2/v3
+    /// `hello`, or fronts no I32-capable workers.
     pub fn connect(addr: &str) -> anyhow::Result<Self> {
         Self::connect_with_probe(addr, HEALTH_PROBE_INTERVAL)
     }
@@ -375,6 +499,46 @@ impl RemoteBackend {
         self.peer.workers
     }
 
+    /// Whether the peer negotiated binary tensor framing (`"bin":true`
+    /// in its hello). Observability for mixed-protocol fleets.
+    pub fn peer_binary(&self) -> bool {
+        self.peer.bin
+    }
+
+    /// Make sure a live connection exists, redialling after an earlier
+    /// failure. The fresh handshake re-verifies the peer still speaks a
+    /// known protocol revision; the pool snapshotted this worker's
+    /// capability at spawn, so a peer that comes back *narrower* can't
+    /// be served honestly any more — fail loudly (every job errors with
+    /// this message) instead of letting jobs silently bounce off the
+    /// peer's own mask.
+    fn ensure_conn(&mut self) -> anyhow::Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let (conn, fresh) = match dial(&self.addr) {
+            Ok(ok) => ok,
+            Err(e) => {
+                self.health.set_healthy(false);
+                return Err(e);
+            }
+        };
+        if !((!self.peer.standard || fresh.standard)
+            && (!self.peer.depthwise || fresh.depthwise)
+            && (!self.peer.pointwise || fresh.pointwise))
+        {
+            self.health.set_healthy(false);
+            anyhow::bail!(
+                "remote {}: peer restarted with a narrower capability than \
+                 this pool's routing snapshot; rebuild the pool",
+                self.addr
+            );
+        }
+        self.peer = fresh;
+        self.conn = Some(conn);
+        Ok(())
+    }
+
     /// One request/reply exchange. The outer `Err` is a transport or
     /// protocol failure (stream desynced or dead — caller must drop the
     /// connection); the inner `Err(String)` is a *clean* job error the
@@ -385,84 +549,23 @@ impl RemoteBackend {
         id: u64,
         job: &JobPayload,
     ) -> anyhow::Result<Result<BackendRun, String>> {
+        let bin = self.peer.bin;
         let conn = self.conn.as_mut().expect("connection ensured by run()");
-        writeln!(conn.writer, "{}", request_json(id, job).to_json())?;
-        let mut buf = Vec::new();
-        let resp = loop {
-            buf.clear();
-            match read_line_capped(&mut conn.reader, &mut buf, MAX_LINE_BYTES)? {
-                LineRead::Eof => anyhow::bail!("peer closed the connection mid-request"),
-                LineRead::Line => {}
+        conn.writer.write_all(&job_frame(id, job, bin))?;
+        loop {
+            let (resp, body) = read_reply_frame(conn)?;
+            if resp.get(&["hello"]).is_some() || resp.get(&["pong"]).is_some() {
+                continue; // stray control frame; keep draining
             }
-            let line = String::from_utf8_lossy(&buf);
-            let trimmed = line.trim();
-            if trimmed.is_empty() {
-                continue;
-            }
-            let j = Json::parse(trimmed)
-                .map_err(|e| anyhow::anyhow!("unparseable reply: {e}"))?;
-            if j.get(&["hello"]).is_some() {
-                continue; // stray greeting; keep draining
-            }
-            match j.get(&["id"]).and_then(Json::as_f64).map(|n| n as u64) {
-                Some(rid) if rid == id => break j,
+            match resp.get(&["id"]).and_then(Json::as_u64) {
+                Some(rid) if rid == id => return decode_reply(&resp, body, job),
                 // A stale reply to an older request this backend already
-                // failed: drain it so the stream realigns.
+                // failed: its body was consumed with its header, so
+                // draining it realigns the stream.
                 Some(_) => continue,
                 None => anyhow::bail!("reply frame without an id"),
             }
-        };
-        if resp.get(&["ok"]).and_then(Json::as_bool) != Some(true) {
-            let msg = resp
-                .get(&["error"])
-                .and_then(Json::as_str)
-                .unwrap_or("unspecified peer error");
-            return Ok(Err(msg.to_string()));
         }
-        let shape: Vec<usize> = resp
-            .get(&["shape"])
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("reply missing shape (peer ignored full_output)"))?
-            .iter()
-            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape element")))
-            .collect::<Result<_, _>>()?;
-        let data: Vec<i32> = resp
-            .get(&["output"])
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("reply missing output (peer ignored full_output)"))?
-            .iter()
-            .map(|v| {
-                v.as_f64()
-                    .map(|n| n as i32)
-                    .ok_or_else(|| anyhow::anyhow!("bad output element"))
-            })
-            .collect::<Result<_, _>>()?;
-        let want = expected_shape(job);
-        anyhow::ensure!(
-            shape == want,
-            "peer output shape {shape:?} != expected {want:?}"
-        );
-        anyhow::ensure!(
-            data.len() == shape.iter().product::<usize>(),
-            "peer output length {} != shape {shape:?}",
-            data.len()
-        );
-        let compute = resp
-            .get(&["compute_cycles"])
-            .and_then(Json::as_f64)
-            .unwrap_or(0.0) as u64;
-        let total = resp
-            .get(&["total_cycles"])
-            .and_then(Json::as_f64)
-            .unwrap_or(compute as f64) as u64;
-        Ok(Ok(BackendRun {
-            output: Tensor::from_vec(&shape, data),
-            cycles: CycleStats {
-                compute,
-                total,
-                ..Default::default()
-            },
-        }))
     }
 }
 
@@ -477,8 +580,8 @@ impl ConvBackend for RemoteBackend {
             depthwise: self.peer.depthwise,
             pointwise_as_3x3: self.peer.pointwise,
             accum: AccumMode::I32,
-            // The v2 wire rejects standard/pointwise specs violating
-            // §4.1 regardless of the peer's pool; the mask must mirror
+            // The wire rejects standard/pointwise specs violating §4.1
+            // regardless of the peer's pool; the mask must mirror
             // that, or jobs a local host worker could serve get routed
             // here only to come back as peer errors.
             paper_specs_only: true,
@@ -488,6 +591,11 @@ impl ConvBackend for RemoteBackend {
 
     fn cost_model(&self) -> CostModel {
         CostModel::Remote {
+            // run_batch keeps up to a window of jobs in flight, so the
+            // peer's advertised worker width genuinely parallelises our
+            // submissions — the quote divides compute by it (the wire
+            // term stays single-stream; see CostModel::cost).
+            workers: self.peer.workers.max(1),
             class: self.peer.class,
         }
     }
@@ -498,34 +606,7 @@ impl ConvBackend for RemoteBackend {
 
     fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
         job.validate()?;
-        if self.conn.is_none() {
-            // Reconnect after an earlier failure; the fresh handshake
-            // re-verifies the peer still speaks v2. The pool snapshotted
-            // this worker's capability at spawn, so a peer that comes
-            // back *narrower* can't be served honestly any more — fail
-            // loudly (every job errors with this message) instead of
-            // letting jobs silently bounce off the peer's own mask.
-            let (conn, fresh) = match dial(&self.addr) {
-                Ok(ok) => ok,
-                Err(e) => {
-                    self.health.set_healthy(false);
-                    return Err(e);
-                }
-            };
-            if !((!self.peer.standard || fresh.standard)
-                && (!self.peer.depthwise || fresh.depthwise)
-                && (!self.peer.pointwise || fresh.pointwise))
-            {
-                self.health.set_healthy(false);
-                anyhow::bail!(
-                    "remote {}: peer restarted with a narrower capability than \
-                     this pool's routing snapshot; rebuild the pool",
-                    self.addr
-                );
-            }
-            self.peer = fresh;
-            self.conn = Some(conn);
-        }
+        self.ensure_conn()?;
         let id = self.next_id;
         self.next_id += 1;
         match self.round_trip(id, job) {
@@ -552,6 +633,128 @@ impl ConvBackend for RemoteBackend {
             }
         }
     }
+
+    /// Pipelined batch submission: write up to [`REMOTE_PIPELINE_WINDOW`]
+    /// request frames in one buffered burst, then keep the window full
+    /// — read one id-matched reply, write the next frame — until every
+    /// job is answered. A transport/protocol failure fails every job
+    /// not yet answered (the pool's failover re-enqueues them) and
+    /// drops the connection; clean per-job error frames fail only their
+    /// job.
+    fn run_batch(&mut self, jobs: &[JobPayload]) -> Vec<anyhow::Result<BackendRun>> {
+        let mut results: Vec<Option<anyhow::Result<BackendRun>>> =
+            jobs.iter().map(|_| None).collect();
+        // Shape errors are local, before anything touches the wire.
+        for (i, job) in jobs.iter().enumerate() {
+            if let Err(e) = job.validate() {
+                results[i] = Some(Err(e));
+            }
+        }
+        let order: Vec<usize> = (0..jobs.len()).filter(|&i| results[i].is_none()).collect();
+        if order.is_empty() {
+            return results.into_iter().map(|r| r.expect("all filled")).collect();
+        }
+        if let Err(e) = self.ensure_conn() {
+            let msg = e.to_string();
+            for i in order {
+                results[i] = Some(Err(anyhow::anyhow!("remote {}: {msg}", self.addr)));
+            }
+            return results.into_iter().map(|r| r.expect("all filled")).collect();
+        }
+        let bin = self.peer.bin;
+        // Take the connection so the borrow checker lets us allocate
+        // ids while writing; restored below unless the stream died.
+        let mut conn = self.conn.take().expect("ensured above");
+        let mut inflight: HashMap<u64, usize> = HashMap::new();
+        let mut cursor = 0usize;
+        let mut transport: Option<anyhow::Error> = None;
+        // Opening burst: fill the window with one buffered write — the
+        // whole batch head crosses the wire in a single syscall instead
+        // of one write per RTT.
+        let mut burst: Vec<u8> = Vec::new();
+        while cursor < order.len() && inflight.len() < REMOTE_PIPELINE_WINDOW {
+            let idx = order[cursor];
+            cursor += 1;
+            let id = self.next_id;
+            self.next_id += 1;
+            burst.extend_from_slice(&job_frame(id, &jobs[idx], bin));
+            inflight.insert(id, idx);
+        }
+        if let Err(e) = conn.writer.write_all(&burst) {
+            transport = Some(e.into());
+        }
+        drop(burst);
+        while transport.is_none() && !inflight.is_empty() {
+            let (resp, body) = match read_reply_frame(&mut conn) {
+                Ok(frame) => frame,
+                Err(e) => {
+                    transport = Some(e);
+                    break;
+                }
+            };
+            if resp.get(&["hello"]).is_some() || resp.get(&["pong"]).is_some() {
+                continue; // stray control frame; keep draining
+            }
+            let Some(rid) = resp.get(&["id"]).and_then(Json::as_u64) else {
+                transport = Some(anyhow::anyhow!("reply frame without an id"));
+                break;
+            };
+            let Some(idx) = inflight.remove(&rid) else {
+                continue; // stale reply from a pre-batch failure; drained
+            };
+            match decode_reply(&resp, body, &jobs[idx]) {
+                Ok(Ok(run)) => results[idx] = Some(Ok(run)),
+                Ok(Err(job_err)) => {
+                    results[idx] = Some(Err(anyhow::anyhow!(
+                        "remote {}: peer answered with a job error: {job_err}",
+                        self.addr
+                    )))
+                }
+                Err(e) => {
+                    transport = Some(e);
+                    break;
+                }
+            }
+            // Keep the window full.
+            if cursor < order.len() {
+                let idx = order[cursor];
+                cursor += 1;
+                let id = self.next_id;
+                self.next_id += 1;
+                if let Err(e) = conn.writer.write_all(&job_frame(id, &jobs[idx], bin)) {
+                    inflight.insert(id, idx);
+                    transport = Some(e.into());
+                    break;
+                }
+                inflight.insert(id, idx);
+            }
+        }
+        match transport {
+            None => {
+                self.conn = Some(conn);
+                self.health.set_healthy(true);
+            }
+            Some(e) => {
+                // Stream dead or desynced: fail everything unanswered
+                // (in flight or never submitted) and force a redial.
+                self.conn = None;
+                self.health.set_healthy(false);
+                let msg = e.to_string();
+                for (_id, idx) in inflight {
+                    results[idx] = Some(Err(anyhow::anyhow!("remote {}: {msg}", self.addr)));
+                }
+                while cursor < order.len() {
+                    results[order[cursor]] =
+                        Some(Err(anyhow::anyhow!("remote {}: {msg}", self.addr)));
+                    cursor += 1;
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every job answered or failed"))
+            .collect()
+    }
 }
 
 impl Drop for RemoteBackend {
@@ -572,12 +775,15 @@ mod tests {
     use crate::coordinator::request::{ConvJob, Submission};
     use crate::coordinator::tcp::TcpServer;
     use crate::hw::IpCoreConfig;
-    use crate::model::LayerSpec;
+    use crate::model::{golden, LayerSpec};
+    use crate::util::prng::Prng;
     use std::io::BufRead;
     use std::net::TcpListener;
     use std::sync::mpsc::channel;
 
-    /// A valid v2 greeting for hand-rolled fake peers.
+    /// A valid *v2* greeting for hand-rolled fake peers: proto 2, no
+    /// `bin` flag. Doubles as the legacy-interop fixture — a front
+    /// parsing this must fall back to JSON tensors.
     fn hello_line() -> &'static str {
         r#"{"hello":{"proto":2,"freq_hz":112000000,"cores":1,"workers":[{"backend":"sim-ipcore-i32","standard":true,"depthwise":true,"pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272}]}}"#
     }
@@ -649,10 +855,13 @@ mod tests {
             let mut line = String::new();
             r.read_line(&mut line).unwrap();
             let req = Json::parse(line.trim()).unwrap();
-            let id = req.get(&["id"]).unwrap().as_f64().unwrap();
+            // The v2 fixture negotiated no binary framing, so the
+            // request must be pure JSON — one parseable line, no body.
+            assert!(req.get(&["bin"]).is_none(), "v2 peer got a binary frame");
+            let id = req.get(&["id"]).unwrap().as_u64().unwrap();
             // All-zero 1x3x3 -> k=4 job: the answer is four zero words.
             let reply = Json::obj(vec![
-                ("id", Json::num(id)),
+                ("id", Json::uint(id)),
                 ("ok", Json::Bool(true)),
                 ("compute_cycles", Json::num(8u32)),
                 ("total_cycles", Json::num(8u32)),
@@ -698,18 +907,18 @@ mod tests {
             let mut r = BufReader::new(s.try_clone().unwrap());
             let mut line = String::new();
             r.read_line(&mut line).unwrap();
-            let id1 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_f64().unwrap();
+            let id1 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_u64().unwrap();
             let err = Json::obj(vec![
-                ("id", Json::num(id1)),
+                ("id", Json::uint(id1)),
                 ("ok", Json::Bool(false)),
                 ("error", Json::str("boom")),
             ]);
             writeln!(s, "{}", err.to_json()).unwrap();
             line.clear();
             r.read_line(&mut line).unwrap();
-            let id2 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_f64().unwrap();
+            let id2 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_u64().unwrap();
             let reply = Json::obj(vec![
-                ("id", Json::num(id2)),
+                ("id", Json::uint(id2)),
                 ("ok", Json::Bool(true)),
                 ("compute_cycles", Json::num(8u32)),
                 ("total_cycles", Json::num(8u32)),
@@ -751,11 +960,13 @@ mod tests {
         assert_eq!(cap.accum, AccumMode::I32);
         assert!(cap.paper_specs_only, "the wire applies the §4.1 gate");
         assert_eq!(be.peer_workers(), 2);
+        assert!(be.peer_binary(), "a v3 server negotiates binary frames");
         // Pricing collapses to the fastest advertised tier (the sim
-        // core), not the golden worker beside it.
+        // core), divided across both workers behind the peer.
         assert_eq!(
             be.cost_model(),
             CostModel::Remote {
+                workers: 2,
                 class: RemotePeerClass::SimCycles
             }
         );
@@ -781,11 +992,124 @@ mod tests {
         assert_eq!(
             be.cost_model(),
             CostModel::Remote {
+                workers: 2,
                 class: RemotePeerClass::HostMacs
             }
         );
         drop(be);
         server.stop();
+    }
+
+    #[test]
+    fn v2_only_peer_negotiates_json_tensors_bit_identical() {
+        // Satellite 3's negotiation contract: a v3 front dialling a
+        // peer whose hello lacks the bin flag silently stays on JSON
+        // tensors, and the answer is bit-identical to the binary path.
+        let v3 = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2),
+        )
+        .unwrap();
+        let v2 = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
+        )
+        .unwrap();
+        let mut be3 = RemoteBackend::connect(&v3.addr.to_string()).unwrap();
+        let mut be2 = RemoteBackend::connect(&v2.addr.to_string()).unwrap();
+        assert!(be3.peer_binary());
+        assert!(!be2.peer_binary(), "v2-only hello must not offer bin");
+        let spec = LayerSpec::new(3, 6, 6, 5).with_relu();
+        let mut rng = Prng::new(47);
+        let img = Tensor::from_vec(&[3, 6, 6], rng.bytes_below(3 * 6 * 6, 256));
+        let wts = Tensor::from_vec(&[5, 3, 3, 3], rng.bytes_below(5 * 3 * 9, 256));
+        let bias: Vec<i32> = (0..5).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let r3 = be3.run(&payload).unwrap();
+        let r2 = be2.run(&payload).unwrap();
+        let want = golden::conv3x3_i32(&img, &wts, &bias, true);
+        assert_eq!(r3.output.data(), want.data(), "binary path vs golden");
+        assert_eq!(r2.output.data(), want.data(), "JSON fallback vs golden");
+        assert_eq!(r3.output.shape(), r2.output.shape());
+        drop(be3);
+        drop(be2);
+        v3.stop();
+        v2.stop();
+    }
+
+    #[test]
+    fn run_batch_pipelines_jobs_and_matches_golden() {
+        // More jobs than the server's worker count and (deliberately)
+        // fewer than the pipeline window: all of them cross the wire
+        // before the first reply is read, and every id-matched answer
+        // must land on the job that asked for it.
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2),
+        )
+        .unwrap();
+        let mut be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(93);
+        let wts = Tensor::from_vec(&[4, 2, 3, 3], rng.bytes_below(4 * 2 * 9, 256));
+        let bias: Vec<i32> = (0..4).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let imgs: Vec<Tensor<u8>> = (0..6)
+            .map(|_| Tensor::from_vec(&[2, 5, 5], rng.bytes_below(2 * 5 * 5, 256)))
+            .collect();
+        let payloads: Vec<JobPayload> = imgs
+            .iter()
+            .map(|img| JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .collect();
+        let results = be.run_batch(&payloads);
+        assert_eq!(results.len(), 6);
+        for (img, res) in imgs.iter().zip(results) {
+            let run = res.expect("pipelined job succeeds");
+            let want = golden::conv3x3_i32(img, &wts, &bias, false);
+            assert_eq!(run.output.data(), want.data());
+        }
+        drop(be);
+        server.stop();
+    }
+
+    #[test]
+    fn run_batch_against_dead_peer_fails_every_job_without_hanging() {
+        let server = TcpServer::start("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+        let mut be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        server.stop();
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let payloads: Vec<JobPayload> = (0..3)
+            .map(|_| JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .collect();
+        let results = be.run_batch(&payloads);
+        assert_eq!(results.len(), 3);
+        for res in results {
+            let err = res.expect_err("dead peer fails the job, not hangs");
+            assert!(err.to_string().contains("remote"), "{err}");
+        }
     }
 
     #[test]

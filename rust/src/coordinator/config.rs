@@ -41,10 +41,18 @@ pub struct CoordinatorConfig {
     pub im2col_worker_threads: usize,
     /// Remote peers (`host:port`), each dialled at pool construction
     /// and appended as one `backend::RemoteBackend` worker speaking
-    /// wire protocol v2 (`coordinator::tcp`) — whole machines joining
+    /// wire protocol v3 (`coordinator::tcp`) — whole machines joining
     /// the pool behind the same capability-masked dispatch. An
     /// unreachable peer is a construction error, not a silent absence.
     pub remote_peers: Vec<String>,
+    /// Pin a served wire endpoint to protocol v2: the `hello`
+    /// advertises `proto:2` with no binary-frame flag, and binary-
+    /// framed requests are refused with a clean per-job error. Fronts
+    /// dialling such a peer transparently stay on v2 JSON tensors —
+    /// this knob exists to *be* the legacy peer in mixed-protocol
+    /// fleets (CI's mixed smoke leg, the negotiation tests), not for
+    /// production use.
+    pub wire_v2_only: bool,
     pub ip: IpCoreConfig,
     pub batch: BatchConfig,
     /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
@@ -61,6 +69,7 @@ impl Default for CoordinatorConfig {
             im2col_workers: 0,
             im2col_worker_threads: 4,
             remote_peers: Vec::new(),
+            wire_v2_only: false,
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
@@ -107,6 +116,13 @@ impl CoordinatorConfig {
         self.remote_peers = peers;
         self
     }
+
+    /// Serve the TCP endpoint as a legacy wire-v2 peer (see
+    /// [`Self::wire_v2_only`]).
+    pub fn with_wire_v2_only(mut self) -> Self {
+        self.wire_v2_only = true;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +165,12 @@ mod tests {
     #[should_panic(expected = "outside")]
     fn with_cores_rejects_21() {
         let _ = CoordinatorConfig::default().with_cores(21);
+    }
+
+    #[test]
+    fn wire_v2_only_defaults_off_and_composes() {
+        assert!(!CoordinatorConfig::default().wire_v2_only);
+        assert!(CoordinatorConfig::default().with_wire_v2_only().wire_v2_only);
     }
 
     #[test]

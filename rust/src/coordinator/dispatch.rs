@@ -181,13 +181,30 @@ fn run_batch(
     batch: Batch,
     tried: Vec<usize>,
 ) {
-    // Weight-stationary across the batch: first job pays the weight
-    // DMA, the rest reuse the resident set (backends that model DMA
-    // apply the discount).
+    // Weight-stationary across the batch: the batcher closed these jobs
+    // over one weight set, so the first job pays the weight DMA (unless
+    // the set is already resident from the previous batch) and the rest
+    // reuse it. The flags are positional — computed up front — so the
+    // whole batch can go through the backend's batch entry point in ONE
+    // call: pipelining backends (remote peers) put every job on the
+    // wire before the first reply returns, instead of paying a full
+    // round trip per job.
     let batch_weights = batch.weights_id;
-    for sub in batch.jobs {
-        let reused = *resident_weights == Some(batch_weights);
-        let run = match backend.run(&sub.job.payload(reused)) {
+    let reused_flags: Vec<bool> = (0..batch.jobs.len())
+        .map(|i| i > 0 || *resident_weights == Some(batch_weights))
+        .collect();
+    let payloads: Vec<_> = batch
+        .jobs
+        .iter()
+        .zip(&reused_flags)
+        .map(|(sub, &reused)| sub.job.payload(reused))
+        .collect();
+    let runs = backend.run_batch(&payloads);
+    debug_assert_eq!(runs.len(), batch.jobs.len(), "one result per job");
+    drop(payloads);
+    let mut any_success = false;
+    for ((sub, run), reused) in batch.jobs.into_iter().zip(runs).zip(reused_flags) {
+        let run = match run {
             Ok(run) => run,
             Err(e) => {
                 // Release this queue's charge, then fail over: offer
@@ -218,7 +235,7 @@ fn run_batch(
                 continue;
             }
         };
-        *resident_weights = Some(batch_weights);
+        any_success = true;
 
         let latency = sub.enqueued.elapsed();
         table.metrics.record_completion(
@@ -244,6 +261,9 @@ fn run_batch(
             weights_reused: reused,
             error: None,
         });
+    }
+    if any_success {
+        *resident_weights = Some(batch_weights);
     }
 }
 

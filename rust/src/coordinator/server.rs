@@ -8,10 +8,12 @@
 //! `n_cores` simulated IP cores, plus `golden_fallback_workers` naive
 //! host workers, plus `im2col_workers` threaded im2col+GEMM workers,
 //! plus one `RemoteBackend` per `remote_peers` entry (whole TCP-served
-//! machines) — the heterogeneous deployment. Depthwise trace entries
-//! exercise the capability mask: they only ever route to
-//! depthwise-capable workers. Jobs a backend fails (a dropped peer)
-//! come back as error results, counted in [`Report::n_errors`].
+//! machines, wire protocol v3: binary tensor frames negotiated per
+//! peer, batches pipelined through a bounded in-flight window) — the
+//! heterogeneous deployment. Depthwise trace entries exercise the
+//! capability mask: they only ever route to depthwise-capable workers.
+//! Jobs a backend fails (a dropped peer) come back as error results,
+//! counted in [`Report::n_errors`].
 
 use super::batcher::Batcher;
 use super::config::CoordinatorConfig;

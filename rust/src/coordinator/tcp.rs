@@ -1,12 +1,19 @@
-//! TCP front-end speaking **wire protocol v2**: newline-delimited JSON
-//! over a socket — the network face an edge gateway or a remote
+//! TCP front-end speaking **wire protocol v3**: newline-delimited JSON
+//! for control and header frames, with tensor payloads carried as
+//! length-prefixed **binary frames** immediately following their JSON
+//! header line — the network face an edge gateway or a remote
 //! coordinator ([`crate::backend::RemoteBackend`]) talks to, in front
 //! of the same batcher + heterogeneous core pool the in-process server
 //! uses.
 //!
-//! # Protocol v2 specification
+//! # Protocol v3 specification
 //!
-//! One JSON object per line in both directions. Four frame types:
+//! Every frame *starts* with one JSON object terminated by `\n`. A
+//! header that declares binary payload (`"bin"` on requests,
+//! `"bin_output"` on replies) is followed by exactly that many raw
+//! bytes before the next JSON line. Control frames (`hello`,
+//! `ping`/`pong`, errors, `rejected`) are pure JSON lines, unchanged
+//! from v2.
 //!
 //! ## `hello` (server → client, first line after connect)
 //!
@@ -15,22 +22,30 @@
 //! weigh this peer honestly:
 //!
 //! ```text
-//! <- {"hello":{"proto":2,"freq_hz":112000000,"cores":3,"workers":[
+//! <- {"hello":{"proto":3,"ping":true,"bin":true,"freq_hz":112000000,
+//!      "cores":3,"workers":[
 //!      {"backend":"sim-ipcore-i32","standard":true,"depthwise":true,
 //!       "pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272},
 //!      ...]}}
 //! ```
 //!
-//! `proto` is the protocol revision (clients must reject anything but
-//! 2). `model` is the worker's cost-model family
-//! ([`crate::backend::CostModel::family_tag`]) — a remote coordinator
-//! prices this pool's compute by its fastest advertised tier, so a
-//! host-workers-only peer is never mistaken for a rack of IP cores.
-//! `quote` is the worker's own cost-model estimate for the reference
-//! [`QUICKSTART`] standard job, in that backend's own units —
-//! observability for the mix, not a cross-backend comparable number.
+//! `proto` is the protocol revision: 3 for a binary-capable endpoint,
+//! 2 for a legacy endpoint ([`CoordinatorConfig::wire_v2_only`]).
+//! Clients must accept either and key framing off the `"bin"` flag
+//! (below), rejecting anything else. `model` is the worker's
+//! cost-model family ([`crate::backend::CostModel::family_tag`]) — a
+//! remote coordinator prices this pool's compute by its fastest
+//! advertised tier, so a host-workers-only peer is never mistaken for
+//! a rack of IP cores. `workers` length is the peer's **worker
+//! width**: a pipelining client may divide its compute quote by it
+//! ([`crate::backend::CostModel::Remote`]). `quote` is the worker's
+//! own cost-model estimate for the reference [`QUICKSTART`] standard
+//! job, in that backend's own units — observability for the mix, not a
+//! cross-backend comparable number.
 //!
 //! ## request (client → server)
+//!
+//! JSON-tensor form (v2, still accepted by every server):
 //!
 //! ```text
 //! -> {"id":1,"spec":{"c":8,"h":16,"w":16,"k":8},"seed":42}
@@ -40,6 +55,22 @@
 //!     "weights":[...K*C*9 u8...],"bias":[...K i32...]}
 //! ```
 //!
+//! Binary-tensor form (v3, only after the hello advertised
+//! `"bin":true`):
+//!
+//! ```text
+//! -> {"id":3,"kind":"standard","spec":{...},"full_output":true,
+//!     "bin":[IMG_BYTES,WEIGHT_BYTES,BIAS_BYTES]}\n
+//!    <IMG_BYTES raw u8><WEIGHT_BYTES raw u8><BIAS_BYTES i32 little-endian>
+//! ```
+//!
+//! `"bin"` declares the exact byte length of the three tensor bodies
+//! that follow the newline, in order: image (`C*H*W` u8), weights
+//! (`K*C*9` u8 standard/pointwise, `C*9` depthwise), bias (`out_ch`
+//! i32 words, little-endian, so `out_ch*4` bytes). A request carries
+//! tensors either inline as JSON arrays *or* as a binary frame, never
+//! both; `"bin"` wins if both appear.
+//!
 //! * `kind` — `"standard"` (default), `"depthwise"` (weights `C*9`,
 //!   bias `C`, requires `k == c`; ReLU fuses when `spec.relu`), or
 //!   `"pointwise"` (a 1×1 conv pre-lowered to the 3×3 dataflow:
@@ -47,11 +78,10 @@
 //!   wire). Pointwise jobs need explicit tensors — there is no
 //!   synthetic pointwise generator.
 //! * `seed` — synthesise deterministic tensors server-side (load
-//!   generation); explicit `img`/`weights`/`bias` carry real data.
+//!   generation); explicit `img`/`weights`/`bias` or a `bin` frame
+//!   carry real data.
 //! * `full_output` — opt into the whole output tensor in the reply.
-//!   Off by default: a load generator only needs the checksum, and a
-//!   v1 8-word head is useless for a backend that must return the
-//!   tensor.
+//!   Off by default: a load generator only needs the checksum.
 //!
 //! The wire serves production traffic only: every job requires I32
 //! accumulator semantics (wrap-8 replies stay an in-process,
@@ -64,11 +94,19 @@
 //!     "compute_cycles":6272,"total_cycles":6272,"sim_us":56,
 //!     "weights_reused":false,"output_head":[...8 words...],"checksum":1234567}
 //! <- {"id":2,"ok":true,...,"shape":[8,8,8],"output":[...i32 words...]}
+//! <- {"id":3,"ok":true,...,"shape":[8,8,8],"bin_output":2048}\n<2048 bytes i32 LE>
 //! ```
 //!
-//! `shape`/`output` appear only when the request set `full_output`.
-//! The checksum (sum of output words mod 2^31) always lets clients
-//! verify numerics without shipping whole feature maps back.
+//! `shape` plus `output` *or* `bin_output` appear only when the
+//! request set `full_output`; the reply encoding mirrors the request
+//! encoding (a binary-framed request gets a binary-framed reply, a
+//! JSON-tensor request gets the v2 JSON array — that mirror **is** the
+//! v2 compatibility path, no per-connection mode bit exists). `id` and
+//! `checksum` are exact JSON integers: values above 2^53 must survive
+//! the wire bit-identically, so emitters must never round-trip them
+//! through f64. The checksum (sum of output words mod 2^31) always
+//! lets clients verify numerics without shipping whole feature maps
+//! back.
 //!
 //! ## error (server → client)
 //!
@@ -79,6 +117,19 @@
 //! Malformed JSON, bad shapes, unservable kinds and *backend failures*
 //! (e.g. this peer's own remote sub-peer dropping) all answer with an
 //! error frame on the same id — a request never silently disappears.
+//! Binary framing adds a severity split:
+//!
+//! * body lengths that parse and fit the frame cap but are wrong for
+//!   the spec — the server consumes exactly the declared bytes, errors
+//!   the one job, and the **connection survives** (stream stays in
+//!   sync);
+//! * a `bin` declaration that exceeds [`MAX_BIN_BYTES`] or does not
+//!   parse as three byte counts — error frame, then the server severs
+//!   the connection (it cannot know where the next header starts);
+//! * a binary frame sent to a v2-only endpoint — the server consumes
+//!   the declared bytes and answers a clean "binary framing not
+//!   negotiated" error; the connection survives and keeps serving
+//!   JSON-tensor requests.
 //!
 //! ## rejected (server → client)
 //!
@@ -104,26 +155,52 @@
 //! Lightweight health probe (no `id`, echoes the ping's sequence
 //! number). Feature-negotiated via the hello: a server that answers
 //! pings advertises `"ping":true` inside its `hello` object; clients
-//! must not send `ping` frames to peers whose hello lacks the flag
-//! (plain v2 peers would treat them as malformed requests). Pings are
-//! answered before admission control — probing a saturated server must
-//! not be shed.
+//! must not send `ping` frames to peers whose hello lacks the flag.
+//! Pings are answered before admission control — probing a saturated
+//! server must not be shed — and jump the pipeline (the pong may
+//! overtake queued replies).
+//!
+//! # Pipelining
+//!
+//! Requests on one connection are **pipelined**: the server dispatches
+//! each request as soon as its frame is read, without waiting for
+//! earlier replies, and writes replies as jobs complete. Consequences
+//! clients must honour:
+//!
+//! * replies are **id-matched, not ordered** — a connection that has
+//!   `n` requests in flight may see their replies in any interleaving
+//!   (a v2-style client that submits one request and blocks for its
+//!   reply is trivially unaffected);
+//! * the server bounds the per-connection in-flight window at
+//!   [`MAX_CONN_INFLIGHT`] jobs — beyond it the server simply stops
+//!   reading the socket, so TCP backpressure propagates to the client;
+//! * client request `id`s should be unique among that connection's
+//!   in-flight requests (the server keys internally and echoes the
+//!   client id verbatim, but duplicate in-flight ids make the replies
+//!   indistinguishable to the *client*).
 //!
 //! # Version negotiation
 //!
-//! `proto` stays 2 — peers reject any other revision outright.
-//! Capabilities *within* v2 are negotiated by the presence of hello
-//! fields (`"ping":true` today): unknown hello fields, unknown request
-//! fields and unknown reply fields must all be ignored, so a newer
-//! server interoperates with an older client and vice versa.
+//! The hello's `"bin":true` flag — not the `proto` number — is the
+//! binary-framing capability switch: clients must send JSON tensors to
+//! an endpoint whose hello lacks it. `proto` is 3 on binary-capable
+//! endpoints and 2 on legacy ([`CoordinatorConfig::wire_v2_only`])
+//! endpoints; clients accept both (outputs are bit-identical either
+//! way — only the encoding differs). Capabilities *within* a revision
+//! are negotiated by hello-field presence (`"ping":true`, `"bin":true`
+//! today): unknown hello fields, unknown request fields and unknown
+//! reply fields must all be ignored, so a newer server interoperates
+//! with an older client and vice versa.
 //!
 //! # Shutdown
 //!
-//! [`TcpServer::stop`] drains: it stops accepting, joins every
-//! per-connection handler thread (handlers poll the shutdown flag on a
-//! read timeout, so an idle keep-alive connection cannot block
-//! shutdown), and only then shuts the worker pool down — in-flight
-//! jobs complete and are answered before the pool dies.
+//! The accept loop blocks in `accept()` (no poll sleep);
+//! [`TcpServer::stop`] wakes it with a throwaway connection after
+//! flipping the listener non-blocking, then drains: it joins every
+//! per-connection reader (readers poll the shutdown flag on a read
+//! timeout, so an idle keep-alive connection cannot block shutdown),
+//! each reader joins its reply collector (in-flight jobs are answered
+//! first), and only then does the worker pool shut down.
 
 use super::backpressure::{Admission, AdmissionController, Policy};
 use super::config::CoordinatorConfig;
@@ -132,15 +209,21 @@ use super::request::{fnv1a_bytes, weights_fingerprint_salted, ConvJob, ConvResul
 use crate::backend::JobKind;
 use crate::model::{LayerSpec, Tensor, QUICKSTART};
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Protocol revision advertised in the `hello` frame.
-pub const PROTO_VERSION: u64 = 2;
+/// Protocol revision advertised in the `hello` frame of a
+/// binary-capable endpoint.
+pub const PROTO_VERSION: u64 = 3;
+
+/// Legacy revision advertised by [`CoordinatorConfig::wire_v2_only`]
+/// endpoints (JSON tensors only). Clients accept both.
+pub const PROTO_V2: u64 = 2;
 
 /// How often blocked connection readers wake to poll the shutdown flag.
 const SHUTDOWN_POLL: Duration = Duration::from_millis(100);
@@ -155,6 +238,18 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 /// without ever sending a newline, which would otherwise defeat the
 /// read-timeout shutdown poll and grow the line buffer forever.
 pub(crate) const MAX_LINE_BYTES: usize = 64 << 20;
+
+/// Hard cap on the *declared* byte total of one binary tensor frame
+/// (img + weights + bias). A declaration above it is unrecoverable by
+/// construction — the server will not consume it, so it answers an
+/// error frame and severs the connection.
+pub(crate) const MAX_BIN_BYTES: usize = 64 << 20;
+
+/// Per-connection pipelining window: the server stops reading a
+/// connection's socket while this many of its jobs are in flight, so
+/// TCP backpressure (not memory growth) is what a flooding client
+/// feels. Generous relative to any single peer's worker width.
+pub(crate) const MAX_CONN_INFLIGHT: usize = 64;
 
 /// Outcome of one bounded line read.
 pub(crate) enum LineRead {
@@ -204,9 +299,163 @@ pub(crate) fn read_line_capped<R: BufRead>(
     }
 }
 
+/// `read_exact` over a timeout-polled stream: `WouldBlock`/`TimedOut`
+/// retries (re-checking the shutdown and chaos flags each lap, so a
+/// stopping server never hangs mid-frame on a stalled client), EOF
+/// inside the frame is an error, shutdown surfaces as `Interrupted`.
+fn read_exact_polled<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+    down: &AtomicBool,
+) -> std::io::Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if shutdown.load(Ordering::Relaxed) || down.load(Ordering::Relaxed) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Interrupted,
+                "shutdown during binary frame",
+            ));
+        }
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside binary frame",
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Encode i32 words as the wire's little-endian binary body.
+pub(crate) fn encode_i32_le(words: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(words.len() * 4);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a little-endian i32 binary body (trailing partial word
+/// ignored — callers validate the byte length first).
+pub(crate) fn decode_i32_le(bytes: &[u8]) -> Vec<i32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Encode one complete explicit-tensor request frame — header line
+/// plus, when `bin`, the three binary bodies — ready for a single
+/// buffered write. Shared by [`crate::backend::RemoteBackend`]'s
+/// pipelined writer and the wire tests, so client and server agree on
+/// the framing by construction.
+pub(crate) fn encode_request_frame(
+    id: u64,
+    kind: JobKind,
+    spec: &LayerSpec,
+    img: &[u8],
+    weights: &[u8],
+    bias: &[i32],
+    full_output: bool,
+    bin: bool,
+) -> Vec<u8> {
+    let mut spec_fields = vec![
+        ("c", Json::uint(spec.c as u64)),
+        ("h", Json::uint(spec.h as u64)),
+        ("w", Json::uint(spec.w as u64)),
+        ("k", Json::uint(spec.k as u64)),
+    ];
+    if spec.relu {
+        spec_fields.push(("relu", Json::Bool(true)));
+    }
+    let mut fields = vec![
+        ("id", Json::uint(id)),
+        ("kind", Json::str(kind.tag())),
+        ("spec", Json::obj(spec_fields)),
+    ];
+    if full_output {
+        fields.push(("full_output", Json::Bool(true)));
+    }
+    if bin {
+        let bias_bytes = encode_i32_le(bias);
+        fields.push((
+            "bin",
+            Json::arr_u64([
+                img.len() as u64,
+                weights.len() as u64,
+                bias_bytes.len() as u64,
+            ]),
+        ));
+        let header = Json::obj(fields).to_json();
+        let mut out = Vec::with_capacity(
+            header.len() + 1 + img.len() + weights.len() + bias_bytes.len(),
+        );
+        out.extend_from_slice(header.as_bytes());
+        out.push(b'\n');
+        out.extend_from_slice(img);
+        out.extend_from_slice(weights);
+        out.extend_from_slice(&bias_bytes);
+        out
+    } else {
+        fields.push(("img", Json::arr_u64(img.iter().map(|&v| v as u64))));
+        fields.push((
+            "weights",
+            Json::arr_u64(weights.iter().map(|&v| v as u64)),
+        ));
+        fields.push(("bias", Json::arr_i64(bias.iter().map(|&b| b as i64))));
+        let mut out = Json::obj(fields).to_json().into_bytes();
+        out.push(b'\n');
+        out
+    }
+}
+
+/// The three raw tensor bodies of one binary request frame, exactly as
+/// read off the wire (bias still i32-LE bytes — decoded and validated
+/// in [`job_from_request`]).
+pub(crate) struct BinTensors {
+    pub img: Vec<u8>,
+    pub weights: Vec<u8>,
+    pub bias: Vec<u8>,
+}
+
+/// Parse a request header's `"bin"` declaration into the three body
+/// byte lengths. `Ok(None)` — no binary frame. `Err` — the declaration
+/// is unusable, and since the server then cannot know how many bytes
+/// follow the header, the caller must sever the connection.
+fn parse_bin_lens(req: &Json) -> Result<Option<[usize; 3]>, String> {
+    let Some(b) = req.get(&["bin"]) else {
+        return Ok(None);
+    };
+    let arr = b
+        .as_arr()
+        .filter(|a| a.len() == 3)
+        .ok_or("bin must be [img,weights,bias] byte lengths")?;
+    let mut lens = [0usize; 3];
+    for (i, v) in arr.iter().enumerate() {
+        lens[i] = v
+            .as_u64()
+            .and_then(|n| usize::try_from(n).ok())
+            .ok_or_else(|| format!("bin[{i}] is not a byte count"))?;
+    }
+    Ok(Some(lens))
+}
+
 /// Running TCP server handle.
 pub struct TcpServer {
     pub addr: std::net::SocketAddr,
+    /// Kept so [`Self::stop`] can flip the listener non-blocking before
+    /// nudging the blocking `accept()` awake.
+    listener: Arc<TcpListener>,
     listener_thread: std::thread::JoinHandle<()>,
     shutdown: Arc<AtomicBool>,
     /// Chaos switch: while set, the accept loop drops new connections
@@ -224,6 +473,8 @@ pub struct TcpServer {
     /// In-flight PSUM budget (admission control), present when the
     /// config sets `max_inflight_psums`.
     admission: Option<Arc<AdmissionController>>,
+    /// Serve as a legacy v2 endpoint (see [`CoordinatorConfig::wire_v2_only`]).
+    v2_only: bool,
     pool: Arc<CorePool>,
 }
 
@@ -270,8 +521,12 @@ fn parse_u8_array(j: &Json, want_len: usize, name: &str) -> Result<Vec<u8>, Stri
         .collect()
 }
 
-/// Build a ConvJob from one request line (any kind, v2 fields).
-fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
+/// Build a ConvJob from one request — header JSON plus, for a
+/// binary-framed request, the already-consumed tensor bodies. `id` is
+/// the server's internal job id (client ids are echoed at reply-render
+/// time, never used as dispatch keys — two pipelined clients reusing
+/// ids must not collide).
+fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<ConvJob, String> {
     let spec = parse_spec(req.get(&["spec"]).ok_or("missing spec")?)?;
     let kind = parse_kind(req)?;
     match kind {
@@ -294,12 +549,33 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
         JobKind::Depthwise => spec.c,
         _ => spec.k,
     };
-    if let Some(img_j) = req.get(&["img"]) {
+    let weight_len = match kind {
+        JobKind::Depthwise => spec.c * 9,
+        _ => spec.k * spec.c * 9,
+    };
+    // Explicit tensors, from either encoding: (img u8, weights u8,
+    // bias i32) validated against the spec.
+    let explicit: Option<(Vec<u8>, Vec<u8>, Vec<i32>)> = if let Some(bt) = bin {
+        let want_img = spec.c * spec.h * spec.w;
+        if bt.img.len() != want_img {
+            return Err(format!("bin img length {} != {want_img}", bt.img.len()));
+        }
+        if bt.weights.len() != weight_len {
+            return Err(format!(
+                "bin weights length {} != {weight_len}",
+                bt.weights.len()
+            ));
+        }
+        if bt.bias.len() != out_ch * 4 {
+            return Err(format!(
+                "bin bias length {} != {} ({out_ch} i32 LE words)",
+                bt.bias.len(),
+                out_ch * 4
+            ));
+        }
+        Some((bt.img, bt.weights, decode_i32_le(&bt.bias)))
+    } else if let Some(img_j) = req.get(&["img"]) {
         let img = parse_u8_array(img_j, spec.c * spec.h * spec.w, "img")?;
-        let weight_len = match kind {
-            JobKind::Depthwise => spec.c * 9,
-            _ => spec.k * spec.c * 9,
-        };
         let wts = parse_u8_array(
             req.get(&["weights"]).ok_or("missing weights")?,
             weight_len,
@@ -316,6 +592,11 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
             .iter()
             .map(|v| v.as_f64().map(|n| n as i32).ok_or("bias element"))
             .collect::<Result<_, _>>()?;
+        Some((img, wts, bias))
+    } else {
+        None
+    };
+    if let Some((img, wts, bias)) = explicit {
         let weights = match kind {
             JobKind::Depthwise => Tensor::from_vec(&[spec.c, 3, 3], wts),
             _ => Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
@@ -343,7 +624,7 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
         let seed = req
             .get(&["seed"])
             .and_then(Json::as_f64)
-            .ok_or("need seed or img/weights/bias")? as u64;
+            .ok_or("need seed, img/weights/bias, or a bin frame")? as u64;
         match kind {
             JobKind::Standard => Ok(ConvJob::synthetic(id, spec, seed)),
             JobKind::Depthwise => Ok(ConvJob::synthetic_depthwise(id, spec, seed)),
@@ -354,9 +635,18 @@ fn job_from_request(id: u64, req: &Json) -> Result<ConvJob, String> {
     }
 }
 
-fn response_json(r: &ConvResult, freq_hz: u64, full_output: bool) -> Json {
+/// Render one completed job as its reply frame: the JSON header (with
+/// the *client's* id restored) plus, for a binary-framed `full_output`
+/// request, the i32-LE output body to write right after it.
+fn render_reply(
+    r: &ConvResult,
+    client_id: u64,
+    freq_hz: u64,
+    full_output: bool,
+    bin: bool,
+) -> (Json, Option<Vec<u8>>) {
     if let Some(err) = &r.error {
-        return error_json(r.id, err);
+        return (error_json(client_id, err), None);
     }
     let head: Vec<i64> = r.output.data().iter().take(8).map(|&v| v as i64).collect();
     let checksum = r
@@ -364,45 +654,55 @@ fn response_json(r: &ConvResult, freq_hz: u64, full_output: bool) -> Json {
         .data()
         .iter()
         .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
+    // Ids and checksums are exact integers on the wire: Json::uint /
+    // Json::int emit the value digit-for-digit, where the old
+    // `Json::num(x as f64)` silently corrupted anything above 2^53.
     let mut fields = vec![
-        ("id", Json::num(r.id as f64)),
+        ("id", Json::uint(client_id)),
         ("ok", Json::Bool(true)),
         ("kind", Json::str(r.kind.tag())),
-        ("core", Json::num(r.core as f64)),
+        ("core", Json::uint(r.core as u64)),
         ("backend", Json::str(r.backend)),
-        ("compute_cycles", Json::num(r.cycles.compute as f64)),
-        ("total_cycles", Json::num(r.cycles.total as f64)),
+        ("compute_cycles", Json::uint(r.cycles.compute)),
+        ("total_cycles", Json::uint(r.cycles.total)),
         (
             "sim_us",
             Json::num((r.cycles.total as f64 / freq_hz as f64 * 1e6).round()),
         ),
         ("weights_reused", Json::Bool(r.weights_reused)),
         ("output_head", Json::arr_i64(head)),
-        ("checksum", Json::num(checksum as f64)),
+        ("checksum", Json::int(checksum)),
     ];
+    let mut body = None;
     if full_output {
         fields.push((
             "shape",
             Json::arr_u64(r.output.shape().iter().map(|&d| d as u64)),
         ));
-        fields.push((
-            "output",
-            Json::arr_i64(r.output.data().iter().map(|&v| v as i64)),
-        ));
+        if bin {
+            let bytes = encode_i32_le(r.output.data());
+            fields.push(("bin_output", Json::uint(bytes.len() as u64)));
+            body = Some(bytes);
+        } else {
+            fields.push((
+                "output",
+                Json::arr_i64(r.output.data().iter().map(|&v| v as i64)),
+            ));
+        }
     }
-    Json::obj(fields)
+    (Json::obj(fields), body)
 }
 
 fn error_json(id: u64, msg: &str) -> Json {
     Json::obj(vec![
-        ("id", Json::num(id as f64)),
+        ("id", Json::uint(id)),
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg)),
     ])
 }
 
 /// The capability advertisement every connection opens with.
-fn hello_json(pool: &CorePool) -> Json {
+fn hello_json(pool: &CorePool, v2_only: bool) -> Json {
     let quotes = pool.worker_cost_models();
     let workers: Vec<Json> = pool
         .worker_capabilities()
@@ -424,115 +724,48 @@ fn hello_json(pool: &CorePool) -> Json {
                 ("model", Json::str(cost.family_tag())),
                 (
                     "quote",
-                    Json::num(cost.cost(&QUICKSTART, JobKind::Standard) as f64),
+                    Json::uint(cost.cost(&QUICKSTART, JobKind::Standard)),
                 ),
             ])
         })
         .collect();
-    Json::obj(vec![(
-        "hello",
-        Json::obj(vec![
-            ("proto", Json::num(PROTO_VERSION as f64)),
-            // In-revision feature flag (see "Version negotiation"):
-            // this server answers `ping` control frames.
-            ("ping", Json::Bool(true)),
-            ("freq_hz", Json::num(pool.ip_config().freq_hz as f64)),
-            ("cores", Json::num(pool.n_cores() as f64)),
-            ("workers", Json::Arr(workers)),
-        ]),
-    )])
+    let mut h = vec![
+        (
+            "proto",
+            Json::uint(if v2_only { PROTO_V2 } else { PROTO_VERSION }),
+        ),
+        // In-revision feature flag (see "Version negotiation"):
+        // this server answers `ping` control frames.
+        ("ping", Json::Bool(true)),
+    ];
+    if !v2_only {
+        // Binary tensor framing is negotiated by this flag's presence,
+        // not by the proto number — a v2-only endpoint omits it and
+        // clients must stay on JSON tensors.
+        h.push(("bin", Json::Bool(true)));
+    }
+    h.push(("freq_hz", Json::uint(pool.ip_config().freq_hz)));
+    h.push(("cores", Json::uint(pool.n_cores() as u64)));
+    h.push(("workers", Json::Arr(workers)));
+    Json::obj(vec![("hello", Json::obj(h))])
 }
 
-/// Parse, dispatch and answer one request line.
-fn process_line(
-    line: &str,
-    pool: &CorePool,
-    fallback_id: u64,
-    freq: u64,
-    admission: Option<&AdmissionController>,
-) -> Json {
-    let req = match Json::parse(line) {
-        Err(e) => return error_json(fallback_id, &format!("bad json: {e}")),
-        Ok(req) => req,
-    };
-    // Ping control frame: answered before job parsing and before
-    // admission — a health probe must stay cheap and is never shed.
-    if let Some(seq) = req.get(&["ping"]).and_then(Json::as_f64) {
-        return Json::obj(vec![("pong", Json::num(seq))]);
-    }
-    let req_id = req
-        .get(&["id"])
-        .and_then(Json::as_f64)
-        .map(|n| n as u64)
-        .unwrap_or(fallback_id);
-    let full_output = req
-        .get(&["full_output"])
-        .and_then(Json::as_bool)
-        .unwrap_or(false);
-    let job = match job_from_request(req_id, &req) {
-        Err(e) => return error_json(req_id, &e),
-        Ok(job) => job,
-    };
-    // Admission control gates on the job's PSUM quote (the unit the
-    // dispatcher balances by) with the fast-reject serving policy: an
-    // over-budget request gets a `rejected` frame now, not a queue slot.
-    let psums = job.psums();
-    if let Some(ac) = admission {
-        if ac.admit(psums, Policy::Reject) == Admission::Rejected {
-            pool.metrics.record_shed();
-            let msg = format!(
-                "admission: {psums} PSUMs would exceed the in-flight budget ({}/{} in flight)",
-                ac.inflight(),
-                ac.capacity()
-            );
-            return Json::obj(vec![
-                ("id", Json::num(req_id as f64)),
-                ("ok", Json::Bool(false)),
-                ("rejected", Json::Bool(true)),
-                ("error", Json::str(&msg)),
-            ]);
-        }
-    }
-    let (tx, rx) = channel();
-    let spec = job.spec;
-    let weights_id = job.weights_id;
-    let kind = job.kind;
-    let accum = job.accum;
-    let batch = super::batcher::Batch {
-        spec,
-        weights_id,
-        kind,
-        accum,
-        jobs: vec![Submission {
-            job,
-            reply: tx,
-            enqueued: std::time::Instant::now(),
-        }],
-    };
-    // An unroutable job (e.g. depthwise against a standard-only pool)
-    // is a client error on the wire, not a deployment panic.
-    if let Err(back) = pool.try_dispatch(batch) {
-        if let Some(ac) = admission {
-            ac.complete(psums);
-        }
-        return error_json(
-            req_id,
-            &format!(
-                "no backend in this pool serves {:?} jobs in {:?} accum mode",
-                back.kind, back.accum
-            ),
-        );
-    }
-    let reply = match rx.recv() {
-        Ok(result) => response_json(&result, freq, full_output),
-        Err(_) => error_json(req_id, "worker dropped"),
-    };
-    if let Some(ac) = admission {
-        ac.complete(psums);
-    }
-    reply
+/// What the reply collector needs to render a completed job: jobs are
+/// keyed by *internal* id, these restore the client-visible framing.
+struct PendingMeta {
+    client_id: u64,
+    full_output: bool,
+    bin: bool,
+    psums: u64,
 }
 
+/// Write one JSON line under the shared writer lock.
+fn send_line(writer: &Mutex<TcpStream>, j: &Json) -> bool {
+    let mut w = writer.lock().unwrap();
+    writeln!(w, "{}", j.to_json()).is_ok()
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
     pool: Arc<CorePool>,
@@ -541,6 +774,7 @@ fn handle_connection(
     shutdown: Arc<AtomicBool>,
     down: Arc<AtomicBool>,
     admission: Option<Arc<AdmissionController>>,
+    v2_only: bool,
     // Held (not used) until this handler returns: the listener prunes
     // the chaos-kill registry by the monitor's refcount.
     _monitor: Arc<TcpStream>,
@@ -554,36 +788,271 @@ fn handle_connection(
     // full_output reply must fail its connection, not park this handler
     // (and block stop()) on a full TCP send buffer forever.
     stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
+    // Replies are written by two threads (this reader for errors and
+    // pongs, the collector for job replies), so the write half lives
+    // behind a mutex; each frame (header line + optional binary body)
+    // is written under one lock hold, so frames never interleave.
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
-    if writeln!(writer, "{hello_line}").is_err() {
-        return;
+    {
+        let mut w = writer.lock().unwrap();
+        if writeln!(w, "{hello_line}").is_err() {
+            return;
+        }
     }
+    // Pipelining state: jobs in flight on this connection, keyed by
+    // internal id. The reader inserts before dispatch and blocks (via
+    // the condvar) while the window is full; the collector removes as
+    // replies complete.
+    let pending: Arc<(Mutex<HashMap<u64, PendingMeta>>, Condvar)> =
+        Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
+    // Set when a reply write fails: the socket is gone, so the
+    // collector stops writing but keeps draining results (admission
+    // charges must still be released).
+    let conn_dead = Arc::new(AtomicBool::new(false));
+    let (res_tx, res_rx) = channel::<ConvResult>();
+    let collector = {
+        let writer = Arc::clone(&writer);
+        let pending = Arc::clone(&pending);
+        let conn_dead = Arc::clone(&conn_dead);
+        let admission = admission.clone();
+        std::thread::Builder::new()
+            .name("repro-tcp-replies".into())
+            .spawn(move || {
+                // Runs until every result sender is gone: the reader
+                // drops the original on exit, each dispatched job's
+                // clone dies with its reply.
+                while let Ok(result) = res_rx.recv() {
+                    let meta = {
+                        let (lock, cv) = &*pending;
+                        let meta = lock.lock().unwrap().remove(&result.id);
+                        cv.notify_all();
+                        meta
+                    };
+                    let Some(meta) = meta else { continue };
+                    if !conn_dead.load(Ordering::Relaxed) {
+                        let (header, body) = render_reply(
+                            &result,
+                            meta.client_id,
+                            freq,
+                            meta.full_output,
+                            meta.bin,
+                        );
+                        let mut w = writer.lock().unwrap();
+                        let mut ok = writeln!(w, "{}", header.to_json()).is_ok();
+                        if ok {
+                            if let Some(body) = &body {
+                                ok = w.write_all(body).is_ok();
+                            }
+                        }
+                        if !ok {
+                            conn_dead.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    // Release the admission charge even on a dead
+                    // connection — in-flight budget tracks compute,
+                    // not sockets.
+                    if let Some(ac) = &admission {
+                        ac.complete(meta.psums);
+                    }
+                }
+            })
+            .expect("spawn reply collector")
+    };
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
-    loop {
-        if shutdown.load(Ordering::Relaxed) || down.load(Ordering::Relaxed) {
+    'conn: loop {
+        if shutdown.load(Ordering::Relaxed)
+            || down.load(Ordering::Relaxed)
+            || conn_dead.load(Ordering::Relaxed)
+        {
             break;
         }
         match read_line_capped(&mut reader, &mut buf, MAX_LINE_BYTES) {
             Ok(LineRead::Eof) => break, // client closed the connection
             Ok(LineRead::Line) => {
-                let reply = {
-                    let line = String::from_utf8_lossy(&buf);
-                    let trimmed = line.trim();
-                    if trimmed.is_empty() {
-                        None
-                    } else {
-                        let id = next_id.fetch_add(1, Ordering::Relaxed);
-                        Some(process_line(trimmed, &pool, id, freq, admission.as_deref()))
+                let line = String::from_utf8_lossy(&buf).into_owned();
+                buf.clear();
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let req = match Json::parse(trimmed) {
+                    Err(e) => {
+                        // No id to echo and, if a binary body followed
+                        // this garbage, no way to resync — answer and
+                        // keep line-reading; a desynced stream fails
+                        // the over-cap guard soon after.
+                        if !send_line(&writer, &error_json(0, &format!("bad json: {e}"))) {
+                            break 'conn;
+                        }
+                        continue;
+                    }
+                    Ok(req) => req,
+                };
+                // Ping control frame: answered before job parsing and
+                // before admission — a health probe must stay cheap, is
+                // never shed, and jumps the reply pipeline.
+                if let Some(seq) = req.get(&["ping"]).and_then(Json::as_f64) {
+                    if !send_line(&writer, &Json::obj(vec![("pong", Json::num(seq))])) {
+                        break 'conn;
+                    }
+                    continue;
+                }
+                let internal = next_id.fetch_add(1, Ordering::Relaxed);
+                let client_id = req.get(&["id"]).and_then(Json::as_u64).unwrap_or(internal);
+                // Binary bodies must be consumed *before* any error
+                // path that keeps the connection, or the stream
+                // desyncs.
+                let bin: Option<BinTensors> = match parse_bin_lens(&req) {
+                    Err(e) => {
+                        // Unusable declaration: the server cannot know
+                        // how many bytes follow. Error, then sever.
+                        let _ = send_line(&writer, &error_json(client_id, &e));
+                        break 'conn;
+                    }
+                    Ok(None) => None,
+                    Ok(Some([li, lw, lb])) => {
+                        if li.saturating_add(lw).saturating_add(lb) > MAX_BIN_BYTES {
+                            let _ = send_line(
+                                &writer,
+                                &error_json(
+                                    client_id,
+                                    &format!(
+                                        "bin frame {} bytes exceeds cap {MAX_BIN_BYTES}",
+                                        li as u128 + lw as u128 + lb as u128
+                                    ),
+                                ),
+                            );
+                            break 'conn;
+                        }
+                        let mut bt = BinTensors {
+                            img: vec![0u8; li],
+                            weights: vec![0u8; lw],
+                            bias: vec![0u8; lb],
+                        };
+                        for body in [&mut bt.img, &mut bt.weights, &mut bt.bias] {
+                            if read_exact_polled(&mut reader, body, &shutdown, &down).is_err() {
+                                break 'conn;
+                            }
+                        }
+                        Some(bt)
                     }
                 };
-                buf.clear();
-                if let Some(reply) = reply {
-                    if writeln!(writer, "{}", reply.to_json()).is_err() {
-                        break;
+                if v2_only && bin.is_some() {
+                    // Bytes are consumed, the stream is in sync: a
+                    // clean per-job error, not a disconnect.
+                    if !send_line(
+                        &writer,
+                        &error_json(
+                            client_id,
+                            "binary framing not negotiated (this endpoint is wire v2)",
+                        ),
+                    ) {
+                        break 'conn;
+                    }
+                    continue;
+                }
+                let is_bin = bin.is_some();
+                let full_output = req
+                    .get(&["full_output"])
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                let job = match job_from_request(internal, &req, bin) {
+                    Err(e) => {
+                        if !send_line(&writer, &error_json(client_id, &e)) {
+                            break 'conn;
+                        }
+                        continue;
+                    }
+                    Ok(job) => job,
+                };
+                // Admission control gates on the job's PSUM quote (the
+                // unit the dispatcher balances by) with the fast-reject
+                // serving policy: an over-budget request gets a
+                // `rejected` frame now, not a queue slot.
+                let psums = job.psums();
+                if let Some(ac) = &admission {
+                    if ac.admit(psums, Policy::Reject) == Admission::Rejected {
+                        pool.metrics.record_shed();
+                        let msg = format!(
+                            "admission: {psums} PSUMs would exceed the in-flight budget ({}/{} in flight)",
+                            ac.inflight(),
+                            ac.capacity()
+                        );
+                        let frame = Json::obj(vec![
+                            ("id", Json::uint(client_id)),
+                            ("ok", Json::Bool(false)),
+                            ("rejected", Json::Bool(true)),
+                            ("error", Json::str(&msg)),
+                        ]);
+                        if !send_line(&writer, &frame) {
+                            break 'conn;
+                        }
+                        continue;
+                    }
+                }
+                // Pipelining window: park the reader (socket unread ->
+                // TCP backpressure) while the connection is full,
+                // without blocking shutdown.
+                {
+                    let (lock, cv) = &*pending;
+                    let mut map = lock.lock().unwrap();
+                    while map.len() >= MAX_CONN_INFLIGHT {
+                        if shutdown.load(Ordering::Relaxed)
+                            || down.load(Ordering::Relaxed)
+                            || conn_dead.load(Ordering::Relaxed)
+                        {
+                            drop(map);
+                            if let Some(ac) = &admission {
+                                ac.complete(psums);
+                            }
+                            break 'conn;
+                        }
+                        let (m, _timeout) = cv.wait_timeout(map, SHUTDOWN_POLL).unwrap();
+                        map = m;
+                    }
+                    map.insert(
+                        internal,
+                        PendingMeta {
+                            client_id,
+                            full_output,
+                            bin: is_bin,
+                            psums,
+                        },
+                    );
+                }
+                let batch = super::batcher::Batch {
+                    spec: job.spec,
+                    weights_id: job.weights_id,
+                    kind: job.kind,
+                    accum: job.accum,
+                    jobs: vec![Submission {
+                        job,
+                        reply: res_tx.clone(),
+                        enqueued: std::time::Instant::now(),
+                    }],
+                };
+                // An unroutable job (e.g. depthwise against a
+                // standard-only pool) is a client error on the wire,
+                // not a deployment panic.
+                if let Err(back) = pool.try_dispatch(batch) {
+                    {
+                        let (lock, cv) = &*pending;
+                        lock.lock().unwrap().remove(&internal);
+                        cv.notify_all();
+                    }
+                    if let Some(ac) = &admission {
+                        ac.complete(psums);
+                    }
+                    let msg = format!(
+                        "no backend in this pool serves {:?} jobs in {:?} accum mode",
+                        back.kind, back.accum
+                    );
+                    if !send_line(&writer, &error_json(client_id, &msg)) {
+                        break 'conn;
                     }
                 }
             }
@@ -602,6 +1071,12 @@ fn handle_connection(
             Err(_) => break,
         }
     }
+    // Hand the channel to the in-flight jobs alone; once their replies
+    // (or drops) land, the collector's recv() disconnects and it exits
+    // — every dispatched job is answered (or its admission charge
+    // released) before this handler is considered drained.
+    drop(res_tx);
+    let _ = collector.join();
 }
 
 impl TcpServer {
@@ -609,13 +1084,14 @@ impl TcpServer {
     /// pool is whatever the config describes — simulated IP cores,
     /// golden / im2col host workers, even this peer's own remote peers.
     pub fn start(addr: &str, config: CoordinatorConfig) -> anyhow::Result<Self> {
-        let listener = TcpListener::bind(addr)?;
+        let listener = Arc::new(TcpListener::bind(addr)?);
         let local = listener.local_addr()?;
+        let v2_only = config.wire_v2_only;
         let pool = Arc::new(super::server::build_pool(&config)?);
         let admission = config
             .max_inflight_psums
             .map(|m| Arc::new(AdmissionController::new(m)));
-        let hello_line = Arc::new(hello_json(&pool).to_json());
+        let hello_line = Arc::new(hello_json(&pool, v2_only).to_json());
         let next_id = Arc::new(AtomicU64::new(1));
         let shutdown = Arc::new(AtomicBool::new(false));
         let down = Arc::new(AtomicBool::new(false));
@@ -628,16 +1104,21 @@ impl TcpServer {
         let live_in_listener = Arc::clone(&live);
         let pool_in_listener = Arc::clone(&pool);
         let admission_in_listener = admission.clone();
-        listener.set_nonblocking(true)?;
+        let listener_in_thread = Arc::clone(&listener);
+        // Event-driven accept: the loop *blocks* in accept() — no poll
+        // sleep, no idle wakeups. stop() wakes it with a throwaway
+        // connection after flipping the listener non-blocking (the
+        // flip alone covers the case where that connect is refused).
         let listener_thread = std::thread::Builder::new()
             .name("repro-tcp".into())
             .spawn(move || {
                 loop {
-                    if shutdown_flag.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match listener.accept() {
+                    match listener_in_thread.accept() {
                         Ok((stream, _)) => {
+                            // The stop() wake-up connection lands here.
+                            if shutdown_flag.load(Ordering::Relaxed) {
+                                break;
+                            }
                             // Chaos: a "dead" peer accepts nothing. The
                             // socket closes without a hello, which a
                             // dialing client reads as connection refused.
@@ -668,7 +1149,7 @@ impl TcpServer {
                             let handle = std::thread::spawn(move || {
                                 handle_connection(
                                     stream, pool, next_id, hello, shutdown, down, admission,
-                                    monitor,
+                                    v2_only, monitor,
                                 )
                             });
                             let mut conns = conns_in_listener.lock().unwrap();
@@ -677,21 +1158,35 @@ impl TcpServer {
                             conns.retain(|h| !h.is_finished());
                             conns.push(handle);
                         }
+                        // Only reachable after stop() flipped the
+                        // listener non-blocking; the short sleep guards
+                        // against a hot spin if a platform surfaces
+                        // spurious WouldBlock before shutdown is set.
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if shutdown_flag.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => {
+                            if shutdown_flag.load(Ordering::Relaxed) {
+                                break;
+                            }
                             std::thread::sleep(Duration::from_millis(10));
                         }
-                        Err(_) => break,
                     }
                 }
             })?;
         Ok(TcpServer {
             addr: local,
+            listener,
             listener_thread,
             shutdown,
             down,
             conns,
             live,
             admission,
+            v2_only,
             pool,
         })
     }
@@ -699,7 +1194,7 @@ impl TcpServer {
     /// The capability line every connection is greeted with (tests and
     /// observability).
     pub fn hello(&self) -> Json {
-        hello_json(&self.pool)
+        hello_json(&self.pool, self.v2_only)
     }
 
     /// This server's serving metrics (chaos harnesses and tests assert
@@ -741,6 +1236,19 @@ impl TcpServer {
         if let Some(ac) = &self.admission {
             ac.shutdown();
         }
+        // Wake the blocking accept(): flip the listener non-blocking
+        // (any racing accept now returns WouldBlock and sees the flag)
+        // and nudge it with a throwaway connection in case it was
+        // already parked in the kernel.
+        self.listener.set_nonblocking(true).ok();
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
         let _ = self.listener_thread.join();
         loop {
             let handle = self.conns.lock().unwrap().pop();
@@ -761,7 +1269,8 @@ impl TcpServer {
 
 /// Blocking one-shot client (used by tests, examples and load
 /// generators): connect, swallow the `hello` greeting, send one
-/// request, return its reply.
+/// request, return its reply. Speaks JSON tensors regardless of what
+/// the hello advertises — the v2-compatible lowest common denominator.
 pub fn request_once(addr: &std::net::SocketAddr, body: &Json) -> anyhow::Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
@@ -809,6 +1318,23 @@ mod tests {
         (Json::parse(&line).unwrap(), stream, reader)
     }
 
+    /// Read one reply frame: the JSON header line plus, when it
+    /// declares `bin_output`, the decoded i32 body that follows it.
+    fn read_reply_frame(reader: &mut BufReader<TcpStream>) -> (Json, Option<Vec<i32>>) {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let header = Json::parse(&line).unwrap_or_else(|e| panic!("bad header {line:?}: {e}"));
+        let body = header
+            .get(&["bin_output"])
+            .and_then(Json::as_usize)
+            .map(|n| {
+                let mut buf = vec![0u8; n];
+                reader.read_exact(&mut buf).unwrap();
+                decode_i32_le(&buf)
+            });
+        (header, body)
+    }
+
     #[test]
     fn handshake_advertises_pool_capability() {
         let server = TcpServer::start(
@@ -820,9 +1346,10 @@ mod tests {
         .unwrap();
         let (hello, _stream, _reader) = connect_raw(server.addr);
         let h = hello.get(&["hello"]).expect("hello frame");
-        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
-        // In-revision feature flag: this server answers pings.
+        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(3));
+        // In-revision feature flags: pings answered, binary framing on.
         assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
+        assert_eq!(h.get(&["bin"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["cores"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["freq_hz"]).unwrap().as_f64().unwrap() > 0.0);
         let workers = h.get(&["workers"]).unwrap().as_arr().unwrap();
@@ -862,6 +1389,7 @@ mod tests {
         );
         // No full output unless asked for.
         assert!(resp.get(&["output"]).is_none());
+        assert!(resp.get(&["bin_output"]).is_none());
         // Checksum matches a local recomputation of the same seed.
         let job = ConvJob::synthetic(7, QUICKSTART, 42);
         let want = golden::conv3x3_i32(&job.img, &job.weights, &job.bias, false);
@@ -1054,11 +1582,67 @@ mod tests {
                 ("bias", Json::arr_i64([0, 0, 0, 0])),
             ])
         };
-        let a = job_from_request(1, &req(1, 5)).unwrap();
-        let b = job_from_request(2, &req(2, 5)).unwrap();
-        let c = job_from_request(3, &req(3, 6)).unwrap();
+        let a = job_from_request(1, &req(1, 5), None).unwrap();
+        let b = job_from_request(2, &req(2, 5), None).unwrap();
+        let c = job_from_request(3, &req(3, 6), None).unwrap();
         assert_eq!(a.weights_id, b.weights_id, "same bytes, different request ids");
         assert_ne!(a.weights_id, c.weights_id, "different bytes must never alias");
+    }
+
+    #[test]
+    fn binary_and_json_explicit_requests_build_identical_jobs() {
+        // The two encodings of the same tensors must produce the same
+        // job — same weights fingerprint, same data — so batching and
+        // DMA-reuse behave identically whichever framing a client uses.
+        let spec = LayerSpec::new(1, 4, 4, 4);
+        let img: Vec<u8> = (0..16).collect();
+        let wts: Vec<u8> = (0..36).map(|i| i % 5).collect();
+        let bias = [3i32, -1, 0, 7];
+        let json_req = Json::obj(vec![
+            ("id", Json::num(1u32)),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("c", Json::num(1u32)),
+                    ("h", Json::num(4u32)),
+                    ("w", Json::num(4u32)),
+                    ("k", Json::num(4u32)),
+                ]),
+            ),
+            ("img", Json::arr_u64(img.iter().map(|&v| v as u64))),
+            ("weights", Json::arr_u64(wts.iter().map(|&v| v as u64))),
+            ("bias", Json::arr_i64(bias.iter().map(|&b| b as i64))),
+        ]);
+        let a = job_from_request(1, &json_req, None).unwrap();
+        // Binary path: header parsed from the shared encoder's frame.
+        let frame = encode_request_frame(
+            1,
+            JobKind::Standard,
+            &spec,
+            &img,
+            &wts,
+            &bias,
+            false,
+            true,
+        );
+        let nl = frame.iter().position(|&b| b == b'\n').unwrap();
+        let header = Json::parse(std::str::from_utf8(&frame[..nl]).unwrap()).unwrap();
+        let lens = parse_bin_lens(&header).unwrap().unwrap();
+        assert_eq!(lens, [16, 36, 16]);
+        let b = job_from_request(
+            1,
+            &header,
+            Some(BinTensors {
+                img: img.clone(),
+                weights: wts.clone(),
+                bias: encode_i32_le(&bias),
+            }),
+        )
+        .unwrap();
+        assert_eq!(a.weights_id, b.weights_id);
+        assert_eq!(a.img.data(), b.img.data());
+        assert_eq!(a.weights.data(), b.weights.data());
+        assert_eq!(a.bias, b.bias);
     }
 
     #[test]
@@ -1088,10 +1672,13 @@ mod tests {
     }
 
     #[test]
-    fn multiple_requests_per_connection() {
+    fn pipelined_burst_answers_every_request() {
+        // Eight back-to-back requests written before a single reply is
+        // read: the server dispatches them all (pipelining), replies
+        // arrive id-matched in *some* order, none are lost.
         let server = start();
-        let (_hello, mut stream, reader) = connect_raw(server.addr);
-        for i in 0..3 {
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        for i in 0..8 {
             writeln!(
                 stream,
                 r#"{{"id":{i},"spec":{{"c":4,"h":8,"w":8,"k":4}},"seed":{i}}}"#
@@ -1099,13 +1686,13 @@ mod tests {
             .unwrap();
         }
         let mut seen = Vec::new();
-        for line in reader.lines().take(3) {
-            let resp = Json::parse(&line.unwrap()).unwrap();
-            assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true));
+        for _ in 0..8 {
+            let (resp, _body) = read_reply_frame(&mut reader);
+            assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
             seen.push(resp.get(&["id"]).unwrap().as_usize().unwrap());
         }
         seen.sort();
-        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
         drop(stream);
         server.stop();
     }
@@ -1205,5 +1792,242 @@ mod tests {
             "stop() must drain handlers via the shutdown poll, not block on the idle client"
         );
         drop(stream);
+    }
+
+    // ---- wire v3: binary framing, negotiation, exact integers ----
+
+    #[test]
+    fn v2_only_hello_advertises_proto_2_without_bin() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_wire_v2_only(),
+        )
+        .unwrap();
+        let (hello, _stream, _reader) = connect_raw(server.addr);
+        let h = hello.get(&["hello"]).expect("hello frame");
+        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
+        assert!(h.get(&["bin"]).is_none(), "legacy endpoint must not offer binary framing");
+        // Ping stays negotiated within v2 (it predates v3).
+        assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
+        // JSON-tensor traffic is served normally.
+        let req = Json::parse(r#"{"id":1,"spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#).unwrap();
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn binary_frames_round_trip_bit_identical() {
+        let server = start();
+        let (hello, mut stream, mut reader) = connect_raw(server.addr);
+        assert_eq!(
+            hello.get(&["hello"]).unwrap().get(&["bin"]).unwrap().as_bool(),
+            Some(true)
+        );
+        // Standard conv, binary both ways.
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(93);
+        let img = rng.bytes_below(spec.c * spec.h * spec.w, 256);
+        let wts = rng.bytes_below(spec.k * spec.c * 9, 256);
+        let bias: Vec<i32> = (0..spec.k).map(|_| rng.range_i64(-20, 20) as i32).collect();
+        let frame = encode_request_frame(
+            11,
+            JobKind::Standard,
+            &spec,
+            &img,
+            &wts,
+            &bias,
+            true,
+            true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (header, body) = read_reply_frame(&mut reader);
+        assert_eq!(header.get(&["ok"]).unwrap().as_bool(), Some(true), "{header:?}");
+        assert_eq!(header.get(&["id"]).unwrap().as_u64(), Some(11));
+        assert!(
+            header.get(&["output"]).is_none(),
+            "binary reply must not also carry the JSON output array"
+        );
+        let shape: Vec<usize> = header
+            .get(&["shape"])
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(shape, vec![4, 3, 3]);
+        let img_t = Tensor::from_vec(&[2, 5, 5], img);
+        let wts_t = Tensor::from_vec(&[4, 2, 3, 3], wts);
+        let want = golden::conv3x3_i32(&img_t, &wts_t, &bias, false);
+        assert_eq!(
+            body.expect("bin_output body"),
+            want.data(),
+            "binary full output must be bit-identical"
+        );
+        // Depthwise+relu on the *same connection* (framing stays in
+        // sync across kinds).
+        let dspec = LayerSpec::new(8, 10, 10, 8).with_relu();
+        let dimg = rng.bytes_below(8 * 10 * 10, 256);
+        let dwts = rng.bytes_below(8 * 9, 256);
+        let dbias: Vec<i32> = (0..8).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let frame = encode_request_frame(
+            12,
+            JobKind::Depthwise,
+            &dspec,
+            &dimg,
+            &dwts,
+            &dbias,
+            true,
+            true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (header, body) = read_reply_frame(&mut reader);
+        assert_eq!(header.get(&["ok"]).unwrap().as_bool(), Some(true), "{header:?}");
+        assert_eq!(header.get(&["id"]).unwrap().as_u64(), Some(12));
+        let dimg_t = Tensor::from_vec(&[8, 10, 10], dimg);
+        let dwts_t = Tensor::from_vec(&[8, 3, 3], dwts);
+        let dwant = golden_depthwise3x3(&dimg_t, &dwts_t, &dbias, true);
+        assert_eq!(body.expect("bin_output body"), dwant.data());
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_binary_frame_fails_the_job_not_the_connection() {
+        let server = start_n(1);
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        // Self-consistent framing (12+36+16 bytes really follow) but
+        // wrong for the spec: img wants c*h*w = 16 bytes, not 12. The
+        // server must consume exactly the declared bytes, error the
+        // job, and keep the stream in sync.
+        let header =
+            r#"{"id":1,"spec":{"c":1,"h":4,"w":4,"k":4},"bin":[12,36,16],"full_output":true}"#;
+        stream.write_all(header.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.write_all(&vec![0u8; 12 + 36 + 16]).unwrap();
+        let (resp, body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("img length"));
+        assert!(body.is_none());
+        // The same connection serves a well-formed binary frame next.
+        let spec = LayerSpec::new(1, 4, 4, 4);
+        let img: Vec<u8> = (0..16).collect();
+        let wts: Vec<u8> = (0..36).map(|i| (i % 5) as u8).collect();
+        let frame =
+            encode_request_frame(2, JobKind::Standard, &spec, &img, &wts, &[0; 4], false, true);
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get(&["id"]).unwrap().as_u64(), Some(2));
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_binary_declaration_severs_the_connection() {
+        let server = start_n(1);
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        // Declares more than MAX_BIN_BYTES: the server must answer an
+        // error *without* trying to consume (or allocate) the payload,
+        // then sever — it cannot resync past an unconsumed body.
+        let too_big = MAX_BIN_BYTES; // 3*cap total > cap
+        let header = format!(
+            r#"{{"id":1,"spec":{{"c":1,"h":4,"w":4,"k":4}},"bin":[{too_big},{too_big},{too_big}]}}"#
+        );
+        let t0 = std::time::Instant::now();
+        stream.write_all(header.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("exceeds cap"));
+        // Then EOF: the connection is gone, quickly (no 192 MB read).
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "oversized declaration must sever: {line:?}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        server.stop();
+    }
+
+    #[test]
+    fn binary_request_to_v2_only_endpoint_fails_cleanly() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_wire_v2_only(),
+        )
+        .unwrap();
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        let spec = LayerSpec::new(1, 4, 4, 4);
+        let img: Vec<u8> = (0..16).collect();
+        let wts: Vec<u8> = (0..36).map(|i| (i % 5) as u8).collect();
+        // A client that ignores negotiation and sends binary anyway:
+        // the v2-only server consumes the declared bytes and answers a
+        // clean per-job error — no disconnect, no desync.
+        let frame =
+            encode_request_frame(9, JobKind::Standard, &spec, &img, &wts, &[0; 4], false, true);
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("not negotiated"));
+        assert_eq!(resp.get(&["id"]).unwrap().as_u64(), Some(9));
+        // Same connection, JSON tensors: served.
+        let frame =
+            encode_request_frame(10, JobKind::Standard, &spec, &img, &wts, &[0; 4], false, false);
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get(&["id"]).unwrap().as_u64(), Some(10));
+        server.stop();
+    }
+
+    #[test]
+    fn ids_above_2_pow_53_survive_the_wire_exactly() {
+        // Regression: v2 rendered ids via `Json::num(id as f64)`, which
+        // corrupts anything above 2^53 (and checksums likewise). v3
+        // emits exact integers.
+        let server = start_n(1);
+        let big: u64 = (1u64 << 60) + 3;
+        let req = Json::parse(&format!(
+            r#"{{"id":{big},"spec":{{"c":4,"h":8,"w":8,"k":4}},"seed":1}}"#
+        ))
+        .unwrap();
+        assert_eq!(req.get(&["id"]).unwrap().as_u64(), Some(big), "parse side");
+        let resp = request_once(&server.addr, &req).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(
+            resp.get(&["id"]).unwrap().as_u64(),
+            Some(big),
+            "id must round-trip digit-for-digit, not via f64"
+        );
+        // The error path echoes exact ids too.
+        let bad = Json::parse(&format!(
+            r#"{{"id":{big},"kind":"pointwise","spec":{{"c":4,"h":8,"w":8,"k":4}},"seed":1}}"#
+        ))
+        .unwrap();
+        let resp = request_once(&server.addr, &bad).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false));
+        assert_eq!(resp.get(&["id"]).unwrap().as_u64(), Some(big));
+        server.stop();
+    }
+
+    #[test]
+    fn i32_le_codec_round_trips() {
+        let words = vec![0i32, -1, i32::MIN, i32::MAX, 7, -4096];
+        let bytes = encode_i32_le(&words);
+        assert_eq!(bytes.len(), words.len() * 4);
+        assert_eq!(decode_i32_le(&bytes), words);
     }
 }

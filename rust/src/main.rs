@@ -15,17 +15,23 @@
 //!                                       closed-loop trace through the coordinator
 //!                                       (--golden adds naive CPU fallback workers,
 //!                                        --im2col adds threaded im2col+GEMM workers,
-//!                                        --remote dials wire-protocol-v2 peers into
+//!                                        --remote dials wire-protocol-v3 peers into
 //!                                        the pool, --dw mixes in depthwise jobs);
 //!                                       writes a machine-readable BENCH_serving.json
-//! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N]
-//!                                       serve wire protocol v2 over TCP
+//! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N] [--v2-only]
+//!                                       serve wire protocol v3 over TCP (binary
+//!                                       tensor frames; --v2-only pins the endpoint
+//!                                       to legacy v2 JSON framing)
 //! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
-//!             [--gap-us G] [--max-inflight P]
+//!             [--gap-us G] [--max-inflight P] [--v2-peers M]
 //!             [--kill-peer-after K] [--revive-after M]
 //!                                       multi-machine demo: spawn N in-process TCP
 //!                                       peers, front them with one remote-core pool,
 //!                                       run a mixed trace through the fleet.
+//!                                       --v2-peers M pins the first M peers to
+//!                                       legacy wire v2 (mixed-protocol fleet: the
+//!                                       front must negotiate per peer and stay
+//!                                       bit-identical across both framings).
 //!                                       Chaos mode: --kill-peer-after K severs the
 //!                                       last peer just before trace entry K (its
 //!                                       port stays bound, connections drop);
@@ -64,7 +70,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["vcd", "wrap8", "no-pipeline", "dma", "xla"])
+    let args = Args::parse(argv, &["vcd", "wrap8", "no-pipeline", "dma", "xla", "v2-only"])
         .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
@@ -284,7 +290,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// The multi-machine demo and chaos harness, runnable in CI: spawn N
-/// in-process wire-v2 TCP peers, front them with one pool of
+/// in-process wire-v3 TCP peers, front them with one pool of
 /// `RemoteBackend` workers, and push a mixed trace through the fleet —
 /// optionally killing (and reviving) the last peer mid-trace. Exits
 /// non-zero unless every non-shed request succeeds; with a revive, it
@@ -315,6 +321,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                 .map_err(|_| anyhow::anyhow!("--{key} expects a trace-entry index")),
         }
     };
+    let v2_peers = args.get_usize("v2-peers", 0).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        v2_peers <= n,
+        "--v2-peers {v2_peers} exceeds the fleet size {n}"
+    );
     let kill_after = opt_entry("kill-peer-after")?;
     let revive_after = opt_entry("revive-after")?;
     if let Some(k) = kill_after {
@@ -331,20 +342,28 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     }
 
     let mut peers = Vec::new();
-    for _ in 0..n {
+    for i in 0..n {
         // Same constructor as the front: --peer-cores 0 with im2col
         // workers is a legitimate host-only peer, and a fully empty
-        // peer errors cleanly instead of panicking.
-        peers.push(TcpServer::start(
-            "127.0.0.1:0",
-            front_config(peer_cores, 0, peer_im2col, None)?,
-        )?);
+        // peer errors cleanly instead of panicking. The first
+        // --v2-peers endpoints are pinned to legacy v2 JSON framing so
+        // the front has to negotiate per peer.
+        let mut pc = front_config(peer_cores, 0, peer_im2col, None)?;
+        if i < v2_peers {
+            pc = pc.with_wire_v2_only();
+        }
+        peers.push(TcpServer::start("127.0.0.1:0", pc)?);
     }
     let peer_addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
     println!(
-        "fleet: {n} in-process wire-v2 peers ({peer_cores} sim cores{} each) at {}",
+        "fleet: {n} in-process wire-v3 peers ({peer_cores} sim cores{} each{}) at {}",
         if peer_im2col > 0 {
             format!(" + {peer_im2col} im2col workers")
+        } else {
+            String::new()
+        },
+        if v2_peers > 0 {
+            format!("; first {v2_peers} pinned to legacy wire v2")
         } else {
             String::new()
         },
@@ -430,6 +449,20 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "no remote worker served traffic: {:?}",
         report.backend_mix
     );
+    if v2_peers > 0 {
+        // Mixed-protocol contract: the v2-pinned peers must actually
+        // have served traffic over the JSON fallback, not just sat in
+        // the pool while v3 siblings took everything.
+        let v2_served: u64 = peers[..v2_peers]
+            .iter()
+            .map(|p| p.metrics().completed.load(Ordering::Relaxed))
+            .sum();
+        anyhow::ensure!(
+            v2_served > 0,
+            "no v2-pinned peer served any traffic in the mixed fleet"
+        );
+        println!("mixed fleet OK: v2-pinned peers served {v2_served} jobs over JSON framing");
+    }
     anyhow::ensure!(
         revived_served,
         "revived peer never served traffic again"
@@ -529,12 +562,24 @@ fn cmd_serve_tcp(args: &Args) -> anyhow::Result<()> {
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
     let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
     let im2col = args.get_usize("im2col", 0).map_err(|e| anyhow::anyhow!(e))?;
-    let server = TcpServer::start(addr, front_config(cores, golden, im2col, args.get("remote"))?)?;
-    println!(
-        "serving wire protocol v2 (newline-delimited JSON) on {} \
-         ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
-        server.addr
-    );
+    let mut config = front_config(cores, golden, im2col, args.get("remote"))?;
+    if args.flag("v2-only") {
+        config = config.with_wire_v2_only();
+    }
+    let server = TcpServer::start(addr, config)?;
+    if args.flag("v2-only") {
+        println!(
+            "serving legacy wire protocol v2 (newline-delimited JSON) on {} \
+             ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
+            server.addr
+        );
+    } else {
+        println!(
+            "serving wire protocol v3 (JSON control frames + binary tensor frames) on {} \
+             ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
+            server.addr
+        );
+    }
     println!(r#"try: echo '{{"id":1,"spec":{{"c":8,"h":16,"w":16,"k":8}},"seed":42}}' | nc {} {}"#,
         server.addr.ip(), server.addr.port());
     println!("ctrl-c to stop");

@@ -1,21 +1,49 @@
-//! Minimal JSON parser for `artifacts/manifest.json`.
+//! Minimal JSON parser for `artifacts/manifest.json` and the TCP wire
+//! protocol's control frames.
 //!
-//! The offline build has no `serde_json`, and the manifest is the only
+//! The offline build has no `serde_json`, and this parser is the only
 //! JSON this system reads, so a small recursive-descent parser is the
 //! honest dependency-free answer. Supports the full JSON grammar except
 //! `\u` surrogate pairs (the manifest is ASCII).
+//!
+//! Integer literals without a fraction or exponent parse to
+//! [`Json::Int`] and round-trip **exactly** up to `i64::MAX` — the wire
+//! protocol carries request ids and checksums as integers, and routing
+//! them through `f64` silently corrupts values above 2^53. Numeric
+//! equality is cross-variant: `Int(42) == Num(42.0)`.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
+    /// Exact integer (id/checksum-grade). Emitted without a fraction.
+    Int(i64),
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            // Cross-variant numeric equality: an emitted Int re-parses
+            // as Int, but values built via `Json::num` compare equal to
+            // it when they denote the same number.
+            (Json::Int(i), Json::Num(f)) | (Json::Num(f), Json::Int(i)) => *i as f64 == *f,
+            _ => false,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -71,8 +99,27 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
             _ => None,
         }
+    }
+
+    /// Exact signed integer. `Int` is returned verbatim; a `Num` only
+    /// qualifies when it is a whole number inside the f64-exact range
+    /// (|n| ≤ 2^53), so precision loss can never slip through silently.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned integer (see [`Json::as_i64`] for the `Num` rule).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
     }
 
     pub fn as_usize(&self) -> Option<usize> {
@@ -106,6 +153,9 @@ impl Json {
         match self {
             Json::Null => s.push_str("null"),
             Json::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = std::fmt::Write::write_fmt(s, format_args!("{i}"));
+            }
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = std::fmt::Write::write_fmt(s, format_args!("{}", *n as i64));
@@ -167,16 +217,31 @@ impl Json {
         Json::Num(n.into())
     }
 
+    /// Exact integer builder — the only correct choice for wire ids,
+    /// checksums and cycle counts, which may exceed f64's 2^53 window.
+    pub fn int(i: impl Into<i64>) -> Json {
+        Json::Int(i.into())
+    }
+
+    /// Exact u64 builder. Values above `i64::MAX` (none of the wire
+    /// fields legitimately reach 2^63) degrade to the closest f64.
+    pub fn uint(u: u64) -> Json {
+        match i64::try_from(u) {
+            Ok(i) => Json::Int(i),
+            Err(_) => Json::Num(u as f64),
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     pub fn arr_u64(xs: impl IntoIterator<Item = u64>) -> Json {
-        Json::Arr(xs.into_iter().map(|v| Json::Num(v as f64)).collect())
+        Json::Arr(xs.into_iter().map(Json::uint).collect())
     }
 
     pub fn arr_i64(xs: impl IntoIterator<Item = i64>) -> Json {
-        Json::Arr(xs.into_iter().map(|v| Json::Num(v as f64)).collect())
+        Json::Arr(xs.into_iter().map(Json::Int).collect())
     }
 }
 
@@ -352,13 +417,16 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.i += 1;
         }
+        let mut integral = true;
         if self.peek() == Some(b'.') {
+            integral = false;
             self.i += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.i += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.i += 1;
@@ -368,6 +436,14 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // Integer literals stay exact (wire ids/checksums must not be
+        // pushed through f64); out-of-i64-range integers fall back to
+        // the closest f64, like any lossy JSON reader.
+        if integral {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -462,6 +538,40 @@ mod tests {
             ("name", Json::str("hi")),
         ]);
         assert_eq!(v.to_json(), r#"{"id":3,"name":"hi","xs":[1,-2]}"#);
+    }
+
+    #[test]
+    fn integers_above_2_pow_53_round_trip_exactly() {
+        // f64 cannot represent odd integers above 2^53; the old
+        // Num(f64)-only pipeline silently corrupted them. Ids and
+        // checksums cross the wire through this path.
+        let big: u64 = (1 << 60) + 3;
+        let v = Json::uint(big);
+        assert_eq!(v.to_json(), big.to_string());
+        let back = Json::parse(&v.to_json()).unwrap();
+        assert_eq!(back.as_u64(), Some(big));
+        assert_ne!(big as f64 as u64, big, "test premise: f64 is lossy here");
+    }
+
+    #[test]
+    fn exact_accessors_reject_lossy_nums() {
+        assert_eq!(Json::Num(42.0).as_i64(), Some(42));
+        assert_eq!(Json::Num(1.5).as_i64(), None);
+        // A Num already above the exact window is refused rather than
+        // silently rounded.
+        assert_eq!(Json::Num(1e18).as_i64(), None);
+        assert_eq!(Json::Int(-3).as_u64(), None, "negative is not a u64");
+        assert_eq!(Json::Int(i64::MAX).as_i64(), Some(i64::MAX));
+    }
+
+    #[test]
+    fn int_and_num_compare_numerically() {
+        assert_eq!(Json::Int(42), Json::Num(42.0));
+        assert_eq!(Json::parse("42").unwrap(), Json::num(42u32));
+        assert_ne!(Json::Int(42), Json::Num(42.5));
+        let a = Json::parse(r#"{"id":7}"#).unwrap();
+        let b = Json::obj(vec![("id", Json::num(7u32))]);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! Unified backend parity harness: ONE property suite, run over every
 //! `ConvBackend` the build can construct — the cycle-accurate simulator,
 //! the naive golden fallback, the threaded im2col+GEMM backend at
-//! several thread counts, a `RemoteBackend` over a real socket to an
-//! in-process wire-protocol-v2 server, and (when the runtime is linked
-//! and artifacts exist) the XLA path. For identical integer inputs
-//! every backend must produce **bit-identical** i32 outputs across
+//! several thread counts, TWO `RemoteBackend`s over real sockets — one
+//! to an in-process wire-protocol-v3 server (binary tensor frames) and
+//! one to a v2-pinned server (legacy JSON tensors, exercising the
+//! front's negotiation fallback) — and (when the runtime is linked and
+//! artifacts exist) the XLA path. For identical integer inputs every
+//! backend must produce **bit-identical** i32 outputs across
 //! randomized specs, all three job kinds (standard, depthwise,
 //! pointwise-as-3×3) and both accumulator modes (wrap-8 silicon vs
-//! production I32). For the remote leg that parity is end-to-end: the
-//! tensors cross the wire both ways.
+//! production I32). For the remote legs that parity is end-to-end: the
+//! tensors cross the wire both ways, in both framings.
 //!
 //! Each case asks every backend whether it `allows` the (spec, kind,
 //! accum) triple — exactly the dispatcher's routing predicate — so a
@@ -29,19 +31,19 @@ use repro::hw::{AccumMode, IpCoreConfig};
 use repro::model::{golden, LayerSpec, Tensor};
 use repro::util::prng::Prng;
 
-/// The backend set under test, plus the in-process TCP server the
-/// remote leg dials (kept alive for the suite, stopped at the end).
+/// The backend set under test, plus the in-process TCP servers the
+/// remote legs dial (kept alive for the suite, stopped at the end).
 struct Fleet {
     backends: Vec<Box<dyn ConvBackend>>,
-    server: Option<TcpServer>,
+    servers: Vec<TcpServer>,
 }
 
 impl Fleet {
     fn stop(&mut self) {
-        // Drop the backends first so the remote connection closes and
-        // the server's handler drains on EOF.
+        // Drop the backends first so the remote connections close and
+        // the servers' handlers drain on EOF.
         self.backends.clear();
-        if let Some(server) = self.server.take() {
+        for server in self.servers.drain(..) {
             server.stop();
         }
     }
@@ -50,8 +52,10 @@ impl Fleet {
 /// Every backend the suite can construct offline, in I32 (production)
 /// mode. XLA joins when the feature is linked and artifacts exist; its
 /// spec allowlist keeps it out of cases it never compiled. The remote
-/// leg runs against a real socket: an in-process v2 server fronting a
-/// small heterogeneous pool (2 sim cores + 1 im2col worker).
+/// legs run against real sockets: an in-process v3 server (binary
+/// tensor frames) fronting a small heterogeneous pool (2 sim cores +
+/// 1 im2col worker), and a v2-pinned server the front must serve over
+/// legacy JSON tensors — same properties, both framings.
 fn all_backends() -> Fleet {
     let mut v: Vec<Box<dyn ConvBackend>> = vec![
         Box::new(SimBackend::new(IpCoreConfig::default())),
@@ -63,17 +67,33 @@ fn all_backends() -> Fleet {
         Ok(b) => v.push(Box::new(b)),
         Err(e) => eprintln!("parity harness runs without the xla leg: {e}"),
     }
-    let server = TcpServer::start(
+    let v3 = TcpServer::start(
         "127.0.0.1:0",
         CoordinatorConfig::default().with_cores(2).with_im2col_workers(1),
     )
-    .expect("in-process wire-v2 server for the remote leg");
-    let remote = RemoteBackend::connect(&server.addr.to_string())
-        .expect("remote backend handshake");
-    v.push(Box::new(remote));
+    .expect("in-process wire-v3 server for the remote leg");
+    let v2 = TcpServer::start(
+        "127.0.0.1:0",
+        CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
+    )
+    .expect("in-process v2-pinned server for the legacy remote leg");
+    let remote_v3 = RemoteBackend::connect(&v3.addr.to_string())
+        .expect("remote backend handshake (v3)");
+    assert!(
+        remote_v3.peer_binary(),
+        "v3 server must negotiate binary frames"
+    );
+    let remote_v2 = RemoteBackend::connect(&v2.addr.to_string())
+        .expect("remote backend handshake (v2 fallback)");
+    assert!(
+        !remote_v2.peer_binary(),
+        "v2-pinned server must stay on JSON tensors"
+    );
+    v.push(Box::new(remote_v3));
+    v.push(Box::new(remote_v2));
     Fleet {
         backends: v,
-        server: Some(server),
+        servers: vec![v3, v2],
     }
 }
 
@@ -148,9 +168,9 @@ fn prop_standard_jobs_agree_across_all_backends() {
             weights_resident: false,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
-        // sim + golden + im2col×2 + remote at minimum (xla only on its
-        // own specs).
-        assert!(ran >= 5, "seed {seed}: only {ran} backends ran");
+        // sim + golden + im2col×2 + remote×2 (v3 + v2 fallback) at
+        // minimum (xla only on its own specs).
+        assert!(ran >= 6, "seed {seed}: only {ran} backends ran");
     }
     fleet.stop();
 }
@@ -182,7 +202,7 @@ fn prop_depthwise_jobs_agree_across_all_backends() {
             weights_resident: false,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} c={c} h={h} w={w} relu={}", spec.relu));
-        assert!(ran >= 5, "seed {seed}: only {ran} backends ran depthwise");
+        assert!(ran >= 6, "seed {seed}: only {ran} backends ran depthwise");
     }
     fleet.stop();
 }
@@ -216,7 +236,7 @@ fn prop_pointwise_as_3x3_jobs_agree_across_all_backends_and_reference() {
             weights_resident: false,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed}: vs direct 1x1"));
-        assert!(ran >= 5, "seed {seed}: only {ran} backends ran pointwise");
+        assert!(ran >= 6, "seed {seed}: only {ran} backends ran pointwise");
     }
     fleet.stop();
 }

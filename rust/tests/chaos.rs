@@ -1,7 +1,9 @@
 //! Chaos leg of the parity harness: the failure-tolerant serving front
 //! under a mid-trace peer kill.
 //!
-//! Three in-process wire-v2 peers join one remote-only front pool. One
+//! Three in-process wire-v3 peers join one remote-only front pool —
+//! the first pinned to legacy wire v2, so the pool is mixed-protocol
+//! and every invariant below holds across both framings at once. One
 //! peer is severed mid-trace (its port stays bound — connections drop,
 //! exactly a crashed process) and later revived. The invariants:
 //!
@@ -36,11 +38,15 @@ const REVIVE_AT: usize = 32;
 
 fn start_fleet() -> (Vec<TcpServer>, CoordinatorConfig) {
     let mut peers = Vec::new();
-    for _ in 0..N_PEERS {
-        peers.push(
-            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
-                .expect("in-process wire-v2 peer"),
-        );
+    for i in 0..N_PEERS {
+        // Peer 0 is pinned to legacy wire v2: the front must negotiate
+        // JSON tensors with it while speaking binary v3 frames to its
+        // siblings — a mixed-protocol pool under chaos.
+        let mut pc = CoordinatorConfig::default().with_cores(2);
+        if i == 0 {
+            pc = pc.with_wire_v2_only();
+        }
+        peers.push(TcpServer::start("127.0.0.1:0", pc).expect("in-process wire peer"));
     }
     let addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
     let config = CoordinatorConfig {
