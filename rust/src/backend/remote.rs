@@ -711,6 +711,11 @@ impl ConvBackend for RemoteBackend {
                     )))
                 }
                 Err(e) => {
+                    // `rid` was already removed from `inflight`; put it
+                    // back so the transport cleanup below fails this job
+                    // too instead of leaving a hole that panics the
+                    // final unwrap.
+                    inflight.insert(rid, idx);
                     transport = Some(e);
                     break;
                 }
@@ -1110,6 +1115,59 @@ mod tests {
             let err = res.expect_err("dead peer fails the job, not hangs");
             assert!(err.to_string().contains("remote"), "{err}");
         }
+    }
+
+    #[test]
+    fn run_batch_protocol_error_fails_all_inflight_without_panicking() {
+        // Regression: a protocol-level bad reply (ok:true but the wrong
+        // shape) mid-batch once left its job's result slot unfilled —
+        // the reply id had already been removed from the in-flight map,
+        // so the transport cleanup skipped it and the final unwrap
+        // panicked the pool worker. Every job must come back as an
+        // error instead.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(s, "{}", hello_line()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let id1 = Json::parse(line.trim()).unwrap().get(&["id"]).unwrap().as_u64().unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap(); // second pipelined request
+            let reply = Json::obj(vec![
+                ("id", Json::uint(id1)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("shape", Json::arr_u64([1u64, 1, 1])),
+                ("output", Json::arr_i64([0i64])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+        });
+        let mut be = RemoteBackend::connect(&addr).unwrap();
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let payloads: Vec<JobPayload> = (0..2)
+            .map(|_| JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .collect();
+        let results = be.run_batch(&payloads);
+        assert_eq!(results.len(), 2);
+        for res in results {
+            let err = res.expect_err("protocol error fails every in-flight job");
+            assert!(err.to_string().contains("remote"), "{err}");
+        }
+        t.join().unwrap();
     }
 
     #[test]

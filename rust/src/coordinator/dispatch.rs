@@ -188,7 +188,11 @@ fn run_batch(
     // whole batch can go through the backend's batch entry point in ONE
     // call: pipelining backends (remote peers) put every job on the
     // wire before the first reply returns, instead of paying a full
-    // round trip per job.
+    // round trip per job. Known accounting drift: if job 0 fails, later
+    // jobs still carry reused=true (and its DMA discount) even though
+    // nothing loaded the weights — per-job re-checking would force back
+    // to one call per job, which defeats pipelining; the drift only
+    // affects cycle metrics on partial-failure batches, never outputs.
     let batch_weights = batch.weights_id;
     let reused_flags: Vec<bool> = (0..batch.jobs.len())
         .map(|i| i > 0 || *resident_weights == Some(batch_weights))

@@ -232,6 +232,11 @@ const SHUTDOWN_POLL: Duration = Duration::from_millis(100);
 /// loses the connection instead of wedging the handler thread.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Ceiling on zero-progress time inside a declared binary body; a
+/// client that sends a bin header then stalls loses the connection
+/// instead of pinning the handler thread and its buffers.
+const BIN_READ_TIMEOUT: Duration = WRITE_TIMEOUT;
+
 /// Hard cap on one wire frame. An S52 `full_output` reply is ~5 MB of
 /// JSON text, so 64 MB never trips legitimately — it bounds memory (and
 /// guarantees eventual termination) against a peer that streams bytes
@@ -303,6 +308,11 @@ pub(crate) fn read_line_capped<R: BufRead>(
 /// retries (re-checking the shutdown and chaos flags each lap, so a
 /// stopping server never hangs mid-frame on a stalled client), EOF
 /// inside the frame is an error, shutdown surfaces as `Interrupted`.
+/// A frame that makes no progress for [`BIN_READ_TIMEOUT`] fails with
+/// `TimedOut`: a client that declares a binary body and then stalls
+/// would otherwise pin this handler thread and up to [`MAX_BIN_BYTES`]
+/// of allocated buffers until server shutdown. The deadline resets on
+/// every received byte, so slow-but-live senders are never cut off.
 fn read_exact_polled<R: Read>(
     r: &mut R,
     buf: &mut [u8],
@@ -310,6 +320,7 @@ fn read_exact_polled<R: Read>(
     down: &AtomicBool,
 ) -> std::io::Result<()> {
     let mut filled = 0;
+    let mut last_progress = std::time::Instant::now();
     while filled < buf.len() {
         if shutdown.load(Ordering::Relaxed) || down.load(Ordering::Relaxed) {
             return Err(std::io::Error::new(
@@ -324,12 +335,23 @@ fn read_exact_polled<R: Read>(
                     "eof inside binary frame",
                 ))
             }
-            Ok(n) => filled += n,
+            Ok(n) => {
+                filled += n;
+                last_progress = std::time::Instant::now();
+            }
             Err(e)
                 if matches!(
                     e.kind(),
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) => {}
+                ) =>
+            {
+                if last_progress.elapsed() >= BIN_READ_TIMEOUT {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "stalled mid binary frame",
+                    ));
+                }
+            }
             Err(e) => return Err(e),
         }
     }

@@ -39,8 +39,13 @@ impl PartialEq for Json {
             (Json::Num(a), Json::Num(b)) => a == b,
             // Cross-variant numeric equality: an emitted Int re-parses
             // as Int, but values built via `Json::num` compare equal to
-            // it when they denote the same number.
-            (Json::Int(i), Json::Num(f)) | (Json::Num(f), Json::Int(i)) => *i as f64 == *f,
+            // it when they denote the same number. Outside the f64-exact
+            // window (|i| > 2^53, same rule as `as_i64`) the comparison
+            // is refused: `i as f64` rounds there, and Int(2^53+1) must
+            // not compare equal to a Num it does not exactly equal.
+            (Json::Int(i), Json::Num(f)) | (Json::Num(f), Json::Int(i)) => {
+                i.unsigned_abs() <= 1 << 53 && *i as f64 == *f
+            }
             _ => false,
         }
     }
@@ -569,6 +574,11 @@ mod tests {
         assert_eq!(Json::Int(42), Json::Num(42.0));
         assert_eq!(Json::parse("42").unwrap(), Json::num(42u32));
         assert_ne!(Json::Int(42), Json::Num(42.5));
+        // Above the f64-exact window the cross-variant arm refuses the
+        // comparison: 2^53+1 rounds to 2^53 as f64 but is NOT equal.
+        let above = (1i64 << 53) + 1;
+        assert_ne!(Json::Int(above), Json::Num(above as f64));
+        assert_eq!(Json::Int(1i64 << 53), Json::Num((1i64 << 53) as f64));
         let a = Json::parse(r#"{"id":7}"#).unwrap();
         let b = Json::obj(vec![("id", Json::num(7u32))]);
         assert_eq!(a, b);
