@@ -27,11 +27,13 @@
 //! * [`xla::XlaBackend`] — the AOT Pallas/HLO artifacts under PJRT
 //!   (available when the `xla` feature is linked and artifacts exist);
 //! * [`remote::RemoteBackend`] — a whole remote machine behind the
-//!   TCP wire protocol v3 ([`crate::coordinator::tcp`]): the peer's
+//!   TCP wire protocol ([`crate::coordinator::tcp`]): the peer's
 //!   `hello` handshake advertises its capability, and the pool treats
 //!   it as one more capability-masked worker. Batches pipeline across
 //!   the socket ([`ConvBackend::run_batch`]) with tensors in binary
-//!   frames, so the peer's whole worker width is actually reachable.
+//!   frames (v3), and against a `wcache` peer (v4) weight blobs ship
+//!   by content hash — at most once per peer lifetime
+//!   ([`KnownWeights`]), re-sent inline only on a `need_weights` miss.
 //!
 //! The parity contract: for identical integer inputs every backend
 //! produces bit-identical i32 outputs (`rust/tests/backend_parity.rs`).
@@ -59,8 +61,9 @@ use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
 use crate::model::{LayerSpec, Tensor};
 use crate::paper::{CYCLES_PER_PSUM_GROUP, N_CORES, N_PCORES};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shared liveness flag for a backend whose availability can change at
 /// runtime (today: [`remote::RemoteBackend`], whose probe thread flips
@@ -103,6 +106,87 @@ impl WorkerHealth {
 
     pub fn recoveries(&self) -> u64 {
         self.recoveries.load(Ordering::Relaxed)
+    }
+}
+
+/// Client-side residency belief for one remote peer's weight store
+/// (wire v4): which content hashes this peer is believed to hold, plus
+/// the hit/miss accounting the serving report surfaces. Shared between
+/// the [`remote::RemoteBackend`] (which maintains it) and the
+/// dispatcher (which reads [`Self::contains`] to discount the wire
+/// weight term when charging load, via [`CostModel::cost_cached`]).
+///
+/// It is a *belief*, not ground truth: the peer may have evicted a
+/// blob (the `need_weights` round trip corrects that, and
+/// [`Self::forget`] records it), and a restarted peer holds nothing —
+/// the backend calls [`Self::clear`] on every redial so residency is
+/// never assumed across a peer lifetime.
+#[derive(Debug, Default)]
+pub struct KnownWeights {
+    known: Mutex<HashSet<u64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_saved: AtomicU64,
+}
+
+impl KnownWeights {
+    pub fn new() -> Arc<Self> {
+        Arc::new(KnownWeights::default())
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.known.lock().unwrap().contains(&hash)
+    }
+
+    /// Record that the peer confirmed holding `hash` (an `ok` reply to
+    /// a hash-only request, or a successful inline ship).
+    pub fn mark_known(&self, hash: u64) {
+        self.known.lock().unwrap().insert(hash);
+    }
+
+    /// Drop one hash — the peer answered `need_weights`, so its store
+    /// evicted the blob since we last shipped it.
+    pub fn forget(&self, hash: u64) {
+        self.known.lock().unwrap().remove(&hash);
+    }
+
+    /// Drop everything — called on redial: a restarted peer has an
+    /// empty store, and stale residency beliefs would strand hash-only
+    /// requests in `need_weights` round trips (or worse, discount
+    /// costs for bytes that must actually cross the wire).
+    pub fn clear(&self) {
+        self.known.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.known.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A hash-only request the peer served from residency: `bytes`
+    /// weight bytes never crossed the wire.
+    pub fn record_hit(&self, bytes: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.bytes_saved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// A blob shipped inline (cold peer, eviction, or redial).
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(hits, misses, wire_weight_bytes_saved)` — flows into
+    /// `Report::n_weight_hits` / `n_weight_misses` /
+    /// `wire_weight_bytes_saved`.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.bytes_saved.load(Ordering::Relaxed),
+        )
     }
 }
 
@@ -218,7 +302,7 @@ pub enum CostModel {
     /// GEMM MACs plus the patch-matrix lowering traffic, retired at
     /// [`IM2COL_MACS_PER_UNIT`] MACs per unit per worker thread.
     Im2col { threads: u64 },
-    /// A whole remote machine behind the TCP wire protocol v3
+    /// A whole remote machine behind the TCP wire protocol v4
     /// ([`remote::RemoteBackend`]): the peer's `hello` handshake
     /// advertises what its workers *are* (each worker's cost-model
     /// family), so the quote is the job's cost under the peer's fastest
@@ -310,6 +394,34 @@ impl CostModel {
             CostModel::Vectorized { .. } => "vectorized",
             CostModel::Im2col { .. } => "im2col",
             CostModel::Remote { .. } => "remote",
+        }
+    }
+
+    /// [`Self::cost`] with wire-v4 weight residency applied: when the
+    /// dispatcher believes the executing peer already holds the job's
+    /// weight blob ([`KnownWeights::contains`]), a [`CostModel::Remote`]
+    /// quote drops the weight-words wire term — those bytes will not
+    /// cross the socket — so least-loaded routing honestly prefers warm
+    /// peers. Every other model is residency-blind (local backends
+    /// never ship weights over a wire), and the quote never discounts
+    /// to zero. Charge and release must pass the *same* flag (the
+    /// dispatch-time snapshot on `ConvJob::wire_weights_cached`), or
+    /// load accounting leaks when residency changes mid-flight.
+    pub fn cost_cached(&self, spec: &LayerSpec, kind: JobKind, weights_cached: bool) -> u64 {
+        let base = self.cost(spec, kind);
+        if !weights_cached {
+            return base;
+        }
+        match self {
+            CostModel::Remote { .. } => {
+                let weight_words = match kind {
+                    JobKind::Depthwise => spec.c * 9,
+                    JobKind::Standard | JobKind::PointwiseAs3x3 => spec.k * spec.c * 9,
+                } as u64;
+                base.saturating_sub(weight_words / REMOTE_WORDS_PER_UNIT)
+                    .max(1)
+            }
+            _ => base,
         }
     }
 
@@ -464,6 +576,17 @@ pub trait ConvBackend: Send {
     /// the default — means "always considered healthy"; local backends
     /// don't fail partially.
     fn health(&self) -> Option<Arc<WorkerHealth>> {
+        None
+    }
+
+    /// Residency belief for the peer's weight store, for backends that
+    /// front a wire-v4 remote ([`remote::RemoteBackend`] when the hello
+    /// advertised `wcache`). The dispatcher snapshots
+    /// [`KnownWeights::contains`] per job to discount the wire weight
+    /// term ([`CostModel::cost_cached`]) and aggregates
+    /// [`KnownWeights::stats`] into the serving report. `None` — the
+    /// default — means "no weight cache on this path".
+    fn known_weights(&self) -> Option<Arc<KnownWeights>> {
         None
     }
 
@@ -720,6 +843,67 @@ mod tests {
             RemotePeerClass::from_tag("warp-drive"),
             RemotePeerClass::HostMacs
         );
+    }
+
+    #[test]
+    fn cached_remote_quote_drops_exactly_the_weight_wire_term() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        for kind in [JobKind::Standard, JobKind::Depthwise] {
+            let cold = remote_sim().cost(&spec, kind);
+            let warm = remote_sim().cost_cached(&spec, kind, true);
+            let weight_words = match kind {
+                JobKind::Depthwise => 8 * 9u64,
+                _ => 8 * 8 * 9,
+            };
+            assert_eq!(cold - warm, weight_words / REMOTE_WORDS_PER_UNIT);
+            // An uncached job quotes the full price.
+            assert_eq!(remote_sim().cost_cached(&spec, kind, false), cold);
+        }
+    }
+
+    #[test]
+    fn cached_quote_never_discounts_local_models_or_hits_zero() {
+        let spec = LayerSpec::new(8, 10, 10, 8);
+        for model in [
+            CostModel::SimCycles,
+            CostModel::HostMacs,
+            CostModel::Im2col { threads: 4 },
+        ] {
+            assert_eq!(
+                model.cost_cached(&spec, JobKind::Standard, true),
+                model.cost(&spec, JobKind::Standard),
+                "{model:?} has no wire weight term to discount"
+            );
+        }
+        // Degenerate case: a quote dominated by its weight term still
+        // floors at 1 instead of going free.
+        let tiny = LayerSpec::new(64, 3, 3, 64);
+        let warm = CostModel::Remote {
+            workers: 1_000_000,
+            class: RemotePeerClass::SimCycles,
+        }
+        .cost_cached(&tiny, JobKind::Standard, true);
+        assert!(warm >= 1);
+    }
+
+    #[test]
+    fn known_weights_tracks_residency_and_stats() {
+        let k = KnownWeights::new();
+        assert!(k.is_empty() && !k.contains(7));
+        k.mark_known(7);
+        k.mark_known(9);
+        assert!(k.contains(7) && k.contains(9));
+        assert_eq!(k.len(), 2);
+        // A need_weights reply drops exactly the evicted hash.
+        k.forget(9);
+        assert!(k.contains(7) && !k.contains(9));
+        // Redial drops everything.
+        k.clear();
+        assert!(k.is_empty());
+        k.record_miss();
+        k.record_hit(2304);
+        k.record_hit(2304);
+        assert_eq!(k.stats(), (2, 1, 4608));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! [`ConvBackend`] over a persistent TCP connection to a wire-protocol
-//! v3 peer ([`crate::coordinator::tcp`]) — the remote-core backend that
+//! v4 peer ([`crate::coordinator::tcp`]) — the remote-core backend that
 //! turns N TCP-served machines into one heterogeneous pool.
 //!
 //! The paper scales by replicating its IP core on one board; this
@@ -19,6 +19,23 @@
 //! contract holds end-to-end over the wire for standard, depthwise and
 //! pointwise-as-3×3 jobs (`rust/tests/backend_parity.rs` runs it as
 //! just another backend, in both modes).
+//!
+//! **Weight caching (v4):** a peer whose hello carries `"wcache":true`
+//! fronts a content-addressed weight store, so this backend claims
+//! every blob's FNV-1a hash in the request header and, once a blob is
+//! believed resident, stops shipping the bytes at all. The residency
+//! belief lives in a [`KnownWeights`] set shared with the dispatcher
+//! (which discounts the wire cost term for believed-resident jobs).
+//! Frames on one connection are processed in order server-side and the
+//! store admits a blob at parse time, so the belief is marked at *ship*
+//! time: the first job of a batch carries the bytes, every later job of
+//! the same model goes hash-only. If the belief is stale — the peer
+//! evicted the blob under BRAM pressure — the peer answers a
+//! `need_weights` frame and the backend re-ships inline exactly once on
+//! the same request id; a second demand for the same job is a protocol
+//! error. Every redial [`KnownWeights::clear`]s the set: a restarted
+//! peer holds nothing, so the first job per blob re-ships and the cache
+//! re-warms. Non-wcache peers (v2/v3) get inline tensors always.
 //!
 //! **Pipelining:** [`ConvBackend::run_batch`] writes a whole same-shape
 //! batch in buffered bursts and reads the replies asynchronously —
@@ -51,12 +68,13 @@
 //! to discover it came back.
 
 use super::{
-    BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, RemotePeerClass,
-    WorkerHealth,
+    BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, KnownWeights,
+    RemotePeerClass, WorkerHealth,
 };
+use crate::coordinator::request::fnv1a_bytes;
 use crate::coordinator::tcp::{
-    decode_i32_le, encode_request_frame, read_line_capped, LineRead, MAX_BIN_BYTES,
-    MAX_LINE_BYTES, PROTO_V2, PROTO_VERSION,
+    decode_i32_le, encode_request_frame, encode_request_frame_v4, read_line_capped, LineRead,
+    MAX_BIN_BYTES, MAX_LINE_BYTES, PROTO_V2, PROTO_VERSION,
 };
 use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
@@ -117,6 +135,10 @@ struct PeerInfo {
     /// Peer advertised binary tensor framing (`"bin":true` in the
     /// hello). Off → this backend stays on v2 JSON tensors.
     bin: bool,
+    /// Peer advertised a content-addressed weight store (`"wcache":true`
+    /// in the hello). Off → every job ships its weights inline and no
+    /// hash is ever claimed.
+    wcache: bool,
 }
 
 /// The capability flags routing snapshotted at construction; the probe
@@ -148,6 +170,10 @@ pub struct RemoteBackend {
     /// Shared with the dispatcher (via [`ConvBackend::health`]) and the
     /// probe thread.
     health: Arc<WorkerHealth>,
+    /// Which weight blobs the peer's store is believed to hold (wire
+    /// v4); shared with the dispatcher via
+    /// [`ConvBackend::known_weights`], cleared on every redial.
+    known: Arc<KnownWeights>,
     probe_stop: Arc<AtomicBool>,
     probe: Option<JoinHandle<()>>,
 }
@@ -158,9 +184,9 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         .get(&["hello"])
         .ok_or("first frame from peer is not a hello")?;
     let proto = h.get(&["proto"]).and_then(Json::as_f64).unwrap_or(0.0) as u64;
-    if proto != PROTO_VERSION && proto != PROTO_V2 {
+    if !(PROTO_V2..=PROTO_VERSION).contains(&proto) {
         return Err(format!(
-            "peer speaks wire protocol {proto}, this backend needs {PROTO_V2} or {PROTO_VERSION}"
+            "peer speaks wire protocol {proto}, this backend needs {PROTO_V2}..={PROTO_VERSION}"
         ));
     }
     let workers = h
@@ -178,6 +204,7 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         // flag and are never sent one. Same for binary tensor framing.
         ping: h.get(&["ping"]).and_then(Json::as_bool).unwrap_or(false),
         bin: h.get(&["bin"]).and_then(Json::as_bool).unwrap_or(false),
+        wcache: h.get(&["wcache"]).and_then(Json::as_bool).unwrap_or(false),
     };
     let mut classes: Vec<RemotePeerClass> = Vec::new();
     for w in workers {
@@ -248,18 +275,45 @@ fn dial(addr: &str) -> anyhow::Result<(Conn, PeerInfo)> {
 }
 
 /// Encode one job as a complete request frame in the negotiated
-/// encoding (header line + binary bodies when `bin`).
-fn job_frame(id: u64, job: &JobPayload, bin: bool) -> Vec<u8> {
-    encode_request_frame(
-        id,
-        job.kind,
-        job.spec,
-        job.img.data(),
-        job.weights.data(),
-        job.bias,
-        true, // full_output: the backend must reconstruct the tensor
-        bin,
-    )
+/// encoding: plain v2/v3 (no hash claimed), or — against a wcache peer
+/// — a v4 frame that always claims the blob's content hash and omits
+/// the weight payload entirely when `hash_only`.
+fn job_frame(id: u64, job: &JobPayload, bin: bool, hash: Option<u64>, hash_only: bool) -> Vec<u8> {
+    match hash {
+        None => encode_request_frame(
+            id,
+            job.kind,
+            job.spec,
+            job.img.data(),
+            job.weights.data(),
+            job.bias,
+            true, // full_output: the backend must reconstruct the tensor
+            bin,
+        ),
+        Some(h) => encode_request_frame_v4(
+            id,
+            job.kind,
+            job.spec,
+            job.img.data(),
+            (!hash_only).then(|| job.weights.data()),
+            Some(h),
+            job.bias,
+            true,
+            bin,
+        ),
+    }
+}
+
+/// One pipelined in-flight job: its index in the caller's slice plus
+/// the weight-cache state of the frame last sent for it (wire v4).
+struct Inflight {
+    idx: usize,
+    /// Content hash claimed in the request header (wcache peers only).
+    hash: Option<u64>,
+    /// The last frame omitted the weight payload.
+    hash_only: bool,
+    /// A `need_weights` re-ship already happened for this job.
+    reshipped: bool,
 }
 
 fn expected_shape(job: &JobPayload) -> Vec<usize> {
@@ -478,6 +532,7 @@ impl RemoteBackend {
             conn: Some(conn),
             next_id: 1,
             health,
+            known: KnownWeights::new(),
             probe_stop,
             probe: Some(probe),
         })
@@ -503,6 +558,32 @@ impl RemoteBackend {
     /// in its hello). Observability for mixed-protocol fleets.
     pub fn peer_binary(&self) -> bool {
         self.peer.bin
+    }
+
+    /// Whether the peer negotiated the content-addressed weight store
+    /// (`"wcache":true` in its hello). Off for v2/v3 peers: every job
+    /// ships weights inline and no hash is ever claimed.
+    pub fn peer_wcache(&self) -> bool {
+        self.peer.wcache
+    }
+
+    /// Send-time cache decision for one job against a wcache peer:
+    /// `(hash, hash_only)`. Marks the belief *at ship time* — the store
+    /// admits a blob when it parses the frame and frames on one
+    /// connection are processed in order, so later jobs in the same
+    /// burst can already go hash-only.
+    fn plan_weights(&self, job: &JobPayload) -> (Option<u64>, bool) {
+        if !self.peer.wcache {
+            return (None, false);
+        }
+        let h = fnv1a_bytes(job.weights.data());
+        if self.known.contains(h) {
+            (Some(h), true)
+        } else {
+            self.known.record_miss();
+            self.known.mark_known(h);
+            (Some(h), false)
+        }
     }
 
     /// Make sure a live connection exists, redialling after an earlier
@@ -534,6 +615,10 @@ impl RemoteBackend {
                 self.addr
             );
         }
+        // A fresh connection may front a restarted peer whose weight
+        // store is empty: drop every residency belief so the next job
+        // per blob re-ships inline (and the cache re-warms from there).
+        self.known.clear();
         self.peer = fresh;
         self.conn = Some(conn);
         Ok(())
@@ -550,15 +635,44 @@ impl RemoteBackend {
         job: &JobPayload,
     ) -> anyhow::Result<Result<BackendRun, String>> {
         let bin = self.peer.bin;
+        let (hash, mut hash_only) = self.plan_weights(job);
+        let mut reshipped = false;
         let conn = self.conn.as_mut().expect("connection ensured by run()");
-        conn.writer.write_all(&job_frame(id, job, bin))?;
+        conn.writer.write_all(&job_frame(id, job, bin, hash, hash_only))?;
         loop {
             let (resp, body) = read_reply_frame(conn)?;
             if resp.get(&["hello"]).is_some() || resp.get(&["pong"]).is_some() {
                 continue; // stray control frame; keep draining
             }
             match resp.get(&["id"]).and_then(Json::as_u64) {
-                Some(rid) if rid == id => return decode_reply(&resp, body, job),
+                Some(rid) if rid == id => {
+                    if resp.get(&["need_weights"]).and_then(Json::as_bool) == Some(true) {
+                        // The residency belief was stale (the peer
+                        // evicted the blob): re-ship inline exactly once
+                        // on the same id. A demand for weights the last
+                        // frame already carried means the stream is not
+                        // to be trusted.
+                        let h = hash.ok_or_else(|| {
+                            anyhow::anyhow!("peer demanded weights on a non-caching connection")
+                        })?;
+                        anyhow::ensure!(
+                            hash_only && !reshipped,
+                            "peer demanded weights it was just sent inline"
+                        );
+                        self.known.forget(h);
+                        self.known.record_miss();
+                        self.known.mark_known(h);
+                        hash_only = false;
+                        reshipped = true;
+                        conn.writer.write_all(&job_frame(id, job, bin, hash, false))?;
+                        continue;
+                    }
+                    let out = decode_reply(&resp, body, job)?;
+                    if out.is_ok() && hash_only {
+                        self.known.record_hit(job.weights.data().len() as u64);
+                    }
+                    return Ok(out);
+                }
                 // A stale reply to an older request this backend already
                 // failed: its body was consumed with its header, so
                 // draining it realigns the stream.
@@ -602,6 +716,13 @@ impl ConvBackend for RemoteBackend {
 
     fn health(&self) -> Option<Arc<WorkerHealth>> {
         Some(Arc::clone(&self.health))
+    }
+
+    fn known_weights(&self) -> Option<Arc<KnownWeights>> {
+        // Exposed even against v2/v3 peers: the set just stays empty
+        // there (plan_weights never touches it), so the dispatcher's
+        // discount is a no-op and the report shows zero cache traffic.
+        Some(Arc::clone(&self.known))
     }
 
     fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
@@ -665,20 +786,23 @@ impl ConvBackend for RemoteBackend {
         // Take the connection so the borrow checker lets us allocate
         // ids while writing; restored below unless the stream died.
         let mut conn = self.conn.take().expect("ensured above");
-        let mut inflight: HashMap<u64, usize> = HashMap::new();
+        let mut inflight: HashMap<u64, Inflight> = HashMap::new();
         let mut cursor = 0usize;
         let mut transport: Option<anyhow::Error> = None;
         // Opening burst: fill the window with one buffered write — the
         // whole batch head crosses the wire in a single syscall instead
-        // of one write per RTT.
+        // of one write per RTT. plan_weights marks residency at ship
+        // time, so a batch of same-model jobs carries its blob in the
+        // first frame only — the rest of the burst is already hash-only.
         let mut burst: Vec<u8> = Vec::new();
         while cursor < order.len() && inflight.len() < REMOTE_PIPELINE_WINDOW {
             let idx = order[cursor];
             cursor += 1;
             let id = self.next_id;
             self.next_id += 1;
-            burst.extend_from_slice(&job_frame(id, &jobs[idx], bin));
-            inflight.insert(id, idx);
+            let (hash, hash_only) = self.plan_weights(&jobs[idx]);
+            burst.extend_from_slice(&job_frame(id, &jobs[idx], bin, hash, hash_only));
+            inflight.insert(id, Inflight { idx, hash, hash_only, reshipped: false });
         }
         if let Err(e) = conn.writer.write_all(&burst) {
             transport = Some(e.into());
@@ -699,13 +823,49 @@ impl ConvBackend for RemoteBackend {
                 transport = Some(anyhow::anyhow!("reply frame without an id"));
                 break;
             };
-            let Some(idx) = inflight.remove(&rid) else {
+            let Some(fl) = inflight.remove(&rid) else {
                 continue; // stale reply from a pre-batch failure; drained
             };
-            match decode_reply(&resp, body, &jobs[idx]) {
-                Ok(Ok(run)) => results[idx] = Some(Ok(run)),
+            if resp.get(&["need_weights"]).and_then(Json::as_bool) == Some(true) {
+                // Stale residency belief: the peer evicted this blob
+                // since we last shipped it. Re-ship inline exactly once
+                // on the same id; a demand for weights the frame already
+                // carried (or a second demand for the same job) means
+                // the stream is not to be trusted.
+                if !fl.hash_only || fl.reshipped {
+                    inflight.insert(rid, fl);
+                    transport =
+                        Some(anyhow::anyhow!("peer demanded weights it was just sent inline"));
+                    break;
+                }
+                let h = fl.hash.expect("hash_only implies a claimed hash");
+                self.known.forget(h);
+                self.known.record_miss();
+                self.known.mark_known(h);
+                let frame = job_frame(rid, &jobs[fl.idx], bin, fl.hash, false);
+                let fl = Inflight {
+                    hash_only: false,
+                    reshipped: true,
+                    ..fl
+                };
+                if let Err(e) = conn.writer.write_all(&frame) {
+                    inflight.insert(rid, fl);
+                    transport = Some(e.into());
+                    break;
+                }
+                inflight.insert(rid, fl);
+                continue; // the job still occupies its slot; no top-up
+            }
+            match decode_reply(&resp, body, &jobs[fl.idx]) {
+                Ok(Ok(run)) => {
+                    if fl.hash_only {
+                        self.known
+                            .record_hit(jobs[fl.idx].weights.data().len() as u64);
+                    }
+                    results[fl.idx] = Some(Ok(run));
+                }
                 Ok(Err(job_err)) => {
-                    results[idx] = Some(Err(anyhow::anyhow!(
+                    results[fl.idx] = Some(Err(anyhow::anyhow!(
                         "remote {}: peer answered with a job error: {job_err}",
                         self.addr
                     )))
@@ -715,7 +875,7 @@ impl ConvBackend for RemoteBackend {
                     // back so the transport cleanup below fails this job
                     // too instead of leaving a hole that panics the
                     // final unwrap.
-                    inflight.insert(rid, idx);
+                    inflight.insert(rid, fl);
                     transport = Some(e);
                     break;
                 }
@@ -726,12 +886,16 @@ impl ConvBackend for RemoteBackend {
                 cursor += 1;
                 let id = self.next_id;
                 self.next_id += 1;
-                if let Err(e) = conn.writer.write_all(&job_frame(id, &jobs[idx], bin)) {
-                    inflight.insert(id, idx);
+                let (hash, hash_only) = self.plan_weights(&jobs[idx]);
+                let fl = Inflight { idx, hash, hash_only, reshipped: false };
+                if let Err(e) =
+                    conn.writer.write_all(&job_frame(id, &jobs[idx], bin, hash, hash_only))
+                {
+                    inflight.insert(id, fl);
                     transport = Some(e.into());
                     break;
                 }
-                inflight.insert(id, idx);
+                inflight.insert(id, fl);
             }
         }
         match transport {
@@ -745,8 +909,8 @@ impl ConvBackend for RemoteBackend {
                 self.conn = None;
                 self.health.set_healthy(false);
                 let msg = e.to_string();
-                for (_id, idx) in inflight {
-                    results[idx] = Some(Err(anyhow::anyhow!("remote {}: {msg}", self.addr)));
+                for (_id, fl) in inflight {
+                    results[fl.idx] = Some(Err(anyhow::anyhow!("remote {}: {msg}", self.addr)));
                 }
                 while cursor < order.len() {
                     results[order[cursor]] =
@@ -965,7 +1129,8 @@ mod tests {
         assert_eq!(cap.accum, AccumMode::I32);
         assert!(cap.paper_specs_only, "the wire applies the §4.1 gate");
         assert_eq!(be.peer_workers(), 2);
-        assert!(be.peer_binary(), "a v3 server negotiates binary frames");
+        assert!(be.peer_binary(), "a v4 server negotiates binary frames");
+        assert!(be.peer_wcache(), "a v4 server negotiates the weight store");
         // Pricing collapses to the fastest advertised tier (the sim
         // core), divided across both workers behind the peer.
         assert_eq!(
@@ -1024,6 +1189,7 @@ mod tests {
         let mut be2 = RemoteBackend::connect(&v2.addr.to_string()).unwrap();
         assert!(be3.peer_binary());
         assert!(!be2.peer_binary(), "v2-only hello must not offer bin");
+        assert!(!be2.peer_wcache(), "v2-only hello must not offer wcache");
         let spec = LayerSpec::new(3, 6, 6, 5).with_relu();
         let mut rng = Prng::new(47);
         let img = Tensor::from_vec(&[3, 6, 6], rng.bytes_below(3 * 6 * 6, 256));
@@ -1043,6 +1209,11 @@ mod tests {
         assert_eq!(r3.output.data(), want.data(), "binary path vs golden");
         assert_eq!(r2.output.data(), want.data(), "JSON fallback vs golden");
         assert_eq!(r3.output.shape(), r2.output.shape());
+        // The v2 peer saw plain inline tensors: no residency belief was
+        // formed and no cache traffic was recorded.
+        let known2 = be2.known_weights().unwrap();
+        assert!(known2.is_empty(), "v2 path must never claim a weights hash");
+        assert_eq!(known2.stats(), (0, 0, 0));
         drop(be3);
         drop(be2);
         v3.stop();
@@ -1168,6 +1339,170 @@ mod tests {
             assert!(err.to_string().contains("remote"), "{err}");
         }
         t.join().unwrap();
+    }
+
+    #[test]
+    fn repeated_weights_ship_once_per_peer_lifetime() {
+        // The PR's acceptance property at wire level: however many jobs
+        // reuse one weight blob — across pipelined batches and single
+        // runs alike — the bytes cross the wire exactly once per peer
+        // lifetime. Ship-time marking means even the first batch
+        // carries the blob in its first frame only.
+        let server =
+            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2)).unwrap();
+        let mut be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        assert!(be.peer_wcache());
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(97);
+        let wts = Tensor::from_vec(&[4, 2, 3, 3], rng.bytes_below(4 * 2 * 9, 256));
+        let bias: Vec<i32> = (0..4).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let imgs: Vec<Tensor<u8>> = (0..6)
+            .map(|_| Tensor::from_vec(&[2, 5, 5], rng.bytes_below(2 * 5 * 5, 256)))
+            .collect();
+        let payloads: Vec<JobPayload> = imgs
+            .iter()
+            .map(|img| JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img,
+                weights: &wts,
+                bias: &bias,
+                weights_resident: false,
+            })
+            .collect();
+        for res in be.run_batch(&payloads) {
+            res.expect("pipelined cached job succeeds");
+        }
+        for res in be.run_batch(&payloads) {
+            res.expect("second batch rides the warm cache");
+        }
+        let run = be.run(&payloads[0]).unwrap();
+        let want = golden::conv3x3_i32(&imgs[0], &wts, &bias, false);
+        assert_eq!(run.output.data(), want.data(), "cached path stays bit-identical");
+        // 13 jobs, one 72-byte blob: it crossed the wire exactly once.
+        let m = server.metrics();
+        assert_eq!(m.wire_weight_bytes.load(Ordering::Relaxed), 72);
+        assert_eq!(m.weight_hits.load(Ordering::Relaxed), 12);
+        assert_eq!(
+            m.weight_misses.load(Ordering::Relaxed),
+            0,
+            "ship-time marking never needs a need_weights round trip here"
+        );
+        let (hits, misses, saved) = be.known_weights().unwrap().stats();
+        assert_eq!((hits, misses, saved), (12, 1, 12 * 72));
+        drop(be);
+        server.stop();
+    }
+
+    #[test]
+    fn redial_after_peer_flap_reships_weights_once() {
+        // Satellite 1's chaos contract: kill the peer connection
+        // mid-service, revive it, and the next same-model job re-ships
+        // the blob exactly once (the redial dropped every residency
+        // belief) with bit-identical output; the job after that is a
+        // cache hit again.
+        let server =
+            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(1)).unwrap();
+        let mut be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(98);
+        let wts = Tensor::from_vec(&[4, 2, 3, 3], rng.bytes_below(4 * 2 * 9, 256));
+        let bias: Vec<i32> = (0..4).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let img = Tensor::from_vec(&[2, 5, 5], rng.bytes_below(2 * 5 * 5, 256));
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+        };
+        let want = golden::conv3x3_i32(&img, &wts, &bias, false);
+        // Warm up: one inline ship, then a hash-only hit.
+        assert_eq!(be.run(&payload).unwrap().output.data(), want.data());
+        assert_eq!(be.run(&payload).unwrap().output.data(), want.data());
+        assert_eq!(server.metrics().wire_weight_bytes.load(Ordering::Relaxed), 72);
+        assert_eq!(be.known_weights().unwrap().len(), 1);
+        // Chaos: sever the connection under the client.
+        server.set_down(true);
+        let err = be.run(&payload).unwrap_err();
+        assert!(err.to_string().contains("remote"), "{err}");
+        server.set_down(false);
+        // Revival: the redial cleared the belief set, so the blob
+        // re-ships inline exactly once — and stays bit-identical.
+        let run = be.run(&payload).unwrap();
+        assert_eq!(run.output.data(), want.data(), "bit-identical across the flap");
+        assert_eq!(
+            server.metrics().wire_weight_bytes.load(Ordering::Relaxed),
+            144,
+            "exactly one re-ship after the redial"
+        );
+        assert_eq!(be.known_weights().unwrap().len(), 1, "belief re-learned");
+        // Back to hits: no further weight bytes cross the wire.
+        assert_eq!(be.run(&payload).unwrap().output.data(), want.data());
+        assert_eq!(server.metrics().wire_weight_bytes.load(Ordering::Relaxed), 144);
+        let (hits, misses, saved) = be.known_weights().unwrap().stats();
+        assert_eq!((hits, misses, saved), (2, 2, 144));
+        drop(be);
+        server.stop();
+    }
+
+    #[test]
+    fn evicted_blob_recovers_via_need_weights_reship() {
+        // A one-BRAM store holds exactly two 2304-byte blobs; shipping a
+        // third evicts the first. The client still believes blob 0
+        // resident, so its next job goes hash-only, eats the
+        // need_weights round trip, re-ships inline on the same request
+        // id, and still answers bit-identically.
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_weight_store_bram36(1),
+        )
+        .unwrap();
+        let mut be = RemoteBackend::connect(&server.addr.to_string()).unwrap();
+        let spec = LayerSpec::new(16, 6, 6, 16);
+        let mut rng = Prng::new(99);
+        let img = Tensor::from_vec(&[16, 6, 6], rng.bytes_below(16 * 6 * 6, 256));
+        let bias = vec![0i32; 16];
+        let weight_sets: Vec<Tensor<u8>> = (0..3)
+            .map(|_| Tensor::from_vec(&[16, 16, 3, 3], rng.bytes_below(16 * 16 * 9, 256)))
+            .collect();
+        let golds: Vec<Tensor<i32>> = weight_sets
+            .iter()
+            .map(|w| golden::conv3x3_i32(&img, w, &bias, false))
+            .collect();
+        for (w, want) in weight_sets.iter().zip(&golds) {
+            let payload = JobPayload {
+                kind: JobKind::Standard,
+                spec: &spec,
+                img: &img,
+                weights: w,
+                bias: &bias,
+                weights_resident: false,
+            };
+            assert_eq!(be.run(&payload).unwrap().output.data(), want.data());
+        }
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &weight_sets[0],
+            bias: &bias,
+            weights_resident: false,
+        };
+        assert_eq!(be.run(&payload).unwrap().output.data(), golds[0].data());
+        let m = server.metrics();
+        assert_eq!(
+            m.weight_misses.load(Ordering::Relaxed),
+            1,
+            "exactly one need_weights round trip"
+        );
+        assert_eq!(m.weight_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(m.wire_weight_bytes.load(Ordering::Relaxed), 4 * 2304);
+        let (hits, misses, _saved) = be.known_weights().unwrap().stats();
+        assert_eq!((hits, misses), (0, 4));
+        drop(be);
+        server.stop();
     }
 
     #[test]

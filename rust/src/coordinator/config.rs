@@ -41,7 +41,7 @@ pub struct CoordinatorConfig {
     pub im2col_worker_threads: usize,
     /// Remote peers (`host:port`), each dialled at pool construction
     /// and appended as one `backend::RemoteBackend` worker speaking
-    /// wire protocol v3 (`coordinator::tcp`) — whole machines joining
+    /// wire protocol v4 (`coordinator::tcp`) — whole machines joining
     /// the pool behind the same capability-masked dispatch. An
     /// unreachable peer is a construction error, not a silent absence.
     pub remote_peers: Vec<String>,
@@ -53,6 +53,12 @@ pub struct CoordinatorConfig {
     /// fleets (CI's mixed smoke leg, the negotiation tests), not for
     /// production use.
     pub wire_v2_only: bool,
+    /// Capacity of the served endpoint's content-addressed weight store
+    /// (wire v4), in BRAM36 blocks. `None` budgets the full Pynq Z2
+    /// BRAM inventory (`hw::device::XC7Z020_CLG400.bram36`); tests pin
+    /// it tiny to exercise LRU eviction. Ignored when
+    /// [`Self::wire_v2_only`] is set — a v2 endpoint has no store.
+    pub weight_store_bram36: Option<u64>,
     pub ip: IpCoreConfig,
     pub batch: BatchConfig,
     /// Backpressure: max in-flight simulated PSUMs (None = unbounded).
@@ -70,6 +76,7 @@ impl Default for CoordinatorConfig {
             im2col_worker_threads: 4,
             remote_peers: Vec::new(),
             wire_v2_only: false,
+            weight_store_bram36: None,
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
@@ -123,6 +130,13 @@ impl CoordinatorConfig {
         self.wire_v2_only = true;
         self
     }
+
+    /// Budget the served endpoint's weight store to `blocks` BRAM36
+    /// blocks (see [`Self::weight_store_bram36`]).
+    pub fn with_weight_store_bram36(mut self, blocks: u64) -> Self {
+        self.weight_store_bram36 = Some(blocks);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +185,13 @@ mod tests {
     fn wire_v2_only_defaults_off_and_composes() {
         assert!(!CoordinatorConfig::default().wire_v2_only);
         assert!(CoordinatorConfig::default().with_wire_v2_only().wire_v2_only);
+    }
+
+    #[test]
+    fn weight_store_budget_defaults_to_full_board_and_composes() {
+        assert!(CoordinatorConfig::default().weight_store_bram36.is_none());
+        let c = CoordinatorConfig::default().with_weight_store_bram36(1);
+        assert_eq!(c.weight_store_bram36, Some(1));
     }
 
     #[test]

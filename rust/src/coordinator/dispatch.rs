@@ -30,7 +30,9 @@
 use super::batcher::Batch;
 use super::metrics::Metrics;
 use super::request::{ConvResult, Submission};
-use crate::backend::{Capability, ConvBackend, CostModel, JobKind, SimBackend, WorkerHealth};
+use crate::backend::{
+    Capability, ConvBackend, CostModel, JobKind, KnownWeights, SimBackend, WorkerHealth,
+};
 use crate::hw::{AccumMode, IpCoreConfig};
 use crate::model::LayerSpec;
 use std::sync::atomic::{AtomicI64, Ordering};
@@ -64,6 +66,11 @@ struct WorkerEntry {
     /// Liveness flag for backends that can flap (remote peers); `None`
     /// means always healthy.
     health: Option<Arc<WorkerHealth>>,
+    /// Weight-store residency belief, for wire-v4 remote workers;
+    /// `None` means no weight cache on this path. Dispatch snapshots it
+    /// per job so the wire weight term is discounted when the peer
+    /// already holds the blob.
+    known: Option<Arc<KnownWeights>>,
 }
 
 impl WorkerEntry {
@@ -111,12 +118,29 @@ impl WorkerTable {
     /// Charge worker `idx`'s queue for every job in `batch` and send it.
     /// Hands the batch back (charge undone) if the worker already shut
     /// down — only possible when a failover hop races pool teardown.
-    fn send_batch(&self, idx: usize, batch: Batch, tried: Vec<usize>) -> Result<(), Batch> {
+    ///
+    /// Each job's weight-residency flag is snapshotted *here*, against
+    /// the chosen worker's [`KnownWeights`], and stored on the job —
+    /// charge and release both read that snapshot, so the accounting
+    /// stays symmetric even if residency changes while the job is in
+    /// flight (and failover hops re-snapshot against the new worker).
+    fn send_batch(&self, idx: usize, mut batch: Batch, tried: Vec<usize>) -> Result<(), Batch> {
         let entry = &self.entries[idx];
+        for s in &mut batch.jobs {
+            s.job.wire_weights_cached = entry
+                .known
+                .as_ref()
+                .is_some_and(|k| k.contains(s.job.weights_hash));
+        }
         let total: i64 = batch
             .jobs
             .iter()
-            .map(|s| entry.cost.cost(&s.job.spec, s.job.kind) as i64)
+            .map(|s| {
+                entry
+                    .cost
+                    .cost_cached(&s.job.spec, s.job.kind, s.job.wire_weights_cached)
+                    as i64
+            })
             .sum();
         entry.load.fetch_add(total, Ordering::Relaxed);
         match entry.tx.send(WorkerMsg::Run(batch, tried)) {
@@ -217,7 +241,8 @@ fn run_batch(
                 // sibling exists — does the pool answer an error
                 // result.
                 table.entries[core_idx].load.fetch_sub(
-                    cost.cost(&sub.job.spec, sub.job.kind) as i64,
+                    cost.cost_cached(&sub.job.spec, sub.job.kind, sub.job.wire_weights_cached)
+                        as i64,
                     Ordering::Relaxed,
                 );
                 let mut tried_now = tried.clone();
@@ -249,7 +274,7 @@ fn run_batch(
             reused,
         );
         table.entries[core_idx].load.fetch_sub(
-            cost.cost(&sub.job.spec, sub.job.kind) as i64,
+            cost.cost_cached(&sub.job.spec, sub.job.kind, sub.job.wire_weights_cached) as i64,
             Ordering::Relaxed,
         );
         // Receiver may have hung up (fire-and-forget); fine.
@@ -310,6 +335,7 @@ impl CorePool {
                     cost: b.cost_model(),
                     name: b.name(),
                     health: b.health(),
+                    known: b.known_weights(),
                 }
             })
             .collect();
@@ -380,6 +406,18 @@ impl CorePool {
             .filter_map(|w| w.health.as_ref())
             .map(|h| h.recoveries())
             .sum()
+    }
+
+    /// Client-side weight-cache accounting summed over every wire-v4
+    /// remote worker: `(hits, misses, wire_weight_bytes_saved)`. Flows
+    /// into the serving report.
+    pub fn weight_cache_stats(&self) -> (u64, u64, u64) {
+        self.table
+            .entries
+            .iter()
+            .filter_map(|w| w.known.as_ref())
+            .map(|k| k.stats())
+            .fold((0, 0, 0), |acc, s| (acc.0 + s.0, acc.1 + s.1, acc.2 + s.2))
     }
 
     fn spawn_worker(
@@ -1034,6 +1072,82 @@ mod tests {
         h0.set_healthy(true);
         h0.set_healthy(true);
         assert_eq!(pool.recovered_peers(), 1);
+        pool.shutdown();
+    }
+
+    /// Golden-equivalent backend posing as a wire-v4 remote: carries a
+    /// [`KnownWeights`] set and quotes Remote prices, plus a gate so
+    /// the test can observe queued load before completion.
+    struct CachedBackend {
+        gate: std::sync::mpsc::Receiver<()>,
+        known: Arc<KnownWeights>,
+    }
+
+    impl ConvBackend for CachedBackend {
+        fn name(&self) -> &'static str {
+            "cached-test"
+        }
+        fn capability(&self) -> Capability {
+            Capability {
+                standard3x3: true,
+                depthwise: true,
+                pointwise_as_3x3: true,
+                accum: AccumMode::I32,
+                paper_specs_only: false,
+                spec_allowlist: None,
+            }
+        }
+        fn cost_model(&self) -> CostModel {
+            CostModel::Remote {
+                workers: 1,
+                class: crate::backend::RemotePeerClass::HostMacs,
+            }
+        }
+        fn known_weights(&self) -> Option<Arc<KnownWeights>> {
+            Some(Arc::clone(&self.known))
+        }
+        fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+            self.gate.recv().ok();
+            GoldenBackend::new().run(job)
+        }
+    }
+
+    #[test]
+    fn known_weights_discount_charges_and_releases_symmetrically() {
+        // A warm job (hash in the worker's KnownWeights) must be
+        // charged the discounted quote and release exactly the same
+        // amount; a cold job pays full price. Any charge/release
+        // asymmetry would show up as a non-zero residual load.
+        let known = KnownWeights::new();
+        let (gate, gate_rx) = channel();
+        let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(CachedBackend {
+            gate: gate_rx,
+            known: Arc::clone(&known),
+        })];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        let warm_job = ConvJob::synthetic(1, QUICKSTART, 1);
+        known.mark_known(warm_job.weights_hash);
+        let cold_job = ConvJob::synthetic(2, QUICKSTART, 2);
+        assert_ne!(warm_job.weights_hash, cold_job.weights_hash, "premise");
+        let model = CostModel::Remote {
+            workers: 1,
+            class: crate::backend::RemotePeerClass::HostMacs,
+        };
+        let warm = model.cost_cached(&QUICKSTART, JobKind::Standard, true) as i64;
+        let cold = model.cost(&QUICKSTART, JobKind::Standard) as i64;
+        assert!(warm < cold, "discount must be visible: {warm} vs {cold}");
+        let (tx, rx) = channel();
+        pool.dispatch(batch_of(warm_job, &tx));
+        pool.dispatch(batch_of(cold_job, &tx));
+        assert_eq!(pool.worker_loads(), vec![warm + cold]);
+        gate.send(()).unwrap();
+        gate.send(()).unwrap();
+        drop(tx);
+        let results: Vec<ConvResult> = rx.iter().collect();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.error.is_none()));
+        assert_eq!(pool.worker_loads(), vec![0], "charge/release must cancel");
+        assert_eq!(pool.weight_cache_stats(), (0, 0, 0), "dispatch reads, never records");
         pool.shutdown();
     }
 

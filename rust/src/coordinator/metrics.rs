@@ -74,6 +74,18 @@ pub struct Metrics {
     pub psums: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub weight_dma_skipped: AtomicU64,
+    /// Wire-v4 weight-store hits: hash-only requests served from the
+    /// content-addressed store without the blob crossing the wire.
+    pub weight_hits: AtomicU64,
+    /// Wire-v4 weight-store misses: hash-only requests answered with a
+    /// `need_weights` frame (client must re-send the blob inline once).
+    pub weight_misses: AtomicU64,
+    /// Weight bytes that did *not* cross the wire thanks to store hits.
+    pub weight_bytes_saved: AtomicU64,
+    /// Weight bytes that *did* arrive inline over the wire (v2/v3 JSON
+    /// arrays and v3/v4 binary bodies alike) — the ships-at-most-once
+    /// property is asserted against this counter.
+    pub wire_weight_bytes: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -106,6 +118,23 @@ impl Metrics {
     /// Record a request shed by admission control.
     pub fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a weight-store hit that kept `bytes` weight bytes off the
+    /// wire.
+    pub fn record_weight_hit(&self, bytes: u64) {
+        self.weight_hits.fetch_add(1, Ordering::Relaxed);
+        self.weight_bytes_saved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record a weight-store miss (a `need_weights` frame went out).
+    pub fn record_weight_miss(&self) {
+        self.weight_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` of inline weight payload received over the wire.
+    pub fn record_wire_weight_bytes(&self, bytes: u64) {
+        self.wire_weight_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Simulated GOPS in the paper's PSUM accounting, given the board
@@ -144,6 +173,21 @@ mod tests {
         h.record(Duration::ZERO);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_us(1.0) <= 2);
+    }
+
+    #[test]
+    fn weight_cache_counters_accumulate_independently() {
+        let m = Metrics::new();
+        m.record_weight_hit(2304);
+        m.record_weight_hit(2304);
+        m.record_weight_miss();
+        m.record_wire_weight_bytes(2304);
+        assert_eq!(m.weight_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.weight_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.weight_bytes_saved.load(Ordering::Relaxed), 4608);
+        assert_eq!(m.wire_weight_bytes.load(Ordering::Relaxed), 2304);
+        // Orthogonal to the completion counters.
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -30,10 +30,13 @@
 //!   [`CoordinatorConfig`] into the heterogeneous pool (sim cores,
 //!   host workers, and one `backend::RemoteBackend` per
 //!   `remote_peers` entry — whole TCP-served machines in the pool);
-//! * [`tcp`] — the network face: wire protocol v2 (newline-delimited
-//!   JSON with a capability-advertising `hello` handshake, kind-tagged
-//!   requests, opt-in full-output replies) in front of the same pool.
-//!   `repro fleet N` composes the two sides into a multi-machine demo.
+//! * [`tcp`] — the network face: wire protocol v4 (a capability-
+//!   advertising `hello` handshake, kind-tagged requests, binary
+//!   tensor frames, and a content-addressed weight store so repeated
+//!   weights ship only on miss), negotiating down to v3 binary frames
+//!   or legacy v2 newline-delimited JSON per peer, in front of the
+//!   same pool. `repro fleet N` composes the two sides into a
+//!   multi-machine demo.
 //!
 //! Everything is std-only (threads + mpsc): the offline build has no
 //! tokio, and the workloads here are CPU-bound simulation, not I/O.

@@ -29,6 +29,20 @@ pub struct ConvJob {
     /// Identifies the weight set: consecutive jobs sharing it on one
     /// core skip the weight DMA (weight-stationary across the batch).
     pub weights_id: u64,
+    /// Content address of the weight bytes (FNV-1a over `weights`
+    /// data) — the wire-v4 `weights_hash` and the key into a peer's
+    /// [`crate::store::WeightStore`]. Unlike `weights_id` (which also
+    /// folds in spec/kind for DMA-reuse grouping), this is a pure
+    /// byte hash: two jobs share it iff their weight tensors are
+    /// byte-identical.
+    pub weights_hash: u64,
+    /// Snapshot taken at dispatch time: whether the chosen worker's
+    /// peer was believed to already hold `weights_hash`, so the wire
+    /// weight term was discounted when this job's cost was charged.
+    /// The release path must use the same flag — never re-derive it —
+    /// or charge/release go asymmetric when residency changes
+    /// mid-flight.
+    pub wire_weights_cached: bool,
 }
 
 /// FNV-1a over every field that determines the weight-set layout.
@@ -98,23 +112,28 @@ impl ConvJob {
     /// replay).
     pub fn synthetic(id: RequestId, spec: LayerSpec, seed: u64) -> Self {
         let mut rng = crate::util::prng::Prng::new(seed);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        );
+        let weights = Tensor::from_vec(
+            &[spec.k, spec.c, 3, 3],
+            rng.bytes_below(spec.k * spec.c * 9, 16),
+        );
+        let weights_hash = fnv1a_bytes(weights.data());
         ConvJob {
             id,
             spec,
             kind: JobKind::Standard,
             accum: AccumMode::I32,
-            img: Tensor::from_vec(
-                &[spec.c, spec.h, spec.w],
-                rng.bytes_below(spec.c * spec.h * spec.w, 256),
-            ),
-            weights: Tensor::from_vec(
-                &[spec.k, spec.c, 3, 3],
-                rng.bytes_below(spec.k * spec.c * 9, 16),
-            ),
+            img,
+            weights,
             bias: (0..spec.k).map(|_| rng.range_i64(0, 32) as i32).collect(),
             // Synthetic traces share one weight set per spec, like a
             // deployed model's fixed parameters.
             weights_id: weights_fingerprint(&spec, JobKind::Standard),
+            weights_hash,
+            wire_weights_cached: false,
         }
     }
 
@@ -123,18 +142,23 @@ impl ConvJob {
     pub fn synthetic_depthwise(id: RequestId, spec: LayerSpec, seed: u64) -> Self {
         assert_eq!(spec.k, spec.c, "depthwise spec must have K == C");
         let mut rng = crate::util::prng::Prng::new(seed);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        );
+        let weights = Tensor::from_vec(&[spec.c, 3, 3], rng.bytes_below(spec.c * 9, 16));
+        let weights_hash = fnv1a_bytes(weights.data());
         ConvJob {
             id,
             spec,
             kind: JobKind::Depthwise,
             accum: AccumMode::I32,
-            img: Tensor::from_vec(
-                &[spec.c, spec.h, spec.w],
-                rng.bytes_below(spec.c * spec.h * spec.w, 256),
-            ),
-            weights: Tensor::from_vec(&[spec.c, 3, 3], rng.bytes_below(spec.c * 9, 16)),
+            img,
+            weights,
             bias: (0..spec.c).map(|_| rng.range_i64(0, 32) as i32).collect(),
             weights_id: weights_fingerprint(&spec, JobKind::Depthwise),
+            weights_hash,
+            wire_weights_cached: false,
         }
     }
 
@@ -274,6 +298,20 @@ mod tests {
             weights_fingerprint_salted(&spec, JobKind::Standard, 1),
             weights_fingerprint_salted(&spec, JobKind::Standard, 2)
         );
+    }
+
+    #[test]
+    fn weights_hash_is_a_pure_byte_address() {
+        // Same bytes → same hash; different bytes → different hash,
+        // even when the per-spec weights_id is (deliberately) shared.
+        let a = ConvJob::synthetic(1, QUICKSTART, 1);
+        let b = ConvJob::synthetic(2, QUICKSTART, 1);
+        let c = ConvJob::synthetic(3, QUICKSTART, 2);
+        assert_eq!(a.weights_hash, b.weights_hash);
+        assert_eq!(a.weights_hash, fnv1a_bytes(a.weights.data()));
+        assert_ne!(a.weights_hash, c.weights_hash);
+        assert_eq!(a.weights_id, c.weights_id, "weights_id stays per-spec");
+        assert!(!a.wire_weights_cached, "jobs are built cost-undiscounted");
     }
 
     #[test]

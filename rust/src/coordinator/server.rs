@@ -8,12 +8,20 @@
 //! `n_cores` simulated IP cores, plus `golden_fallback_workers` naive
 //! host workers, plus `im2col_workers` threaded im2col+GEMM workers,
 //! plus one `RemoteBackend` per `remote_peers` entry (whole TCP-served
-//! machines, wire protocol v3: binary tensor frames negotiated per
-//! peer, batches pipelined through a bounded in-flight window) — the
-//! heterogeneous deployment. Depthwise trace entries exercise the
-//! capability mask: they only ever route to depthwise-capable workers.
-//! Jobs a backend fails (a dropped peer) come back as error results,
-//! counted in [`Report::n_errors`].
+//! machines, wire protocol v4: binary tensor frames and the
+//! content-addressed weight cache negotiated per peer, batches
+//! pipelined through a bounded in-flight window) — the heterogeneous
+//! deployment. Depthwise trace entries exercise the capability mask:
+//! they only ever route to depthwise-capable workers. Jobs a backend
+//! fails (a dropped peer) come back as error results, counted in
+//! [`Report::n_errors`].
+//!
+//! Two front doors share one paced submission core: [`Server::run_trace`]
+//! (synthetic per-entry weights — every job a cache miss by design) and
+//! [`Server::run_registry_trace`] (multi-tenant `(model, layer, input)`
+//! submissions resolved through a [`ModelRegistry`] — same weight bytes
+//! per layer on every request, which is what makes the wire-v4 weight
+//! cache pay off; [`Report::n_weight_hits`] shows it).
 
 use super::batcher::Batcher;
 use super::config::CoordinatorConfig;
@@ -23,7 +31,9 @@ use crate::backend::{
     ConvBackend, GoldenBackend, Im2colBackend, JobKind, RemoteBackend, SimBackend,
 };
 use crate::model::trace::TraceEntry;
+use crate::registry::ModelRegistry;
 use crate::util::json::Json;
+use crate::util::prng::Prng;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
@@ -77,6 +87,15 @@ pub struct Report {
     pub p99_us: u64,
     pub total_psums: u64,
     pub weight_dma_skip_rate: f64,
+    /// Wire-v4 weight-cache hits across the pool's remote workers:
+    /// submissions whose weight blob stayed off the wire because the
+    /// peer's content-addressed store already held it.
+    pub n_weight_hits: u64,
+    /// Wire-v4 weight-cache misses: blobs shipped inline (cold peer,
+    /// store eviction, or a redial that dropped residency beliefs).
+    pub n_weight_misses: u64,
+    /// Weight bytes that never crossed the wire thanks to cache hits.
+    pub wire_weight_bytes_saved: u64,
     /// Host-side throughput (requests/s) — the simulator's own speed.
     pub host_rps: f64,
     /// Jobs answered with an error result (e.g. a dropped remote peer)
@@ -134,6 +153,73 @@ impl Server {
         trace: &[TraceEntry],
         on_entry: &mut dyn FnMut(usize),
     ) -> Report {
+        self.run_paced(
+            trace.len(),
+            &mut |i| trace[i].arrival_us,
+            &mut |i| match trace[i].kind {
+                JobKind::Depthwise => {
+                    ConvJob::synthetic_depthwise(i as u64, trace[i].spec, trace[i].seed)
+                }
+                _ => ConvJob::synthetic(i as u64, trace[i].spec, trace[i].seed),
+            },
+            on_entry,
+        )
+    }
+
+    /// Run a multi-tenant registry trace: `n` paced submissions, each
+    /// resolved as `(model, layer)` by [`ModelRegistry::pick`] and built
+    /// from the manifest's weights ([`ModelRegistry::job`]) with a
+    /// per-request deterministic input image. Because every request for
+    /// a layer reuses the *same* weight bytes, remote wire-v4 peers see
+    /// each blob at most once per peer lifetime —
+    /// [`Report::n_weight_hits`] counts the submissions that rode the
+    /// cache. Arrival pacing mirrors `model::trace::generate`: uniform
+    /// gaps in `[0, 2*mean_gap_us]`, integer-deterministic from `seed`.
+    pub fn run_registry_trace(
+        &mut self,
+        registry: &ModelRegistry,
+        n: usize,
+        mean_gap_us: u64,
+        seed: u64,
+    ) -> Report {
+        let mut rng = Prng::new(seed);
+        let mut t = 0u64;
+        let arrivals: Vec<u64> = (0..n)
+            .map(|_| {
+                if mean_gap_us > 0 {
+                    t += rng.below(2 * mean_gap_us + 1);
+                }
+                t
+            })
+            .collect();
+        self.run_paced(
+            n,
+            &mut |i| arrivals[i],
+            &mut |i| {
+                let (model, layer) = registry.pick(i as u64, seed);
+                registry
+                    .job(model, layer, i as u64, seed ^ ((i as u64) << 1))
+                    .expect("pick() only yields in-range (model, layer) pairs")
+            },
+            &mut |_| {},
+        )
+    }
+
+    /// The shared paced-submission core both trace fronts drive:
+    /// `make_job(i)` builds submission `i`, `arrival_us(i)` paces it
+    /// (absolute µs from run start), `on_entry(i)` fires just before
+    /// submission — the chaos harness's hook for killing and reviving
+    /// peers mid-trace. Blocked admission waits are bounded by a
+    /// backstop deadline: a wedged pool sheds instead of hanging the
+    /// run, and shed entries are reported in [`Report::n_shed`] rather
+    /// than answered.
+    fn run_paced(
+        &mut self,
+        n: usize,
+        arrival_us: &mut dyn FnMut(usize) -> u64,
+        make_job: &mut dyn FnMut(usize) -> ConvJob,
+        on_entry: &mut dyn FnMut(usize),
+    ) -> Report {
         use super::backpressure::{Admission, AdmissionController, Policy};
         use std::sync::Arc;
 
@@ -167,25 +253,26 @@ impl Server {
             })
         };
 
-        for (i, entry) in trace.iter().enumerate() {
+        for i in 0..n {
             on_entry(i);
             // Open-loop pacing: wait out the gap to this entry's
             // arrival time (arrival_us is absolute from trace start; a
             // mean_gap_us=0 trace degenerates to the old burst).
-            let due = Duration::from_micros(entry.arrival_us);
+            let due = Duration::from_micros(arrival_us(i));
             if let Some(wait) = due.checked_sub(start.elapsed()) {
                 if !wait.is_zero() {
                     std::thread::sleep(wait);
                 }
             }
+            let job = make_job(i);
             if let Some(ac) = &admission {
                 // Admitted-but-unbatched work can't complete; flush open
                 // batches before blocking or the budget never frees.
-                if ac.admit(entry.psums(), Policy::Reject) == Admission::Rejected {
+                if ac.admit(job.psums(), Policy::Reject) == Admission::Rejected {
                     for open in batcher.flush() {
                         self.pool.dispatch(open);
                     }
-                    if ac.admit_deadline(entry.psums(), ADMIT_BACKSTOP) == Admission::Rejected {
+                    if ac.admit_deadline(job.psums(), ADMIT_BACKSTOP) == Admission::Rejected {
                         // Wedged (or shutting-down) pool: shed rather
                         // than hang the submitter forever.
                         self.pool.metrics.record_shed();
@@ -194,10 +281,6 @@ impl Server {
                     }
                 }
             }
-            let job = match entry.kind {
-                JobKind::Depthwise => ConvJob::synthetic_depthwise(i as u64, entry.spec, entry.seed),
-                _ => ConvJob::synthetic(i as u64, entry.spec, entry.seed),
-            };
             let sub = Submission {
                 job,
                 reply: tx.clone(),
@@ -216,7 +299,7 @@ impl Server {
         let wall = start.elapsed();
         assert_eq!(
             results.len(),
-            trace.len() - n_shed,
+            n - n_shed,
             "every admitted request answered"
         );
 
@@ -232,6 +315,7 @@ impl Server {
         let m = &self.pool.metrics;
         let completed = m.completed.load(Ordering::Relaxed);
         let skipped = m.weight_dma_skipped.load(Ordering::Relaxed);
+        let (weight_hits, weight_misses, weight_bytes_saved) = self.pool.weight_cache_stats();
         Report {
             n_requests: results.len(),
             n_cores: self.pool.n_cores(),
@@ -245,6 +329,9 @@ impl Server {
             } else {
                 skipped as f64 / completed as f64
             },
+            n_weight_hits: weight_hits,
+            n_weight_misses: weight_misses,
+            wire_weight_bytes_saved: weight_bytes_saved,
             host_rps: results.len() as f64 / wall.as_secs_f64().max(1e-9),
             n_errors,
             n_shed: m.shed.load(Ordering::Relaxed) as usize,
@@ -269,7 +356,8 @@ impl Report {
             .join(",");
         format!(
             "requests={} cores={} wall={:?} host_rps={:.1} errors={} shed={} retried={} recovered_peers={}\n\
-             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% mix=[{}]",
+             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% \
+             wcache_hits={} wcache_misses={} wcache_saved={}B mix=[{}]",
             self.n_requests,
             self.n_cores,
             self.wall,
@@ -283,6 +371,9 @@ impl Report {
             self.p50_us,
             self.p99_us,
             self.weight_dma_skip_rate * 100.0,
+            self.n_weight_hits,
+            self.n_weight_misses,
+            self.wire_weight_bytes_saved,
             mix
         )
     }
@@ -304,6 +395,12 @@ impl Report {
             ("p99_us", Json::num(self.p99_us as f64)),
             ("total_psums", Json::num(self.total_psums as f64)),
             ("weight_dma_skip_rate", Json::num(self.weight_dma_skip_rate)),
+            ("n_weight_hits", Json::num(self.n_weight_hits as f64)),
+            ("n_weight_misses", Json::num(self.n_weight_misses as f64)),
+            (
+                "wire_weight_bytes_saved",
+                Json::num(self.wire_weight_bytes_saved as f64),
+            ),
             (
                 "backend_mix",
                 Json::obj(
@@ -486,6 +583,10 @@ mod tests {
         assert_eq!(j.get(&["n_retried"]).unwrap().as_usize(), Some(0));
         assert_eq!(j.get(&["n_recovered_peers"]).unwrap().as_usize(), Some(0));
         assert!(j.get(&["host_rps"]).unwrap().as_f64().unwrap() > 0.0);
+        // Local pool, synthetic weights: the weight cache never engages.
+        assert_eq!(j.get(&["n_weight_hits"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.get(&["n_weight_misses"]).unwrap().as_usize(), Some(0));
+        assert_eq!(j.get(&["wire_weight_bytes_saved"]).unwrap().as_usize(), Some(0));
         assert_eq!(
             j.get(&["backend_mix", "sim-ipcore-i32"]).unwrap().as_usize(),
             Some(4)
@@ -541,6 +642,68 @@ mod tests {
         front.shutdown();
         peer_a.stop();
         peer_b.stop();
+    }
+
+    #[test]
+    fn registry_trace_on_a_local_pool_answers_everything() {
+        // The registry front door over plain local cores: multi-tenant
+        // submissions are just jobs; no remote peer means no weight
+        // cache, and the report says so.
+        let mut server = Server::new(CoordinatorConfig::default().with_cores(2));
+        let reg = ModelRegistry::builtin(2, 11);
+        let report = server.run_registry_trace(&reg, 12, 0, 7);
+        assert_eq!(report.n_requests, 12);
+        assert_eq!(report.n_errors, 0, "{report:?}");
+        assert_eq!(report.n_weight_hits, 0);
+        assert_eq!(report.n_weight_misses, 0);
+        // Deterministic: the same registry trace replays identically.
+        let mut server2 = Server::new(CoordinatorConfig::default().with_cores(2));
+        let report2 = server2.run_registry_trace(&reg, 12, 0, 7);
+        assert_eq!(report2.total_psums, report.total_psums);
+        server.shutdown();
+        server2.shutdown();
+    }
+
+    #[test]
+    fn registry_trace_over_a_v4_peer_ships_each_blob_once() {
+        // The tentpole acceptance at the serving layer: a repeated-model
+        // trace through a remote v4 peer ships each distinct weight blob
+        // at most once per peer lifetime; everything else is cache hits.
+        use crate::coordinator::tcp::TcpServer;
+        let peer = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2),
+        )
+        .expect("peer");
+        let cfg = CoordinatorConfig {
+            n_cores: 0,
+            ..CoordinatorConfig::default().with_remote_peer(peer.addr.to_string())
+        };
+        let mut front = Server::try_new(cfg).expect("front dials the peer");
+        let reg = ModelRegistry::builtin(2, 13);
+        let n = 24;
+        let report = front.run_registry_trace(&reg, n, 0, 19);
+        assert_eq!(report.n_requests, n);
+        assert_eq!(report.n_errors, 0, "{report:?}");
+        assert!(
+            report.n_weight_hits > 0,
+            "repeated-model traffic must ride the cache: {report:?}"
+        );
+        assert!(report.wire_weight_bytes_saved > 0);
+        // At most one inline ship per distinct blob this trace touched.
+        assert!(
+            (report.n_weight_misses as usize) <= reg.distinct_weight_hashes(),
+            "misses {} > distinct blobs {}",
+            report.n_weight_misses,
+            reg.distinct_weight_hashes()
+        );
+        assert_eq!(
+            report.n_weight_hits + report.n_weight_misses,
+            n as u64,
+            "every submission is either a hit or a miss over a wcache peer"
+        );
+        front.shutdown();
+        peer.stop();
     }
 
     #[test]

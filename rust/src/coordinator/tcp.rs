@@ -1,12 +1,15 @@
-//! TCP front-end speaking **wire protocol v3**: newline-delimited JSON
-//! for control and header frames, with tensor payloads carried as
+//! TCP front-end speaking **wire protocol v4**: newline-delimited JSON
+//! for control and header frames, tensor payloads carried as
 //! length-prefixed **binary frames** immediately following their JSON
-//! header line — the network face an edge gateway or a remote
-//! coordinator ([`crate::backend::RemoteBackend`]) talks to, in front
-//! of the same batcher + heterogeneous core pool the in-process server
-//! uses.
+//! header line (v3), and **content-addressed weights** (v4) — a
+//! request may name its weight blob by hash instead of shipping it,
+//! so a client ships each distinct blob to a server at most once per
+//! server lifetime. This is the network face an edge gateway or a
+//! remote coordinator ([`crate::backend::RemoteBackend`]) talks to, in
+//! front of the same batcher + heterogeneous core pool the in-process
+//! server uses.
 //!
-//! # Protocol v3 specification
+//! # Protocol specification
 //!
 //! Every frame *starts* with one JSON object terminated by `\n`. A
 //! header that declares binary payload (`"bin"` on requests,
@@ -22,17 +25,18 @@
 //! weigh this peer honestly:
 //!
 //! ```text
-//! <- {"hello":{"proto":3,"ping":true,"bin":true,"freq_hz":112000000,
+//! <- {"hello":{"proto":4,"ping":true,"bin":true,"wcache":true,"freq_hz":112000000,
 //!      "cores":3,"workers":[
 //!      {"backend":"sim-ipcore-i32","standard":true,"depthwise":true,
 //!       "pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272},
 //!      ...]}}
 //! ```
 //!
-//! `proto` is the protocol revision: 3 for a binary-capable endpoint,
-//! 2 for a legacy endpoint ([`CoordinatorConfig::wire_v2_only`]).
-//! Clients must accept either and key framing off the `"bin"` flag
-//! (below), rejecting anything else. `model` is the worker's
+//! `proto` is the protocol revision: 4 for a current endpoint, 2 for
+//! a legacy endpoint ([`CoordinatorConfig::wire_v2_only`]). Clients
+//! must accept either and key framing off the `"bin"` flag and weight
+//! caching off the `"wcache"` flag (below), rejecting anything else.
+//! `model` is the worker's
 //! cost-model family ([`crate::backend::CostModel::family_tag`]) — a
 //! remote coordinator prices this pool's compute by its fastest
 //! advertised tier, so a host-workers-only peer is never mistaken for
@@ -70,6 +74,30 @@
 //! i32 words, little-endian, so `out_ch*4` bytes). A request carries
 //! tensors either inline as JSON arrays *or* as a binary frame, never
 //! both; `"bin"` wins if both appear.
+//!
+//! Content-addressed form (v4, only after the hello advertised
+//! `"wcache":true`): a request may carry `"weights_hash"` — the
+//! FNV-1a hash of the raw weight bytes — *instead of* the weight
+//! payload. A binary frame declares a zero-length weights body, a
+//! JSON-tensor request simply omits `"weights"`:
+//!
+//! ```text
+//! -> {"id":4,"kind":"standard","spec":{...},"weights_hash":123456,
+//!     "bin":[IMG_BYTES,0,BIAS_BYTES]}\n<IMG_BYTES raw u8><BIAS_BYTES i32 LE>
+//! ```
+//!
+//! The server keeps a content-addressed LRU **weight store**
+//! ([`crate::store::WeightStore`], budgeted in BRAM36 blocks against
+//! the board's inventory — [`CoordinatorConfig::weight_store_bram36`]).
+//! A hash-only request whose blob is resident is served from the
+//! store; an unknown hash is answered immediately with a
+//! `need_weights` frame (below), and the client re-sends the same
+//! request once with the weights inline — still carrying
+//! `"weights_hash"`, which both verifies the bytes and admits the
+//! blob into the store for every later request on *any* connection to
+//! this server. Inline weights whose declared hash does not match
+//! their bytes are a per-job error (the connection survives). Plain
+//! v2/v3 requests (no `"weights_hash"`) never touch the store.
 //!
 //! * `kind` — `"standard"` (default), `"depthwise"` (weights `C*9`,
 //!   bias `C`, requires `k == c`; ReLU fuses when `spec.relu`), or
@@ -145,6 +173,23 @@
 //! answer. Clients that predate the field still see a well-formed
 //! error frame (`ok:false`, same id); the extra key is ignored.
 //!
+//! ## `need_weights` (server → client) — v4
+//!
+//! ```text
+//! <- {"id":4,"ok":false,"need_weights":true,"weights_hash":123456,
+//!     "error":"weights 123456 not resident; re-send inline with weights_hash"}
+//! ```
+//!
+//! The fast-miss answer to a hash-only request whose blob is not in
+//! the weight store — sent before admission control, so a miss never
+//! burns a queue slot. `ok:false` plus the standard `error` field
+//! keeps pre-v4 clients well-formed (they just see a failed job); a
+//! v4 client re-sends the request once with the blob inline.
+//! Residency is per server lifetime and LRU-bounded: a restarted
+//! server has an empty store, so clients must drop their known-hash
+//! sets whenever they redial, and an evicted blob simply round-trips
+//! through one more `need_weights` → inline re-ship.
+//!
 //! ## `ping` (client → server) / `pong` (server → client) — negotiated
 //!
 //! ```text
@@ -181,16 +226,19 @@
 //!
 //! # Version negotiation
 //!
-//! The hello's `"bin":true` flag — not the `proto` number — is the
-//! binary-framing capability switch: clients must send JSON tensors to
-//! an endpoint whose hello lacks it. `proto` is 3 on binary-capable
-//! endpoints and 2 on legacy ([`CoordinatorConfig::wire_v2_only`])
-//! endpoints; clients accept both (outputs are bit-identical either
-//! way — only the encoding differs). Capabilities *within* a revision
-//! are negotiated by hello-field presence (`"ping":true`, `"bin":true`
-//! today): unknown hello fields, unknown request fields and unknown
-//! reply fields must all be ignored, so a newer server interoperates
-//! with an older client and vice versa.
+//! Hello flags — not the `proto` number — are the capability
+//! switches: `"bin":true` negotiates binary tensor framing,
+//! `"wcache":true` negotiates content-addressed weights. Clients must
+//! send JSON tensors to an endpoint whose hello lacks `bin`, and must
+//! never send `weights_hash` to one whose hello lacks `wcache`.
+//! `proto` is 4 on current endpoints and 2 on legacy
+//! ([`CoordinatorConfig::wire_v2_only`]) endpoints; clients accept
+//! both (outputs are bit-identical on every revision — only the
+//! encoding differs). Capabilities *within* a revision are negotiated
+//! by hello-field presence (`"ping":true`, `"bin":true`,
+//! `"wcache":true` today): unknown hello fields, unknown request
+//! fields and unknown reply fields must all be ignored, so a newer
+//! server interoperates with an older client and vice versa.
 //!
 //! # Shutdown
 //!
@@ -208,6 +256,7 @@ use super::dispatch::CorePool;
 use super::request::{fnv1a_bytes, weights_fingerprint_salted, ConvJob, ConvResult, Submission};
 use crate::backend::JobKind;
 use crate::model::{LayerSpec, Tensor, QUICKSTART};
+use crate::store::WeightStore;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -217,9 +266,9 @@ use std::sync::mpsc::channel;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Protocol revision advertised in the `hello` frame of a
-/// binary-capable endpoint.
-pub const PROTO_VERSION: u64 = 3;
+/// Protocol revision advertised in the `hello` frame of a current
+/// (binary-framing + weight-caching) endpoint.
+pub const PROTO_VERSION: u64 = 4;
 
 /// Legacy revision advertised by [`CoordinatorConfig::wire_v2_only`]
 /// endpoints (JSON tensors only). Clients accept both.
@@ -391,6 +440,32 @@ pub(crate) fn encode_request_frame(
     full_output: bool,
     bin: bool,
 ) -> Vec<u8> {
+    encode_request_frame_v4(id, kind, spec, img, Some(weights), None, bias, full_output, bin)
+}
+
+/// v4 generalisation of [`encode_request_frame`]: `weights` may be
+/// absent (a hash-only request — the binary frame declares a
+/// zero-length weights body, the JSON form omits `"weights"`), and a
+/// claimed `weights_hash` may ride along with or without the payload.
+/// Callers must pass `weights_hash` when `weights` is `None` and must
+/// only do either against a peer whose hello advertised
+/// `"wcache":true`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_request_frame_v4(
+    id: u64,
+    kind: JobKind,
+    spec: &LayerSpec,
+    img: &[u8],
+    weights: Option<&[u8]>,
+    weights_hash: Option<u64>,
+    bias: &[i32],
+    full_output: bool,
+    bin: bool,
+) -> Vec<u8> {
+    debug_assert!(
+        weights.is_some() || weights_hash.is_some(),
+        "a request needs weight bytes, a weight hash, or both"
+    );
     let mut spec_fields = vec![
         ("c", Json::uint(spec.c as u64)),
         ("h", Json::uint(spec.h as u64)),
@@ -408,32 +483,35 @@ pub(crate) fn encode_request_frame(
     if full_output {
         fields.push(("full_output", Json::Bool(true)));
     }
+    if let Some(h) = weights_hash {
+        fields.push(("weights_hash", Json::uint(h)));
+    }
     if bin {
+        let wts = weights.unwrap_or(&[]);
         let bias_bytes = encode_i32_le(bias);
         fields.push((
             "bin",
             Json::arr_u64([
                 img.len() as u64,
-                weights.len() as u64,
+                wts.len() as u64,
                 bias_bytes.len() as u64,
             ]),
         ));
         let header = Json::obj(fields).to_json();
         let mut out = Vec::with_capacity(
-            header.len() + 1 + img.len() + weights.len() + bias_bytes.len(),
+            header.len() + 1 + img.len() + wts.len() + bias_bytes.len(),
         );
         out.extend_from_slice(header.as_bytes());
         out.push(b'\n');
         out.extend_from_slice(img);
-        out.extend_from_slice(weights);
+        out.extend_from_slice(wts);
         out.extend_from_slice(&bias_bytes);
         out
     } else {
         fields.push(("img", Json::arr_u64(img.iter().map(|&v| v as u64))));
-        fields.push((
-            "weights",
-            Json::arr_u64(weights.iter().map(|&v| v as u64)),
-        ));
+        if let Some(wts) = weights {
+            fields.push(("weights", Json::arr_u64(wts.iter().map(|&v| v as u64))));
+        }
         fields.push(("bias", Json::arr_i64(bias.iter().map(|&b| b as i64))));
         let mut out = Json::obj(fields).to_json().into_bytes();
         out.push(b'\n');
@@ -497,6 +575,11 @@ pub struct TcpServer {
     admission: Option<Arc<AdmissionController>>,
     /// Serve as a legacy v2 endpoint (see [`CoordinatorConfig::wire_v2_only`]).
     v2_only: bool,
+    /// Content-addressed weight store shared by every connection (v4);
+    /// `None` on a v2-only endpoint. Residency is per server lifetime:
+    /// the store dies with the server, which is why clients drop their
+    /// known-hash sets on redial.
+    store: Option<Arc<WeightStore>>,
     pool: Arc<CorePool>,
 }
 
@@ -543,12 +626,43 @@ fn parse_u8_array(j: &Json, want_len: usize, name: &str) -> Result<Vec<u8>, Stri
         .collect()
 }
 
+/// How one request's weights travelled, for the server's wire-level
+/// accounting (counted into [`super::metrics::Metrics`] by the
+/// connection handler, not here).
+pub(crate) enum WireCache {
+    /// Seed-synthetic request: no weight bytes on the wire at all.
+    Untracked,
+    /// Inline weights arrived — `bytes` of payload crossed the wire.
+    /// `cached` when a v4 client also claimed the hash and the blob
+    /// was offered to the store.
+    Shipped { bytes: u64, cached: bool },
+    /// Hash-only request served from the store: `bytes` of weight
+    /// payload never crossed the wire.
+    Hit { bytes: u64 },
+}
+
+/// Outcome of parsing one request frame.
+pub(crate) enum Parsed {
+    /// A dispatchable job, plus how its weights travelled.
+    Job(Box<ConvJob>, WireCache),
+    /// Hash-only request for a blob the store does not hold: answer
+    /// with a `need_weights` frame instead of dispatching.
+    NeedWeights(u64),
+}
+
 /// Build a ConvJob from one request — header JSON plus, for a
 /// binary-framed request, the already-consumed tensor bodies. `id` is
 /// the server's internal job id (client ids are echoed at reply-render
 /// time, never used as dispatch keys — two pipelined clients reusing
-/// ids must not collide).
-fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<ConvJob, String> {
+/// ids must not collide). `store` is the endpoint's weight store
+/// (`None` on a v2-only endpoint): hash-only requests resolve against
+/// it, inline-with-hash requests populate it.
+fn job_from_request(
+    id: u64,
+    req: &Json,
+    bin: Option<BinTensors>,
+    store: Option<&WeightStore>,
+) -> Result<Parsed, String> {
     let spec = parse_spec(req.get(&["spec"]).ok_or("missing spec")?)?;
     let kind = parse_kind(req)?;
     match kind {
@@ -575,19 +689,28 @@ fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<Conv
         JobKind::Depthwise => spec.c * 9,
         _ => spec.k * spec.c * 9,
     };
-    // Explicit tensors, from either encoding: (img u8, weights u8,
-    // bias i32) validated against the spec.
-    let explicit: Option<(Vec<u8>, Vec<u8>, Vec<i32>)> = if let Some(bt) = bin {
+    // Content-addressing (v4): a claimed hash can stand in for the
+    // weight payload, or ride along with it to populate the store.
+    let claimed_hash = req.get(&["weights_hash"]).and_then(Json::as_u64);
+    // Explicit tensors, from either encoding: (img u8, weights u8 or
+    // hash-only None, bias i32) validated against the spec.
+    let explicit: Option<(Vec<u8>, Option<Vec<u8>>, Vec<i32>)> = if let Some(bt) = bin {
         let want_img = spec.c * spec.h * spec.w;
         if bt.img.len() != want_img {
             return Err(format!("bin img length {} != {want_img}", bt.img.len()));
         }
-        if bt.weights.len() != weight_len {
-            return Err(format!(
-                "bin weights length {} != {weight_len}",
-                bt.weights.len()
-            ));
-        }
+        let wts = if bt.weights.is_empty() && claimed_hash.is_some() {
+            // v4 hash-only frame: a declared zero-length weights body.
+            None
+        } else {
+            if bt.weights.len() != weight_len {
+                return Err(format!(
+                    "bin weights length {} != {weight_len}",
+                    bt.weights.len()
+                ));
+            }
+            Some(bt.weights)
+        };
         if bt.bias.len() != out_ch * 4 {
             return Err(format!(
                 "bin bias length {} != {} ({out_ch} i32 LE words)",
@@ -595,14 +718,15 @@ fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<Conv
                 out_ch * 4
             ));
         }
-        Some((bt.img, bt.weights, decode_i32_le(&bt.bias)))
+        Some((bt.img, wts, decode_i32_le(&bt.bias)))
     } else if let Some(img_j) = req.get(&["img"]) {
         let img = parse_u8_array(img_j, spec.c * spec.h * spec.w, "img")?;
-        let wts = parse_u8_array(
-            req.get(&["weights"]).ok_or("missing weights")?,
-            weight_len,
-            "weights",
-        )?;
+        let wts = match req.get(&["weights"]) {
+            Some(w) => Some(parse_u8_array(w, weight_len, "weights")?),
+            // v4 hash-only JSON form: `weights` omitted entirely.
+            None if claimed_hash.is_some() => None,
+            None => return Err("missing weights".into()),
+        };
         let bias_arr = req
             .get(&["bias"])
             .and_then(Json::as_arr)
@@ -619,6 +743,53 @@ fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<Conv
         None
     };
     if let Some((img, wts, bias)) = explicit {
+        let (wts, whash, cache) = match wts {
+            Some(w) => {
+                let actual = fnv1a_bytes(&w);
+                if let Some(h) = claimed_hash {
+                    if h != actual {
+                        return Err(format!(
+                            "weights_hash {h} does not match the shipped bytes (fnv1a {actual})"
+                        ));
+                    }
+                    // Inline-with-hash: the client content-addressed
+                    // this blob, so admit it into the store for every
+                    // later hash-only request on any connection. An
+                    // over-capacity blob is simply served uncached.
+                    if let Some(store) = store {
+                        let cost =
+                            crate::hw::capacity::demand(&spec, crate::hw::AccumMode::I32)
+                                .weight_bytes;
+                        store.insert(h, Arc::new(w.clone()), cost);
+                    }
+                }
+                let bytes = w.len() as u64;
+                let cached = claimed_hash.is_some() && store.is_some();
+                (w, actual, WireCache::Shipped { bytes, cached })
+            }
+            None => {
+                let h = claimed_hash.expect("hash-only form implies a claimed hash");
+                let Some(store) = store else {
+                    return Err(
+                        "weights_hash not negotiated (this endpoint has no weight store)"
+                            .into(),
+                    );
+                };
+                match store.get(h) {
+                    Some(blob) => {
+                        if blob.len() != weight_len {
+                            return Err(format!(
+                                "resident weights for hash {h} are {} bytes, this spec/kind needs {weight_len}",
+                                blob.len()
+                            ));
+                        }
+                        let bytes = weight_len as u64;
+                        ((*blob).clone(), h, WireCache::Hit { bytes })
+                    }
+                    None => return Ok(Parsed::NeedWeights(h)),
+                }
+            }
+        };
         let weights = match kind {
             JobKind::Depthwise => Tensor::from_vec(&[spec.c, 3, 3], wts),
             _ => Tensor::from_vec(&[spec.k, spec.c, 3, 3], wts),
@@ -629,31 +800,38 @@ fn job_from_request(id: u64, req: &Json, bin: Option<BinTensors>) -> Result<Conv
         // legitimately skip the weight DMA; different weights never
         // share an id — request ids (which restart at 1 per client
         // connection) play no part, so two clients can't collide.
-        let weights_id = weights_fingerprint_salted(&spec, kind, fnv1a_bytes(weights.data()));
-        Ok(ConvJob {
-            id,
-            spec,
-            kind,
-            // The wire protocol serves production traffic only; wrap-8
-            // replies stay an in-process (experiment) concern.
-            accum: crate::hw::AccumMode::I32,
-            img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
-            weights,
-            bias,
-            weights_id,
-        })
+        let weights_id = weights_fingerprint_salted(&spec, kind, whash);
+        Ok(Parsed::Job(
+            Box::new(ConvJob {
+                id,
+                spec,
+                kind,
+                // The wire protocol serves production traffic only;
+                // wrap-8 replies stay an in-process (experiment)
+                // concern.
+                accum: crate::hw::AccumMode::I32,
+                img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
+                weights,
+                bias,
+                weights_id,
+                weights_hash: whash,
+                wire_weights_cached: false,
+            }),
+            cache,
+        ))
     } else {
         let seed = req
             .get(&["seed"])
             .and_then(Json::as_f64)
             .ok_or("need seed, img/weights/bias, or a bin frame")? as u64;
-        match kind {
-            JobKind::Standard => Ok(ConvJob::synthetic(id, spec, seed)),
-            JobKind::Depthwise => Ok(ConvJob::synthetic_depthwise(id, spec, seed)),
+        let job = match kind {
+            JobKind::Standard => ConvJob::synthetic(id, spec, seed),
+            JobKind::Depthwise => ConvJob::synthetic_depthwise(id, spec, seed),
             JobKind::PointwiseAs3x3 => {
-                Err("pointwise jobs need explicit pre-lowered tensors, not a seed".into())
+                return Err("pointwise jobs need explicit pre-lowered tensors, not a seed".into())
             }
-        }
+        };
+        Ok(Parsed::Job(Box::new(job), WireCache::Untracked))
     }
 }
 
@@ -765,6 +943,11 @@ fn hello_json(pool: &CorePool, v2_only: bool) -> Json {
         // not by the proto number — a v2-only endpoint omits it and
         // clients must stay on JSON tensors.
         h.push(("bin", Json::Bool(true)));
+        // Content-addressed weights (v4): this endpoint keeps a weight
+        // store, so `weights_hash` requests and `need_weights` replies
+        // are in play. A v2-only endpoint omits it and clients must
+        // ship weights inline on every request.
+        h.push(("wcache", Json::Bool(true)));
     }
     h.push(("freq_hz", Json::uint(pool.ip_config().freq_hz)));
     h.push(("cores", Json::uint(pool.n_cores() as u64)));
@@ -797,6 +980,9 @@ fn handle_connection(
     down: Arc<AtomicBool>,
     admission: Option<Arc<AdmissionController>>,
     v2_only: bool,
+    // The endpoint's content-addressed weight store, shared across
+    // every connection (`None` on a v2-only endpoint).
+    store: Option<Arc<WeightStore>>,
     // Held (not used) until this handler returns: the listener prunes
     // the chaos-kill registry by the monitor's refcount.
     _monitor: Arc<TcpStream>,
@@ -982,14 +1168,48 @@ fn handle_connection(
                     .get(&["full_output"])
                     .and_then(Json::as_bool)
                     .unwrap_or(false);
-                let job = match job_from_request(internal, &req, bin) {
+                let job = match job_from_request(internal, &req, bin, store.as_deref()) {
                     Err(e) => {
                         if !send_line(&writer, &error_json(client_id, &e)) {
                             break 'conn;
                         }
                         continue;
                     }
-                    Ok(job) => job,
+                    Ok(Parsed::NeedWeights(h)) => {
+                        // Fast miss: tell the client to re-send this
+                        // request once with the blob inline. Answered
+                        // before admission — a miss must not burn a
+                        // queue slot.
+                        pool.metrics.record_weight_miss();
+                        let frame = Json::obj(vec![
+                            ("id", Json::uint(client_id)),
+                            ("ok", Json::Bool(false)),
+                            ("need_weights", Json::Bool(true)),
+                            ("weights_hash", Json::uint(h)),
+                            (
+                                "error",
+                                Json::str(&format!(
+                                    "weights {h} not resident; re-send inline with weights_hash"
+                                )),
+                            ),
+                        ]);
+                        if !send_line(&writer, &frame) {
+                            break 'conn;
+                        }
+                        continue;
+                    }
+                    Ok(Parsed::Job(job, cache)) => {
+                        match cache {
+                            WireCache::Untracked => {}
+                            WireCache::Shipped { bytes, .. } => {
+                                pool.metrics.record_wire_weight_bytes(bytes);
+                            }
+                            WireCache::Hit { bytes } => {
+                                pool.metrics.record_weight_hit(bytes);
+                            }
+                        }
+                        *job
+                    }
                 };
                 // Admission control gates on the job's PSUM quote (the
                 // unit the dispatcher balances by) with the fast-reject
@@ -1109,6 +1329,17 @@ impl TcpServer {
         let listener = Arc::new(TcpListener::bind(addr)?);
         let local = listener.local_addr()?;
         let v2_only = config.wire_v2_only;
+        // The weight store is sized like the board: the BRAM36 budget
+        // (full XC7Z020 inventory unless the config pins it) prices
+        // each blob at its §4.2 on-chip footprint, so residency means
+        // "would fit the accelerator's weight BRAMs", not "fits RAM".
+        let store = (!v2_only).then(|| {
+            Arc::new(WeightStore::with_bram36_blocks(
+                config
+                    .weight_store_bram36
+                    .unwrap_or(crate::hw::device::XC7Z020_CLG400.bram36),
+            ))
+        });
         let pool = Arc::new(super::server::build_pool(&config)?);
         let admission = config
             .max_inflight_psums
@@ -1126,6 +1357,7 @@ impl TcpServer {
         let live_in_listener = Arc::clone(&live);
         let pool_in_listener = Arc::clone(&pool);
         let admission_in_listener = admission.clone();
+        let store_in_listener = store.clone();
         let listener_in_thread = Arc::clone(&listener);
         // Event-driven accept: the loop *blocks* in accept() — no poll
         // sleep, no idle wakeups. stop() wakes it with a throwaway
@@ -1168,10 +1400,11 @@ impl TcpServer {
                             let shutdown = Arc::clone(&shutdown_flag);
                             let down = Arc::clone(&down_flag);
                             let admission = admission_in_listener.clone();
+                            let store = store_in_listener.clone();
                             let handle = std::thread::spawn(move || {
                                 handle_connection(
                                     stream, pool, next_id, hello, shutdown, down, admission,
-                                    v2_only, monitor,
+                                    v2_only, store, monitor,
                                 )
                             });
                             let mut conns = conns_in_listener.lock().unwrap();
@@ -1209,6 +1442,7 @@ impl TcpServer {
             live,
             admission,
             v2_only,
+            store,
             pool,
         })
     }
@@ -1229,6 +1463,13 @@ impl TcpServer {
     /// budget (tests pre-load it to exercise shedding deterministically).
     pub fn admission(&self) -> Option<Arc<AdmissionController>> {
         self.admission.clone()
+    }
+
+    /// The endpoint's content-addressed weight store (`None` on a
+    /// v2-only endpoint). Tests inspect residency and eviction order
+    /// through this.
+    pub fn weight_store(&self) -> Option<Arc<WeightStore>> {
+        self.store.clone()
     }
 
     /// Chaos hook: simulate this peer crashing (`down = true`) and
@@ -1329,6 +1570,15 @@ mod tests {
         start_n(2)
     }
 
+    /// Unwrap a parse outcome into its job (for tests that expect a
+    /// dispatchable request, not a `need_weights` answer).
+    fn expect_job(p: Result<Parsed, String>) -> ConvJob {
+        match p.unwrap() {
+            Parsed::Job(job, _) => *job,
+            Parsed::NeedWeights(h) => panic!("unexpected need_weights for {h}"),
+        }
+    }
+
     /// Raw client helper: connect, return (hello frame, stream, reader).
     fn connect_raw(
         addr: std::net::SocketAddr,
@@ -1368,10 +1618,12 @@ mod tests {
         .unwrap();
         let (hello, _stream, _reader) = connect_raw(server.addr);
         let h = hello.get(&["hello"]).expect("hello frame");
-        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(3));
-        // In-revision feature flags: pings answered, binary framing on.
+        assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(4));
+        // In-revision feature flags: pings answered, binary framing
+        // and content-addressed weights on.
         assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["bin"]).unwrap().as_bool(), Some(true));
+        assert_eq!(h.get(&["wcache"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["cores"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["freq_hz"]).unwrap().as_f64().unwrap() > 0.0);
         let workers = h.get(&["workers"]).unwrap().as_arr().unwrap();
@@ -1604,11 +1856,16 @@ mod tests {
                 ("bias", Json::arr_i64([0, 0, 0, 0])),
             ])
         };
-        let a = job_from_request(1, &req(1, 5), None).unwrap();
-        let b = job_from_request(2, &req(2, 5), None).unwrap();
-        let c = job_from_request(3, &req(3, 6), None).unwrap();
+        let a = expect_job(job_from_request(1, &req(1, 5), None, None));
+        let b = expect_job(job_from_request(2, &req(2, 5), None, None));
+        let c = expect_job(job_from_request(3, &req(3, 6), None, None));
         assert_eq!(a.weights_id, b.weights_id, "same bytes, different request ids");
         assert_ne!(a.weights_id, c.weights_id, "different bytes must never alias");
+        // The pure byte address travels on the job too (v4 residency
+        // snapshots key off it), distinct from the salted weights_id.
+        assert_eq!(a.weights_hash, b.weights_hash);
+        assert_ne!(a.weights_hash, c.weights_hash);
+        assert!(!a.wire_weights_cached, "the wire parser never pre-marks residency");
     }
 
     #[test]
@@ -1635,7 +1892,7 @@ mod tests {
             ("weights", Json::arr_u64(wts.iter().map(|&v| v as u64))),
             ("bias", Json::arr_i64(bias.iter().map(|&b| b as i64))),
         ]);
-        let a = job_from_request(1, &json_req, None).unwrap();
+        let a = expect_job(job_from_request(1, &json_req, None, None));
         // Binary path: header parsed from the shared encoder's frame.
         let frame = encode_request_frame(
             1,
@@ -1651,7 +1908,7 @@ mod tests {
         let header = Json::parse(std::str::from_utf8(&frame[..nl]).unwrap()).unwrap();
         let lens = parse_bin_lens(&header).unwrap().unwrap();
         assert_eq!(lens, [16, 36, 16]);
-        let b = job_from_request(
+        let b = expect_job(job_from_request(
             1,
             &header,
             Some(BinTensors {
@@ -1659,8 +1916,8 @@ mod tests {
                 weights: wts.clone(),
                 bias: encode_i32_le(&bias),
             }),
-        )
-        .unwrap();
+            None,
+        ));
         assert_eq!(a.weights_id, b.weights_id);
         assert_eq!(a.img.data(), b.img.data());
         assert_eq!(a.weights.data(), b.weights.data());
@@ -1829,6 +2086,7 @@ mod tests {
         let h = hello.get(&["hello"]).expect("hello frame");
         assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["bin"]).is_none(), "legacy endpoint must not offer binary framing");
+        assert!(h.get(&["wcache"]).is_none(), "legacy endpoint must not offer weight caching");
         // Ping stays negotiated within v2 (it predates v3).
         assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
         // JSON-tensor traffic is served normally.
@@ -2042,6 +2300,245 @@ mod tests {
         let resp = request_once(&server.addr, &bad).unwrap();
         assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false));
         assert_eq!(resp.get(&["id"]).unwrap().as_u64(), Some(big));
+        server.stop();
+    }
+
+    // ---- wire v4: content-addressed weights ----
+
+    #[test]
+    fn hash_only_request_round_trips_need_weights_then_hits() {
+        let server = start_n(1);
+        let spec = LayerSpec::new(2, 5, 5, 4);
+        let mut rng = Prng::new(94);
+        let img = rng.bytes_below(spec.c * spec.h * spec.w, 256);
+        let wts = rng.bytes_below(spec.k * spec.c * 9, 256);
+        let bias: Vec<i32> = (0..spec.k).map(|_| rng.range_i64(-20, 20) as i32).collect();
+        let hash = fnv1a_bytes(&wts);
+        let (hello, mut stream, mut reader) = connect_raw(server.addr);
+        assert_eq!(
+            hello.get(&["hello"]).unwrap().get(&["wcache"]).unwrap().as_bool(),
+            Some(true)
+        );
+        // 1. Hash-only against a cold store: a fast need_weights miss,
+        //    well-formed for pre-v4 clients (ok:false + error).
+        let frame = encode_request_frame_v4(
+            1, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert_eq!(resp.get(&["need_weights"]).unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get(&["weights_hash"]).unwrap().as_u64(), Some(hash));
+        assert!(resp.get(&["error"]).is_some());
+        assert!(body.is_none());
+        // 2. Re-ship inline with the hash: served, blob admitted.
+        let frame = encode_request_frame_v4(
+            2, JobKind::Standard, &spec, &img, Some(&wts), Some(hash), &bias, true, true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        let img_t = Tensor::from_vec(&[2, 5, 5], img.clone());
+        let wts_t = Tensor::from_vec(&[4, 2, 3, 3], wts.clone());
+        let want = golden::conv3x3_i32(&img_t, &wts_t, &bias, false);
+        assert_eq!(body.expect("bin_output body"), want.data());
+        // 3. Hash-only again — on a *new* connection, because residency
+        //    is per server, not per connection: bit-identical output,
+        //    zero weight bytes on the wire.
+        let (_h2, mut s2, mut r2) = connect_raw(server.addr);
+        let frame = encode_request_frame_v4(
+            3, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true,
+        );
+        s2.write_all(&frame).unwrap();
+        let (resp, body) = read_reply_frame(&mut r2);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(body.expect("bin_output body"), want.data());
+        // 4. The JSON hash-only form resolves against the same store.
+        let frame = encode_request_frame_v4(
+            4, JobKind::Standard, &spec, &img, None, Some(hash), &bias, false, false,
+        );
+        s2.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut r2);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        let checksum = want
+            .data()
+            .iter()
+            .fold(0i64, |a, &v| (a + v as i64) & 0x7FFF_FFFF);
+        assert_eq!(resp.get(&["checksum"]).unwrap().as_f64(), Some(checksum as f64));
+        // Server-side accounting: one miss, two hits, the blob crossed
+        // the wire exactly once.
+        let m = server.metrics();
+        assert_eq!(m.weight_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.weight_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            m.weight_bytes_saved.load(Ordering::Relaxed),
+            2 * wts.len() as u64
+        );
+        assert_eq!(
+            m.wire_weight_bytes.load(Ordering::Relaxed),
+            wts.len() as u64,
+            "each distinct blob ships at most once per server lifetime"
+        );
+        let store = server.weight_store().expect("v4 endpoint keeps a store");
+        assert_eq!(store.len(), 1);
+        assert!(store.contains(hash));
+        drop(stream);
+        drop(s2);
+        server.stop();
+    }
+
+    #[test]
+    fn mismatched_weights_hash_is_a_job_error_not_a_disconnect() {
+        let server = start_n(1);
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        let spec = LayerSpec::new(1, 4, 4, 4);
+        let img: Vec<u8> = (0..16).collect();
+        let wts: Vec<u8> = (0..36).map(|i| (i % 5) as u8).collect();
+        let lie = fnv1a_bytes(&wts) ^ 1;
+        let frame = encode_request_frame_v4(
+            1, JobKind::Standard, &spec, &img, Some(&wts), Some(lie), &[0; 4], false, true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("does not match"));
+        assert!(resp.get(&["need_weights"]).is_none());
+        let store = server.weight_store().unwrap();
+        assert!(store.is_empty(), "a lying client must not poison the store");
+        // The connection survives and plain v3 inline weights (no
+        // hash) are served without touching the store.
+        let frame =
+            encode_request_frame(2, JobKind::Standard, &spec, &img, &wts, &[0; 4], false, true);
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert!(store.is_empty(), "un-addressed weights are never cached");
+        assert_eq!(
+            server.metrics().wire_weight_bytes.load(Ordering::Relaxed),
+            wts.len() as u64,
+            "only the accepted request's inline bytes are accounted"
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn weights_hash_to_v2_only_endpoint_fails_cleanly() {
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_wire_v2_only(),
+        )
+        .unwrap();
+        assert!(server.weight_store().is_none(), "a v2 endpoint keeps no store");
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        let spec = LayerSpec::new(1, 4, 4, 4);
+        let img: Vec<u8> = (0..16).collect();
+        // JSON hash-only form (a binary frame would trip the bin guard
+        // before weight resolution).
+        let frame = encode_request_frame_v4(
+            1, JobKind::Standard, &spec, &img, None, Some(1234), &[0; 4], false, false,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(
+            resp.get(&["need_weights"]).is_none(),
+            "a v2 endpoint must not speak v4 frames"
+        );
+        assert!(resp
+            .get(&["error"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("not negotiated"));
+        // The connection survives for inline-tensor traffic.
+        let wts: Vec<u8> = (0..36).map(|i| (i % 5) as u8).collect();
+        let frame =
+            encode_request_frame(2, JobKind::Standard, &spec, &img, &wts, &[0; 4], false, false);
+        stream.write_all(&frame).unwrap();
+        let (resp, _body) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn tiny_store_evicts_lru_and_round_trips_need_weights() {
+        // One BRAM36 block = 4608 bytes; a 16-in/16-out 3x3 blob is
+        // priced at demand().weight_bytes = 2304, so the store holds
+        // exactly two blobs and the third insert evicts the LRU one.
+        let server = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default()
+                .with_cores(1)
+                .with_weight_store_bram36(1),
+        )
+        .unwrap();
+        let store = server.weight_store().unwrap();
+        assert_eq!(store.capacity_bytes(), 4608);
+        let spec = LayerSpec::new(16, 6, 6, 16);
+        let mut rng = Prng::new(95);
+        let img = rng.bytes_below(16 * 6 * 6, 256);
+        let bias = vec![0i32; 16];
+        let blobs: Vec<Vec<u8>> = (0..3).map(|_| rng.bytes_below(2304, 256)).collect();
+        let hashes: Vec<u64> = blobs.iter().map(|b| fnv1a_bytes(b)).collect();
+        let (_hello, mut stream, mut reader) = connect_raw(server.addr);
+        for (i, (blob, hash)) in blobs.iter().zip(&hashes).enumerate() {
+            let frame = encode_request_frame_v4(
+                i as u64 + 1,
+                JobKind::Standard,
+                &spec,
+                &img,
+                Some(blob),
+                Some(*hash),
+                &bias,
+                false,
+                true,
+            );
+            stream.write_all(&frame).unwrap();
+            let (resp, _b) = read_reply_frame(&mut reader);
+            assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        }
+        assert_eq!(store.len(), 2);
+        assert!(!store.contains(hashes[0]), "blob 0 is the LRU victim");
+        assert!(store.contains(hashes[1]) && store.contains(hashes[2]));
+        // A resident blob answers hash-only (and refreshes recency).
+        let frame = encode_request_frame_v4(
+            4, JobKind::Standard, &spec, &img, None, Some(hashes[1]), &bias, false, true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, _b) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        // The evicted blob round-trips: need_weights, inline re-ship,
+        // resident again (evicting blob 2, now the least recent).
+        let frame = encode_request_frame_v4(
+            5, JobKind::Standard, &spec, &img, None, Some(hashes[0]), &bias, false, true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, _b) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["need_weights"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        let frame = encode_request_frame_v4(
+            6,
+            JobKind::Standard,
+            &spec,
+            &img,
+            Some(&blobs[0]),
+            Some(hashes[0]),
+            &bias,
+            false,
+            true,
+        );
+        stream.write_all(&frame).unwrap();
+        let (resp, _b) = read_reply_frame(&mut reader);
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert!(store.contains(hashes[0]) && store.contains(hashes[1]));
+        assert!(!store.contains(hashes[2]));
+        let m = server.metrics();
+        assert_eq!(m.weight_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.weight_misses.load(Ordering::Relaxed), 1);
         server.stop();
     }
 

@@ -20,8 +20,8 @@
 //!   entry point), the naive golden anchor, the threaded im2col+GEMM
 //!   host worker ([`backend::Im2colBackend`], the serious CPU
 //!   fallback), the XLA path, and whole remote machines over TCP
-//!   ([`backend::RemoteBackend`], wire protocol v2) — each reporting a
-//!   capability descriptor and a dispatch cost model. The parity
+//!   ([`backend::RemoteBackend`], wire protocol v2/v3/v4) — each
+//!   reporting a capability descriptor and a dispatch cost model. The parity
 //!   contract (bit-identical i32 outputs across backends, every kind,
 //!   both accumulator modes) is enforced by the unified harness in
 //!   `rust/tests/backend_parity.rs` — for the remote backend,
@@ -33,8 +33,13 @@
 //!   workers plus `remote_peers` fleet members) with capability-masked,
 //!   cost-weighted least-loaded dispatch, a CNN layer scheduler that
 //!   chains output BRAMs into the next layer's input (§4.1), and a
-//!   JSON-over-TCP front end speaking wire protocol v2 (`repro fleet N`
-//!   composes both sides into a multi-machine demo).
+//!   JSON-over-TCP front end speaking the negotiated wire protocol
+//!   (`repro fleet N` composes both sides into a multi-machine demo).
+//! * [`store`] + [`registry`] — multi-tenant weight residency: a
+//!   content-addressed LRU weight store (BRAM-budgeted, one per
+//!   `TcpServer`) and a model registry (`model_id → ordered layers +
+//!   weight hashes`) so wire v4 ships each distinct weight blob to a
+//!   peer at most once and serves every later job from residency.
 //!
 //! Experiment index (DESIGN.md §4): Fig. 6 → [`hw::waveform`] +
 //! `examples/waveform_repro.rs`; Table 1 → [`hw::resource`]; §5.2
@@ -46,7 +51,9 @@ pub mod bench_util;
 pub mod coordinator;
 pub mod hw;
 pub mod model;
+pub mod registry;
 pub mod runtime;
+pub mod store;
 pub mod util;
 
 /// Paper constants that recur across modules.

@@ -11,19 +11,24 @@
 //!                                       run one layer on the simulated IP core
 //! repro infer [--seed S] [--xla]        edge CNN inference: hw-sim vs golden (vs XLA)
 //! repro serve [--cores N] [--golden N] [--im2col N] [--remote host:port[,host:port...]]
-//!             [--requests N] [--s52 F] [--dw F] [--bench-json PATH]
+//!             [--requests N] [--s52 F] [--dw F] [--models M] [--bench-json PATH]
 //!                                       closed-loop trace through the coordinator
 //!                                       (--golden adds naive CPU fallback workers,
 //!                                        --im2col adds threaded im2col+GEMM workers,
-//!                                        --remote dials wire-protocol-v3 peers into
-//!                                        the pool, --dw mixes in depthwise jobs);
+//!                                        --remote dials wire-protocol-v4 peers into
+//!                                        the pool, --dw mixes in depthwise jobs,
+//!                                        --models M switches to registry traffic:
+//!                                        requests are (model, layer) submissions
+//!                                        over M registered models instead of the
+//!                                        synthetic trace);
 //!                                       writes a machine-readable BENCH_serving.json
 //! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N] [--v2-only]
-//!                                       serve wire protocol v3 over TCP (binary
-//!                                       tensor frames; --v2-only pins the endpoint
-//!                                       to legacy v2 JSON framing)
+//!                                       serve wire protocol v4 over TCP (binary
+//!                                       tensor frames + content-addressed weight
+//!                                       store; --v2-only pins the endpoint to
+//!                                       legacy v2 JSON framing)
 //! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
-//!             [--gap-us G] [--max-inflight P] [--v2-peers M]
+//!             [--gap-us G] [--max-inflight P] [--v2-peers M] [--models M]
 //!             [--kill-peer-after K] [--revive-after M]
 //!                                       multi-machine demo: spawn N in-process TCP
 //!                                       peers, front them with one remote-core pool,
@@ -32,6 +37,11 @@
 //!                                       legacy wire v2 (mixed-protocol fleet: the
 //!                                       front must negotiate per peer and stay
 //!                                       bit-identical across both framings).
+//!                                       --models M drives multi-tenant registry
+//!                                       traffic over M models and exits non-zero
+//!                                       unless the v4 weight store saw hits while
+//!                                       every v2-pinned peer stayed cache-silent
+//!                                       (incompatible with --kill-peer-after).
 //!                                       Chaos mode: --kill-peer-after K severs the
 //!                                       last peer just before trace entry K (its
 //!                                       port stays bound, connections drop);
@@ -274,15 +284,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("requests", 64).map_err(|e| anyhow::anyhow!(e))?;
     let s52 = args.get_f64("s52", 0.1).map_err(|e| anyhow::anyhow!(e))?;
     let dw = args.get_f64("dw", 0.0).map_err(|e| anyhow::anyhow!(e))?;
-    let trace = generate(&TraceConfig {
-        n,
-        mean_gap_us: 0,
-        s52_fraction: s52,
-        depthwise_fraction: dw,
-        seed: 11,
-    });
+    let models = args.get_usize("models", 0).map_err(|e| anyhow::anyhow!(e))?;
     let mut server = Server::try_new(front_config(cores, golden, im2col, args.get("remote"))?)?;
-    let report = server.run_trace(&trace);
+    let report = if models > 0 {
+        // Registry traffic: requests are (model, layer) submissions over
+        // the multi-model registry instead of the synthetic shape trace.
+        let registry = repro::registry::ModelRegistry::builtin(models, 11);
+        println!(
+            "serve: registry traffic over {models} models ({} distinct weight blobs)",
+            registry.distinct_weight_hashes()
+        );
+        server.run_registry_trace(&registry, n, 0, 11)
+    } else {
+        let trace = generate(&TraceConfig {
+            n,
+            mean_gap_us: 0,
+            s52_fraction: s52,
+            depthwise_fraction: dw,
+            seed: 11,
+        });
+        server.run_trace(&trace)
+    };
     println!("{}", report.render());
     write_bench_json(args, &report)?;
     server.shutdown();
@@ -290,11 +312,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// The multi-machine demo and chaos harness, runnable in CI: spawn N
-/// in-process wire-v3 TCP peers, front them with one pool of
+/// in-process wire-v4 TCP peers, front them with one pool of
 /// `RemoteBackend` workers, and push a mixed trace through the fleet —
 /// optionally killing (and reviving) the last peer mid-trace. Exits
 /// non-zero unless every non-shed request succeeds; with a revive, it
-/// additionally proves the revived peer serves traffic again.
+/// additionally proves the revived peer serves traffic again. With
+/// `--models M` the trace is multi-tenant registry traffic and the run
+/// additionally proves the weight store saw hits while every v2-pinned
+/// peer stayed cache-silent.
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use repro::coordinator::tcp::TcpServer;
     use std::sync::atomic::Ordering;
@@ -326,8 +351,13 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         v2_peers <= n,
         "--v2-peers {v2_peers} exceeds the fleet size {n}"
     );
+    let models = args.get_usize("models", 0).map_err(|e| anyhow::anyhow!(e))?;
     let kill_after = opt_entry("kill-peer-after")?;
     let revive_after = opt_entry("revive-after")?;
+    anyhow::ensure!(
+        models == 0 || kill_after.is_none(),
+        "--models cannot be combined with --kill-peer-after (chaos mode drives the synthetic trace)"
+    );
     if let Some(k) = kill_after {
         anyhow::ensure!(n >= 2, "chaos mode needs at least two peers to fail over between");
         anyhow::ensure!(k < requests, "--kill-peer-after {k} is past the end of the trace");
@@ -356,7 +386,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     }
     let peer_addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
     println!(
-        "fleet: {n} in-process wire-v3 peers ({peer_cores} sim cores{} each{}) at {}",
+        "fleet: {n} in-process wire-v4 peers ({peer_cores} sim cores{} each{}) at {}",
         if peer_im2col > 0 {
             format!(" + {peer_im2col} im2col workers")
         } else {
@@ -379,25 +409,38 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         );
     }
     let mut front = Server::try_new(config)?;
-    let trace = generate(&TraceConfig {
-        n: requests,
-        mean_gap_us: gap_us,
-        s52_fraction: s52,
-        depthwise_fraction: dw,
-        seed: 17,
-    });
-    // The chaos target is always the *last* peer: with default flags it
-    // never serves alone, so siblings exist to fail over onto.
-    let report = front.run_trace_with(&trace, &mut |i| {
-        if kill_after == Some(i) {
-            println!("chaos: killing peer {} before entry {i}", n - 1);
-            peers[n - 1].set_down(true);
-        }
-        if revive_after == Some(i) {
-            println!("chaos: reviving peer {} before entry {i}", n - 1);
-            peers[n - 1].set_down(false);
-        }
-    });
+    let report = if models > 0 {
+        // Multi-tenant registry traffic: every request is a (model,
+        // layer) submission, so repeated layers exercise the v4 weight
+        // store across the fleet (chaos flags are rejected above).
+        let registry = repro::registry::ModelRegistry::builtin(models, 17);
+        println!(
+            "fleet: registry traffic over {models} models ({} distinct weight blobs)",
+            registry.distinct_weight_hashes()
+        );
+        front.run_registry_trace(&registry, requests, gap_us, 17)
+    } else {
+        let trace = generate(&TraceConfig {
+            n: requests,
+            mean_gap_us: gap_us,
+            s52_fraction: s52,
+            depthwise_fraction: dw,
+            seed: 17,
+        });
+        // The chaos target is always the *last* peer: with default
+        // flags it never serves alone, so siblings exist to fail over
+        // onto.
+        front.run_trace_with(&trace, &mut |i| {
+            if kill_after == Some(i) {
+                println!("chaos: killing peer {} before entry {i}", n - 1);
+                peers[n - 1].set_down(true);
+            }
+            if revive_after == Some(i) {
+                println!("chaos: reviving peer {} before entry {i}", n - 1);
+                peers[n - 1].set_down(false);
+            }
+        })
+    };
     println!("{}", report.render());
     write_bench_json(args, &report)?;
     let served_remote = report
@@ -435,6 +478,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         );
     }
 
+    // Read per-peer counters before teardown consumes the servers
+    // (`TcpServer::stop` takes the server by value).
+    let v2_served: u64 = peers[..v2_peers]
+        .iter()
+        .map(|p| p.metrics().completed.load(Ordering::Relaxed))
+        .sum();
+    let v2_cache_traffic: u64 = peers[..v2_peers]
+        .iter()
+        .map(|p| {
+            let m = p.metrics();
+            m.weight_hits.load(Ordering::Relaxed) + m.weight_misses.load(Ordering::Relaxed)
+        })
+        .sum();
     front.shutdown();
     for p in peers {
         p.stop();
@@ -452,16 +508,31 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     if v2_peers > 0 {
         // Mixed-protocol contract: the v2-pinned peers must actually
         // have served traffic over the JSON fallback, not just sat in
-        // the pool while v3 siblings took everything.
-        let v2_served: u64 = peers[..v2_peers]
-            .iter()
-            .map(|p| p.metrics().completed.load(Ordering::Relaxed))
-            .sum();
+        // the pool while v4 siblings took everything.
         anyhow::ensure!(
             v2_served > 0,
             "no v2-pinned peer served any traffic in the mixed fleet"
         );
         println!("mixed fleet OK: v2-pinned peers served {v2_served} jobs over JSON framing");
+    }
+    if models > 0 {
+        // Multi-tenant contract: repeated layers must actually hit the
+        // weight store, and v2-pinned peers must never see any cache
+        // traffic (they negotiated a framing with no weight hashes).
+        anyhow::ensure!(
+            report.n_weight_hits > 0,
+            "multi-tenant fleet never hit the weight store (hits={}, misses={})",
+            report.n_weight_hits,
+            report.n_weight_misses
+        );
+        anyhow::ensure!(
+            v2_cache_traffic == 0,
+            "a v2-pinned peer saw weight-cache traffic ({v2_cache_traffic} events)"
+        );
+        println!(
+            "weight store OK: {} hits / {} misses, {} weight bytes kept off the wire",
+            report.n_weight_hits, report.n_weight_misses, report.wire_weight_bytes_saved
+        );
     }
     anyhow::ensure!(
         revived_served,
@@ -575,8 +646,8 @@ fn cmd_serve_tcp(args: &Args) -> anyhow::Result<()> {
         );
     } else {
         println!(
-            "serving wire protocol v3 (JSON control frames + binary tensor frames) on {} \
-             ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
+            "serving wire protocol v4 (binary tensor frames + content-addressed weight \
+             store) on {} ({cores} sim cores, {golden} golden, {im2col} im2col workers)",
             server.addr
         );
     }

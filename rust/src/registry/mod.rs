@@ -1,0 +1,333 @@
+//! Model registry: named manifests of `model_id → ordered layers`,
+//! each layer carrying its spec, kind, weight tensor and
+//! content-address (FNV-1a byte hash of the weights).
+//!
+//! The registry is the client side of multi-tenant serving: instead of
+//! shipping raw tensors per request, a tenant submits
+//! `(model, layer, input)` and the layer's weights are resolved from
+//! the manifest — always the *same bytes*, hence the same
+//! `weights_hash`, hence (over wire v4) shipped to a peer at most once
+//! per peer lifetime and served from its [`crate::store::WeightStore`]
+//! thereafter. The built-in manifest set is deterministic from a seed:
+//! model 0 is the repo's MobileNet-lite
+//! ([`crate::model::mobilenet::MobileNetLite`]), lowered exactly the
+//! way `infer_sim` lowers it (depthwise 3×3 blocks plus pointwise
+//! layers pre-lowered to the padded-3×3 dataflow), and models 1..N are
+//! synthetic tenants over trace-library shapes
+//! ([`crate::model::trace`]) with per-model weight sets.
+//!
+//! Everything here is ordinary `ConvJob` construction — the registry
+//! changes *where tensors come from*, never what the backends compute,
+//! so the parity contract (`rust/tests/backend_parity.rs`) covers
+//! registry-built jobs like any others.
+
+use crate::backend::JobKind;
+use crate::coordinator::request::{
+    fnv1a_bytes, weights_fingerprint_salted, ConvJob,
+};
+use crate::hw::depthwise::pointwise_as_3x3;
+use crate::hw::AccumMode;
+use crate::model::mobilenet::{mobilenet_lite_specs, MobileNetLite};
+use crate::model::{LayerSpec, Tensor};
+use crate::util::prng::Prng;
+
+/// One layer of a manifest: everything needed to build a `ConvJob`
+/// except the input image.
+#[derive(Clone)]
+pub struct LayerParams {
+    pub spec: LayerSpec,
+    pub kind: JobKind,
+    pub weights: std::sync::Arc<Tensor<u8>>,
+    pub bias: std::sync::Arc<Vec<i32>>,
+    /// Content address: FNV-1a over the raw weight bytes — the wire
+    /// v4 `weights_hash` and the [`crate::store::WeightStore`] key.
+    pub weights_hash: u64,
+}
+
+impl LayerParams {
+    fn new(spec: LayerSpec, kind: JobKind, weights: Tensor<u8>, bias: Vec<i32>) -> Self {
+        let weights_hash = fnv1a_bytes(weights.data());
+        LayerParams {
+            spec,
+            kind,
+            weights: std::sync::Arc::new(weights),
+            bias: std::sync::Arc::new(bias),
+            weights_hash,
+        }
+    }
+}
+
+/// One model: an id and its ordered layers.
+pub struct ModelManifest {
+    pub id: String,
+    pub layers: Vec<LayerParams>,
+}
+
+/// The registry: every model this process can serve requests for.
+pub struct ModelRegistry {
+    models: Vec<ModelManifest>,
+}
+
+/// Synthetic-tenant layer library: paper-compatible standard shapes
+/// plus one depthwise, echoing the trace generator's mix so synthetic
+/// tenants stress the same routing paths as `model/trace.rs` traffic.
+fn synthetic_layer_specs() -> Vec<(LayerSpec, JobKind)> {
+    vec![
+        (LayerSpec::new(8, 16, 16, 8), JobKind::Standard),
+        (LayerSpec::new(4, 12, 12, 8), JobKind::Standard),
+        (LayerSpec::new(8, 15, 15, 8), JobKind::Depthwise),
+    ]
+}
+
+impl ModelRegistry {
+    /// The built-in manifest set: `n_models` deterministic models from
+    /// `seed`. Model 0 is MobileNet-lite (its blocks lowered to the
+    /// depthwise + pointwise-as-3×3 job kinds the core serves); models
+    /// 1.. are synthetic tenants, each with its own weight set (so
+    /// distinct tenants never alias in the weight store).
+    pub fn builtin(n_models: usize, seed: u64) -> Self {
+        assert!(n_models >= 1, "a registry serves at least one model");
+        let mut models = Vec::with_capacity(n_models);
+        let net = MobileNetLite::new(seed);
+        let mut layers = Vec::new();
+        for b in &net.blocks {
+            // Depthwise 3×3 (+fused ReLU), exactly as infer_sim runs it.
+            let dw_spec =
+                LayerSpec::new(b.spec.c, b.spec.h, b.spec.w, b.spec.c).with_relu();
+            layers.push(LayerParams::new(
+                dw_spec,
+                JobKind::Depthwise,
+                b.dw.clone(),
+                b.dw_bias.clone(),
+            ));
+            // Pointwise 1×1 pre-lowered to the padded-3×3 dataflow: the
+            // stored weights are already the centre-tapped (K,C,3,3)
+            // tensor, so a registry job is explicit tensors on the wire.
+            let pw_spec = LayerSpec::new(
+                b.spec.c,
+                b.spec.dw_oh() + 2,
+                b.spec.dw_ow() + 2,
+                b.spec.k,
+            );
+            layers.push(LayerParams::new(
+                pw_spec,
+                JobKind::PointwiseAs3x3,
+                pointwise_as_3x3(&b.pw),
+                b.pw_bias.clone(),
+            ));
+        }
+        models.push(ModelManifest {
+            id: "mobilenet-lite".to_string(),
+            layers,
+        });
+        for m in 1..n_models {
+            // Per-model weight stream: tenants must not share bytes, or
+            // the store could not tell their residency apart.
+            let mut rng = Prng::new(seed ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let layers = synthetic_layer_specs()
+                .into_iter()
+                .map(|(spec, kind)| {
+                    let weight_len = match kind {
+                        JobKind::Depthwise => spec.c * 9,
+                        _ => spec.k * spec.c * 9,
+                    };
+                    let shape: Vec<usize> = match kind {
+                        JobKind::Depthwise => vec![spec.c, 3, 3],
+                        _ => vec![spec.k, spec.c, 3, 3],
+                    };
+                    let out_ch = match kind {
+                        JobKind::Depthwise => spec.c,
+                        _ => spec.k,
+                    };
+                    let weights =
+                        Tensor::from_vec(&shape, rng.bytes_below(weight_len, 16));
+                    let bias: Vec<i32> =
+                        (0..out_ch).map(|_| rng.range_i64(0, 32) as i32).collect();
+                    LayerParams::new(spec, kind, weights, bias)
+                })
+                .collect();
+            models.push(ModelManifest {
+                id: format!("synthetic-{m}"),
+                layers,
+            });
+        }
+        ModelRegistry { models }
+    }
+
+    pub fn models(&self) -> &[ModelManifest] {
+        &self.models
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn n_layers(&self, model_idx: usize) -> usize {
+        self.models.get(model_idx).map_or(0, |m| m.layers.len())
+    }
+
+    /// Look a manifest up by id (the client-facing key).
+    pub fn manifest(&self, id: &str) -> Option<&ModelManifest> {
+        self.models.iter().find(|m| m.id == id)
+    }
+
+    /// Distinct weight blobs across every model — the number of
+    /// inline weight ships a cold v4 peer should see at most.
+    pub fn distinct_weight_hashes(&self) -> usize {
+        let mut hashes: Vec<u64> = self
+            .models
+            .iter()
+            .flat_map(|m| m.layers.iter().map(|l| l.weights_hash))
+            .collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        hashes.len()
+    }
+
+    /// Deterministic multi-tenant request mix: request `i` round-robins
+    /// across models (maximal tenant interleave — the hard case for a
+    /// weight cache) and draws its layer from a per-request Prng.
+    pub fn pick(&self, i: u64, seed: u64) -> (usize, usize) {
+        let model = (i % self.models.len() as u64) as usize;
+        let layer = Prng::new(seed ^ (i << 1)).below(self.models[model].layers.len() as u64)
+            as usize;
+        (model, layer)
+    }
+
+    /// Build the `ConvJob` for one `(model, layer, input)` submission:
+    /// manifest weights + a deterministic synthetic input image from
+    /// `input_seed`. The weight fingerprint is derived from the actual
+    /// bytes exactly like the wire's explicit-tensor path, so batching
+    /// and DMA reuse treat registry jobs identically.
+    pub fn job(
+        &self,
+        model_idx: usize,
+        layer_idx: usize,
+        job_id: u64,
+        input_seed: u64,
+    ) -> anyhow::Result<ConvJob> {
+        let model = self
+            .models
+            .get(model_idx)
+            .ok_or_else(|| anyhow::anyhow!("no model {model_idx} in the registry"))?;
+        let layer = model.layers.get(layer_idx).ok_or_else(|| {
+            anyhow::anyhow!("model {} has no layer {layer_idx}", model.id)
+        })?;
+        let spec = layer.spec;
+        let mut rng = Prng::new(input_seed);
+        let img = Tensor::from_vec(
+            &[spec.c, spec.h, spec.w],
+            rng.bytes_below(spec.c * spec.h * spec.w, 256),
+        );
+        Ok(ConvJob {
+            id: job_id,
+            spec,
+            kind: layer.kind,
+            accum: AccumMode::I32,
+            img,
+            weights: (*layer.weights).clone(),
+            bias: (*layer.bias).clone(),
+            weights_id: weights_fingerprint_salted(&spec, layer.kind, layer.weights_hash),
+            weights_hash: layer.weights_hash,
+            wire_weights_cached: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::depthwise::golden_depthwise3x3;
+    use crate::model::golden;
+
+    #[test]
+    fn builtin_registry_is_deterministic() {
+        let a = ModelRegistry::builtin(3, 42);
+        let b = ModelRegistry::builtin(3, 42);
+        assert_eq!(a.n_models(), 3);
+        for (ma, mb) in a.models().iter().zip(b.models()) {
+            assert_eq!(ma.id, mb.id);
+            for (la, lb) in ma.layers.iter().zip(&mb.layers) {
+                assert_eq!(la.weights_hash, lb.weights_hash);
+                assert_eq!(la.weights.data(), lb.weights.data());
+            }
+        }
+        // A different seed is a different weight universe.
+        let c = ModelRegistry::builtin(3, 43);
+        assert_ne!(
+            a.models()[0].layers[0].weights_hash,
+            c.models()[0].layers[0].weights_hash
+        );
+    }
+
+    #[test]
+    fn mobilenet_manifest_lowers_every_block_to_served_kinds() {
+        let reg = ModelRegistry::builtin(1, 7);
+        let m = reg.manifest("mobilenet-lite").expect("built-in model");
+        let specs = mobilenet_lite_specs();
+        assert_eq!(m.layers.len(), specs.len() * 2);
+        for (i, b) in specs.iter().enumerate() {
+            let dw = &m.layers[2 * i];
+            assert_eq!(dw.kind, JobKind::Depthwise);
+            assert_eq!((dw.spec.c, dw.spec.k), (b.c, b.c));
+            assert!(dw.spec.relu, "mobilenet depthwise fuses ReLU");
+            let pw = &m.layers[2 * i + 1];
+            assert_eq!(pw.kind, JobKind::PointwiseAs3x3);
+            assert_eq!((pw.spec.c, pw.spec.k), (b.c, b.k));
+            assert_eq!(pw.spec.h, b.dw_oh() + 2, "pre-padded for the 3x3 dataflow");
+            assert_eq!(pw.weights.shape(), &[b.k, b.c, 3, 3]);
+        }
+    }
+
+    #[test]
+    fn tenants_never_share_weight_hashes() {
+        let reg = ModelRegistry::builtin(4, 11);
+        let total: usize = reg.models().iter().map(|m| m.layers.len()).sum();
+        assert_eq!(
+            reg.distinct_weight_hashes(),
+            total,
+            "every layer of every tenant must have its own content address"
+        );
+    }
+
+    #[test]
+    fn registry_jobs_share_weights_across_requests_and_match_golden() {
+        let reg = ModelRegistry::builtin(2, 5);
+        // Two requests for the same layer: different inputs, identical
+        // weight identity — the whole point of the registry.
+        let a = reg.job(0, 0, 1, 100).unwrap();
+        let b = reg.job(0, 0, 2, 200).unwrap();
+        assert_eq!(a.weights_hash, b.weights_hash);
+        assert_eq!(a.weights_id, b.weights_id);
+        assert_ne!(a.img.data(), b.img.data());
+        // Depthwise layer 0 is bit-exact against the golden reference.
+        let want = golden_depthwise3x3(&a.img, &a.weights, &a.bias, a.spec.relu);
+        assert_eq!(a.kind, JobKind::Depthwise);
+        assert!(want.data().iter().any(|&v| v != 0));
+        // A standard synthetic-tenant layer matches the raw conv.
+        let s = reg.job(1, 0, 3, 300).unwrap();
+        assert_eq!(s.kind, JobKind::Standard);
+        let want_s = golden::conv3x3_i32(&s.img, &s.weights, &s.bias, false);
+        assert_eq!(want_s.shape(), &[s.spec.k, s.spec.conv_oh(), s.spec.conv_ow()]);
+    }
+
+    #[test]
+    fn job_rejects_out_of_range_submissions() {
+        let reg = ModelRegistry::builtin(1, 3);
+        assert!(reg.job(1, 0, 1, 1).is_err(), "unknown model");
+        assert!(reg.job(0, 99, 1, 1).is_err(), "unknown layer");
+    }
+
+    #[test]
+    fn pick_is_deterministic_and_covers_every_model() {
+        let reg = ModelRegistry::builtin(3, 9);
+        let mut seen = [false; 3];
+        for i in 0..12u64 {
+            let (m, l) = reg.pick(i, 17);
+            assert_eq!((m, l), reg.pick(i, 17));
+            assert!(l < reg.n_layers(m));
+            seen[m] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "round-robin touches every tenant");
+    }
+}

@@ -1,0 +1,13 @@
+//! Content-addressed storage for the serving stack.
+//!
+//! One resident today: [`WeightStore`], the per-peer LRU of weight
+//! blobs keyed by byte-hash that backs wire protocol v4's
+//! ship-on-miss path (`coordinator/tcp.rs` owns one per `TcpServer`;
+//! the framing grammar lives in that module's doc). Capacity is not an
+//! arbitrary byte budget: it is priced by the board's BRAM model
+//! (`hw/capacity.rs`), because the blobs a peer keeps warm are exactly
+//! the weights §4.1's BMG organisation would hold resident on-chip.
+
+pub mod weightstore;
+
+pub use weightstore::WeightStore;

@@ -1,0 +1,243 @@
+//! LRU weight-blob store, content-addressed by FNV-1a byte hash.
+//!
+//! Each wire-v4 `TcpServer` owns one [`WeightStore`]: when a request
+//! carries `weights_hash` instead of weight bytes, the connection
+//! handler consults the store and either serves the resident blob (a
+//! cache hit — no weight bytes crossed the wire) or answers a
+//! `need_weights` frame so the client re-ships once. The store is
+//! shared across every connection to the peer, which is what makes the
+//! cache per-*peer*, not per-socket: the first tenant to ship a model's
+//! weights warms them for everyone.
+//!
+//! **Capacity model.** The budget is denominated in bytes derived from
+//! the board's BRAM catalog: `blocks × BRAM36_BYTES`
+//! ([`crate::hw::capacity::BRAM36_BYTES`], default
+//! [`crate::hw::device::XC7Z020_CLG400`]'s 140 blocks), and each blob
+//! is charged what the IP core's memory organisation would actually
+//! reserve for it — `demand(spec, mode).weight_bytes`, the 16-BMG
+//! weight footprint — not its raw byte length. A blob whose charge
+//! alone exceeds the whole budget is served but never cached (the
+//! board could not hold it resident either).
+//!
+//! **Eviction.** Strict LRU: `get` refreshes recency, `insert` evicts
+//! from the cold end until the newcomer fits. Eviction is invisible to
+//! correctness — an evicted hash simply round-trips through
+//! `need_weights` → re-ship → hit again (covered by the wire tests).
+//!
+//! Thread-safe behind one mutex: lookups are a hash-map probe plus a
+//! recency splice, trivial next to the convolution they gate.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::hw::capacity::BRAM36_BYTES;
+
+/// One resident blob and what the BRAM model charges for it.
+struct StoredBlob {
+    blob: Arc<Vec<u8>>,
+    cost_bytes: u64,
+}
+
+struct StoreInner {
+    map: HashMap<u64, StoredBlob>,
+    /// Recency order, coldest at the front. Always mirrors `map`'s key
+    /// set exactly.
+    lru: VecDeque<u64>,
+    used_bytes: u64,
+}
+
+/// Content-addressed LRU of weight blobs, capacity-bounded by a BRAM
+/// byte budget.
+pub struct WeightStore {
+    capacity_bytes: u64,
+    inner: Mutex<StoreInner>,
+}
+
+impl WeightStore {
+    /// A store with an explicit byte budget.
+    pub fn new(capacity_bytes: u64) -> Self {
+        WeightStore {
+            capacity_bytes,
+            inner: Mutex::new(StoreInner {
+                map: HashMap::new(),
+                lru: VecDeque::new(),
+                used_bytes: 0,
+            }),
+        }
+    }
+
+    /// A store budgeted as `blocks` 36Kb BRAM blocks — the natural way
+    /// to size one from a device catalog entry (`Device::bram36`).
+    pub fn with_bram36_blocks(blocks: u64) -> Self {
+        Self::new(blocks.saturating_mul(BRAM36_BYTES))
+    }
+
+    /// Look up a blob by hash, refreshing its recency on hit.
+    pub fn get(&self, hash: u64) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let blob = Arc::clone(&inner.map.get(&hash)?.blob);
+        if let Some(pos) = inner.lru.iter().position(|&h| h == hash) {
+            inner.lru.remove(pos);
+            inner.lru.push_back(hash);
+        }
+        Some(blob)
+    }
+
+    /// Whether a hash is resident, without touching recency (the
+    /// dispatcher-side probe; `get` is the serving path).
+    pub fn contains(&self, hash: u64) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&hash)
+    }
+
+    /// Insert a blob under its hash, charging `cost_bytes` against the
+    /// budget and evicting cold entries until it fits. Returns whether
+    /// the blob is now resident: a blob whose charge alone exceeds the
+    /// whole budget is *not* cached (the caller serves it inline and
+    /// every future request re-ships), and inserting an
+    /// already-resident hash just refreshes its recency.
+    pub fn insert(&self, hash: u64, blob: Arc<Vec<u8>>, cost_bytes: u64) -> bool {
+        if cost_bytes > self.capacity_bytes {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&hash) {
+            if let Some(pos) = inner.lru.iter().position(|&h| h == hash) {
+                inner.lru.remove(pos);
+                inner.lru.push_back(hash);
+            }
+            return true;
+        }
+        while inner.used_bytes + cost_bytes > self.capacity_bytes {
+            let Some(cold) = inner.lru.pop_front() else {
+                break;
+            };
+            if let Some(evicted) = inner.map.remove(&cold) {
+                inner.used_bytes -= evicted.cost_bytes;
+            }
+        }
+        inner.used_bytes += cost_bytes;
+        inner.map.insert(hash, StoredBlob { blob, cost_bytes });
+        inner.lru.push_back(hash);
+        true
+    }
+
+    /// Resident blob count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently charged against the budget.
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used_bytes
+    }
+
+    /// The byte budget this store was built with.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Resident hashes coldest-first (tests assert eviction order
+    /// through this; not a serving API).
+    pub fn lru_order(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().lru.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(byte: u8, len: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![byte; len])
+    }
+
+    #[test]
+    fn insert_then_get_round_trips_the_blob() {
+        let store = WeightStore::new(1000);
+        assert!(store.is_empty());
+        assert!(store.insert(7, blob(3, 16), 100));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.used_bytes(), 100);
+        let got = store.get(7).expect("resident");
+        assert_eq!(&*got, &vec![3u8; 16]);
+        assert!(store.get(8).is_none());
+        assert!(store.contains(7));
+        assert!(!store.contains(8));
+    }
+
+    #[test]
+    fn eviction_is_strict_lru_order() {
+        // Budget fits exactly two 100-byte blobs.
+        let store = WeightStore::new(200);
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert!(store.insert(2, blob(2, 4), 100));
+        assert_eq!(store.lru_order(), vec![1, 2]);
+        // A third insert evicts the coldest (1), not the newest.
+        assert!(store.insert(3, blob(3, 4), 100));
+        assert_eq!(store.lru_order(), vec![2, 3]);
+        assert!(!store.contains(1));
+        assert!(store.contains(2) && store.contains(3));
+        assert_eq!(store.used_bytes(), 200);
+    }
+
+    #[test]
+    fn get_refreshes_recency_so_hot_blobs_survive() {
+        let store = WeightStore::new(200);
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert!(store.insert(2, blob(2, 4), 100));
+        // Touch 1: now 2 is the coldest.
+        assert!(store.get(1).is_some());
+        assert_eq!(store.lru_order(), vec![2, 1]);
+        assert!(store.insert(3, blob(3, 4), 100));
+        assert!(store.contains(1), "recently used blob must survive");
+        assert!(!store.contains(2), "cold blob is the one evicted");
+    }
+
+    #[test]
+    fn oversized_blob_is_served_but_never_cached() {
+        let store = WeightStore::new(100);
+        assert!(!store.insert(9, blob(9, 4), 101));
+        assert!(store.is_empty());
+        // And it did not evict anything to make room it could never use.
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert!(!store.insert(9, blob(9, 4), 101));
+        assert!(store.contains(1));
+    }
+
+    #[test]
+    fn reinserting_a_resident_hash_refreshes_without_double_charging() {
+        let store = WeightStore::new(200);
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert!(store.insert(2, blob(2, 4), 100));
+        // Re-insert 1 (a client re-shipped redundantly): recency
+        // refreshes, the budget is not charged twice.
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert_eq!(store.used_bytes(), 200);
+        assert_eq!(store.lru_order(), vec![2, 1]);
+        assert!(store.insert(3, blob(3, 4), 100));
+        assert!(store.contains(1) && store.contains(3));
+        assert!(!store.contains(2));
+    }
+
+    #[test]
+    fn bram_block_constructor_prices_in_whole_blocks() {
+        let store = WeightStore::with_bram36_blocks(2);
+        assert_eq!(store.capacity_bytes(), 2 * BRAM36_BYTES);
+    }
+
+    #[test]
+    fn eviction_frees_enough_for_a_larger_newcomer() {
+        let store = WeightStore::new(350);
+        assert!(store.insert(1, blob(1, 4), 100));
+        assert!(store.insert(2, blob(2, 4), 100));
+        assert!(store.insert(3, blob(3, 4), 100));
+        // 250 bytes needs BOTH 1 and 2 evicted, not just one.
+        assert!(store.insert(4, blob(4, 4), 250));
+        assert_eq!(store.lru_order(), vec![3, 4]);
+        assert_eq!(store.used_bytes(), 350);
+    }
+}

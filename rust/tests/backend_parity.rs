@@ -2,10 +2,13 @@
 //! `ConvBackend` the build can construct — the cycle-accurate simulator,
 //! the naive golden fallback, the threaded im2col+GEMM backend at
 //! several thread counts, TWO `RemoteBackend`s over real sockets — one
-//! to an in-process wire-protocol-v3 server (binary tensor frames) and
-//! one to a v2-pinned server (legacy JSON tensors, exercising the
-//! front's negotiation fallback) — and (when the runtime is linked and
-//! artifacts exist) the XLA path. For identical integer inputs every
+//! to an in-process wire-protocol-v4 server (binary tensor frames +
+//! content-addressed weight store) and one to a v2-pinned server
+//! (legacy JSON tensors, exercising the front's negotiation fallback)
+//! — and (when the runtime is linked and artifacts exist) the XLA
+//! path. A registry leg submits (model, layer) jobs from the
+//! multi-model registry through both remotes twice, so the second
+//! round rides the v4 weight store hash-only and must stay bit-exact. For identical integer inputs every
 //! backend must produce **bit-identical** i32 outputs across
 //! randomized specs, all three job kinds (standard, depthwise,
 //! pointwise-as-3×3) and both accumulator modes (wrap-8 silicon vs
@@ -52,10 +55,11 @@ impl Fleet {
 /// Every backend the suite can construct offline, in I32 (production)
 /// mode. XLA joins when the feature is linked and artifacts exist; its
 /// spec allowlist keeps it out of cases it never compiled. The remote
-/// legs run against real sockets: an in-process v3 server (binary
-/// tensor frames) fronting a small heterogeneous pool (2 sim cores +
-/// 1 im2col worker), and a v2-pinned server the front must serve over
-/// legacy JSON tensors — same properties, both framings.
+/// legs run against real sockets: an in-process v4 server (binary
+/// tensor frames + weight store) fronting a small heterogeneous pool
+/// (2 sim cores + 1 im2col worker), and a v2-pinned server the front
+/// must serve over legacy JSON tensors — same properties, both
+/// framings.
 fn all_backends() -> Fleet {
     let mut v: Vec<Box<dyn ConvBackend>> = vec![
         Box::new(SimBackend::new(IpCoreConfig::default())),
@@ -67,21 +71,25 @@ fn all_backends() -> Fleet {
         Ok(b) => v.push(Box::new(b)),
         Err(e) => eprintln!("parity harness runs without the xla leg: {e}"),
     }
-    let v3 = TcpServer::start(
+    let v4 = TcpServer::start(
         "127.0.0.1:0",
         CoordinatorConfig::default().with_cores(2).with_im2col_workers(1),
     )
-    .expect("in-process wire-v3 server for the remote leg");
+    .expect("in-process wire-v4 server for the remote leg");
     let v2 = TcpServer::start(
         "127.0.0.1:0",
         CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
     )
     .expect("in-process v2-pinned server for the legacy remote leg");
-    let remote_v3 = RemoteBackend::connect(&v3.addr.to_string())
-        .expect("remote backend handshake (v3)");
+    let remote_v4 = RemoteBackend::connect(&v4.addr.to_string())
+        .expect("remote backend handshake (v4)");
     assert!(
-        remote_v3.peer_binary(),
-        "v3 server must negotiate binary frames"
+        remote_v4.peer_binary(),
+        "v4 server must negotiate binary frames"
+    );
+    assert!(
+        remote_v4.peer_wcache(),
+        "v4 server must negotiate the weight store"
     );
     let remote_v2 = RemoteBackend::connect(&v2.addr.to_string())
         .expect("remote backend handshake (v2 fallback)");
@@ -89,11 +97,15 @@ fn all_backends() -> Fleet {
         !remote_v2.peer_binary(),
         "v2-pinned server must stay on JSON tensors"
     );
-    v.push(Box::new(remote_v3));
+    assert!(
+        !remote_v2.peer_wcache(),
+        "v2-pinned server must not advertise the weight store"
+    );
+    v.push(Box::new(remote_v4));
     v.push(Box::new(remote_v2));
     Fleet {
         backends: v,
-        servers: vec![v3, v2],
+        servers: vec![v4, v2],
     }
 }
 
@@ -168,7 +180,7 @@ fn prop_standard_jobs_agree_across_all_backends() {
             weights_resident: false,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
-        // sim + golden + im2col×2 + remote×2 (v3 + v2 fallback) at
+        // sim + golden + im2col×2 + remote×2 (v4 + v2 fallback) at
         // minimum (xla only on its own specs).
         assert!(ran >= 6, "seed {seed}: only {ran} backends ran");
     }
@@ -329,6 +341,73 @@ fn xla_backend_agrees_when_available() {
         assert_eq!(from_xla.output.data(), want.data(), "{}: xla vs golden", spec.name());
         assert_parity(&mut others, &payload, AccumMode::I32, &want, &spec.name());
     }
+}
+
+#[test]
+fn registry_submissions_are_bit_identical_across_v4_and_v2_remotes() {
+    // The multi-model registry leg: every (model, layer) submission is
+    // run twice through a v4 remote (second round goes hash-only over
+    // the weight store) and twice through a v2-pinned remote (inline
+    // JSON tensors both times, never a v4 frame), and each result must
+    // be bit-identical to the local golden reference.
+    use repro::registry::ModelRegistry;
+    use std::sync::atomic::Ordering;
+
+    let v4 = TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
+        .expect("in-process v4 server");
+    let v2 = TcpServer::start(
+        "127.0.0.1:0",
+        CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
+    )
+    .expect("in-process v2-pinned server");
+    let mut remote_v4 =
+        RemoteBackend::connect(&v4.addr.to_string()).expect("remote handshake (v4)");
+    let mut remote_v2 =
+        RemoteBackend::connect(&v2.addr.to_string()).expect("remote handshake (v2)");
+    assert!(remote_v4.peer_wcache());
+    assert!(!remote_v2.peer_wcache());
+    let mut reference = GoldenBackend::new();
+
+    let registry = ModelRegistry::builtin(3, 7);
+    let mut id = 0u64;
+    for m in 0..registry.n_models() {
+        for l in 0..registry.n_layers(m) {
+            for round in 0..2u64 {
+                let job = registry
+                    .job(m, l, id, 0x9e37 ^ (id << 3) ^ round)
+                    .expect("in-range (model, layer)");
+                id += 1;
+                let payload = job.payload(false);
+                let want = reference.run(&payload).expect("golden reference").output;
+                let got4 = remote_v4.run(&payload).expect("v4 remote").output;
+                let got2 = remote_v2.run(&payload).expect("v2 remote").output;
+                assert_eq!(
+                    got4.data(),
+                    want.data(),
+                    "model {m} layer {l} round {round}: v4 remote diverges"
+                );
+                assert_eq!(
+                    got2.data(),
+                    want.data(),
+                    "model {m} layer {l} round {round}: v2 remote diverges"
+                );
+            }
+        }
+    }
+
+    // The v4 peer cached repeated blobs; the v2-pinned peer never saw
+    // any v4 cache traffic, on either side of its connection.
+    assert!(v4.metrics().weight_hits.load(Ordering::Relaxed) > 0);
+    assert_eq!(v2.metrics().weight_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(v2.metrics().weight_misses.load(Ordering::Relaxed), 0);
+    let v2_known = remote_v2.known_weights().expect("client-side cache stats");
+    assert!(v2_known.is_empty(), "v2 connection must not track weight hashes");
+    assert_eq!(v2_known.stats(), (0, 0, 0));
+
+    drop(remote_v4);
+    drop(remote_v2);
+    v4.stop();
+    v2.stop();
 }
 
 #[test]

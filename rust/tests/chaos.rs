@@ -1,11 +1,15 @@
 //! Chaos leg of the parity harness: the failure-tolerant serving front
 //! under a mid-trace peer kill.
 //!
-//! Three in-process wire-v3 peers join one remote-only front pool —
+//! Three in-process wire-v4 peers join one remote-only front pool —
 //! the first pinned to legacy wire v2, so the pool is mixed-protocol
 //! and every invariant below holds across both framings at once. One
 //! peer is severed mid-trace (its port stays bound — connections drop,
-//! exactly a crashed process) and later revived. The invariants:
+//! exactly a crashed process) and later revived. A second leg runs
+//! multi-model registry traffic through a flapped v4 peer and pins the
+//! weight-store contract: the redial wipes the front's known-hash
+//! beliefs, so each blob is re-shipped at most once per connection
+//! epoch, bit-identically. The invariants:
 //!
 //! * every admitted request completes **bit-identical** to
 //!   `GoldenBackend` on the same tensors — failover hops may change
@@ -40,7 +44,7 @@ fn start_fleet() -> (Vec<TcpServer>, CoordinatorConfig) {
     let mut peers = Vec::new();
     for i in 0..N_PEERS {
         // Peer 0 is pinned to legacy wire v2: the front must negotiate
-        // JSON tensors with it while speaking binary v3 frames to its
+        // JSON tensors with it while speaking binary v4 frames to its
         // siblings — a mixed-protocol pool under chaos.
         let mut pc = CoordinatorConfig::default().with_cores(2);
         if i == 0 {
@@ -191,6 +195,157 @@ fn killed_peer_mid_trace_fails_over_bit_identically_then_revives() {
         std::thread::sleep(Duration::from_millis(100));
     }
     assert!(served, "revived peer never served traffic again");
+
+    pool.shutdown();
+    for p in peers {
+        p.stop();
+    }
+}
+
+/// Wrap one registry submission as a single-job batch plus the golden
+/// reference for its exact tensors (the registry analogue of
+/// [`entry_to_case`]).
+fn registry_case(
+    registry: &repro::registry::ModelRegistry,
+    i: u64,
+    seed: u64,
+    golden: &mut GoldenBackend,
+) -> (Batch, Receiver<ConvResult>, Tensor<i32>) {
+    let (m, l) = registry.pick(i, seed);
+    let job = registry.job(m, l, i, seed ^ (i << 1)).expect("in-range pick");
+    let want = golden
+        .run(&job.payload(false))
+        .expect("golden reference")
+        .output;
+    let (tx, rx) = channel();
+    let batch = Batch {
+        spec: job.spec,
+        weights_id: job.weights_id,
+        kind: job.kind,
+        accum: job.accum,
+        jobs: vec![Submission {
+            job,
+            reply: tx,
+            enqueued: Instant::now(),
+        }],
+    };
+    (batch, rx, want)
+}
+
+#[test]
+fn flapped_peer_reships_each_weight_blob_at_most_once_per_epoch() {
+    // Registry traffic over two v4 peers; the last peer is severed
+    // mid-trace and revived. The flap drops the front's connection, the
+    // redial wipes its known-hash beliefs, and the weight-store
+    // contract must hold across the whole test:
+    //   * every answer is bit-identical to golden (failover included);
+    //   * the stable peer sees each distinct blob at most once, ever;
+    //   * the flapped peer sees each blob at most once per connection
+    //     epoch (two epochs here), and really does re-ship after the
+    //     revive instead of trusting stale beliefs.
+    use repro::registry::ModelRegistry;
+
+    let mut peers = Vec::new();
+    for _ in 0..2 {
+        peers.push(
+            TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
+                .expect("in-process wire-v4 peer"),
+        );
+    }
+    let addrs: Vec<String> = peers.iter().map(|p| p.addr.to_string()).collect();
+    let config = CoordinatorConfig {
+        n_cores: 0,
+        ..CoordinatorConfig::default().with_remote_peers(addrs)
+    };
+    let pool = build_pool(&config).expect("front pool dials both peers");
+    let mut golden = GoldenBackend::new();
+    let registry = ModelRegistry::builtin(2, 21);
+
+    // One connection epoch's re-ship budget: the registry's distinct
+    // weight blobs, by bytes.
+    let mut blobs = std::collections::BTreeMap::new();
+    for m in registry.models() {
+        for l in &m.layers {
+            blobs.insert(l.weights_hash, l.weights.data().len() as u64);
+        }
+    }
+    let distinct_bytes: u64 = blobs.values().sum();
+    assert!(distinct_bytes > 0);
+
+    let mut pending = Vec::new();
+    let mut w1_at_kill = 0u64;
+    for i in 0..40usize {
+        if i == KILL_AT {
+            peers[1].set_down(true);
+            // Frozen while down: the accept loop drops new connections.
+            w1_at_kill = peers[1].metrics().wire_weight_bytes.load(Ordering::Relaxed);
+        }
+        if i == REVIVE_AT {
+            peers[1].set_down(false);
+        }
+        let (batch, rx, want) = registry_case(&registry, i as u64, 21, &mut golden);
+        assert!(
+            pool.try_dispatch(batch).is_ok(),
+            "registry jobs are routable (entry {i})"
+        );
+        pending.push((i, rx, want));
+    }
+    for (i, rx, want) in pending {
+        let result = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("entry {i} never answered: {e}"));
+        assert!(
+            result.error.is_none(),
+            "entry {i} answered with an error despite failover: {:?}",
+            result.error
+        );
+        assert_eq!(
+            result.output.data(),
+            want.data(),
+            "entry {i}: the flap changed the numerics"
+        );
+    }
+
+    // Push post-revive registry waves until the flapped peer serves
+    // again — its first job on the fresh connection must re-ship.
+    let before = peers[1].metrics().completed.load(Ordering::Relaxed);
+    let mut served = false;
+    'waves: for wave in 0..50u64 {
+        let mut rxs = Vec::new();
+        for j in 0..8u64 {
+            let (batch, rx, want) =
+                registry_case(&registry, 1000 + wave * 8 + j, 21, &mut golden);
+            assert!(pool.try_dispatch(batch).is_ok(), "routable wave");
+            rxs.push((rx, want));
+        }
+        for (rx, want) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(60)).expect("wave answered");
+            assert!(r.error.is_none(), "wave job errored post-revive: {:?}", r.error);
+            assert_eq!(r.output.data(), want.data(), "wave numerics");
+        }
+        if peers[1].metrics().completed.load(Ordering::Relaxed) > before {
+            served = true;
+            break 'waves;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(served, "revived peer never served traffic again");
+
+    let w0 = peers[0].metrics().wire_weight_bytes.load(Ordering::Relaxed);
+    let w1 = peers[1].metrics().wire_weight_bytes.load(Ordering::Relaxed);
+    assert!(
+        w0 <= distinct_bytes,
+        "stable peer was re-shipped a blob it already holds: {w0} > {distinct_bytes}"
+    );
+    assert!(
+        w1 <= 2 * distinct_bytes,
+        "flapped peer re-shipped more than once per epoch: {w1} > {}",
+        2 * distinct_bytes
+    );
+    assert!(
+        w1 > w1_at_kill,
+        "the post-revive connection must re-ship (stale hash beliefs survived the redial)"
+    );
 
     pool.shutdown();
     for p in peers {
