@@ -65,6 +65,11 @@ pub struct CoordinatorConfig {
     /// Submissions beyond it block until the cores drain (Block policy;
     /// see `coordinator::backpressure` for Reject-style load shedding).
     pub max_inflight_psums: Option<u64>,
+    /// Whole-network streaming ([`super::stream`]): how many images may
+    /// be in flight at once. 1 serialises images (no pipelining, the
+    /// §4.1 chained baseline); larger windows let layer k+1 of image i
+    /// overlap layer k of image i+1 across the pool.
+    pub stream_window: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -80,6 +85,7 @@ impl Default for CoordinatorConfig {
             ip: IpCoreConfig::default(),
             batch: BatchConfig::default(),
             max_inflight_psums: None,
+            stream_window: 4,
         }
     }
 }
@@ -137,6 +143,13 @@ impl CoordinatorConfig {
         self.weight_store_bram36 = Some(blocks);
         self
     }
+
+    /// Bound the streaming front's in-flight-images window (min 1; see
+    /// [`Self::stream_window`]).
+    pub fn with_stream_window(mut self, window: usize) -> Self {
+        self.stream_window = window.max(1);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +205,13 @@ mod tests {
         assert!(CoordinatorConfig::default().weight_store_bram36.is_none());
         let c = CoordinatorConfig::default().with_weight_store_bram36(1);
         assert_eq!(c.weight_store_bram36, Some(1));
+    }
+
+    #[test]
+    fn stream_window_defaults_to_four_and_clamps_to_one() {
+        assert_eq!(CoordinatorConfig::default().stream_window, 4);
+        assert_eq!(CoordinatorConfig::default().with_stream_window(8).stream_window, 8);
+        assert_eq!(CoordinatorConfig::default().with_stream_window(0).stream_window, 1);
     }
 
     #[test]

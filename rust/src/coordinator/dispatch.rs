@@ -212,14 +212,24 @@ fn run_batch(
     // whole batch can go through the backend's batch entry point in ONE
     // call: pipelining backends (remote peers) put every job on the
     // wire before the first reply returns, instead of paying a full
-    // round trip per job. Known accounting drift: if job 0 fails, later
-    // jobs still carry reused=true (and its DMA discount) even though
-    // nothing loaded the weights — per-job re-checking would force back
-    // to one call per job, which defeats pipelining; the drift only
-    // affects cycle metrics on partial-failure batches, never outputs.
+    // round trip per job.
+    //
+    // The positional flags are *optimistic*: reporting is failure-aware.
+    // A job only *reports* `weights_reused=true` (and counts a skipped
+    // DMA in metrics) when the reuse actually happened — the weights
+    // were resident when the batch started, or an earlier job in this
+    // batch succeeded on this worker and therefore loaded them. If job
+    // 0 fails, later successes are re-reported honestly, and residency
+    // is NOT recorded for the next batch (nobody paid the load), so the
+    // undercharged DMA is recovered on the following batch. A failover
+    // hop re-enters [`WorkerTable::redispatch`] as position 0 of a
+    // fresh single-job batch, so the rescue worker recomputes the flag
+    // against its *own* residency — a hop can never inherit a reuse
+    // discount from the worker that failed it.
     let batch_weights = batch.weights_id;
+    let resident_at_start = *resident_weights == Some(batch_weights);
     let reused_flags: Vec<bool> = (0..batch.jobs.len())
-        .map(|i| i > 0 || *resident_weights == Some(batch_weights))
+        .map(|i| i > 0 || resident_at_start)
         .collect();
     let payloads: Vec<_> = batch
         .jobs
@@ -230,8 +240,10 @@ fn run_batch(
     let runs = backend.run_batch(&payloads);
     debug_assert_eq!(runs.len(), batch.jobs.len(), "one result per job");
     drop(payloads);
+    drop(reused_flags);
     let mut any_success = false;
-    for ((sub, run), reused) in batch.jobs.into_iter().zip(runs).zip(reused_flags) {
+    let mut first_job_succeeded = false;
+    for (i, (sub, run)) in batch.jobs.into_iter().zip(runs).enumerate() {
         let run = match run {
             Ok(run) => run,
             Err(e) => {
@@ -264,7 +276,13 @@ fn run_batch(
                 continue;
             }
         };
+        // Effective (failure-aware) reuse: an earlier success in this
+        // batch loaded the weights, or they were resident already.
+        let reused = resident_at_start || any_success;
         any_success = true;
+        if i == 0 {
+            first_job_succeeded = true;
+        }
 
         let latency = sub.enqueued.elapsed();
         table.metrics.record_completion(
@@ -292,7 +310,17 @@ fn run_batch(
         });
     }
     if any_success {
-        *resident_weights = Some(batch_weights);
+        // Residency carries to the next batch only when the load was
+        // actually paid (resident already, or job 0 ran cold and
+        // succeeded). If job 0 failed, later jobs ran on optimistic
+        // discounted payloads — clearing residency makes the next batch
+        // of these weights pay the DMA instead of compounding the
+        // undercharge.
+        *resident_weights = if resident_at_start || first_job_succeeded {
+            Some(batch_weights)
+        } else {
+            None
+        };
     }
 }
 
@@ -949,6 +977,125 @@ mod tests {
         assert_eq!(m.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
         assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 1);
         assert_eq!(pool.worker_loads(), vec![0, 0]);
+        pool.shutdown();
+    }
+
+    /// Test backend that fails only its first job, then computes like
+    /// golden — the partial-failure batch shape: job 0 dies, job 1
+    /// lands on a worker that never loaded the batch's weights.
+    struct FlakyFirstBackend {
+        failed_once: bool,
+    }
+
+    impl ConvBackend for FlakyFirstBackend {
+        fn name(&self) -> &'static str {
+            "flaky-first-test"
+        }
+        fn capability(&self) -> Capability {
+            Capability {
+                standard3x3: true,
+                depthwise: true,
+                pointwise_as_3x3: true,
+                accum: AccumMode::I32,
+                paper_specs_only: false,
+                spec_allowlist: None,
+            }
+        }
+        fn cost_model(&self) -> CostModel {
+            CostModel::HostMacs
+        }
+        fn run(&mut self, job: &JobPayload) -> anyhow::Result<BackendRun> {
+            if !self.failed_once {
+                self.failed_once = true;
+                anyhow::bail!("simulated mid-batch drop")
+            }
+            GoldenBackend::new().run(job)
+        }
+    }
+
+    #[test]
+    fn failover_hop_never_fakes_weight_reuse() {
+        // The PR 7 accounting drift, now a hard contract: a 2-job batch
+        // whose first job fails must not let ANY run claim a weight-DMA
+        // it never paid —
+        //   * the rescued job re-enters the rescue worker as position 0
+        //     of a fresh batch: `weights_reused == false` and its DMA
+        //     cycles are charged in full;
+        //   * job 1, which succeeded on the flaky worker *after* job 0
+        //     failed, is re-reported `weights_reused == false` (nothing
+        //     loaded the weights there);
+        //   * residency is not recorded on the flaky worker, so a
+        //     follow-up job with the same weights pays cold again.
+        let backends: Vec<Box<dyn ConvBackend>> = vec![
+            Box::new(FlakyFirstBackend { failed_once: false }),
+            Box::new(SimBackend::new(IpCoreConfig::default())),
+        ];
+        let pool = CorePool::with_backends(backends, IpCoreConfig::default());
+        // Both jobs share one weight set (seed 7) — a legal closed batch.
+        let (tx, rx) = channel();
+        let jobs: Vec<Submission> = (0..2)
+            .map(|i| Submission {
+                job: ConvJob::synthetic(i, QUICKSTART, 7),
+                reply: tx.clone(),
+                enqueued: std::time::Instant::now(),
+            })
+            .collect();
+        let weights_id = jobs[0].job.weights_id;
+        pool.dispatch(Batch {
+            spec: QUICKSTART,
+            weights_id,
+            kind: JobKind::Standard,
+            accum: AccumMode::I32,
+            jobs,
+        });
+        let mut results: Vec<ConvResult> = (0..2)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        results.sort_by_key(|r| r.id);
+        let rescued = &results[0];
+        assert!(rescued.error.is_none(), "failover must rescue job 0: {:?}", rescued.error);
+        assert_eq!(rescued.backend, "sim-ipcore-i32", "job 0 hops to the sibling");
+        assert!(
+            !rescued.weights_reused,
+            "failover hop claimed a weight reuse it never paid"
+        );
+        // The rescue run's DMA is charged in full: identical to a cold
+        // reference run, strictly more than a warm one.
+        let job0 = ConvJob::synthetic(0, QUICKSTART, 7);
+        let mut sim = SimBackend::new(IpCoreConfig::default());
+        let cold = sim.run(&job0.payload(false)).unwrap().cycles;
+        let warm = sim.run(&job0.payload(true)).unwrap().cycles;
+        assert!(warm.dma_in < cold.dma_in, "test premise: residency discounts DMA");
+        assert_eq!(rescued.cycles.dma_in, cold.dma_in, "rescued DMA charged in full");
+        // Job 1 succeeded on the flaky worker, but job 0's failure means
+        // nothing loaded the weights there: reuse is re-reported false.
+        let survivor = &results[1];
+        assert!(survivor.error.is_none());
+        assert_eq!(survivor.backend, "flaky-first-test");
+        assert!(
+            !survivor.weights_reused,
+            "mid-batch failure must clear the positional reuse flag"
+        );
+        assert_eq!(
+            pool.metrics
+                .weight_dma_skipped
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "no skipped-DMA credit on a partial-failure batch"
+        );
+        // Residency was not faked: the same weights on the flaky worker
+        // still run cold (job enters as position 0, resident_weights is
+        // None there).
+        let (tx2, rx2) = channel();
+        let follow_up = ConvJob::synthetic(9, QUICKSTART, 7);
+        assert_eq!(follow_up.weights_id, weights_id, "same weight set");
+        pool.dispatch(batch_of(follow_up, &tx2));
+        let r = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r.error.is_none());
+        assert!(
+            !r.weights_reused,
+            "residency recorded on a worker that never paid the load"
+        );
         pool.shutdown();
     }
 

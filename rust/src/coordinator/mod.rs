@@ -23,6 +23,11 @@
 //!   chains output BRAMs into the next layer's input (no DMA
 //!   round-trip), applying inter-layer requantisation; generic over the
 //!   backend;
+//! * [`stream`] — the whole-network streaming front: walks a registry
+//!   model's layer chain *across the pool* (capability-masked per
+//!   layer, boundary transforms applied between hops) with a bounded
+//!   window of images in flight, so consecutive images' layers overlap
+//!   on different workers;
 //! * [`metrics`] — request counters, simulated-cycle accounting, and a
 //!   latency histogram;
 //! * [`server`] — the closed-loop trace driver used by the benches and
@@ -49,9 +54,11 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod stream;
 pub mod tcp;
 
 pub use config::CoordinatorConfig;
 pub use dispatch::CorePool;
 pub use scheduler::CnnScheduler;
 pub use server::Server;
+pub use stream::StreamScheduler;

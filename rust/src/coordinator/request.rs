@@ -5,6 +5,7 @@ use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
 use crate::model::{LayerSpec, Tensor};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Monotonically assigned request id.
@@ -24,8 +25,12 @@ pub struct ConvJob {
     pub accum: AccumMode,
     pub img: Tensor<u8>,
     /// `(K,C,3,3)` for standard/pointwise jobs, `(C,3,3)` for depthwise.
-    pub weights: Tensor<u8>,
-    pub bias: Vec<i32>,
+    /// Shared, not owned: registry submissions hand out the manifest's
+    /// Arc so N requests against one model clone a pointer, never the
+    /// weight bytes (wire v4 then hash-skips them too — zero-copy up to
+    /// the wire).
+    pub weights: Arc<Tensor<u8>>,
+    pub bias: Arc<Vec<i32>>,
     /// Identifies the weight set: consecutive jobs sharing it on one
     /// core skip the weight DMA (weight-stationary across the batch).
     pub weights_id: u64,
@@ -127,8 +132,8 @@ impl ConvJob {
             kind: JobKind::Standard,
             accum: AccumMode::I32,
             img,
-            weights,
-            bias: (0..spec.k).map(|_| rng.range_i64(0, 32) as i32).collect(),
+            weights: Arc::new(weights),
+            bias: Arc::new((0..spec.k).map(|_| rng.range_i64(0, 32) as i32).collect()),
             // Synthetic traces share one weight set per spec, like a
             // deployed model's fixed parameters.
             weights_id: weights_fingerprint(&spec, JobKind::Standard),
@@ -154,8 +159,8 @@ impl ConvJob {
             kind: JobKind::Depthwise,
             accum: AccumMode::I32,
             img,
-            weights,
-            bias: (0..spec.c).map(|_| rng.range_i64(0, 32) as i32).collect(),
+            weights: Arc::new(weights),
+            bias: Arc::new((0..spec.c).map(|_| rng.range_i64(0, 32) as i32).collect()),
             weights_id: weights_fingerprint(&spec, JobKind::Depthwise),
             weights_hash,
             wire_weights_cached: false,
@@ -180,10 +185,17 @@ impl ConvJob {
             kind: self.kind,
             spec: &self.spec,
             img: &self.img,
-            weights: &self.weights,
-            bias: &self.bias,
+            weights: &*self.weights,
+            bias: self.bias.as_slice(),
             weights_resident,
         }
+    }
+
+    /// How many strong references share this job's weight blob — the
+    /// zero-copy contract's observable (registry jobs add exactly one
+    /// count per outstanding job; a deep copy would always read 1).
+    pub fn weights_refcount(&self) -> usize {
+        Arc::strong_count(&self.weights)
     }
 }
 

@@ -27,6 +27,7 @@ use super::batcher::Batcher;
 use super::config::CoordinatorConfig;
 use super::dispatch::CorePool;
 use super::request::{ConvJob, ConvResult, Submission};
+use super::stream::{StreamOutcome, StreamScheduler};
 use crate::backend::{
     ConvBackend, GoldenBackend, Im2colBackend, JobKind, RemoteBackend, SimBackend,
 };
@@ -113,6 +114,13 @@ pub struct Report {
     /// Answered jobs per backend name (heterogeneous-pool routing;
     /// remote workers appear as `remote@host:port`).
     pub backend_mix: Vec<(&'static str, usize)>,
+    /// Whole-network streaming front only ([`Server::run_stream_trace`]):
+    /// images whose full layer chain was served. Zero on the per-layer
+    /// trace fronts.
+    pub n_images: usize,
+    /// Streaming throughput: completed images / wall. Zero on the
+    /// per-layer trace fronts.
+    pub images_per_sec: f64,
 }
 
 /// The server: config + backend pool.
@@ -338,7 +346,59 @@ impl Server {
             n_retried: m.retried.load(Ordering::Relaxed) as usize,
             n_recovered_peers: self.pool.recovered_peers(),
             backend_mix: mix.into_iter().collect(),
+            n_images: 0,
+            images_per_sec: 0.0,
         }
+    }
+
+    /// The whole-network streaming front door: `n_images` images, image
+    /// `i` submitted against model `i % n_models`, each walked through
+    /// its manifest's layer chain across the pool by a
+    /// [`StreamScheduler`] with the config's in-flight-images window
+    /// ([`CoordinatorConfig::stream_window`]). `on_image(i)` fires just
+    /// before image `i` is admitted — the chaos hook. Returns the pool
+    /// report (with [`Report::n_images`] / [`Report::images_per_sec`]
+    /// populated) plus the full per-image outcome, already checked
+    /// bit-exact against [`ModelRegistry`]'s own golden forward.
+    pub fn run_stream_trace(
+        &mut self,
+        registry: &ModelRegistry,
+        n_images: usize,
+        seed: u64,
+        on_image: &mut dyn FnMut(usize),
+    ) -> (Report, StreamOutcome) {
+        let outcome = StreamScheduler::new(&self.pool, registry, self.config.stream_window)
+            .run_with(n_images, seed, on_image);
+        let m = &self.pool.metrics;
+        let completed = m.completed.load(Ordering::Relaxed);
+        let skipped = m.weight_dma_skipped.load(Ordering::Relaxed);
+        let (weight_hits, weight_misses, weight_bytes_saved) = self.pool.weight_cache_stats();
+        let report = Report {
+            n_requests: outcome.n_layer_jobs,
+            n_cores: self.pool.n_cores(),
+            wall: outcome.wall,
+            sim_gops_psum: m.sim_gops_psum(self.config.ip.freq_hz, self.pool.n_cores()),
+            p50_us: m.latency.quantile_us(0.5),
+            p99_us: m.latency.quantile_us(0.99),
+            total_psums: m.psums.load(Ordering::Relaxed),
+            weight_dma_skip_rate: if completed == 0 {
+                0.0
+            } else {
+                skipped as f64 / completed as f64
+            },
+            n_weight_hits: weight_hits,
+            n_weight_misses: weight_misses,
+            wire_weight_bytes_saved: weight_bytes_saved,
+            host_rps: outcome.n_layer_jobs as f64 / outcome.wall.as_secs_f64().max(1e-9),
+            n_errors: outcome.images.iter().filter(|o| o.error.is_some()).count(),
+            n_shed: m.shed.load(Ordering::Relaxed) as usize,
+            n_retried: m.retried.load(Ordering::Relaxed) as usize,
+            n_recovered_peers: self.pool.recovered_peers(),
+            backend_mix: outcome.backend_mix.clone(),
+            n_images: outcome.images.len(),
+            images_per_sec: outcome.images_per_sec(),
+        };
+        (report, outcome)
     }
 
     pub fn shutdown(self) {
@@ -354,10 +414,18 @@ impl Report {
             .map(|(name, n)| format!("{name}x{n}"))
             .collect::<Vec<_>>()
             .join(",");
+        let stream = if self.n_images > 0 {
+            format!(
+                "\nstream: images={} images_per_sec={:.1}",
+                self.n_images, self.images_per_sec
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} cores={} wall={:?} host_rps={:.1} errors={} shed={} retried={} recovered_peers={}\n\
              sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% \
-             wcache_hits={} wcache_misses={} wcache_saved={}B mix=[{}]",
+             wcache_hits={} wcache_misses={} wcache_saved={}B mix=[{}]{}",
             self.n_requests,
             self.n_cores,
             self.wall,
@@ -374,7 +442,8 @@ impl Report {
             self.n_weight_hits,
             self.n_weight_misses,
             self.wire_weight_bytes_saved,
-            mix
+            mix,
+            stream
         )
     }
 
@@ -384,6 +453,8 @@ impl Report {
         Json::obj(vec![
             ("n_requests", Json::num(self.n_requests as f64)),
             ("n_cores", Json::num(self.n_cores as f64)),
+            ("n_images", Json::num(self.n_images as f64)),
+            ("images_per_sec", Json::num(self.images_per_sec)),
             ("n_errors", Json::num(self.n_errors as f64)),
             ("n_shed", Json::num(self.n_shed as f64)),
             ("n_retried", Json::num(self.n_retried as f64)),
@@ -701,6 +772,65 @@ mod tests {
             report.n_weight_hits + report.n_weight_misses,
             n as u64,
             "every submission is either a hit or a miss over a wcache peer"
+        );
+        front.shutdown();
+        peer.stop();
+    }
+
+    #[test]
+    fn stream_trace_on_a_local_pool_matches_golden_and_reports_rate() {
+        let mut server = Server::new(
+            CoordinatorConfig::default().with_cores(2).with_stream_window(3),
+        );
+        let reg = ModelRegistry::builtin(2, 11);
+        let (report, outcome) = server.run_stream_trace(&reg, 5, 7, &mut |_| {});
+        assert_eq!(report.n_images, 5);
+        assert!(report.images_per_sec > 0.0);
+        assert_eq!(report.n_errors, 0, "{report:?}");
+        assert!(outcome.all_match(), "{:?}", outcome.images);
+        assert!(outcome.overlap_events > 0, "window=3 must overlap images");
+        // Layer jobs flowed through the same pool metrics as any trace.
+        assert_eq!(report.n_requests, outcome.n_layer_jobs);
+        // And the streaming fields survive the JSON emitter round-trip.
+        let j = report.to_json();
+        assert_eq!(j.get(&["n_images"]).unwrap().as_usize(), Some(5));
+        assert!(j.get(&["images_per_sec"]).unwrap().as_f64().unwrap() > 0.0);
+        assert!(report.render().contains("images=5"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stream_trace_over_a_v4_peer_rides_the_weight_store_across_images() {
+        // The tentpole acceptance at the serving layer: image 0 ships
+        // each layer's blob inline; every later image's layers hit the
+        // peer's content-addressed store.
+        use crate::coordinator::tcp::TcpServer;
+        let peer = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(2),
+        )
+        .expect("peer");
+        let cfg = CoordinatorConfig {
+            n_cores: 0,
+            ..CoordinatorConfig::default()
+                .with_remote_peer(peer.addr.to_string())
+                .with_stream_window(4)
+        };
+        let mut front = Server::try_new(cfg).expect("front dials the peer");
+        let reg = ModelRegistry::builtin(1, 13);
+        let (report, outcome) = front.run_stream_trace(&reg, 4, 19, &mut |_| {});
+        assert_eq!(report.n_images, 4);
+        assert!(outcome.all_match(), "{:?}", outcome.images);
+        assert!(
+            report.n_weight_hits > 0,
+            "repeat images must ride the weight store: {report:?}"
+        );
+        // At most one inline ship per distinct blob in the model.
+        assert!(
+            (report.n_weight_misses as usize) <= reg.distinct_weight_hashes(),
+            "misses {} > distinct blobs {}",
+            report.n_weight_misses,
+            reg.distinct_weight_hashes()
         );
         front.shutdown();
         peer.stop();

@@ -1,0 +1,406 @@
+//! Whole-network streaming inference across the pool.
+//!
+//! [`super::scheduler::CnnScheduler`] chains a CNN's layers on *one*
+//! backend, the way the paper's §4.1 chains output BRAMs into the next
+//! layer's input. [`StreamScheduler`] generalises that chaining to the
+//! whole heterogeneous pool: a client submits `(model_id, input_image)`
+//! and the scheduler walks the registry manifest's layer chain across
+//! whatever workers exist — depthwise layers only ever reach
+//! depthwise-capable workers (the dispatch capability mask), pointwise
+//! layers land on whichever worker quotes the cheapest load — applying
+//! each inter-layer boundary transform (requantise / ReLU-by-clamp /
+//! maxpool / re-pad, [`crate::registry::LayerParams::boundary`]) on the
+//! front between hops. Weights ride the jobs by `weights_hash`, so a
+//! wire-v4 peer that served layer k of image 0 serves layer k of every
+//! later image from its content-addressed store without the blob ever
+//! crossing the wire again.
+//!
+//! Images are **pipelined**: up to `window` images are in flight at
+//! once, so layer k+1 of image i overlaps layer k of image i+1 on other
+//! workers — the §4.1 chained dataflow stretched across machines.
+//! `window == 1` degenerates to the serial baseline (one image fully
+//! drains before the next is admitted); [`StreamOutcome::overlap_events`]
+//! counts the layer completions that actually overlapped another
+//! in-flight image, which is how the CI smoke proves the pipelining is
+//! real and not just configured.
+//!
+//! Every image's final logits are checked against the manifest's own
+//! CPU reference ([`crate::registry::ModelManifest::forward_golden`])
+//! — streaming is an *execution* strategy, never a numerics change.
+
+use super::batcher::Batch;
+use super::dispatch::CorePool;
+use super::request::{ConvResult, Submission};
+use crate::model::Tensor;
+use crate::registry::{ModelManifest, ModelRegistry};
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+/// Job ids encode `(image, layer)` so one shared reply channel can
+/// demultiplex the whole stream: `id = image * ID_STRIDE + layer`.
+/// No model here comes near 1024 layers.
+const ID_STRIDE: u64 = 1024;
+
+/// How many times one layer hop may be resubmitted after an error
+/// result (every resubmit re-enters capability-masked dispatch, which
+/// itself retries across siblings). With [`RETRY_BACKOFF`] this gives a
+/// killed-and-revived peer ~15 s to come back — the same patience as
+/// the chaos harness's health-recovery deadline.
+const MAX_LAYER_ATTEMPTS: u32 = 150;
+const RETRY_BACKOFF: Duration = Duration::from_millis(100);
+
+/// One image's journey through the stream.
+#[derive(Clone, Debug)]
+pub struct ImageOutcome {
+    pub image: usize,
+    /// Registry model index this image was submitted against.
+    pub model: usize,
+    /// Final-layer logits as served by the pool (empty on failure).
+    pub logits: Vec<i32>,
+    /// The manifest's CPU reference for the same input.
+    pub golden: Vec<i32>,
+    /// `logits == golden`, bit-exact.
+    pub matches: bool,
+    /// Set when the image could not be completed (every capable worker
+    /// stayed down past the retry budget). Never silently dropped.
+    pub error: Option<String>,
+    /// Wall latency from admission to final logits.
+    pub latency: Duration,
+}
+
+/// What one streaming run produced, beyond the pool-level metrics.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    pub images: Vec<ImageOutcome>,
+    /// Layer completions that happened while at least one *other* image
+    /// was in flight — the direct evidence of cross-image pipelining.
+    /// Zero when `window == 1`.
+    pub overlap_events: u64,
+    /// Successfully answered layer jobs (resubmits count once, on the
+    /// attempt that succeeded).
+    pub n_layer_jobs: usize,
+    /// Error results that triggered a layer resubmission.
+    pub n_resubmits: usize,
+    /// Mean per-layer-index serving latency in µs (index = layer depth;
+    /// models of different depths fold into the same vector).
+    pub mean_layer_latency_us: Vec<u64>,
+    /// Answered layer jobs per backend name.
+    pub backend_mix: Vec<(&'static str, usize)>,
+    pub wall: Duration,
+}
+
+impl StreamOutcome {
+    /// Every image completed and matched its golden reference.
+    pub fn all_match(&self) -> bool {
+        self.images.iter().all(|o| o.matches)
+    }
+
+    pub fn images_per_sec(&self) -> f64 {
+        self.images.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Internal per-image progress: which layer is in flight and what its
+/// input was (retained so an error result can be resubmitted).
+struct ImageState {
+    model: usize,
+    layer: usize,
+    input: Tensor<u8>,
+    attempts: u32,
+    admitted: Instant,
+}
+
+/// The streaming front: walks every image's layer chain across the
+/// pool, `window` images in flight at once. Borrowed (not owned) pool
+/// and registry: the same pool serves trace fronts before and after a
+/// stream.
+pub struct StreamScheduler<'a> {
+    pool: &'a CorePool,
+    registry: &'a ModelRegistry,
+    window: usize,
+}
+
+impl<'a> StreamScheduler<'a> {
+    pub fn new(pool: &'a CorePool, registry: &'a ModelRegistry, window: usize) -> Self {
+        StreamScheduler {
+            pool,
+            registry,
+            window: window.max(1),
+        }
+    }
+
+    /// Stream `n_images` images (image i drives model `i % n_models`,
+    /// input generated from `seed` via the registry's deterministic
+    /// scheme) and return every outcome.
+    pub fn run(&self, n_images: usize, seed: u64) -> StreamOutcome {
+        self.run_with(n_images, seed, &mut |_| {})
+    }
+
+    /// Like [`Self::run`], with `on_image(i)` fired just before image
+    /// `i` is admitted — the chaos harness's hook for killing and
+    /// reviving peers mid-stream.
+    pub fn run_with(
+        &self,
+        n_images: usize,
+        seed: u64,
+        on_image: &mut dyn FnMut(usize),
+    ) -> StreamOutcome {
+        let (tx, rx) = channel::<ConvResult>();
+        let start = Instant::now();
+        let mut inflight: BTreeMap<usize, ImageState> = BTreeMap::new();
+        let mut outcomes: Vec<Option<ImageOutcome>> = (0..n_images).map(|_| None).collect();
+        let mut finished = 0usize;
+        let mut next_image = 0usize;
+        let mut overlap_events = 0u64;
+        let mut n_layer_jobs = 0usize;
+        let mut n_resubmits = 0usize;
+        let mut layer_lat: Vec<(u64, u64)> = Vec::new(); // (sum_us, count)
+        let mut mix: BTreeMap<&'static str, usize> = BTreeMap::new();
+
+        while finished < n_images {
+            // Admit images up to the window; this is what creates the
+            // cross-image overlap (window == 1 serialises the stream).
+            while inflight.len() < self.window && next_image < n_images {
+                let i = next_image;
+                next_image += 1;
+                on_image(i);
+                let model = i % self.registry.n_models();
+                let manifest = &self.registry.models()[model];
+                let input = manifest.sample_image(seed ^ ((i as u64) << 1));
+                let state = ImageState {
+                    model,
+                    layer: 0,
+                    input,
+                    attempts: 0,
+                    admitted: Instant::now(),
+                };
+                self.submit(&tx, manifest, i, &state);
+                inflight.insert(i, state);
+            }
+
+            let r = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => unreachable!("scheduler holds a sender while images are in flight"),
+            };
+            let image = (r.id / ID_STRIDE) as usize;
+            let layer = (r.id % ID_STRIDE) as usize;
+            // Stale results (a duplicate from a failed-over worker, or a
+            // hop that was already resubmitted) are dropped, not applied.
+            let model = match inflight.get(&image) {
+                Some(s) if s.layer == layer => s.model,
+                _ => continue,
+            };
+            let manifest = &self.registry.models()[model];
+
+            if let Some(err) = r.error {
+                // Every capable worker failed this hop (dispatch already
+                // tried siblings). Back off and resubmit: a killed peer
+                // may be revived, and the pool's health probe will fold
+                // it back in. Bounded — a permanently dead fleet surfaces
+                // as a per-image error outcome, never a hang.
+                n_resubmits += 1;
+                let attempts = {
+                    let s = inflight.get_mut(&image).expect("state present");
+                    s.attempts += 1;
+                    s.attempts
+                };
+                if attempts > MAX_LAYER_ATTEMPTS {
+                    let state = inflight.remove(&image).expect("state present");
+                    outcomes[image] = Some(ImageOutcome {
+                        image,
+                        model,
+                        logits: Vec::new(),
+                        golden: manifest
+                            .forward_golden(
+                                &manifest.sample_image(seed ^ ((image as u64) << 1)),
+                            )
+                            .into_data(),
+                        matches: false,
+                        error: Some(err),
+                        latency: state.admitted.elapsed(),
+                    });
+                    finished += 1;
+                    continue;
+                }
+                std::thread::sleep(RETRY_BACKOFF);
+                self.submit(&tx, manifest, image, &inflight[&image]);
+                continue;
+            }
+
+            // A good layer result. Count the overlap first: did it
+            // complete while another image was also mid-network?
+            if inflight.len() > 1 {
+                overlap_events += 1;
+            }
+            n_layer_jobs += 1;
+            *mix.entry(r.backend).or_default() += 1;
+            if layer_lat.len() <= layer {
+                layer_lat.resize(layer + 1, (0, 0));
+            }
+            layer_lat[layer].0 += r.latency.as_micros() as u64;
+            layer_lat[layer].1 += 1;
+
+            match manifest.layers[layer].boundary(&r.output) {
+                Some(next_input) => {
+                    // Inter-layer boundary applied on the front; hand the
+                    // next layer to whichever worker dispatch picks.
+                    {
+                        let s = inflight.get_mut(&image).expect("state present");
+                        s.layer = layer + 1;
+                        s.input = next_input;
+                        s.attempts = 0;
+                    }
+                    self.submit(&tx, manifest, image, &inflight[&image]);
+                }
+                None => {
+                    // Final layer: raw logits. Check against the
+                    // manifest's own CPU reference.
+                    let state = inflight.remove(&image).expect("state present");
+                    let golden = manifest
+                        .forward_golden(&manifest.sample_image(seed ^ ((image as u64) << 1)))
+                        .into_data();
+                    let logits = r.output.into_data();
+                    outcomes[image] = Some(ImageOutcome {
+                        image,
+                        model,
+                        matches: logits == golden,
+                        logits,
+                        golden,
+                        error: None,
+                        latency: state.admitted.elapsed(),
+                    });
+                    finished += 1;
+                }
+            }
+        }
+        drop(tx);
+
+        StreamOutcome {
+            images: outcomes
+                .into_iter()
+                .map(|o| o.expect("every admitted image reaches an outcome"))
+                .collect(),
+            overlap_events,
+            n_layer_jobs,
+            n_resubmits,
+            mean_layer_latency_us: layer_lat
+                .iter()
+                .map(|&(sum, n)| if n == 0 { 0 } else { sum / n })
+                .collect(),
+            backend_mix: mix.into_iter().collect(),
+            wall: start.elapsed(),
+        }
+    }
+
+    /// Submit one image's current layer as a single-job batch. Streaming
+    /// hops skip the cross-request batcher: each hop's input exists only
+    /// after the previous hop, so there is nothing same-weight to
+    /// coalesce with at submission time — weight reuse comes from the
+    /// wire-v4 store (repeat images) instead of batch adjacency.
+    fn submit(
+        &self,
+        tx: &std::sync::mpsc::Sender<ConvResult>,
+        manifest: &ModelManifest,
+        image: usize,
+        state: &ImageState,
+    ) {
+        let id = image as u64 * ID_STRIDE + state.layer as u64;
+        let job = manifest
+            .layer_job(state.layer, id, state.input.clone())
+            .expect("manifest layer chain is internally consistent");
+        let batch = Batch {
+            spec: job.spec,
+            weights_id: job.weights_id,
+            kind: job.kind,
+            accum: job.accum,
+            jobs: vec![Submission {
+                job,
+                reply: tx.clone(),
+                enqueued: Instant::now(),
+            }],
+        };
+        self.pool.dispatch(batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::IpCoreConfig;
+
+    fn local_pool(cores: usize) -> CorePool {
+        CorePool::new(cores, IpCoreConfig::default())
+    }
+
+    #[test]
+    fn stream_matches_golden_per_image_and_overlaps() {
+        let pool = local_pool(2);
+        let reg = ModelRegistry::builtin(2, 11);
+        let sched = StreamScheduler::new(&pool, &reg, 4);
+        let out = sched.run(6, 5);
+        assert_eq!(out.images.len(), 6);
+        for o in &out.images {
+            assert!(o.error.is_none(), "image {} errored: {:?}", o.image, o.error);
+            assert!(o.matches, "image {} diverged from golden", o.image);
+            assert!(!o.logits.is_empty());
+            assert_eq!(o.model, o.image % 2, "round-robin model assignment");
+        }
+        // Window 4 over 6 images: the very first completion already has
+        // other images in flight.
+        assert!(out.overlap_events > 0, "no pipelining observed");
+        // Every model here is at least 3 layers deep.
+        assert!(out.mean_layer_latency_us.len() >= 3);
+        let total_layers: usize = (0..out.images.len())
+            .map(|i| reg.n_layers(i % 2))
+            .sum();
+        assert_eq!(out.n_layer_jobs, total_layers);
+        assert_eq!(out.n_resubmits, 0);
+        assert!(out.images_per_sec() > 0.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn window_one_serialises_images() {
+        let pool = local_pool(2);
+        let reg = ModelRegistry::builtin(1, 7);
+        let sched = StreamScheduler::new(&pool, &reg, 1);
+        let out = sched.run(3, 9);
+        assert!(out.all_match(), "{:?}", out.images);
+        assert_eq!(
+            out.overlap_events, 0,
+            "window=1 must never overlap images"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stream_is_deterministic_across_runs_and_window_sizes() {
+        // The window changes *scheduling*, never numerics: logits for
+        // the same (registry, seed) are identical at any window.
+        let reg = ModelRegistry::builtin(2, 13);
+        let pool_a = local_pool(1);
+        let a = StreamScheduler::new(&pool_a, &reg, 1).run(4, 21);
+        let pool_b = local_pool(3);
+        let b = StreamScheduler::new(&pool_b, &reg, 4).run(4, 21);
+        assert!(a.all_match() && b.all_match());
+        for (x, y) in a.images.iter().zip(&b.images) {
+            assert_eq!(x.logits, y.logits);
+            assert_eq!(x.golden, y.golden);
+        }
+        pool_a.shutdown();
+        pool_b.shutdown();
+    }
+
+    #[test]
+    fn stream_hook_fires_once_per_image_in_admission_order() {
+        let pool = local_pool(2);
+        let reg = ModelRegistry::builtin(1, 3);
+        let sched = StreamScheduler::new(&pool, &reg, 2);
+        let mut seen = Vec::new();
+        let out = sched.run_with(4, 1, &mut |i| seen.push(i));
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert!(out.all_match());
+        pool.shutdown();
+    }
+}

@@ -811,8 +811,10 @@ fn job_from_request(
                 // concern.
                 accum: crate::hw::AccumMode::I32,
                 img: Tensor::from_vec(&[spec.c, spec.h, spec.w], img),
-                weights,
-                bias,
+                // Wire jobs own their bytes (they just crossed the
+                // socket); the Arc exists for registry-path sharing.
+                weights: Arc::new(weights),
+                bias: Arc::new(bias),
                 weights_id,
                 weights_hash: whash,
                 wire_weights_cached: false,

@@ -12,6 +12,7 @@
 //! repro infer [--seed S] [--xla]        edge CNN inference: hw-sim vs golden (vs XLA)
 //! repro serve [--cores N] [--golden N] [--im2col N] [--remote host:port[,host:port...]]
 //!             [--requests N] [--s52 F] [--dw F] [--models M] [--bench-json PATH]
+//!             [--stream] [--images N] [--window W]
 //!                                       closed-loop trace through the coordinator
 //!                                       (--golden adds naive CPU fallback workers,
 //!                                        --im2col adds threaded im2col+GEMM workers,
@@ -20,7 +21,13 @@
 //!                                        --models M switches to registry traffic:
 //!                                        requests are (model, layer) submissions
 //!                                        over M registered models instead of the
-//!                                        synthetic trace);
+//!                                        synthetic trace;
+//!                                        --stream switches to whole-network
+//!                                        streaming inference: --images N images are
+//!                                        walked through their model's layer chain
+//!                                        across the pool, up to --window W in
+//!                                        flight at once, every image checked
+//!                                        bit-exact against the registry golden);
 //!                                       writes a machine-readable BENCH_serving.json
 //! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N] [--v2-only]
 //!                                       serve wire protocol v4 over TCP (binary
@@ -29,6 +36,7 @@
 //!                                       legacy v2 JSON framing)
 //! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
 //!             [--gap-us G] [--max-inflight P] [--v2-peers M] [--models M]
+//!             [--stream] [--images N] [--window W]
 //!             [--kill-peer-after K] [--revive-after M]
 //!                                       multi-machine demo: spawn N in-process TCP
 //!                                       peers, front them with one remote-core pool,
@@ -41,7 +49,19 @@
 //!                                       traffic over M models and exits non-zero
 //!                                       unless the v4 weight store saw hits while
 //!                                       every v2-pinned peer stayed cache-silent
-//!                                       (incompatible with --kill-peer-after).
+//!                                       (incompatible with --kill-peer-after
+//!                                       unless --stream is also given).
+//!                                       --stream (needs --models) streams --images
+//!                                       N whole-network images through the fleet,
+//!                                       --window W in flight at once; exits
+//!                                       non-zero unless every image's logits are
+//!                                       bit-identical to the registry golden, the
+//!                                       weight store saw hits after image 0, and
+//!                                       cross-image overlap was observed. With
+//!                                       --kill-peer-after K / --revive-after M the
+//!                                       indexes are *image* numbers and the killed
+//!                                       peer's in-flight layers fail over without
+//!                                       losing any image.
 //!                                       Chaos mode: --kill-peer-after K severs the
 //!                                       last peer just before trace entry K (its
 //!                                       port stays bound, connections drop);
@@ -80,7 +100,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["vcd", "wrap8", "no-pipeline", "dma", "xla", "v2-only"])
+    let args = Args::parse(argv, &["vcd", "wrap8", "no-pipeline", "dma", "xla", "v2-only", "stream"])
         .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
@@ -285,8 +305,44 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let s52 = args.get_f64("s52", 0.1).map_err(|e| anyhow::anyhow!(e))?;
     let dw = args.get_f64("dw", 0.0).map_err(|e| anyhow::anyhow!(e))?;
     let models = args.get_usize("models", 0).map_err(|e| anyhow::anyhow!(e))?;
-    let mut server = Server::try_new(front_config(cores, golden, im2col, args.get("remote"))?)?;
-    let report = if models > 0 {
+    let stream = args.flag("stream");
+    let images = args.get_usize("images", 16).map_err(|e| anyhow::anyhow!(e))?;
+    let window = args.get_usize("window", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let config = front_config(cores, golden, im2col, args.get("remote"))?
+        .with_stream_window(window);
+    let mut server = Server::try_new(config)?;
+    let report = if stream {
+        // Whole-network streaming: each submission is (model, image),
+        // walked layer-by-layer across the pool by the stream scheduler.
+        anyhow::ensure!(
+            models > 0,
+            "--stream resolves whole-network submissions through the registry; give --models M"
+        );
+        anyhow::ensure!(images > 0, "--stream needs at least one image");
+        let registry = repro::registry::ModelRegistry::builtin(models, 11);
+        println!(
+            "serve: streaming {images} images over {models} models (window {window})"
+        );
+        let (report, outcome) = server.run_stream_trace(&registry, images, 11, &mut |_| {});
+        for (l, us) in outcome.mean_layer_latency_us.iter().enumerate() {
+            println!("  layer[{l}] mean latency = {us}us");
+        }
+        for o in &outcome.images {
+            anyhow::ensure!(
+                o.error.is_none() && o.matches,
+                "image {} diverged from the registry golden: {:?}",
+                o.image,
+                o.error
+            );
+        }
+        println!(
+            "stream OK: {} images bit-exact vs golden, {} overlap events, {} layer jobs",
+            outcome.images.len(),
+            outcome.overlap_events,
+            outcome.n_layer_jobs
+        );
+        report
+    } else if models > 0 {
         // Registry traffic: requests are (model, layer) submissions over
         // the multi-model registry instead of the synthetic shape trace.
         let registry = repro::registry::ModelRegistry::builtin(models, 11);
@@ -352,15 +408,29 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "--v2-peers {v2_peers} exceeds the fleet size {n}"
     );
     let models = args.get_usize("models", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let stream = args.flag("stream");
+    let images = args.get_usize("images", 16).map_err(|e| anyhow::anyhow!(e))?;
+    let window = args.get_usize("window", 4).map_err(|e| anyhow::anyhow!(e))?;
     let kill_after = opt_entry("kill-peer-after")?;
     let revive_after = opt_entry("revive-after")?;
-    anyhow::ensure!(
-        models == 0 || kill_after.is_none(),
-        "--models cannot be combined with --kill-peer-after (chaos mode drives the synthetic trace)"
-    );
+    if stream {
+        anyhow::ensure!(
+            models > 0,
+            "--stream resolves whole-network submissions through the registry; give --models M"
+        );
+        anyhow::ensure!(images > 0, "--stream needs at least one image");
+    } else {
+        anyhow::ensure!(
+            models == 0 || kill_after.is_none(),
+            "--models cannot be combined with --kill-peer-after (chaos mode drives the \
+             synthetic trace; streaming chaos needs --stream)"
+        );
+    }
+    // In stream mode the chaos indexes count *images*, not trace entries.
+    let chaos_span = if stream { images } else { requests };
     if let Some(k) = kill_after {
         anyhow::ensure!(n >= 2, "chaos mode needs at least two peers to fail over between");
-        anyhow::ensure!(k < requests, "--kill-peer-after {k} is past the end of the trace");
+        anyhow::ensure!(k < chaos_span, "--kill-peer-after {k} is past the end of the run");
         if let Some(m) = revive_after {
             anyhow::ensure!(m > k, "--revive-after must come after --kill-peer-after");
         }
@@ -400,7 +470,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         peer_addrs.join(", ")
     );
 
-    let mut config = front_config(cores, 0, 0, None)?;
+    let mut config = front_config(cores, 0, 0, None)?.with_stream_window(window);
     config = config.with_remote_peers(peer_addrs);
     if let Some(m) = args.get("max-inflight") {
         config.max_inflight_psums = Some(
@@ -409,7 +479,29 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         );
     }
     let mut front = Server::try_new(config)?;
-    let report = if models > 0 {
+    let mut stream_outcome = None;
+    let report = if stream {
+        // Whole-network streaming across the fleet: every image's layer
+        // chain hops across the peers (weights riding the v4 store),
+        // with the chaos hooks firing on *image* admission.
+        let registry = repro::registry::ModelRegistry::builtin(models, 17);
+        println!(
+            "fleet: streaming {images} images over {models} models (window {window}, {} distinct weight blobs)",
+            registry.distinct_weight_hashes()
+        );
+        let (report, outcome) = front.run_stream_trace(&registry, images, 17, &mut |i| {
+            if kill_after == Some(i) {
+                println!("chaos: killing peer {} before image {i}", n - 1);
+                peers[n - 1].set_down(true);
+            }
+            if revive_after == Some(i) {
+                println!("chaos: reviving peer {} before image {i}", n - 1);
+                peers[n - 1].set_down(false);
+            }
+        });
+        stream_outcome = Some(outcome);
+        report
+    } else if models > 0 {
         // Multi-tenant registry traffic: every request is a (model,
         // layer) submission, so repeated layers exercise the v4 weight
         // store across the fleet (chaos flags are rejected above).
@@ -532,6 +624,36 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         println!(
             "weight store OK: {} hits / {} misses, {} weight bytes kept off the wire",
             report.n_weight_hits, report.n_weight_misses, report.wire_weight_bytes_saved
+        );
+    }
+    if let Some(out) = &stream_outcome {
+        // Streaming contract: no image lost, every image bit-exact
+        // against the registry's own golden forward, and the pipelining
+        // demonstrably real (overlap observed, not just configured).
+        for o in &out.images {
+            anyhow::ensure!(
+                o.error.is_none() && o.matches,
+                "image {} diverged from the registry golden: {:?}",
+                o.image,
+                o.error
+            );
+        }
+        if window > 1 && images > 1 {
+            anyhow::ensure!(
+                out.overlap_events > 0,
+                "no cross-image overlap observed with window {window}"
+            );
+        }
+        for (l, us) in out.mean_layer_latency_us.iter().enumerate() {
+            println!("  layer[{l}] mean latency = {us}us");
+        }
+        println!(
+            "stream OK: {} images bit-exact vs golden at {:.1} images/s, {} overlap events, {} layer jobs ({} resubmitted)",
+            out.images.len(),
+            report.images_per_sec,
+            out.overlap_events,
+            out.n_layer_jobs,
+            out.n_resubmits
         );
     }
     anyhow::ensure!(

@@ -125,20 +125,30 @@ impl EdgeCnn {
     }
 }
 
+/// Index of the maximal logit; ties break toward the **lowest** index,
+/// matching numpy's `argmax` (the python mirror's classifier). A strict
+/// `>` fold keeps the first maximal element, where `max_by_key` would
+/// return the last.
 pub fn argmax(xs: &[i32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by_key(|(_, v)| **v)
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
 }
 
+/// Float analogue of [`argmax`]: first maximal index on ties; NaN
+/// entries never win (any comparison against them is not `Greater`).
 pub fn argmax_f32(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    let mut best = 0usize;
+    for (i, v) in xs.iter().enumerate().skip(1) {
+        if v.partial_cmp(&xs[best]) == Some(std::cmp::Ordering::Greater) {
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -192,5 +202,18 @@ mod tests {
         assert_eq!(argmax(&[1, 5, 3]), 1);
         assert_eq!(argmax(&[-1, -5]), 0);
         assert_eq!(argmax_f32(&[0.5, 2.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn argmax_ties_break_toward_lowest_index() {
+        // numpy.argmax semantics: first maximal element wins.
+        assert_eq!(argmax(&[5, 5, 1]), 0);
+        assert_eq!(argmax(&[1, 7, 7, 7]), 1);
+        assert_eq!(argmax(&[0, 0, 0]), 0);
+        assert_eq!(argmax_f32(&[2.0, 2.0]), 0);
+        assert_eq!(argmax_f32(&[-1.0, 3.5, 3.5, 0.0]), 1);
+        // A later NaN never dethrones an established max.
+        assert_eq!(argmax_f32(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax_f32(&[1.0, f32::NAN]), 0);
     }
 }

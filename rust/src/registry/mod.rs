@@ -13,8 +13,12 @@
 //! ([`crate::model::mobilenet::MobileNetLite`]), lowered exactly the
 //! way `infer_sim` lowers it (depthwise 3×3 blocks plus pointwise
 //! layers pre-lowered to the padded-3×3 dataflow), and models 1..N are
-//! synthetic tenants over trace-library shapes
-//! ([`crate::model::trace`]) with per-model weight sets.
+//! synthetic tenants over a chainable mixed-kind layer stack with
+//! per-model weight sets. Every manifest layer also carries its
+//! *boundary* transform (post-layer requant, optional `pad1`), so a
+//! whole network can be walked layer-by-layer across the pool — the
+//! streaming mode ([`crate::coordinator::stream`]) and
+//! [`ModelManifest::forward_golden`] both consume the same metadata.
 //!
 //! Everything here is ordinary `ConvJob` construction — the registry
 //! changes *where tensors come from*, never what the backends compute,
@@ -25,23 +29,36 @@ use crate::backend::JobKind;
 use crate::coordinator::request::{
     fnv1a_bytes, weights_fingerprint_salted, ConvJob,
 };
-use crate::hw::depthwise::pointwise_as_3x3;
+use crate::hw::depthwise::{golden_depthwise3x3, pad1, pointwise_as_3x3};
 use crate::hw::AccumMode;
 use crate::model::mobilenet::{mobilenet_lite_specs, MobileNetLite};
-use crate::model::{LayerSpec, Tensor};
+use crate::model::quant::{calibrate_from, Requant};
+use crate::model::{golden, LayerSpec, Tensor};
 use crate::util::prng::Prng;
+use std::sync::Arc;
 
 /// One layer of a manifest: everything needed to build a `ConvJob`
-/// except the input image.
+/// except the input image, plus the *boundary* transform that turns
+/// this layer's i32 output into the next layer's u8 input — what the
+/// streaming scheduler applies on the front between hops.
 #[derive(Clone)]
 pub struct LayerParams {
     pub spec: LayerSpec,
     pub kind: JobKind,
-    pub weights: std::sync::Arc<Tensor<u8>>,
-    pub bias: std::sync::Arc<Vec<i32>>,
+    pub weights: Arc<Tensor<u8>>,
+    pub bias: Arc<Vec<i32>>,
     /// Content address: FNV-1a over the raw weight bytes — the wire
     /// v4 `weights_hash` and the [`crate::store::WeightStore`] key.
     pub weights_hash: u64,
+    /// Requantiser applied to this layer's i32 output before it feeds
+    /// the next layer; `None` on the final layer (raw logits out).
+    /// `Requant::apply` clamps negatives to zero, so the boundary
+    /// subsumes ReLU exactly like the `CnnScheduler`/mobilenet paths.
+    pub post_requant: Option<Requant>,
+    /// Zero-pad the requantised output by one pixel before the next
+    /// layer — the mobilenet pointwise-as-3×3 layers consume pre-padded
+    /// inputs (`pad1` in `infer_sim`).
+    pub pad_next: bool,
 }
 
 impl LayerParams {
@@ -50,10 +67,35 @@ impl LayerParams {
         LayerParams {
             spec,
             kind,
-            weights: std::sync::Arc::new(weights),
-            bias: std::sync::Arc::new(bias),
+            weights: Arc::new(weights),
+            bias: Arc::new(bias),
             weights_hash,
+            post_requant: None,
+            pad_next: false,
         }
+    }
+
+    fn with_boundary(mut self, post_requant: Option<Requant>, pad_next: bool) -> Self {
+        self.post_requant = post_requant;
+        self.pad_next = pad_next;
+        self
+    }
+
+    /// Apply this layer's boundary transform to its raw i32 output:
+    /// optional 2×2 maxpool, requantise to u8 (clamping negatives —
+    /// ReLU), then optional `pad1` for a pre-padded next layer. Returns
+    /// `None` on the final layer, whose i32 output *is* the logits.
+    pub fn boundary(&self, out: &Tensor<i32>) -> Option<Tensor<u8>> {
+        let q = self.post_requant?;
+        let pooled;
+        let out = if self.spec.pool {
+            pooled = golden::maxpool2x2(out);
+            &pooled
+        } else {
+            out
+        };
+        let x = q.apply(out);
+        Some(if self.pad_next { pad1(&x) } else { x })
     }
 }
 
@@ -63,19 +105,99 @@ pub struct ModelManifest {
     pub layers: Vec<LayerParams>,
 }
 
+impl ModelManifest {
+    /// Shape of the image a whole-network submission feeds layer 0.
+    pub fn input_spec(&self) -> LayerSpec {
+        self.layers[0].spec
+    }
+
+    /// Deterministic synthetic input image for a streaming submission —
+    /// the same Prng scheme as [`ModelRegistry::job`], so a stream's
+    /// reference forward can be recomputed from `(model, seed)` alone.
+    pub fn sample_image(&self, seed: u64) -> Tensor<u8> {
+        let s = self.input_spec();
+        let mut rng = Prng::new(seed);
+        Tensor::from_vec(&[s.c, s.h, s.w], rng.bytes_below(s.c * s.h * s.w, 256))
+    }
+
+    /// Build the `ConvJob` for one layer of this model over an explicit
+    /// input tensor — the streaming scheduler's per-hop constructor.
+    /// The manifest's weight/bias Arcs are *shared into* the job
+    /// (pointer clone, never a byte copy).
+    pub fn layer_job(
+        &self,
+        layer_idx: usize,
+        job_id: u64,
+        img: Tensor<u8>,
+    ) -> anyhow::Result<ConvJob> {
+        let layer = self.layers.get(layer_idx).ok_or_else(|| {
+            anyhow::anyhow!("model {} has no layer {layer_idx}", self.id)
+        })?;
+        let spec = layer.spec;
+        anyhow::ensure!(
+            img.shape() == [spec.c, spec.h, spec.w].as_slice(),
+            "model {} layer {layer_idx} wants input {:?}, got {:?}",
+            self.id,
+            [spec.c, spec.h, spec.w],
+            img.shape()
+        );
+        Ok(ConvJob {
+            id: job_id,
+            spec,
+            kind: layer.kind,
+            accum: AccumMode::I32,
+            img,
+            weights: Arc::clone(&layer.weights),
+            bias: Arc::clone(&layer.bias),
+            weights_id: weights_fingerprint_salted(&spec, layer.kind, layer.weights_hash),
+            weights_hash: layer.weights_hash,
+            wire_weights_cached: false,
+        })
+    }
+
+    /// Whole-network CPU reference: run every layer's golden kernel and
+    /// every boundary transform. For `mobilenet-lite` this is
+    /// bit-identical to [`MobileNetLite::forward_golden`] (the lowering
+    /// is exact); for synthetic tenants it *defines* the reference the
+    /// streaming parity/chaos legs compare against.
+    pub fn forward_golden(&self, img: &Tensor<u8>) -> Tensor<i32> {
+        let mut x = img.clone();
+        let n = self.layers.len();
+        for (i, l) in self.layers.iter().enumerate() {
+            let out = match l.kind {
+                JobKind::Depthwise => {
+                    golden_depthwise3x3(&x, &l.weights, l.bias.as_slice(), l.spec.relu)
+                }
+                _ => golden::conv3x3_i32(&x, &l.weights, l.bias.as_slice(), l.spec.relu),
+            };
+            match l.boundary(&out) {
+                Some(next) => x = next,
+                None => {
+                    assert_eq!(i, n - 1, "only the final layer lacks a boundary requant");
+                    return out;
+                }
+            }
+        }
+        unreachable!("manifest has at least one layer")
+    }
+}
+
 /// The registry: every model this process can serve requests for.
 pub struct ModelRegistry {
     models: Vec<ModelManifest>,
 }
 
-/// Synthetic-tenant layer library: paper-compatible standard shapes
-/// plus one depthwise, echoing the trace generator's mix so synthetic
-/// tenants stress the same routing paths as `model/trace.rs` traffic.
+/// Synthetic-tenant layer library: paper-compatible shapes mixing
+/// standard and depthwise kinds (the same routing paths as
+/// `model/trace.rs` traffic) — and, since the streaming mode, a
+/// *chainable* network: each layer's valid-conv output shape is the
+/// next layer's input shape, so a synthetic tenant can be served
+/// end-to-end (`ModelManifest::forward_golden`), not just per-layer.
 fn synthetic_layer_specs() -> Vec<(LayerSpec, JobKind)> {
     vec![
-        (LayerSpec::new(8, 16, 16, 8), JobKind::Standard),
-        (LayerSpec::new(4, 12, 12, 8), JobKind::Standard),
-        (LayerSpec::new(8, 15, 15, 8), JobKind::Depthwise),
+        (LayerSpec::new(8, 16, 16, 8), JobKind::Standard), // -> 8x14x14
+        (LayerSpec::new(8, 14, 14, 8).with_relu(), JobKind::Depthwise), // -> 8x12x12
+        (LayerSpec::new(8, 12, 12, 8), JobKind::Standard), // -> 8x10x10 logits map
     ]
 }
 
@@ -90,31 +212,42 @@ impl ModelRegistry {
         let mut models = Vec::with_capacity(n_models);
         let net = MobileNetLite::new(seed);
         let mut layers = Vec::new();
-        for b in &net.blocks {
+        for (b, (q_dw, q_pw)) in net.blocks.iter().zip(&net.requants) {
             // Depthwise 3×3 (+fused ReLU), exactly as infer_sim runs it.
+            // Its boundary is the block's calibrated after-depthwise
+            // requant plus `pad1` — the pointwise layer consumes a
+            // pre-padded input.
             let dw_spec =
                 LayerSpec::new(b.spec.c, b.spec.h, b.spec.w, b.spec.c).with_relu();
-            layers.push(LayerParams::new(
-                dw_spec,
-                JobKind::Depthwise,
-                b.dw.clone(),
-                b.dw_bias.clone(),
-            ));
+            layers.push(
+                LayerParams::new(
+                    dw_spec,
+                    JobKind::Depthwise,
+                    b.dw.clone(),
+                    b.dw_bias.clone(),
+                )
+                .with_boundary(Some(*q_dw), true),
+            );
             // Pointwise 1×1 pre-lowered to the padded-3×3 dataflow: the
             // stored weights are already the centre-tapped (K,C,3,3)
             // tensor, so a registry job is explicit tensors on the wire.
+            // Its boundary is the after-pointwise requant — absent on
+            // the last block, whose raw i32 map is the logits.
             let pw_spec = LayerSpec::new(
                 b.spec.c,
                 b.spec.dw_oh() + 2,
                 b.spec.dw_ow() + 2,
                 b.spec.k,
             );
-            layers.push(LayerParams::new(
-                pw_spec,
-                JobKind::PointwiseAs3x3,
-                pointwise_as_3x3(&b.pw),
-                b.pw_bias.clone(),
-            ));
+            layers.push(
+                LayerParams::new(
+                    pw_spec,
+                    JobKind::PointwiseAs3x3,
+                    pointwise_as_3x3(&b.pw),
+                    b.pw_bias.clone(),
+                )
+                .with_boundary(*q_pw, false),
+            );
         }
         models.push(ModelManifest {
             id: "mobilenet-lite".to_string(),
@@ -123,8 +256,9 @@ impl ModelRegistry {
         for m in 1..n_models {
             // Per-model weight stream: tenants must not share bytes, or
             // the store could not tell their residency apart.
-            let mut rng = Prng::new(seed ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            let layers = synthetic_layer_specs()
+            let tenant_seed = seed ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Prng::new(tenant_seed);
+            let mut layers: Vec<LayerParams> = synthetic_layer_specs()
                 .into_iter()
                 .map(|(spec, kind)| {
                     let weight_len = match kind {
@@ -146,6 +280,28 @@ impl ModelRegistry {
                     LayerParams::new(spec, kind, weights, bias)
                 })
                 .collect();
+            // Calibrate boundary requants on one deterministic sample
+            // forward, like EdgeCnn/MobileNetLite do — the chain is
+            // what makes a synthetic tenant streamable end-to-end.
+            let first = layers[0].spec;
+            let mut cal = Prng::new(tenant_seed ^ 0xCA11B);
+            let mut x = Tensor::from_vec(
+                &[first.c, first.h, first.w],
+                cal.bytes_below(first.c * first.h * first.w, 256),
+            );
+            let n = layers.len();
+            for i in 0..n - 1 {
+                let l = &layers[i];
+                let out = match l.kind {
+                    JobKind::Depthwise => {
+                        golden_depthwise3x3(&x, &l.weights, l.bias.as_slice(), l.spec.relu)
+                    }
+                    _ => golden::conv3x3_i32(&x, &l.weights, l.bias.as_slice(), l.spec.relu),
+                };
+                let q = calibrate_from(&out);
+                x = q.apply(&out);
+                layers[i].post_requant = Some(q);
+            }
             models.push(ModelManifest {
                 id: format!("synthetic-{m}"),
                 layers,
@@ -198,7 +354,9 @@ impl ModelRegistry {
     /// manifest weights + a deterministic synthetic input image from
     /// `input_seed`. The weight fingerprint is derived from the actual
     /// bytes exactly like the wire's explicit-tensor path, so batching
-    /// and DMA reuse treat registry jobs identically.
+    /// and DMA reuse treat registry jobs identically. The manifest's
+    /// weight/bias blobs are shared into the job by Arc — N requests
+    /// against one layer clone a pointer, never the tensor bytes.
     pub fn job(
         &self,
         model_idx: usize,
@@ -219,18 +377,7 @@ impl ModelRegistry {
             &[spec.c, spec.h, spec.w],
             rng.bytes_below(spec.c * spec.h * spec.w, 256),
         );
-        Ok(ConvJob {
-            id: job_id,
-            spec,
-            kind: layer.kind,
-            accum: AccumMode::I32,
-            img,
-            weights: (*layer.weights).clone(),
-            bias: (*layer.bias).clone(),
-            weights_id: weights_fingerprint_salted(&spec, layer.kind, layer.weights_hash),
-            weights_hash: layer.weights_hash,
-            wire_weights_cached: false,
-        })
+        model.layer_job(layer_idx, job_id, img)
     }
 }
 
@@ -316,6 +463,93 @@ mod tests {
         let reg = ModelRegistry::builtin(1, 3);
         assert!(reg.job(1, 0, 1, 1).is_err(), "unknown model");
         assert!(reg.job(0, 99, 1, 1).is_err(), "unknown layer");
+    }
+
+    #[test]
+    fn registry_jobs_share_weight_blobs_by_arc_not_by_copy() {
+        // The zero-copy contract: building jobs must clone the
+        // manifest's Arc, never the tensor bytes. Strong counts are the
+        // observable — manifest(1) + one per live job — and both jobs
+        // point at literally the same allocation.
+        let reg = ModelRegistry::builtin(1, 13);
+        let layer = &reg.models()[0].layers[0];
+        assert_eq!(Arc::strong_count(&layer.weights), 1);
+        let a = reg.job(0, 0, 1, 100).unwrap();
+        assert_eq!(Arc::strong_count(&layer.weights), 2, "one Arc per job, no deep copy");
+        let b = reg.job(0, 0, 2, 200).unwrap();
+        assert_eq!(Arc::strong_count(&layer.weights), 3);
+        assert_eq!(a.weights_refcount(), 3);
+        assert!(Arc::ptr_eq(&a.weights, &b.weights), "same allocation, not equal bytes");
+        assert!(Arc::ptr_eq(&a.bias, &layer.bias));
+        drop(a);
+        drop(b);
+        assert_eq!(Arc::strong_count(&layer.weights), 1, "jobs release their share");
+    }
+
+    #[test]
+    fn synthetic_tenants_chain_and_carry_boundary_requants() {
+        let reg = ModelRegistry::builtin(3, 19);
+        for m in &reg.models()[1..] {
+            // Shapes chain: each layer's valid-conv output is the next
+            // layer's input (channels and spatial dims both).
+            for pair in m.layers.windows(2) {
+                let (a, b) = (&pair[0], &pair[1]);
+                let out_ch = match a.kind {
+                    JobKind::Depthwise => a.spec.c,
+                    _ => a.spec.k,
+                };
+                assert_eq!(out_ch, b.spec.c, "channel handoff in {}", m.id);
+                assert_eq!(a.spec.h - 2, b.spec.h, "height handoff in {}", m.id);
+                assert_eq!(a.spec.w - 2, b.spec.w, "width handoff in {}", m.id);
+            }
+            // Every inner boundary requantises; the final layer is raw.
+            let n = m.layers.len();
+            for (i, l) in m.layers.iter().enumerate() {
+                assert_eq!(l.post_requant.is_some(), i + 1 < n, "{} layer {i}", m.id);
+                assert!(!l.pad_next, "synthetic tenants are not pre-padded");
+            }
+            // And at least one depthwise layer keeps mixed-kind routing.
+            assert!(m.layers.iter().any(|l| l.kind == JobKind::Depthwise));
+            // End-to-end reference is well-formed and deterministic.
+            let img = m.sample_image(77);
+            let logits = m.forward_golden(&img);
+            assert_eq!(logits.data(), m.forward_golden(&img).data());
+            assert!(logits.data().iter().any(|&v| v != 0));
+        }
+    }
+
+    #[test]
+    fn mobilenet_manifest_forward_matches_network_forward_bit_exact() {
+        // The manifest's layer-chain + boundary metadata must reproduce
+        // MobileNetLite::forward_golden exactly — requant, pad1 and the
+        // final raw-logits layer all included. This is the invariant
+        // the streaming scheduler's per-image verification rests on.
+        let seed = 7;
+        let reg = ModelRegistry::builtin(1, seed);
+        let m = reg.manifest("mobilenet-lite").unwrap();
+        let net = MobileNetLite::new(seed);
+        for img_seed in [1u64, 2, 99] {
+            let img = m.sample_image(img_seed);
+            assert_eq!(
+                m.forward_golden(&img).data(),
+                net.forward_golden(&img).data(),
+                "manifest lowering drifted from the network reference (img {img_seed})"
+            );
+        }
+        // Boundary shape: dw layers requant+pad, pw layers requant only,
+        // final pw layer raw.
+        let n = m.layers.len();
+        for (i, l) in m.layers.iter().enumerate() {
+            match l.kind {
+                JobKind::Depthwise => {
+                    assert!(l.post_requant.is_some() && l.pad_next, "dw layer {i}")
+                }
+                _ => assert!(
+                    !l.pad_next && (l.post_requant.is_some() == (i + 1 < n)),
+                    "pw layer {i}"
+                ),
+            }
+        }
     }
 
     #[test]

@@ -411,6 +411,73 @@ fn registry_submissions_are_bit_identical_across_v4_and_v2_remotes() {
 }
 
 #[test]
+fn streaming_inference_is_bit_exact_across_a_mixed_protocol_fleet() {
+    // The whole-network streaming leg: images walked layer-by-layer
+    // across a mixed v4 / v2-pinned fleet must come back with logits
+    // bit-identical to the manifest's own golden forward, per image —
+    // layer hops land on whichever peer dispatch picks, boundary
+    // transforms run on the front, and the wire framing (binary + weight
+    // store vs legacy JSON) must never leak into the numerics.
+    use repro::coordinator::Server;
+    use repro::registry::ModelRegistry;
+    use std::sync::atomic::Ordering;
+
+    let v4 = TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
+        .expect("v4 peer");
+    let v2 = TcpServer::start(
+        "127.0.0.1:0",
+        CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
+    )
+    .expect("v2-pinned peer");
+    let cfg = CoordinatorConfig {
+        n_cores: 0,
+        ..CoordinatorConfig::default()
+            .with_remote_peers(vec![v4.addr.to_string(), v2.addr.to_string()])
+            .with_stream_window(4)
+    };
+    let mut front = Server::try_new(cfg).expect("front dials both peers");
+    let registry = ModelRegistry::builtin(2, 23);
+    let n = 8;
+    let seed = 31u64;
+    let (report, outcome) = front.run_stream_trace(&registry, n, seed, &mut |_| {});
+    assert_eq!(report.n_images, n);
+    assert_eq!(report.n_errors, 0, "{report:?}");
+    assert_eq!(outcome.images.len(), n);
+    for o in &outcome.images {
+        assert_eq!(o.model, o.image % registry.n_models());
+        // Recompute the reference independently of the scheduler's own
+        // bookkeeping: the manifest golden over the same derived input.
+        let manifest = &registry.models()[o.model];
+        let want = manifest
+            .forward_golden(&manifest.sample_image(seed ^ ((o.image as u64) << 1)))
+            .into_data();
+        assert_eq!(
+            o.logits, want,
+            "image {}: streamed logits diverge from forward_golden",
+            o.image
+        );
+        assert!(o.matches && o.error.is_none());
+    }
+    assert!(outcome.overlap_events > 0, "stream never overlapped images");
+    // Both framings served layer hops, the v4 store saw repeat blobs,
+    // and the v2-pinned peer stayed cache-silent throughout.
+    assert!(
+        outcome.backend_mix.len() >= 2,
+        "both peers must serve hops: {:?}",
+        outcome.backend_mix
+    );
+    assert!(
+        report.n_weight_hits > 0,
+        "repeat images must ride the v4 weight store: {report:?}"
+    );
+    assert_eq!(v2.metrics().weight_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(v2.metrics().weight_misses.load(Ordering::Relaxed), 0);
+    front.shutdown();
+    v4.stop();
+    v2.stop();
+}
+
+#[test]
 fn capability_masks_are_honest() {
     // A backend that claims a kind must run it; one that declines must
     // refuse at run() too (so routing bugs fail loudly, not wrongly).

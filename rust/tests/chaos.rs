@@ -22,6 +22,11 @@
 //!   correctness;
 //! * after revival the probe flips it healthy again (`recovered_peers`)
 //!   and the peer serves fresh traffic.
+//!
+//! A streaming leg repeats the kill/revive while whole-network images
+//! are pipelined across the fleet: no image may be lost, every image's
+//! logits stay bit-identical to the registry golden, and the revived
+//! peer serves later streaming layers.
 
 use repro::backend::{ConvBackend, GoldenBackend, JobKind};
 use repro::coordinator::batcher::Batch;
@@ -348,6 +353,84 @@ fn flapped_peer_reships_each_weight_blob_at_most_once_per_epoch() {
     );
 
     pool.shutdown();
+    for p in peers {
+        p.stop();
+    }
+}
+
+#[test]
+fn mid_stream_peer_kill_loses_no_image_and_revived_peer_serves_again() {
+    // Whole-network streaming under chaos: images hop layer-by-layer
+    // across the mixed-protocol fleet while the last peer is severed
+    // mid-stream and later revived. The contract:
+    //   * no image is lost — every admitted image reaches final logits;
+    //   * every image's logits stay bit-identical to the manifest's
+    //     golden forward (failover hops and resubmitted layers may move
+    //     work between peers, never change a bit);
+    //   * after the revive, the peer serves streaming traffic again.
+    use repro::registry::ModelRegistry;
+
+    const N_IMAGES: usize = 12;
+    const KILL_AT_IMAGE: usize = 4;
+    const REVIVE_AT_IMAGE: usize = 8;
+
+    let (peers, config) = start_fleet();
+    let mut front = Server::try_new(config.with_stream_window(4)).expect("front pool");
+    let registry = ModelRegistry::builtin(2, 33);
+    let seed = 43u64;
+    let (report, outcome) = front.run_stream_trace(&registry, N_IMAGES, seed, &mut |i| {
+        if i == KILL_AT_IMAGE {
+            peers[N_PEERS - 1].set_down(true);
+        }
+        if i == REVIVE_AT_IMAGE {
+            peers[N_PEERS - 1].set_down(false);
+        }
+    });
+
+    assert_eq!(report.n_images, N_IMAGES, "no image lost to the kill");
+    assert_eq!(outcome.images.len(), N_IMAGES);
+    for o in &outcome.images {
+        assert!(
+            o.error.is_none(),
+            "image {} errored despite failover/resubmission: {:?}",
+            o.image,
+            o.error
+        );
+        // Independent reference: the manifest golden over the same
+        // derived input, not the scheduler's own bookkeeping.
+        let manifest = &registry.models()[o.model];
+        let want = manifest
+            .forward_golden(&manifest.sample_image(seed ^ ((o.image as u64) << 1)))
+            .into_data();
+        assert_eq!(
+            o.logits, want,
+            "image {}: chaos changed the numerics",
+            o.image
+        );
+    }
+    assert!(
+        outcome.overlap_events > 0,
+        "stream must pipeline across the kill window"
+    );
+
+    // The revived peer serves *later streaming layers*: push small
+    // streams until its own server's completion counter moves (bounded;
+    // the front's health probe needs a beat to re-dial).
+    let before = peers[N_PEERS - 1].metrics().completed.load(Ordering::Relaxed);
+    let mut served = false;
+    for wave in 0..50u64 {
+        let (r, out) = front.run_stream_trace(&registry, 3, 5000 + wave, &mut |_| {});
+        assert_eq!(r.n_errors, 0, "post-revive stream errored: {r:?}");
+        assert!(out.all_match(), "post-revive stream diverged: {:?}", out.images);
+        if peers[N_PEERS - 1].metrics().completed.load(Ordering::Relaxed) > before {
+            served = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(served, "revived peer never served streaming traffic again");
+
+    front.shutdown();
     for p in peers {
         p.stop();
     }
