@@ -63,6 +63,7 @@ impl ConvBackend for GoldenBackend {
                 total: cost,
                 ..Default::default()
             },
+            wire: None,
         })
     }
 }
@@ -95,6 +96,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let a = GoldenBackend::new().run(&payload).unwrap();
         let b = SimBackend::new(IpCoreConfig::default()).run(&payload).unwrap();
@@ -115,6 +117,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         });
         assert!(err.is_err());
     }
@@ -134,6 +137,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         });
         assert!(err.is_err());
     }
@@ -153,6 +157,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         assert_eq!(run.cycles.total, be.cost(&spec, JobKind::Standard));

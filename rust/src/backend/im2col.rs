@@ -143,6 +143,7 @@ impl ConvBackend for Im2colBackend {
                 total: cost,
                 ..Default::default()
             },
+            wire: None,
         })
     }
 }
@@ -181,6 +182,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let want = GoldenBackend::new().run(&payload).unwrap();
         for threads in [1usize, 2, 4] {
@@ -203,6 +205,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let want = golden_depthwise3x3(&img, &wts, &bias, true);
         for threads in [1usize, 3, 16] {
@@ -224,6 +227,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         });
         assert!(err.is_err());
     }
@@ -242,6 +246,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         assert_eq!(run.cycles.total, be.cost(&spec, JobKind::Standard));
@@ -263,6 +268,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         let want = golden::conv3x3_i32(&img, &wts, &bias, false);

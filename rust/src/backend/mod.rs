@@ -496,6 +496,11 @@ pub struct JobPayload<'a> {
     /// executing unit (weight-stationary batching): backends that model
     /// a weight DMA may discount it.
     pub weights_resident: bool,
+    /// Telemetry trace id of the request this job serves (0 = tracing
+    /// off). Transports propagate it to trace-negotiating peers so
+    /// server-side timings can be attributed to the originating
+    /// request; compute backends ignore it.
+    pub trace_id: u64,
 }
 
 impl JobPayload<'_> {
@@ -546,6 +551,33 @@ impl JobPayload<'_> {
     }
 }
 
+/// Wire-time decomposition of one remote job, measured by the client
+/// and refined by the peer's own reply when it negotiated tracing: the
+/// round trip splits into the peer's server-side queue wait, its
+/// backend compute, and (by subtraction) the time actually spent on
+/// the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireTiming {
+    /// Client-measured round trip: request written → reply decoded.
+    pub rtt_us: u64,
+    /// Peer-reported time the job sat in the peer's queue (0 when the
+    /// peer didn't negotiate tracing).
+    pub peer_queue_us: u64,
+    /// Peer-reported backend compute time (0 when the peer didn't
+    /// negotiate tracing).
+    pub peer_compute_us: u64,
+}
+
+impl WireTiming {
+    /// The wire's own share of the round trip: rtt minus everything the
+    /// peer accounted for (saturating — clock domains differ).
+    pub fn wire_us(&self) -> u64 {
+        self.rtt_us
+            .saturating_sub(self.peer_queue_us)
+            .saturating_sub(self.peer_compute_us)
+    }
+}
+
 /// What one backend execution produced.
 #[derive(Clone, Debug)]
 pub struct BackendRun {
@@ -556,6 +588,10 @@ pub struct BackendRun {
     /// cycles (the backend's [`CostModel`]) for host paths. Drives
     /// metrics and load accounting uniformly.
     pub cycles: CycleStats,
+    /// Wire/remote-compute timing split for jobs that crossed a socket
+    /// (`None` for every local backend). Feeds the dispatcher's wire
+    /// and compute stage histograms and per-hop trace spans.
+    pub wire: Option<WireTiming>,
 }
 
 /// A unit that executes conv-layer jobs. `Send` is a supertrait so

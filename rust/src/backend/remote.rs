@@ -46,6 +46,14 @@
 //! peer's advertised worker width. `run` (single job) remains the
 //! strict request/reply special case.
 //!
+//! **Trace propagation (telemetry):** a peer whose hello carries
+//! `"trace":true` accepts a `trace` id on request headers and answers
+//! traced jobs with its server-side `queue_us`/`compute_us`, which this
+//! backend folds — together with its own measured round trip — into
+//! [`BackendRun::wire`] so the dispatcher can decompose wire time vs
+//! remote compute per hop. Peers without the flag (every v2/v3 peer)
+//! never see a trace field and their replies leave `wire` empty.
+//!
 //! Failure semantics: a dropped peer **fails its unanswered in-flight
 //! jobs and drops the connection**; the next job redials (re-running
 //! the handshake), and the pool's failover retry re-enqueues failed
@@ -69,12 +77,12 @@
 
 use super::{
     BackendRun, Capability, ConvBackend, CostModel, JobKind, JobPayload, KnownWeights,
-    RemotePeerClass, WorkerHealth,
+    RemotePeerClass, WireTiming, WorkerHealth,
 };
 use crate::coordinator::request::fnv1a_bytes;
 use crate::coordinator::tcp::{
-    decode_i32_le, encode_request_frame, encode_request_frame_v4, read_line_capped, LineRead,
-    MAX_BIN_BYTES, MAX_LINE_BYTES, PROTO_V2, PROTO_VERSION,
+    decode_i32_le, encode_request_frame_v4, read_line_capped, LineRead, MAX_BIN_BYTES,
+    MAX_LINE_BYTES, PROTO_V2, PROTO_VERSION,
 };
 use crate::hw::ip_core::CycleStats;
 use crate::hw::AccumMode;
@@ -86,7 +94,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Hard ceiling on waiting for one reply. A peer that stalls past this
 /// fails the job (and the connection) instead of hanging a pool worker
@@ -139,6 +147,11 @@ struct PeerInfo {
     /// in the hello). Off → every job ships its weights inline and no
     /// hash is ever claimed.
     wcache: bool,
+    /// Peer advertised trace propagation (`"trace":true` in the hello):
+    /// it accepts a `trace` id on request headers and answers traced
+    /// jobs with server-side `queue_us`/`compute_us` timing. Off (every
+    /// v2/v3 peer) → no trace field ever crosses this connection.
+    trace: bool,
 }
 
 /// The capability flags routing snapshotted at construction; the probe
@@ -205,6 +218,7 @@ fn parse_hello(line: &str) -> Result<PeerInfo, String> {
         ping: h.get(&["ping"]).and_then(Json::as_bool).unwrap_or(false),
         bin: h.get(&["bin"]).and_then(Json::as_bool).unwrap_or(false),
         wcache: h.get(&["wcache"]).and_then(Json::as_bool).unwrap_or(false),
+        trace: h.get(&["trace"]).and_then(Json::as_bool).unwrap_or(false),
     };
     let mut classes: Vec<RemotePeerClass> = Vec::new();
     for w in workers {
@@ -277,31 +291,29 @@ fn dial(addr: &str) -> anyhow::Result<(Conn, PeerInfo)> {
 /// Encode one job as a complete request frame in the negotiated
 /// encoding: plain v2/v3 (no hash claimed), or — against a wcache peer
 /// — a v4 frame that always claims the blob's content hash and omits
-/// the weight payload entirely when `hash_only`.
-fn job_frame(id: u64, job: &JobPayload, bin: bool, hash: Option<u64>, hash_only: bool) -> Vec<u8> {
-    match hash {
-        None => encode_request_frame(
-            id,
-            job.kind,
-            job.spec,
-            job.img.data(),
-            job.weights.data(),
-            job.bias,
-            true, // full_output: the backend must reconstruct the tensor
-            bin,
-        ),
-        Some(h) => encode_request_frame_v4(
-            id,
-            job.kind,
-            job.spec,
-            job.img.data(),
-            (!hash_only).then(|| job.weights.data()),
-            Some(h),
-            job.bias,
-            true,
-            bin,
-        ),
-    }
+/// the weight payload entirely when `hash_only`. `trace` is the
+/// propagated trace id (0 = untraced — the field is omitted); callers
+/// must pass 0 unless the peer's hello advertised `"trace":true`.
+fn job_frame(
+    id: u64,
+    job: &JobPayload,
+    bin: bool,
+    hash: Option<u64>,
+    hash_only: bool,
+    trace: u64,
+) -> Vec<u8> {
+    encode_request_frame_v4(
+        id,
+        job.kind,
+        job.spec,
+        job.img.data(),
+        (hash.is_none() || !hash_only).then(|| job.weights.data()),
+        hash,
+        job.bias,
+        true, // full_output: the backend must reconstruct the tensor
+        bin,
+        trace,
+    )
 }
 
 /// One pipelined in-flight job: its index in the caller's slice plus
@@ -314,6 +326,9 @@ struct Inflight {
     hash_only: bool,
     /// A `need_weights` re-ship already happened for this job.
     reshipped: bool,
+    /// When the first frame for this job was written — the wire
+    /// round-trip anchor for [`WireTiming::rtt_us`].
+    sent: Instant,
 }
 
 fn expected_shape(job: &JobPayload) -> Vec<usize> {
@@ -367,6 +382,7 @@ fn decode_reply(
     resp: &Json,
     body: Option<Vec<i32>>,
     job: &JobPayload,
+    rtt_us: u64,
 ) -> anyhow::Result<Result<BackendRun, String>> {
     if resp.get(&["ok"]).and_then(Json::as_bool) != Some(true) {
         let msg = resp
@@ -416,6 +432,19 @@ fn decode_reply(
         .get(&["total_cycles"])
         .and_then(Json::as_f64)
         .unwrap_or(compute as f64) as u64;
+    // Traced peers decompose the round trip: the reply carries the
+    // server-side queue residency and compute wall time, so the caller
+    // can split `rtt_us` into wire vs remote work. Untraced replies
+    // (v2/v3 peers, or tracing off) leave `wire` empty and the
+    // dispatcher falls back to whole-hop accounting.
+    let wire = resp
+        .get(&["compute_us"])
+        .and_then(Json::as_u64)
+        .map(|peer_compute_us| WireTiming {
+            rtt_us,
+            peer_queue_us: resp.get(&["queue_us"]).and_then(Json::as_u64).unwrap_or(0),
+            peer_compute_us,
+        });
     Ok(Ok(BackendRun {
         output: Tensor::from_vec(&shape, data),
         cycles: CycleStats {
@@ -423,6 +452,7 @@ fn decode_reply(
             total,
             ..Default::default()
         },
+        wire,
     }))
 }
 
@@ -567,6 +597,14 @@ impl RemoteBackend {
         self.peer.wcache
     }
 
+    /// Whether the peer negotiated trace propagation (`"trace":true` in
+    /// its hello): traced jobs carry their id on the wire and the peer
+    /// answers with server-side `queue_us`/`compute_us`. Off for v2/v3
+    /// peers — no trace field ever crosses such a connection.
+    pub fn peer_trace(&self) -> bool {
+        self.peer.trace
+    }
+
     /// Send-time cache decision for one job against a wcache peer:
     /// `(hash, hash_only)`. Marks the belief *at ship time* — the store
     /// admits a blob when it parses the frame and frames on one
@@ -635,10 +673,12 @@ impl RemoteBackend {
         job: &JobPayload,
     ) -> anyhow::Result<Result<BackendRun, String>> {
         let bin = self.peer.bin;
+        let trace = if self.peer.trace { job.trace_id } else { 0 };
         let (hash, mut hash_only) = self.plan_weights(job);
         let mut reshipped = false;
         let conn = self.conn.as_mut().expect("connection ensured by run()");
-        conn.writer.write_all(&job_frame(id, job, bin, hash, hash_only))?;
+        let sent = Instant::now();
+        conn.writer.write_all(&job_frame(id, job, bin, hash, hash_only, trace))?;
         loop {
             let (resp, body) = read_reply_frame(conn)?;
             if resp.get(&["hello"]).is_some() || resp.get(&["pong"]).is_some() {
@@ -664,10 +704,11 @@ impl RemoteBackend {
                         self.known.mark_known(h);
                         hash_only = false;
                         reshipped = true;
-                        conn.writer.write_all(&job_frame(id, job, bin, hash, false))?;
+                        conn.writer.write_all(&job_frame(id, job, bin, hash, false, trace))?;
                         continue;
                     }
-                    let out = decode_reply(&resp, body, job)?;
+                    let rtt_us = sent.elapsed().as_micros() as u64;
+                    let out = decode_reply(&resp, body, job, rtt_us)?;
                     if out.is_ok() && hash_only {
                         self.known.record_hit(job.weights.data().len() as u64);
                     }
@@ -800,9 +841,13 @@ impl ConvBackend for RemoteBackend {
             cursor += 1;
             let id = self.next_id;
             self.next_id += 1;
+            let trace = if self.peer.trace { jobs[idx].trace_id } else { 0 };
             let (hash, hash_only) = self.plan_weights(&jobs[idx]);
-            burst.extend_from_slice(&job_frame(id, &jobs[idx], bin, hash, hash_only));
-            inflight.insert(id, Inflight { idx, hash, hash_only, reshipped: false });
+            burst.extend_from_slice(&job_frame(id, &jobs[idx], bin, hash, hash_only, trace));
+            inflight.insert(
+                id,
+                Inflight { idx, hash, hash_only, reshipped: false, sent: Instant::now() },
+            );
         }
         if let Err(e) = conn.writer.write_all(&burst) {
             transport = Some(e.into());
@@ -842,7 +887,8 @@ impl ConvBackend for RemoteBackend {
                 self.known.forget(h);
                 self.known.record_miss();
                 self.known.mark_known(h);
-                let frame = job_frame(rid, &jobs[fl.idx], bin, fl.hash, false);
+                let trace = if self.peer.trace { jobs[fl.idx].trace_id } else { 0 };
+                let frame = job_frame(rid, &jobs[fl.idx], bin, fl.hash, false, trace);
                 let fl = Inflight {
                     hash_only: false,
                     reshipped: true,
@@ -856,7 +902,7 @@ impl ConvBackend for RemoteBackend {
                 inflight.insert(rid, fl);
                 continue; // the job still occupies its slot; no top-up
             }
-            match decode_reply(&resp, body, &jobs[fl.idx]) {
+            match decode_reply(&resp, body, &jobs[fl.idx], fl.sent.elapsed().as_micros() as u64) {
                 Ok(Ok(run)) => {
                     if fl.hash_only {
                         self.known
@@ -886,10 +932,11 @@ impl ConvBackend for RemoteBackend {
                 cursor += 1;
                 let id = self.next_id;
                 self.next_id += 1;
+                let trace = if self.peer.trace { jobs[idx].trace_id } else { 0 };
                 let (hash, hash_only) = self.plan_weights(&jobs[idx]);
-                let fl = Inflight { idx, hash, hash_only, reshipped: false };
+                let fl = Inflight { idx, hash, hash_only, reshipped: false, sent: Instant::now() };
                 if let Err(e) =
-                    conn.writer.write_all(&job_frame(id, &jobs[idx], bin, hash, hash_only))
+                    conn.writer.write_all(&job_frame(id, &jobs[idx], bin, hash, hash_only, trace))
                 {
                     inflight.insert(id, fl);
                     transport = Some(e.into());
@@ -1051,6 +1098,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         // Job 1 fails (dropped peer), job 2 succeeds over the redial.
         let err = be.run(&payload).unwrap_err();
@@ -1108,11 +1156,133 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let err = be.run(&payload).unwrap_err();
         assert!(err.to_string().contains("boom"), "{err}");
         let run = be.run(&payload).expect("same connection serves the next job");
         assert_eq!(run.output.data(), &[0, 0, 0, 0]);
+        t.join().unwrap();
+    }
+
+    /// A v4-ish greeting advertising trace propagation but neither
+    /// binary framing nor the weight store: requests stay JSON, so a
+    /// fake peer can assert on the exact header fields.
+    fn traced_hello_line() -> &'static str {
+        r#"{"hello":{"proto":4,"trace":true,"freq_hz":112000000,"cores":1,"workers":[{"backend":"sim-ipcore-i32","standard":true,"depthwise":true,"pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272}]}}"#
+    }
+
+    #[test]
+    fn v2_peer_never_sees_a_trace_field() {
+        // Satellite negotiation contract, client side: a traced job
+        // against a peer whose hello lacks the trace flag must
+        // serialise WITHOUT the trace field, and its reply leaves the
+        // wire decomposition empty.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(s, "{}", hello_line()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let req = Json::parse(line.trim()).unwrap();
+            assert!(req.get(&["trace"]).is_none(), "v2 peer saw a trace field");
+            let id = req.get(&["id"]).unwrap().as_u64().unwrap();
+            let reply = Json::obj(vec![
+                ("id", Json::uint(id)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("shape", Json::arr_u64([4u64, 1, 1])),
+                ("output", Json::arr_i64([0i64, 0, 0, 0])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+        });
+        let mut be = RemoteBackend::connect(&addr).unwrap();
+        assert!(!be.peer_trace(), "a v2 hello must not negotiate tracing");
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+            trace_id: 7,
+        };
+        let run = be.run(&payload).unwrap();
+        assert!(run.wire.is_none(), "untraced peer reply must not claim wire timing");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn traced_peer_gets_the_id_and_replies_decompose_the_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            writeln!(s, "{}", traced_hello_line()).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            // Job 1 (traced): the header must carry the propagated id;
+            // the reply decomposes server-side time.
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let req = Json::parse(line.trim()).unwrap();
+            assert_eq!(req.get(&["trace"]).and_then(Json::as_u64), Some(7));
+            let id = req.get(&["id"]).unwrap().as_u64().unwrap();
+            let reply = Json::obj(vec![
+                ("id", Json::uint(id)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("queue_us", Json::uint(11)),
+                ("compute_us", Json::uint(23)),
+                ("shape", Json::arr_u64([4u64, 1, 1])),
+                ("output", Json::arr_i64([0i64, 0, 0, 0])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+            // Job 2 (untraced, same traced connection): no field.
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let req = Json::parse(line.trim()).unwrap();
+            assert!(req.get(&["trace"]).is_none(), "trace_id 0 must omit the field");
+            let id = req.get(&["id"]).unwrap().as_u64().unwrap();
+            let reply = Json::obj(vec![
+                ("id", Json::uint(id)),
+                ("ok", Json::Bool(true)),
+                ("compute_cycles", Json::num(8u32)),
+                ("total_cycles", Json::num(8u32)),
+                ("shape", Json::arr_u64([4u64, 1, 1])),
+                ("output", Json::arr_i64([0i64, 0, 0, 0])),
+            ]);
+            writeln!(s, "{}", reply.to_json()).unwrap();
+        });
+        let mut be = RemoteBackend::connect(&addr).unwrap();
+        assert!(be.peer_trace(), "hello trace flag must negotiate on");
+        let spec = LayerSpec::new(1, 3, 3, 4);
+        let img = Tensor::<u8>::zeros(&[1, 3, 3]);
+        let wts = Tensor::<u8>::zeros(&[4, 1, 3, 3]);
+        let bias = vec![0i32; 4];
+        let mut payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+            trace_id: 7,
+        };
+        let run = be.run(&payload).unwrap();
+        let w = run.wire.expect("traced reply decomposes the round trip");
+        assert_eq!((w.peer_queue_us, w.peer_compute_us), (11, 23));
+        assert_eq!(w.wire_us(), w.rtt_us.saturating_sub(34));
+        payload.trace_id = 0;
+        let run = be.run(&payload).unwrap();
+        assert!(run.wire.is_none(), "untraced job gets whole-hop accounting");
         t.join().unwrap();
     }
 
@@ -1131,6 +1301,7 @@ mod tests {
         assert_eq!(be.peer_workers(), 2);
         assert!(be.peer_binary(), "a v4 server negotiates binary frames");
         assert!(be.peer_wcache(), "a v4 server negotiates the weight store");
+        assert!(be.peer_trace(), "a v4 server negotiates trace propagation");
         // Pricing collapses to the fastest advertised tier (the sim
         // core), divided across both workers behind the peer.
         assert_eq!(
@@ -1190,6 +1361,7 @@ mod tests {
         assert!(be3.peer_binary());
         assert!(!be2.peer_binary(), "v2-only hello must not offer bin");
         assert!(!be2.peer_wcache(), "v2-only hello must not offer wcache");
+        assert!(!be2.peer_trace(), "v2-only hello must not offer trace");
         let spec = LayerSpec::new(3, 6, 6, 5).with_relu();
         let mut rng = Prng::new(47);
         let img = Tensor::from_vec(&[3, 6, 6], rng.bytes_below(3 * 6 * 6, 256));
@@ -1202,6 +1374,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let r3 = be3.run(&payload).unwrap();
         let r2 = be2.run(&payload).unwrap();
@@ -1248,6 +1421,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .collect();
         let results = be.run_batch(&payloads);
@@ -1278,6 +1452,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .collect();
         let results = be.run_batch(&payloads);
@@ -1330,6 +1505,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .collect();
         let results = be.run_batch(&payloads);
@@ -1368,6 +1544,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .collect();
         for res in be.run_batch(&payloads) {
@@ -1416,6 +1593,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let want = golden::conv3x3_i32(&img, &wts, &bias, false);
         // Warm up: one inline ship, then a hash-only hit.
@@ -1479,6 +1657,7 @@ mod tests {
                 weights: w,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             };
             assert_eq!(be.run(&payload).unwrap().output.data(), want.data());
         }
@@ -1489,6 +1668,7 @@ mod tests {
             weights: &weight_sets[0],
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         assert_eq!(be.run(&payload).unwrap().output.data(), golds[0].data());
         let m = server.metrics();

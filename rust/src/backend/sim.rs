@@ -79,6 +79,7 @@ impl ConvBackend for SimBackend {
                 Ok(BackendRun {
                     output: run.output.into_i32(),
                     cycles,
+                    wire: None,
                 })
             }
             JobKind::Depthwise => {
@@ -97,6 +98,7 @@ impl ConvBackend for SimBackend {
                 Ok(BackendRun {
                     output: run.output,
                     cycles: run.cycles,
+                    wire: None,
                 })
             }
         }
@@ -138,6 +140,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         let want = golden::conv3x3_i32(&img, &wts, &bias, false);
@@ -161,6 +164,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         let want = golden_depthwise3x3(&img, &wts, &bias, false);
@@ -181,6 +185,7 @@ mod tests {
             weights: &wts,
             bias: &bias,
             weights_resident: resident,
+            trace_id: 0,
         };
         let cold = be.run(&payload(false)).unwrap();
         let warm = be.run(&payload(true)).unwrap();
@@ -213,6 +218,7 @@ mod tests {
                 weights: &wts,
                 bias: &bias,
                 weights_resident: false,
+                trace_id: 0,
             })
             .unwrap();
         assert_eq!(modelled, run.cycles.compute);

@@ -102,6 +102,7 @@ impl ConvBackend for XlaBackend {
                 total: cost,
                 ..Default::default()
             },
+            wire: None,
         })
     }
 }
@@ -142,6 +143,7 @@ mod tests {
                         weights: &wts,
                         bias: &bias,
                         weights_resident: false,
+                        trace_id: 0,
                     })
                     .unwrap();
                 let want = golden::conv3x3_i32(&img, &wts, &bias, false);

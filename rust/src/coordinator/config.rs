@@ -2,6 +2,9 @@
 
 use crate::hw::IpCoreConfig;
 use crate::paper::MAX_CORES_Z2;
+use crate::telemetry::scrape::ScrapeServer;
+use crate::telemetry::SpanSink;
+use std::sync::Arc;
 
 /// Batching policy (see [`super::batcher`]).
 #[derive(Clone, Copy, Debug)]
@@ -70,6 +73,16 @@ pub struct CoordinatorConfig {
     /// §4.1 chained baseline); larger windows let layer k+1 of image i
     /// overlap layer k of image i+1 across the pool.
     pub stream_window: usize,
+    /// Distributed-tracing sink. `None` (default) disables tracing
+    /// entirely: no ids are minted, no spans recorded, no trace fields
+    /// cross the wire. Shared by Arc so the front, the dispatcher, the
+    /// remote clients and the exporter all write/read one ring.
+    pub trace: Option<Arc<SpanSink>>,
+    /// Live Prometheus scrape endpoint. `None` (default) serves no
+    /// metrics port. The server is bound by the caller (so the addr is
+    /// known before the run) and attached to the pool's scrape source
+    /// when serving starts.
+    pub scrape: Option<Arc<ScrapeServer>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -86,6 +99,8 @@ impl Default for CoordinatorConfig {
             batch: BatchConfig::default(),
             max_inflight_psums: None,
             stream_window: 4,
+            trace: None,
+            scrape: None,
         }
     }
 }
@@ -150,6 +165,18 @@ impl CoordinatorConfig {
         self.stream_window = window.max(1);
         self
     }
+
+    /// Enable distributed tracing into `sink` (see [`Self::trace`]).
+    pub fn with_trace(mut self, sink: Arc<SpanSink>) -> Self {
+        self.trace = Some(sink);
+        self
+    }
+
+    /// Attach a bound Prometheus scrape endpoint (see [`Self::scrape`]).
+    pub fn with_scrape(mut self, scrape: Arc<ScrapeServer>) -> Self {
+        self.scrape = Some(scrape);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +239,19 @@ mod tests {
         assert_eq!(CoordinatorConfig::default().stream_window, 4);
         assert_eq!(CoordinatorConfig::default().with_stream_window(8).stream_window, 8);
         assert_eq!(CoordinatorConfig::default().with_stream_window(0).stream_window, 1);
+    }
+
+    #[test]
+    fn trace_and_scrape_default_off_and_compose() {
+        let d = CoordinatorConfig::default();
+        assert!(d.trace.is_none() && d.scrape.is_none());
+        let sink = Arc::new(SpanSink::new());
+        let c = CoordinatorConfig::default().with_trace(Arc::clone(&sink));
+        assert!(Arc::ptr_eq(c.trace.as_ref().unwrap(), &sink));
+        let srv = Arc::new(ScrapeServer::bind("127.0.0.1:0").unwrap());
+        let c = c.with_scrape(Arc::clone(&srv));
+        assert!(Arc::ptr_eq(c.scrape.as_ref().unwrap(), &srv));
+        srv.stop();
     }
 
     #[test]

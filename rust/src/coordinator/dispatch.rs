@@ -35,10 +35,15 @@ use crate::backend::{
 };
 use crate::hw::{AccumMode, IpCoreConfig};
 use crate::model::LayerSpec;
+use crate::telemetry::scrape::{
+    render_counters, render_stage_histogram, render_worker_gauges, ScrapeSource,
+};
+use crate::telemetry::{SpanSink, Stage};
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Upper bound on how many workers one job may be offered before the
 /// pool gives up and answers an error result: the initial dispatch plus
@@ -71,6 +76,9 @@ struct WorkerEntry {
     /// per job so the wire weight term is discounted when the peer
     /// already holds the blob.
     known: Option<Arc<KnownWeights>>,
+    /// Interned span tag of this worker's name (0 when tracing is off)
+    /// — per-span worker attribution is a plain integer store.
+    tag: u64,
 }
 
 impl WorkerEntry {
@@ -85,6 +93,10 @@ impl WorkerEntry {
 struct WorkerTable {
     entries: Vec<WorkerEntry>,
     metrics: Arc<Metrics>,
+    /// Shared span sink; `None` disables the span path entirely (the
+    /// per-stage histograms still record — they are counters, not
+    /// traces).
+    trace: Option<Arc<SpanSink>>,
 }
 
 impl WorkerTable {
@@ -188,6 +200,8 @@ impl WorkerTable {
             latency: sub.enqueued.elapsed(),
             weights_reused: false,
             error: Some(err.to_string()),
+            queue_us: 0,
+            compute_us: 0,
         });
     }
 }
@@ -237,7 +251,9 @@ fn run_batch(
         .zip(&reused_flags)
         .map(|(sub, &reused)| sub.job.payload(reused))
         .collect();
+    let t0 = Instant::now();
     let runs = backend.run_batch(&payloads);
+    let t1 = Instant::now();
     debug_assert_eq!(runs.len(), batch.jobs.len(), "one result per job");
     drop(payloads);
     drop(reused_flags);
@@ -295,6 +311,72 @@ fn run_batch(
             cost.cost_cached(&sub.job.spec, sub.job.kind, sub.job.wire_weights_cached) as i64,
             Ordering::Relaxed,
         );
+        // Stage decomposition: queue is enqueue → batch pickup, compute
+        // is the peer-reported figure on traced remote hops and the
+        // (batch-granular) backend-call duration otherwise.
+        let queue_us = t0.saturating_duration_since(sub.enqueued).as_micros() as u64;
+        let hop_us = t1.saturating_duration_since(t0).as_micros() as u64;
+        let (compute_us, wire_split) = match run.wire {
+            Some(w) => (w.peer_compute_us, Some(w)),
+            None => (hop_us, None),
+        };
+        let stages = &table.metrics.stages;
+        stages.queue.record_us(queue_us);
+        stages.compute.record_us(compute_us);
+        if let Some(w) = &wire_split {
+            stages.wire.record_us(w.wire_us());
+        }
+        if let Some(sink) = &table.trace {
+            let tid = sub.job.trace.id;
+            if tid != 0 {
+                let tag = table.entries[core_idx].tag;
+                let enq = sink.offset_us(sub.enqueued);
+                let t0_us = sink.offset_us(t0);
+                let t1_us = sink.offset_us(t1);
+                // Queue span from the *original* enqueue: on a failover
+                // hop this absorbs the failed attempts' time, keeping
+                // the request tree gap-free.
+                sink.record(tid, Stage::Queue, 0, enq, t0_us.saturating_sub(enq));
+                sink.record(tid, Stage::Dispatch, tag, t0_us, t1_us.saturating_sub(t0_us));
+                match &wire_split {
+                    Some(w) => {
+                        sink.record(tid, Stage::Wire, tag, t0_us, w.wire_us());
+                        sink.record(
+                            tid,
+                            Stage::Compute,
+                            tag,
+                            t1_us.saturating_sub(w.peer_compute_us),
+                            w.peer_compute_us,
+                        );
+                    }
+                    None => {
+                        sink.record(tid, Stage::Compute, tag, t0_us, t1_us.saturating_sub(t0_us));
+                    }
+                }
+                // Non-stream jobs: this hop completes the request, so
+                // the dispatcher owns the root. Admission + queue +
+                // dispatch tile it exactly. Stream jobs leave the root
+                // to the stream driver (one root per image, not per
+                // layer hop).
+                if sub.job.trace.layer.is_none() {
+                    let root_start = enq.saturating_sub(sub.job.trace.admission_us);
+                    sink.record(
+                        tid,
+                        Stage::Admission,
+                        0,
+                        root_start,
+                        sub.job.trace.admission_us,
+                    );
+                    sink.record(
+                        tid,
+                        Stage::Request,
+                        0,
+                        root_start,
+                        t1_us.saturating_sub(root_start),
+                    );
+                }
+            }
+        }
         // Receiver may have hung up (fire-and-forget); fine.
         let _ = sub.reply.send(ConvResult {
             id: sub.job.id,
@@ -307,6 +389,8 @@ fn run_batch(
             latency,
             weights_reused: reused,
             error: None,
+            queue_us,
+            compute_us,
         });
     }
     if any_success {
@@ -346,6 +430,16 @@ impl CorePool {
     /// stays around for frequency-based reporting (simulated µs on the
     /// wire protocol).
     pub fn with_backends(backends: Vec<Box<dyn ConvBackend>>, config: IpCoreConfig) -> Self {
+        Self::with_backends_traced(backends, config, None)
+    }
+
+    /// [`Self::with_backends`] with an optional shared span sink: when
+    /// `Some`, every dispatch hop records worker-tagged spans into it.
+    pub fn with_backends_traced(
+        backends: Vec<Box<dyn ConvBackend>>,
+        config: IpCoreConfig,
+        trace: Option<Arc<SpanSink>>,
+    ) -> Self {
         assert!(!backends.is_empty(), "pool needs at least one backend");
         let metrics = Arc::new(Metrics::new());
         // Build the full routing table before any worker starts:
@@ -364,12 +458,14 @@ impl CorePool {
                     name: b.name(),
                     health: b.health(),
                     known: b.known_weights(),
+                    tag: trace.as_ref().map_or(0, |s| s.worker_tag(b.name())),
                 }
             })
             .collect();
         let table = Arc::new(WorkerTable {
             entries,
             metrics: Arc::clone(&metrics),
+            trace,
         });
         let handles = backends
             .into_iter()
@@ -434,6 +530,21 @@ impl CorePool {
             .filter_map(|w| w.health.as_ref())
             .map(|h| h.recoveries())
             .sum()
+    }
+
+    /// The span sink this pool records into (`None` when tracing is
+    /// off).
+    pub fn span_sink(&self) -> Option<Arc<SpanSink>> {
+        self.table.trace.as_ref().map(Arc::clone)
+    }
+
+    /// A read-only Prometheus view over this pool's live state —
+    /// counters, stage-keyed latency histograms and per-worker gauges —
+    /// for [`crate::telemetry::scrape::ScrapeServer::attach`].
+    pub fn scrape_source(&self) -> Arc<dyn ScrapeSource> {
+        Arc::new(PoolScrape {
+            table: Arc::clone(&self.table),
+        })
     }
 
     /// Client-side weight-cache accounting summed over every wire-v4
@@ -533,6 +644,37 @@ impl CorePool {
         for h in self.handles {
             let _ = h.join();
         }
+    }
+}
+
+/// Read-only Prometheus view over the worker table — what
+/// [`CorePool::scrape_source`] hands the scrape endpoint. Holds the
+/// table (not the pool), so scrapes keep answering while the pool
+/// front is busy and stop mattering once the run ends.
+struct PoolScrape {
+    table: Arc<WorkerTable>,
+}
+
+impl ScrapeSource for PoolScrape {
+    fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        render_counters(&mut out, &self.table.metrics);
+        for (label, h) in self.table.metrics.stages.labelled() {
+            render_stage_histogram(&mut out, &label, h);
+        }
+        for (i, e) in self.table.entries.iter().enumerate() {
+            // Index-suffix the name: pools legally run several workers
+            // of one backend type, and Prometheus series must not alias.
+            let name = format!("{}-{i}", e.name);
+            render_worker_gauges(
+                &mut out,
+                &name,
+                e.load.load(Ordering::Relaxed),
+                e.is_healthy(),
+                e.known.as_ref().map_or(0, |k| k.len()),
+            );
+        }
+        out
     }
 }
 
@@ -1295,6 +1437,87 @@ mod tests {
         assert!(results.iter().all(|r| r.error.is_none()));
         assert_eq!(pool.worker_loads(), vec![0], "charge/release must cancel");
         assert_eq!(pool.weight_cache_stats(), (0, 0, 0), "dispatch reads, never records");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn traced_dispatch_records_a_tiled_request_tree_and_stage_histograms() {
+        use crate::coordinator::request::TraceCtx;
+        use crate::telemetry::validate_coverage;
+        let sink = Arc::new(SpanSink::new());
+        let backends: Vec<Box<dyn ConvBackend>> = vec![Box::new(GoldenBackend::new())];
+        let pool = CorePool::with_backends_traced(
+            backends,
+            IpCoreConfig::default(),
+            Some(Arc::clone(&sink)),
+        );
+        let (tx, rx) = channel();
+        let mut job = ConvJob::synthetic(1, QUICKSTART, 1);
+        job.trace = TraceCtx {
+            id: 42,
+            admission_us: 3,
+            layer: None,
+        };
+        pool.dispatch(batch_of(job, &tx));
+        let res = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(res.error.is_none());
+        let spans = sink.snapshot();
+        let check = validate_coverage(&spans).expect("request tree must tile");
+        assert_eq!(check.roots, 1);
+        // Admission + queue + dispatch + compute spans all present, the
+        // dispatch hop worker-tagged.
+        for want in [Stage::Admission, Stage::Queue, Stage::Dispatch, Stage::Compute] {
+            assert!(
+                spans.iter().any(|s| s.stage == want),
+                "missing {want:?} span"
+            );
+        }
+        let hop = spans.iter().find(|s| s.stage == Stage::Dispatch).unwrap();
+        assert_eq!(hop.worker.as_deref(), Some("golden-cpu"));
+        // The stage histograms recorded independently of the spans.
+        let m = &pool.metrics;
+        assert_eq!(m.stages.queue.count(), 1);
+        assert_eq!(m.stages.compute.count(), 1);
+        assert_eq!(m.stages.wire.count(), 0, "no socket crossed");
+        assert_eq!(m.stages.request.count(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn untraced_pool_records_no_spans_but_still_decomposes_stages() {
+        let pool = CorePool::new(1, IpCoreConfig::default());
+        assert!(pool.span_sink().is_none());
+        let (batch, rx) = one_job_batch(2);
+        pool.dispatch(batch);
+        let res = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(res.error.is_none());
+        // queue/compute figures ride every result, tracing or not.
+        assert!(res.compute_us > 0 || res.queue_us > 0 || res.latency.as_micros() < 2);
+        assert_eq!(pool.metrics.stages.queue.count(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_scrape_source_renders_counters_stages_and_worker_gauges() {
+        let pool = CorePool::new(1, IpCoreConfig::default());
+        let (batch, rx) = one_job_batch(3);
+        pool.dispatch(batch);
+        let _ = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let body = pool.scrape_source().render_prometheus();
+        assert!(body.contains("repro_completed_total 1"), "{body}");
+        assert!(
+            body.contains("repro_stage_latency_us_bucket{stage=\"request\""),
+            "{body}"
+        );
+        assert!(
+            body.contains("repro_stage_latency_us_bucket{stage=\"queue\""),
+            "{body}"
+        );
+        assert!(
+            body.contains("repro_worker_load{worker=\"sim-ipcore-i32-0\"}"),
+            "{body}"
+        );
+        assert!(body.contains("repro_worker_healthy{worker=\"sim-ipcore-i32-0\"} 1"));
         pool.shutdown();
     }
 

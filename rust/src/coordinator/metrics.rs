@@ -1,17 +1,25 @@
-//! Coordinator metrics: counters, simulated-cycle roll-up and a
-//! log-bucketed latency histogram (std-only, lock-free counters).
+//! Coordinator metrics: counters, simulated-cycle roll-up and
+//! stage-keyed log-bucketed latency histograms (std-only, lock-free
+//! counters, scrapeable mid-run via `telemetry::scrape`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Number of log2 latency buckets (2^20 µs ≈ 1 s; the last bucket is
+/// open-ended).
+pub const N_LATENCY_BUCKETS: usize = 21;
+
+const N_BUCKETS: usize = N_LATENCY_BUCKETS;
 
 /// Log2-bucketed latency histogram, 1 µs .. ~1 s.
 #[derive(Debug)]
 pub struct LatencyHistogram {
     /// bucket i counts latencies in [2^i µs, 2^(i+1) µs).
     buckets: Vec<AtomicU64>,
+    /// Total recorded µs (Prometheus `_sum`; also tightens the top
+    /// quantile estimate's sanity checks).
+    sum_us: AtomicU64,
 }
-
-const N_BUCKETS: usize = 21; // 2^20 µs ≈ 1 s
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
@@ -23,34 +31,141 @@ impl LatencyHistogram {
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
         }
     }
 
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
+        self.record_us(d.as_micros().max(1) as u64);
+    }
+
+    /// Record a latency already expressed in µs (clamped to ≥ 1).
+    pub fn record_us(&self, us: u64) {
+        let us = us.max(1);
         let bucket = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
-    /// Upper bound (µs) of the bucket containing quantile `q` (0..1].
+    /// Total recorded µs across every sample.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw bucket counters (bucket i counts samples in
+    /// [2^i µs, 2^(i+1) µs); the last bucket is open-ended).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Fold `other`'s samples into `self` (bucket-wise add). The result
+    /// is indistinguishable from having recorded both sample streams
+    /// into one histogram.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Estimate (µs) of quantile `q` (0..1], linearly interpolated
+    /// within the winning bucket: rank r of b samples in [lo, hi) maps
+    /// to `lo + (r/b)·(hi−lo)` rather than the coarse bucket upper
+    /// bound (which overstated p50 by up to 2× on log2 buckets).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
+        let target = (((total as f64) * q).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
             }
+            if seen + n >= target {
+                let lo = 1u64 << i;
+                let hi = 1u64 << (i + 1);
+                let rank = (target - seen) as f64; // 1-based within bucket
+                let frac = rank / n as f64;
+                return lo + (frac * (hi - lo) as f64).round() as u64;
+            }
+            seen += n;
         }
         1u64 << N_BUCKETS
+    }
+}
+
+/// Number of per-layer stream histograms kept; deeper layers fold into
+/// the last slot.
+pub const N_LAYER_STAGES: usize = 16;
+
+/// Per-stage latency decomposition of the serving path. `request` is
+/// the end-to-end histogram the `Report` quantiles come from; the rest
+/// split that wall time by where it was actually spent.
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    /// End-to-end request latency (admission start → completion).
+    pub request: LatencyHistogram,
+    /// Admission-control wait before enqueueing.
+    pub admission: LatencyHistogram,
+    /// Queue/batcher residency (enqueued → worker pickup), one sample
+    /// per dispatch hop.
+    pub queue: LatencyHistogram,
+    /// Wire share of traced remote hops: round-trip minus the peer's
+    /// own reported queue + compute.
+    pub wire: LatencyHistogram,
+    /// Backend compute per hop: peer-reported `compute_us` on traced
+    /// remote hops, the local backend-call duration otherwise.
+    pub compute: LatencyHistogram,
+    /// Front-side inter-layer boundary transforms (streams).
+    pub boundary: LatencyHistogram,
+    /// Whole-hop latency per stream layer (index clamped into
+    /// [`N_LAYER_STAGES`]).
+    pub layers: [LatencyHistogram; N_LAYER_STAGES],
+}
+
+impl StageHistograms {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The histogram for stream layer `l` (deep layers fold into the
+    /// last slot).
+    pub fn layer(&self, l: usize) -> &LatencyHistogram {
+        &self.layers[l.min(N_LAYER_STAGES - 1)]
+    }
+
+    /// `(label, histogram)` pairs for scrape rendering. The fixed
+    /// stages always render; layer slots that never recorded are
+    /// skipped (non-stream runs scrape no layer series).
+    pub fn labelled(&self) -> Vec<(String, &LatencyHistogram)> {
+        let mut v: Vec<(String, &LatencyHistogram)> = vec![
+            ("request".into(), &self.request),
+            ("admission".into(), &self.admission),
+            ("queue".into(), &self.queue),
+            ("wire".into(), &self.wire),
+            ("compute".into(), &self.compute),
+            ("boundary".into(), &self.boundary),
+        ];
+        for (i, h) in self.layers.iter().enumerate() {
+            if h.count() > 0 {
+                v.push((format!("layer{i}"), h));
+            }
+        }
+        v
     }
 }
 
@@ -86,7 +201,9 @@ pub struct Metrics {
     /// arrays and v3/v4 binary bodies alike) — the ships-at-most-once
     /// property is asserted against this counter.
     pub wire_weight_bytes: AtomicU64,
-    pub latency: LatencyHistogram,
+    /// Stage-keyed latency decomposition (`stages.request` is the
+    /// aggregate histogram earlier revisions kept as `latency`).
+    pub stages: StageHistograms,
 }
 
 impl Metrics {
@@ -101,7 +218,7 @@ impl Metrics {
         if reused {
             self.weight_dma_skipped.fetch_add(1, Ordering::Relaxed);
         }
-        self.latency.record(latency);
+        self.stages.request.record(latency);
     }
 
     /// Record a job a backend failed terminally (the pool answered it
@@ -168,11 +285,64 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_interpolate_within_the_bucket() {
+        let h = LatencyHistogram::new();
+        // 100 samples all in bucket [8, 16): the old upper-bound
+        // estimate answered 16 for *every* quantile; interpolation
+        // spreads ranks across the bucket.
+        for _ in 0..100 {
+            h.record(Duration::from_micros(10));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!((8..=12).contains(&p50), "p50={p50}");
+        assert!(p50 < p99, "p50={p50} p99={p99}");
+        assert!(h.quantile_us(1.0) <= 16);
+    }
+
+    #[test]
     fn zero_latency_lands_in_first_bucket() {
         let h = LatencyHistogram::new();
         h.record(Duration::ZERO);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_us(1.0) <= 2);
+        assert_eq!(h.sum_us(), 1);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let combined = LatencyHistogram::new();
+        for us in [1u64, 9, 9, 130, 70_000] {
+            a.record_us(us);
+            combined.record_us(us);
+        }
+        for us in [3u64, 9, 500_000] {
+            b.record_us(us);
+            combined.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), combined.bucket_counts());
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.sum_us(), combined.sum_us());
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile_us(q), combined.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn stage_histograms_label_only_recorded_layers() {
+        let s = StageHistograms::new();
+        s.request.record_us(100);
+        s.layer(2).record_us(40);
+        s.layer(99).record_us(7); // folds into the last slot
+        let labels: Vec<String> = s.labelled().into_iter().map(|(l, _)| l).collect();
+        assert!(labels.contains(&"request".to_string()));
+        assert!(labels.contains(&"wire".to_string())); // fixed stages always render
+        assert!(labels.contains(&"layer2".to_string()));
+        assert!(labels.contains(&format!("layer{}", N_LAYER_STAGES - 1)));
+        assert!(!labels.contains(&"layer3".to_string()));
     }
 
     #[test]

@@ -48,6 +48,26 @@ pub struct ConvJob {
     /// or charge/release go asymmetric when residency changes
     /// mid-flight.
     pub wire_weights_cached: bool,
+    /// Distributed-tracing context; default means tracing is off and
+    /// the job costs nothing on the telemetry path.
+    pub trace: TraceCtx,
+}
+
+/// Per-job tracing context, stamped at admission and carried through
+/// dispatch, the wire, and stream hops.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Trace id (one per request / per streamed image); `0` = tracing
+    /// off — the span path is a no-op and the wire never sees a trace
+    /// field.
+    pub id: u64,
+    /// Microseconds the request waited for admission before it was
+    /// enqueued; the dispatcher uses it to anchor the request root span.
+    pub admission_us: u64,
+    /// `Some(layer)` when this job is one hop of a streamed inference —
+    /// the stream driver owns the request root span then, and dispatch
+    /// only records the per-hop children.
+    pub layer: Option<u16>,
 }
 
 /// FNV-1a over every field that determines the weight-set layout.
@@ -139,6 +159,7 @@ impl ConvJob {
             weights_id: weights_fingerprint(&spec, JobKind::Standard),
             weights_hash,
             wire_weights_cached: false,
+            trace: TraceCtx::default(),
         }
     }
 
@@ -164,6 +185,7 @@ impl ConvJob {
             weights_id: weights_fingerprint(&spec, JobKind::Depthwise),
             weights_hash,
             wire_weights_cached: false,
+            trace: TraceCtx::default(),
         }
     }
 
@@ -188,6 +210,7 @@ impl ConvJob {
             weights: &*self.weights,
             bias: self.bias.as_slice(),
             weights_resident,
+            trace_id: self.trace.id,
         }
     }
 
@@ -222,6 +245,13 @@ pub struct ConvResult {
     /// is *answered* — a failed backend must never hang the pool — but
     /// `output` is empty and carries no numerics.
     pub error: Option<String>,
+    /// Microseconds the job sat dispatched-but-unstarted (queue stage);
+    /// batch-granular — every job in a weight-stationary batch shares
+    /// its batch's figure.
+    pub queue_us: u64,
+    /// Microseconds the winning backend call took (wall clock on the
+    /// dispatching side; for remote workers this includes the wire).
+    pub compute_us: u64,
 }
 
 impl ConvResult {

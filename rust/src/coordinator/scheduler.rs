@@ -77,6 +77,7 @@ impl<B: ConvBackend> CnnScheduler<B> {
                 weights: &lp.weights,
                 bias: &lp.bias,
                 weights_resident: false,
+                trace_id: 0,
             })?;
             let mut out = run.output;
             if lp.spec.relu {

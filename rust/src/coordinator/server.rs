@@ -70,7 +70,11 @@ pub fn build_pool(config: &CoordinatorConfig) -> anyhow::Result<CorePool> {
         !backends.is_empty(),
         "config describes an empty pool (no cores, workers or peers)"
     );
-    Ok(CorePool::with_backends(backends, config.ip))
+    Ok(CorePool::with_backends_traced(
+        backends,
+        config.ip,
+        config.trace.clone(),
+    ))
 }
 
 /// Serving report for one trace run.
@@ -86,6 +90,11 @@ pub struct Report {
     pub sim_gops_psum: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Tail-of-the-tail request latency (99.9th percentile), linearly
+    /// interpolated inside the winning histogram bucket — meaningful
+    /// even when a run's worst requests all land in one power-of-two
+    /// bucket.
+    pub p999_us: u64,
     pub total_psums: u64,
     pub weight_dma_skip_rate: f64,
     /// Wire-v4 weight-cache hits across the pool's remote workers:
@@ -138,7 +147,32 @@ impl Server {
 
     pub fn try_new(config: CoordinatorConfig) -> anyhow::Result<Self> {
         let pool = build_pool(&config)?;
+        // A configured scrape endpoint goes live against this pool the
+        // moment the server exists — mid-run scrapes see live counters.
+        if let Some(scrape) = &config.scrape {
+            scrape.attach(pool.scrape_source());
+        }
         Ok(Server { config, pool })
+    }
+
+    /// Per-stage latency histogram observation counts (stage name →
+    /// samples recorded) — the CLI smoke legs assert on these without
+    /// reaching into the pool.
+    pub fn stage_counts(&self) -> Vec<(String, u64)> {
+        self.pool
+            .metrics
+            .stages
+            .labelled()
+            .into_iter()
+            .map(|(name, h)| (name, h.count()))
+            .collect()
+    }
+
+    /// The pool's span sink, when the config enabled tracing — the CLI
+    /// exports [`crate::telemetry::SpanSink::to_chrome_trace`] from it
+    /// after a run.
+    pub fn span_sink(&self) -> Option<std::sync::Arc<crate::telemetry::SpanSink>> {
+        self.pool.span_sink()
     }
 
     /// Run a whole trace closed-loop (submit all, await all). When
@@ -261,6 +295,7 @@ impl Server {
             })
         };
 
+        let tracing = self.config.trace.is_some();
         for i in 0..n {
             on_entry(i);
             // Open-loop pacing: wait out the gap to this entry's
@@ -272,7 +307,11 @@ impl Server {
                     std::thread::sleep(wait);
                 }
             }
-            let job = make_job(i);
+            // Admission wait is measured from here: everything until
+            // the submission is enqueued is time the request spent at
+            // the front door (zero on an unbounded pool).
+            let admit_start = Instant::now();
+            let mut job = make_job(i);
             if let Some(ac) = &admission {
                 // Admitted-but-unbatched work can't complete; flush open
                 // batches before blocking or the budget never frees.
@@ -288,6 +327,14 @@ impl Server {
                         continue;
                     }
                 }
+            }
+            let admission_us = admit_start.elapsed().as_micros() as u64;
+            self.pool.metrics.stages.admission.record_us(admission_us);
+            if tracing {
+                // Trace ids are minted at the front door: sequential,
+                // nonzero (0 is the "untraced" sentinel everywhere).
+                job.trace.id = i as u64 + 1;
+                job.trace.admission_us = admission_us;
             }
             let sub = Submission {
                 job,
@@ -329,8 +376,9 @@ impl Server {
             n_cores: self.pool.n_cores(),
             wall,
             sim_gops_psum: m.sim_gops_psum(self.config.ip.freq_hz, self.pool.n_cores()),
-            p50_us: m.latency.quantile_us(0.5),
-            p99_us: m.latency.quantile_us(0.99),
+            p50_us: m.stages.request.quantile_us(0.5),
+            p99_us: m.stages.request.quantile_us(0.99),
+            p999_us: m.stages.request.quantile_us(0.999),
             total_psums: m.psums.load(Ordering::Relaxed),
             weight_dma_skip_rate: if completed == 0 {
                 0.0
@@ -378,8 +426,9 @@ impl Server {
             n_cores: self.pool.n_cores(),
             wall: outcome.wall,
             sim_gops_psum: m.sim_gops_psum(self.config.ip.freq_hz, self.pool.n_cores()),
-            p50_us: m.latency.quantile_us(0.5),
-            p99_us: m.latency.quantile_us(0.99),
+            p50_us: m.stages.request.quantile_us(0.5),
+            p99_us: m.stages.request.quantile_us(0.99),
+            p999_us: m.stages.request.quantile_us(0.999),
             total_psums: m.psums.load(Ordering::Relaxed),
             weight_dma_skip_rate: if completed == 0 {
                 0.0
@@ -424,7 +473,7 @@ impl Report {
         };
         format!(
             "requests={} cores={} wall={:?} host_rps={:.1} errors={} shed={} retried={} recovered_peers={}\n\
-             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us wdma_skip={:.0}% \
+             sim_gops(psum)={:.4} total_psums={} p50={}us p99={}us p999={}us wdma_skip={:.0}% \
              wcache_hits={} wcache_misses={} wcache_saved={}B mix=[{}]{}",
             self.n_requests,
             self.n_cores,
@@ -438,6 +487,7 @@ impl Report {
             self.total_psums,
             self.p50_us,
             self.p99_us,
+            self.p999_us,
             self.weight_dma_skip_rate * 100.0,
             self.n_weight_hits,
             self.n_weight_misses,
@@ -464,6 +514,7 @@ impl Report {
             ("sim_gops_psum", Json::num(self.sim_gops_psum)),
             ("p50_us", Json::num(self.p50_us as f64)),
             ("p99_us", Json::num(self.p99_us as f64)),
+            ("p999_us", Json::num(self.p999_us as f64)),
             ("total_psums", Json::num(self.total_psums as f64)),
             ("weight_dma_skip_rate", Json::num(self.weight_dma_skip_rate)),
             ("n_weight_hits", Json::num(self.n_weight_hits as f64)),
@@ -834,6 +885,50 @@ mod tests {
         );
         front.shutdown();
         peer.stop();
+    }
+
+    #[test]
+    fn traced_run_yields_complete_span_trees_and_a_live_scrape() {
+        use crate::telemetry::scrape::ScrapeServer;
+        use crate::telemetry::{validate_coverage, SpanSink};
+        use std::io::{Read as _, Write as _};
+        use std::sync::Arc;
+
+        let sink = Arc::new(SpanSink::new());
+        let scrape = Arc::new(ScrapeServer::bind("127.0.0.1:0").unwrap());
+        let mut server = Server::new(
+            CoordinatorConfig::default()
+                .with_cores(2)
+                .with_trace(Arc::clone(&sink))
+                .with_scrape(Arc::clone(&scrape)),
+        );
+        let report = server.run_trace(&small_trace(12));
+        assert_eq!(report.n_requests, 12);
+        assert!(report.p50_us <= report.p99_us && report.p99_us <= report.p999_us);
+
+        // Every answered request left a complete span tree in the ring:
+        // one Request root whose children cover its wall time.
+        let check = validate_coverage(&sink.snapshot()).expect("span trees validate");
+        assert_eq!(check.roots, 12, "one Request root per answered request");
+
+        // The scrape endpoint (attached at construction) serves the
+        // same run: counters, stage-keyed buckets, worker gauges.
+        let mut s = std::net::TcpStream::connect(scrape.addr()).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut body = String::new();
+        s.read_to_string(&mut body).unwrap();
+        assert!(body.contains("repro_completed_total 12"), "{body}");
+        assert!(
+            body.contains("repro_stage_latency_us_count{stage=\"request\"} 12"),
+            "{body}"
+        );
+        assert!(
+            body.contains("repro_stage_latency_us_count{stage=\"admission\"} 12"),
+            "{body}"
+        );
+        assert!(body.contains("repro_worker_load{worker=\"sim-ipcore-i32-0\"}"), "{body}");
+        server.shutdown();
+        scrape.stop();
     }
 
     #[test]

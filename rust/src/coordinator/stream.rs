@@ -33,6 +33,7 @@ use super::dispatch::CorePool;
 use super::request::{ConvResult, Submission};
 use crate::model::Tensor;
 use crate::registry::{ModelManifest, ModelRegistry};
+use crate::telemetry::Stage;
 use std::collections::BTreeMap;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
@@ -109,6 +110,11 @@ struct ImageState {
     input: Tensor<u8>,
     attempts: u32,
     admitted: Instant,
+    /// Tracing tile cursor: where the previous hop's accounting ended.
+    /// Layer/Boundary spans tile `[mark, now]` contiguously, so the
+    /// union of an image's child spans covers its Request root with no
+    /// scheduler-loop gaps.
+    mark: Instant,
 }
 
 /// The streaming front: walks every image's layer chain across the
@@ -148,6 +154,11 @@ impl<'a> StreamScheduler<'a> {
     ) -> StreamOutcome {
         let (tx, rx) = channel::<ConvResult>();
         let start = Instant::now();
+        // Per-image trace ids are minted here (image i → i+1, nonzero)
+        // when the pool carries a span sink; the front owns each
+        // image's Request root — per-layer hops propagate the id with
+        // `trace.layer` set so no downstream stage mints a second root.
+        let sink = self.pool.span_sink();
         let mut inflight: BTreeMap<usize, ImageState> = BTreeMap::new();
         let mut outcomes: Vec<Option<ImageOutcome>> = (0..n_images).map(|_| None).collect();
         let mut finished = 0usize;
@@ -168,14 +179,17 @@ impl<'a> StreamScheduler<'a> {
                 let model = i % self.registry.n_models();
                 let manifest = &self.registry.models()[model];
                 let input = manifest.sample_image(seed ^ ((i as u64) << 1));
+                let admitted = Instant::now();
                 let state = ImageState {
                     model,
                     layer: 0,
                     input,
                     attempts: 0,
-                    admitted: Instant::now(),
+                    admitted,
+                    mark: admitted,
                 };
-                self.submit(&tx, manifest, i, &state);
+                let tid = if sink.is_some() { i as u64 + 1 } else { 0 };
+                self.submit(&tx, manifest, i, &state, tid);
                 inflight.insert(i, state);
             }
 
@@ -207,6 +221,14 @@ impl<'a> StreamScheduler<'a> {
                 };
                 if attempts > MAX_LAYER_ATTEMPTS {
                     let state = inflight.remove(&image).expect("state present");
+                    if let Some(sink) = &sink {
+                        // Even a failed image leaves a complete tree:
+                        // the last Layer tile absorbs the retry tail.
+                        let tid = image as u64 + 1;
+                        let now = Instant::now();
+                        sink.span(tid, Stage::Layer(layer as u16), 0, state.mark, now);
+                        sink.span(tid, Stage::Request, 0, state.admitted, now);
+                    }
                     outcomes[image] = Some(ImageOutcome {
                         image,
                         model,
@@ -224,7 +246,8 @@ impl<'a> StreamScheduler<'a> {
                     continue;
                 }
                 std::thread::sleep(RETRY_BACKOFF);
-                self.submit(&tx, manifest, image, &inflight[&image]);
+                let tid = if sink.is_some() { image as u64 + 1 } else { 0 };
+                self.submit(&tx, manifest, image, &inflight[&image], tid);
                 continue;
             }
 
@@ -241,7 +264,34 @@ impl<'a> StreamScheduler<'a> {
             layer_lat[layer].0 += r.latency.as_micros() as u64;
             layer_lat[layer].1 += 1;
 
-            match manifest.layers[layer].boundary(&r.output) {
+            // Stage accounting: the Layer tile runs from the previous
+            // hop's end (`mark`) to here — queue + compute + everything
+            // the scheduler loop spent on this hop — then the boundary
+            // transform gets its own tile, so the per-image span tree
+            // stays gap-free.
+            let hop_end = Instant::now();
+            let tid = if sink.is_some() { image as u64 + 1 } else { 0 };
+            let mark = inflight[&image].mark;
+            self.pool
+                .metrics
+                .stages
+                .layer(layer)
+                .record_us(hop_end.saturating_duration_since(mark).as_micros() as u64);
+            if let Some(sink) = &sink {
+                sink.span(tid, Stage::Layer(layer as u16), 0, mark, hop_end);
+            }
+            let next = manifest.layers[layer].boundary(&r.output);
+            let boundary_end = Instant::now();
+            self.pool.metrics.stages.boundary.record_us(
+                boundary_end
+                    .saturating_duration_since(hop_end)
+                    .as_micros() as u64,
+            );
+            if let Some(sink) = &sink {
+                sink.span(tid, Stage::Boundary, 0, hop_end, boundary_end);
+            }
+
+            match next {
                 Some(next_input) => {
                     // Inter-layer boundary applied on the front; hand the
                     // next layer to whichever worker dispatch picks.
@@ -250,13 +300,20 @@ impl<'a> StreamScheduler<'a> {
                         s.layer = layer + 1;
                         s.input = next_input;
                         s.attempts = 0;
+                        s.mark = boundary_end;
                     }
-                    self.submit(&tx, manifest, image, &inflight[&image]);
+                    self.submit(&tx, manifest, image, &inflight[&image], tid);
                 }
                 None => {
                     // Final layer: raw logits. Check against the
                     // manifest's own CPU reference.
                     let state = inflight.remove(&image).expect("state present");
+                    // Root span closes at the boundary check, before
+                    // the golden CPU reference run — serving latency,
+                    // not verification cost.
+                    if let Some(sink) = &sink {
+                        sink.span(tid, Stage::Request, 0, state.admitted, boundary_end);
+                    }
                     let golden = manifest
                         .forward_golden(&manifest.sample_image(seed ^ ((image as u64) << 1)))
                         .into_data();
@@ -304,11 +361,19 @@ impl<'a> StreamScheduler<'a> {
         manifest: &ModelManifest,
         image: usize,
         state: &ImageState,
+        trace_id: u64,
     ) {
         let id = image as u64 * ID_STRIDE + state.layer as u64;
-        let job = manifest
+        let mut job = manifest
             .layer_job(state.layer, id, state.input.clone())
             .expect("manifest layer chain is internally consistent");
+        if trace_id != 0 {
+            // Propagate the image's trace id; `layer` marks this as a
+            // mid-stream hop so the dispatcher (and any remote peer's
+            // dispatcher) never mints a second Request root for it.
+            job.trace.id = trace_id;
+            job.trace.layer = Some(state.layer.min(u16::MAX as usize) as u16);
+        }
         let batch = Batch {
             spec: job.spec,
             weights_id: job.weights_id,
@@ -390,6 +455,43 @@ mod tests {
         }
         pool_a.shutdown();
         pool_b.shutdown();
+    }
+
+    #[test]
+    fn traced_stream_tiles_layer_spans_into_complete_image_trees() {
+        use crate::backend::{ConvBackend, SimBackend};
+        use crate::telemetry::{validate_coverage, SpanSink, Stage};
+        use std::sync::Arc;
+
+        let sink = Arc::new(SpanSink::new());
+        let backends: Vec<Box<dyn ConvBackend>> = (0..2)
+            .map(|_| Box::new(SimBackend::new(IpCoreConfig::default())) as Box<dyn ConvBackend>)
+            .collect();
+        let pool = CorePool::with_backends_traced(
+            backends,
+            IpCoreConfig::default(),
+            Some(Arc::clone(&sink)),
+        );
+        let reg = ModelRegistry::builtin(2, 11);
+        let out = StreamScheduler::new(&pool, &reg, 3).run(4, 5);
+        assert!(out.all_match(), "{:?}", out.images);
+
+        // One Request root per image, and every image's Layer/Boundary
+        // tiles cover its root — gap-free by construction.
+        let spans = sink.snapshot();
+        let check = validate_coverage(&spans).expect("complete per-image trees");
+        assert_eq!(check.roots, 4, "one root per streamed image");
+        assert!(spans.iter().any(|s| s.stage == Stage::Layer(0)));
+        assert!(spans.iter().any(|s| s.stage == Stage::Boundary));
+
+        // Per-layer stage histograms saw every hop, boundary every one.
+        let total_layers: usize = (0..4).map(|i| reg.n_layers(i % 2)).sum();
+        let layer_count: u64 = (0..crate::coordinator::metrics::N_LAYER_STAGES)
+            .map(|l| pool.metrics.stages.layer(l).count())
+            .sum();
+        assert_eq!(layer_count as usize, total_layers);
+        assert_eq!(pool.metrics.stages.boundary.count() as usize, total_layers);
+        pool.shutdown();
     }
 
     #[test]

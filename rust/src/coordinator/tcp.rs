@@ -25,7 +25,8 @@
 //! weigh this peer honestly:
 //!
 //! ```text
-//! <- {"hello":{"proto":4,"ping":true,"bin":true,"wcache":true,"freq_hz":112000000,
+//! <- {"hello":{"proto":4,"ping":true,"bin":true,"wcache":true,"trace":true,
+//!      "freq_hz":112000000,
 //!      "cores":3,"workers":[
 //!      {"backend":"sim-ipcore-i32","standard":true,"depthwise":true,
 //!       "pointwise":true,"accum":"i32","model":"sim-cycles","quote":6272},
@@ -110,6 +111,15 @@
 //!   carry real data.
 //! * `full_output` — opt into the whole output tensor in the reply.
 //!   Off by default: a load generator only needs the checksum.
+//! * `trace` — distributed-tracing propagation (telemetry), only after
+//!   the hello advertised `"trace":true`: the originating front's
+//!   trace id for this job, a nonzero u64. A traced request's reply
+//!   carries the server-side `queue_us`/`compute_us` decomposition
+//!   (below), and a server running its own span sink records this
+//!   hop's spans under the propagated id. Untraced requests omit the
+//!   field entirely; clients must never send it to an endpoint whose
+//!   hello lacks the flag (a v2-only endpoint also ignores a stray
+//!   one).
 //!
 //! The wire serves production traffic only: every job requires I32
 //! accumulator semantics (wrap-8 replies stay an in-process,
@@ -124,6 +134,12 @@
 //! <- {"id":2,"ok":true,...,"shape":[8,8,8],"output":[...i32 words...]}
 //! <- {"id":3,"ok":true,...,"shape":[8,8,8],"bin_output":2048}\n<2048 bytes i32 LE>
 //! ```
+//!
+//! A traced request's reply (and only a traced one) additionally
+//! carries `"queue_us"` and `"compute_us"`: how long the job sat in
+//! this server's dispatch queue and how long its backend call took,
+//! both in microseconds of server wall time. The client subtracts both
+//! from its measured round trip to get the pure wire component.
 //!
 //! `shape` plus `output` *or* `bin_output` appear only when the
 //! request set `full_output`; the reply encoding mirrors the request
@@ -228,17 +244,20 @@
 //!
 //! Hello flags — not the `proto` number — are the capability
 //! switches: `"bin":true` negotiates binary tensor framing,
-//! `"wcache":true` negotiates content-addressed weights. Clients must
-//! send JSON tensors to an endpoint whose hello lacks `bin`, and must
-//! never send `weights_hash` to one whose hello lacks `wcache`.
+//! `"wcache":true` negotiates content-addressed weights, and
+//! `"trace":true` negotiates trace propagation. Clients must send
+//! JSON tensors to an endpoint whose hello lacks `bin`, must never
+//! send `weights_hash` to one whose hello lacks `wcache`, and must
+//! never send `trace` to one whose hello lacks `trace`.
 //! `proto` is 4 on current endpoints and 2 on legacy
 //! ([`CoordinatorConfig::wire_v2_only`]) endpoints; clients accept
 //! both (outputs are bit-identical on every revision — only the
 //! encoding differs). Capabilities *within* a revision are negotiated
 //! by hello-field presence (`"ping":true`, `"bin":true`,
-//! `"wcache":true` today): unknown hello fields, unknown request
-//! fields and unknown reply fields must all be ignored, so a newer
-//! server interoperates with an older client and vice versa.
+//! `"wcache":true`, `"trace":true` today): unknown hello fields,
+//! unknown request fields and unknown reply fields must all be
+//! ignored, so a newer server interoperates with an older client and
+//! vice versa.
 //!
 //! # Shutdown
 //!
@@ -440,7 +459,7 @@ pub(crate) fn encode_request_frame(
     full_output: bool,
     bin: bool,
 ) -> Vec<u8> {
-    encode_request_frame_v4(id, kind, spec, img, Some(weights), None, bias, full_output, bin)
+    encode_request_frame_v4(id, kind, spec, img, Some(weights), None, bias, full_output, bin, 0)
 }
 
 /// v4 generalisation of [`encode_request_frame`]: `weights` may be
@@ -449,7 +468,9 @@ pub(crate) fn encode_request_frame(
 /// claimed `weights_hash` may ride along with or without the payload.
 /// Callers must pass `weights_hash` when `weights` is `None` and must
 /// only do either against a peer whose hello advertised
-/// `"wcache":true`.
+/// `"wcache":true`. `trace` is the propagated trace id (0 = untraced,
+/// field omitted); callers must pass 0 unless the peer's hello
+/// advertised `"trace":true`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn encode_request_frame_v4(
     id: u64,
@@ -461,6 +482,7 @@ pub(crate) fn encode_request_frame_v4(
     bias: &[i32],
     full_output: bool,
     bin: bool,
+    trace: u64,
 ) -> Vec<u8> {
     debug_assert!(
         weights.is_some() || weights_hash.is_some(),
@@ -485,6 +507,9 @@ pub(crate) fn encode_request_frame_v4(
     }
     if let Some(h) = weights_hash {
         fields.push(("weights_hash", Json::uint(h)));
+    }
+    if trace != 0 {
+        fields.push(("trace", Json::uint(trace)));
     }
     if bin {
         let wts = weights.unwrap_or(&[]);
@@ -818,6 +843,9 @@ fn job_from_request(
                 weights_id,
                 weights_hash: whash,
                 wire_weights_cached: false,
+                // The propagated trace id (if any) is stamped by the
+                // connection handler, which owns the negotiation state.
+                trace: super::request::TraceCtx::default(),
             }),
             cache,
         ))
@@ -846,6 +874,7 @@ fn render_reply(
     freq_hz: u64,
     full_output: bool,
     bin: bool,
+    traced: bool,
 ) -> (Json, Option<Vec<u8>>) {
     if let Some(err) = &r.error {
         return (error_json(client_id, err), None);
@@ -875,6 +904,14 @@ fn render_reply(
         ("output_head", Json::arr_i64(head)),
         ("checksum", Json::int(checksum)),
     ];
+    if traced {
+        // Traced requests get the server-side decomposition: how long
+        // the job sat in this server's queue and how long its backend
+        // call took, so the client can split its measured round trip
+        // into wire vs remote work.
+        fields.push(("queue_us", Json::uint(r.queue_us)));
+        fields.push(("compute_us", Json::uint(r.compute_us)));
+    }
     let mut body = None;
     if full_output {
         fields.push((
@@ -950,6 +987,11 @@ fn hello_json(pool: &CorePool, v2_only: bool) -> Json {
         // are in play. A v2-only endpoint omits it and clients must
         // ship weights inline on every request.
         h.push(("wcache", Json::Bool(true)));
+        // Trace propagation (telemetry): this endpoint accepts a
+        // `trace` id on request headers and answers traced jobs with
+        // server-side `queue_us`/`compute_us`. A v2-only endpoint omits
+        // the flag and clients must never send the field.
+        h.push(("trace", Json::Bool(true)));
     }
     h.push(("freq_hz", Json::uint(pool.ip_config().freq_hz)));
     h.push(("cores", Json::uint(pool.n_cores() as u64)));
@@ -964,6 +1006,9 @@ struct PendingMeta {
     full_output: bool,
     bin: bool,
     psums: u64,
+    /// The request carried a (negotiated) trace id: the reply echoes
+    /// the server-side `queue_us`/`compute_us` decomposition.
+    traced: bool,
 }
 
 /// Write one JSON line under the shared writer lock.
@@ -1049,6 +1094,7 @@ fn handle_connection(
                             freq,
                             meta.full_output,
                             meta.bin,
+                            meta.traced,
                         );
                         let mut w = writer.lock().unwrap();
                         let mut ok = writeln!(w, "{}", header.to_json()).is_ok();
@@ -1170,7 +1216,16 @@ fn handle_connection(
                     .get(&["full_output"])
                     .and_then(Json::as_bool)
                     .unwrap_or(false);
-                let job = match job_from_request(internal, &req, bin, store.as_deref()) {
+                // Trace propagation is feature-negotiated via the hello
+                // (never advertised by a v2-only endpoint): a legacy
+                // endpoint ignores a stray trace field entirely — no
+                // spans, no timing in the reply.
+                let trace_id = if v2_only {
+                    0
+                } else {
+                    req.get(&["trace"]).and_then(Json::as_u64).unwrap_or(0)
+                };
+                let mut job = match job_from_request(internal, &req, bin, store.as_deref()) {
                     Err(e) => {
                         if !send_line(&writer, &error_json(client_id, &e)) {
                             break 'conn;
@@ -1213,6 +1268,15 @@ fn handle_connection(
                         *job
                     }
                 };
+                // Stamp the propagated trace id so a server running its
+                // own span sink records this hop under the *client's*
+                // trace. The layer marker keeps the dispatcher from
+                // minting a second request root — the root lives on the
+                // originating front.
+                if trace_id != 0 {
+                    job.trace.id = trace_id;
+                    job.trace.layer = Some(0);
+                }
                 // Admission control gates on the job's PSUM quote (the
                 // unit the dispatcher balances by) with the fast-reject
                 // serving policy: an over-budget request gets a
@@ -1265,6 +1329,7 @@ fn handle_connection(
                             full_output,
                             bin: is_bin,
                             psums,
+                            traced: trace_id != 0,
                         },
                     );
                 }
@@ -1621,11 +1686,12 @@ mod tests {
         let (hello, _stream, _reader) = connect_raw(server.addr);
         let h = hello.get(&["hello"]).expect("hello frame");
         assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(4));
-        // In-revision feature flags: pings answered, binary framing
-        // and content-addressed weights on.
+        // In-revision feature flags: pings answered, binary framing,
+        // content-addressed weights and trace propagation on.
         assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["bin"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["wcache"]).unwrap().as_bool(), Some(true));
+        assert_eq!(h.get(&["trace"]).unwrap().as_bool(), Some(true));
         assert_eq!(h.get(&["cores"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["freq_hz"]).unwrap().as_f64().unwrap() > 0.0);
         let workers = h.get(&["workers"]).unwrap().as_arr().unwrap();
@@ -2089,6 +2155,7 @@ mod tests {
         assert_eq!(h.get(&["proto"]).unwrap().as_usize(), Some(2));
         assert!(h.get(&["bin"]).is_none(), "legacy endpoint must not offer binary framing");
         assert!(h.get(&["wcache"]).is_none(), "legacy endpoint must not offer weight caching");
+        assert!(h.get(&["trace"]).is_none(), "legacy endpoint must not offer tracing");
         // Ping stays negotiated within v2 (it predates v3).
         assert_eq!(h.get(&["ping"]).unwrap().as_bool(), Some(true));
         // JSON-tensor traffic is served normally.
@@ -2096,6 +2163,47 @@ mod tests {
         let resp = request_once(&server.addr, &req).unwrap();
         assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
         server.stop();
+    }
+
+    #[test]
+    fn traced_request_gets_server_timing_and_v2_never_serves_it() {
+        // Telemetry negotiation, server side: a traced request to a v4
+        // endpoint is answered with the server-side queue/compute
+        // decomposition; an untraced request on the same endpoint is
+        // not; and a v2-pinned endpoint ignores a stray trace field
+        // entirely — it must provably never serve a trace reply field.
+        let server = start();
+        let traced =
+            Json::parse(r#"{"id":1,"spec":{"c":4,"h":8,"w":8,"k":4},"seed":1,"trace":9}"#)
+                .unwrap();
+        let resp = request_once(&server.addr, &traced).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert!(
+            resp.get(&["queue_us"]).and_then(Json::as_u64).is_some(),
+            "traced reply must decompose queue time: {resp:?}"
+        );
+        assert!(
+            resp.get(&["compute_us"]).and_then(Json::as_u64).is_some(),
+            "traced reply must decompose compute time: {resp:?}"
+        );
+        let plain = Json::parse(r#"{"id":2,"spec":{"c":4,"h":8,"w":8,"k":4},"seed":1}"#).unwrap();
+        let resp = request_once(&server.addr, &plain).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert!(resp.get(&["queue_us"]).is_none(), "untraced reply must omit timing");
+        assert!(resp.get(&["compute_us"]).is_none());
+        server.stop();
+        let legacy = TcpServer::start(
+            "127.0.0.1:0",
+            CoordinatorConfig::default().with_cores(1).with_wire_v2_only(),
+        )
+        .unwrap();
+        let resp = request_once(&legacy.addr, &traced).unwrap();
+        assert_eq!(resp.get(&["ok"]).unwrap().as_bool(), Some(true), "{resp:?}");
+        assert!(
+            resp.get(&["queue_us"]).is_none() && resp.get(&["compute_us"]).is_none(),
+            "a v2 endpoint must never serve trace reply fields: {resp:?}"
+        );
+        legacy.stop();
     }
 
     #[test]
@@ -2324,7 +2432,7 @@ mod tests {
         // 1. Hash-only against a cold store: a fast need_weights miss,
         //    well-formed for pre-v4 clients (ok:false + error).
         let frame = encode_request_frame_v4(
-            1, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true,
+            1, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, body) = read_reply_frame(&mut reader);
@@ -2335,7 +2443,7 @@ mod tests {
         assert!(body.is_none());
         // 2. Re-ship inline with the hash: served, blob admitted.
         let frame = encode_request_frame_v4(
-            2, JobKind::Standard, &spec, &img, Some(&wts), Some(hash), &bias, true, true,
+            2, JobKind::Standard, &spec, &img, Some(&wts), Some(hash), &bias, true, true, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, body) = read_reply_frame(&mut reader);
@@ -2349,7 +2457,7 @@ mod tests {
         //    zero weight bytes on the wire.
         let (_h2, mut s2, mut r2) = connect_raw(server.addr);
         let frame = encode_request_frame_v4(
-            3, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true,
+            3, JobKind::Standard, &spec, &img, None, Some(hash), &bias, true, true, 0,
         );
         s2.write_all(&frame).unwrap();
         let (resp, body) = read_reply_frame(&mut r2);
@@ -2357,7 +2465,7 @@ mod tests {
         assert_eq!(body.expect("bin_output body"), want.data());
         // 4. The JSON hash-only form resolves against the same store.
         let frame = encode_request_frame_v4(
-            4, JobKind::Standard, &spec, &img, None, Some(hash), &bias, false, false,
+            4, JobKind::Standard, &spec, &img, None, Some(hash), &bias, false, false, 0,
         );
         s2.write_all(&frame).unwrap();
         let (resp, _body) = read_reply_frame(&mut r2);
@@ -2398,7 +2506,7 @@ mod tests {
         let wts: Vec<u8> = (0..36).map(|i| (i % 5) as u8).collect();
         let lie = fnv1a_bytes(&wts) ^ 1;
         let frame = encode_request_frame_v4(
-            1, JobKind::Standard, &spec, &img, Some(&wts), Some(lie), &[0; 4], false, true,
+            1, JobKind::Standard, &spec, &img, Some(&wts), Some(lie), &[0; 4], false, true, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, _body) = read_reply_frame(&mut reader);
@@ -2442,7 +2550,7 @@ mod tests {
         // JSON hash-only form (a binary frame would trip the bin guard
         // before weight resolution).
         let frame = encode_request_frame_v4(
-            1, JobKind::Standard, &spec, &img, None, Some(1234), &[0; 4], false, false,
+            1, JobKind::Standard, &spec, &img, None, Some(1234), &[0; 4], false, false, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, _body) = read_reply_frame(&mut reader);
@@ -2499,6 +2607,7 @@ mod tests {
                 &bias,
                 false,
                 true,
+                0,
             );
             stream.write_all(&frame).unwrap();
             let (resp, _b) = read_reply_frame(&mut reader);
@@ -2509,7 +2618,7 @@ mod tests {
         assert!(store.contains(hashes[1]) && store.contains(hashes[2]));
         // A resident blob answers hash-only (and refreshes recency).
         let frame = encode_request_frame_v4(
-            4, JobKind::Standard, &spec, &img, None, Some(hashes[1]), &bias, false, true,
+            4, JobKind::Standard, &spec, &img, None, Some(hashes[1]), &bias, false, true, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, _b) = read_reply_frame(&mut reader);
@@ -2517,7 +2626,7 @@ mod tests {
         // The evicted blob round-trips: need_weights, inline re-ship,
         // resident again (evicting blob 2, now the least recent).
         let frame = encode_request_frame_v4(
-            5, JobKind::Standard, &spec, &img, None, Some(hashes[0]), &bias, false, true,
+            5, JobKind::Standard, &spec, &img, None, Some(hashes[0]), &bias, false, true, 0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, _b) = read_reply_frame(&mut reader);
@@ -2532,6 +2641,7 @@ mod tests {
             &bias,
             false,
             true,
+            0,
         );
         stream.write_all(&frame).unwrap();
         let (resp, _b) = read_reply_frame(&mut reader);

@@ -40,6 +40,12 @@
 //!   `TcpServer`) and a model registry (`model_id → ordered layers +
 //!   weight hashes`) so wire v4 ships each distinct weight blob to a
 //!   peer at most once and serves every later job from residency.
+//! * [`telemetry`] — observability: per-request distributed tracing
+//!   (admission/queue/dispatch/wire/compute/boundary spans into a
+//!   bounded lock-free [`telemetry::SpanSink`], exported as Chrome
+//!   trace-event JSON) and a live Prometheus scrape endpoint
+//!   ([`telemetry::scrape`]) over the stage-keyed latency histograms
+//!   and per-worker gauges — all without touching numerics.
 //!
 //! Experiment index (DESIGN.md §4): Fig. 6 → [`hw::waveform`] +
 //! `examples/waveform_repro.rs`; Table 1 → [`hw::resource`]; §5.2
@@ -54,6 +60,7 @@ pub mod model;
 pub mod registry;
 pub mod runtime;
 pub mod store;
+pub mod telemetry;
 pub mod util;
 
 /// Paper constants that recur across modules.

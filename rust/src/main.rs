@@ -13,6 +13,7 @@
 //! repro serve [--cores N] [--golden N] [--im2col N] [--remote host:port[,host:port...]]
 //!             [--requests N] [--s52 F] [--dw F] [--models M] [--bench-json PATH]
 //!             [--stream] [--images N] [--window W]
+//!             [--trace-out FILE] [--metrics-addr A]
 //!                                       closed-loop trace through the coordinator
 //!                                       (--golden adds naive CPU fallback workers,
 //!                                        --im2col adds threaded im2col+GEMM workers,
@@ -27,7 +28,13 @@
 //!                                        walked through their model's layer chain
 //!                                        across the pool, up to --window W in
 //!                                        flight at once, every image checked
-//!                                        bit-exact against the registry golden);
+//!                                        bit-exact against the registry golden;
+//!                                        --trace-out FILE enables distributed
+//!                                        tracing and writes every request's span
+//!                                        tree as Chrome trace-event JSON after the
+//!                                        run — open in chrome://tracing / Perfetto;
+//!                                        --metrics-addr A binds a read-only
+//!                                        Prometheus scrape endpoint, live mid-run);
 //!                                       writes a machine-readable BENCH_serving.json
 //! repro serve-tcp [--addr A] [--cores N] [--golden N] [--im2col N] [--v2-only]
 //!                                       serve wire protocol v4 over TCP (binary
@@ -37,6 +44,7 @@
 //! repro fleet [N] [--peer-cores N] [--peer-im2col N] [--requests N] [--s52 F] [--dw F]
 //!             [--gap-us G] [--max-inflight P] [--v2-peers M] [--models M]
 //!             [--stream] [--images N] [--window W]
+//!             [--trace-out FILE] [--metrics-addr A]
 //!             [--kill-peer-after K] [--revive-after M]
 //!                                       multi-machine demo: spawn N in-process TCP
 //!                                       peers, front them with one remote-core pool,
@@ -69,6 +77,14 @@
 //!                                       and the run then proves the revived peer
 //!                                       serves traffic again. Exits non-zero unless
 //!                                       every non-shed request succeeds.
+//!                                       --trace-out FILE is the telemetry smoke: it
+//!                                       exits non-zero unless the exported Chrome
+//!                                       trace contains a complete span tree for
+//!                                       every successfully answered request (or
+//!                                       image, with --stream). --metrics-addr A
+//!                                       additionally exits non-zero unless the
+//!                                       scrape endpoint answered mid-run with
+//!                                       non-zero counters.
 //! repro artifacts                       list the AOT artifact registry
 //! ```
 
@@ -81,8 +97,11 @@ use repro::model::network::EdgeCnn;
 use repro::model::trace::{generate, TraceConfig};
 use repro::model::{LayerSpec, Tensor, S52};
 use repro::paper;
+use repro::telemetry::scrape::ScrapeServer;
+use repro::telemetry::SpanSink;
 use repro::util::cli::Args;
 use repro::util::prng::Prng;
+use std::sync::Arc;
 
 const USAGE: &str = "usage: repro <waveform|table1|throughput|simulate|infer|serve|serve-tcp|fleet|artifacts|capacity|energy|mobilenet> [options]
 run `repro help` or see rust/src/main.rs docs for per-command options";
@@ -297,6 +316,66 @@ fn front_config(cores: usize, golden: usize, im2col: usize, remote: Option<&str>
     Ok(config)
 }
 
+/// `--trace-out FILE` / `--metrics-addr ADDR` (serve and fleet): build
+/// the telemetry attachments the run asked for. A trace file implies a
+/// span sink on the config; a metrics addr binds the scrape endpoint
+/// now (port 0 resolves before the run) and prints where it landed.
+fn telemetry_from_args(
+    args: &Args,
+    mut config: CoordinatorConfig,
+) -> anyhow::Result<(CoordinatorConfig, Option<Arc<SpanSink>>, Option<Arc<ScrapeServer>>)> {
+    let mut sink = None;
+    if args.get("trace-out").is_some() {
+        let s = Arc::new(SpanSink::new());
+        config = config.with_trace(Arc::clone(&s));
+        sink = Some(s);
+    }
+    let mut scrape = None;
+    if let Some(addr) = args.get("metrics-addr") {
+        let srv = Arc::new(ScrapeServer::bind(addr)?);
+        println!(
+            "metrics: Prometheus text exposition live on http://{}/metrics",
+            srv.addr()
+        );
+        config = config.with_scrape(Arc::clone(&srv));
+        scrape = Some(srv);
+    }
+    Ok((config, sink, scrape))
+}
+
+/// Export the span ring as Chrome trace-event JSON to `--trace-out`.
+fn write_trace_out(args: &Args, sink: &Option<Arc<SpanSink>>) -> anyhow::Result<()> {
+    if let (Some(path), Some(sink)) = (args.get("trace-out"), sink) {
+        std::fs::write(path, sink.to_chrome_trace())?;
+        println!(
+            "chrome trace ({} spans, {} dropped to ring wrap) written to {path}",
+            sink.snapshot().len(),
+            sink.dropped()
+        );
+    }
+    Ok(())
+}
+
+/// One HTTP GET against the scrape endpoint, body returned verbatim.
+fn scrape_once(addr: std::net::SocketAddr) -> std::io::Result<String> {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect_timeout(&addr, std::time::Duration::from_secs(2))?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: repro\r\n\r\n")?;
+    let mut body = String::new();
+    s.read_to_string(&mut body)?;
+    Ok(body)
+}
+
+/// Does a scrape body show work actually completed?
+fn scrape_shows_progress(body: &str) -> bool {
+    body.lines().any(|l| {
+        l.strip_prefix("repro_completed_total ")
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .map_or(false, |n| n > 0)
+    })
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cores = args.get_usize("cores", 4).map_err(|e| anyhow::anyhow!(e))?;
     let golden = args.get_usize("golden", 0).map_err(|e| anyhow::anyhow!(e))?;
@@ -310,6 +389,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let window = args.get_usize("window", 4).map_err(|e| anyhow::anyhow!(e))?;
     let config = front_config(cores, golden, im2col, args.get("remote"))?
         .with_stream_window(window);
+    let (config, sink, scrape) = telemetry_from_args(args, config)?;
     let mut server = Server::try_new(config)?;
     let report = if stream {
         // Whole-network streaming: each submission is (model, image),
@@ -363,6 +443,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     println!("{}", report.render());
     write_bench_json(args, &report)?;
+    write_trace_out(args, &sink)?;
+    if let Some(s) = &scrape {
+        println!("metrics: {} scrapes answered", s.scrapes());
+        s.stop();
+    }
     server.shutdown();
     Ok(())
 }
@@ -478,7 +563,31 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                 .map_err(|_| anyhow::anyhow!("--max-inflight expects a PSUM budget"))?,
         );
     }
+    let (config, sink, scrape) = telemetry_from_args(args, config)?;
     let mut front = Server::try_new(config)?;
+
+    // Mid-run scrape checker: polls the metrics endpoint while the
+    // trace runs, until a snapshot shows live (non-zero) completion
+    // counters — the proof the endpoint serves *during* the run, not
+    // just after it.
+    let scrape_hit = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let checker_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let checker = scrape.as_ref().map(|s| {
+        let addr = s.addr();
+        let hit = Arc::clone(&scrape_hit);
+        let stop = Arc::clone(&checker_stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(body) = scrape_once(addr) {
+                    if scrape_shows_progress(&body) {
+                        hit.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+    });
     let mut stream_outcome = None;
     let report = if stream {
         // Whole-network streaming across the fleet: every image's layer
@@ -535,6 +644,73 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     };
     println!("{}", report.render());
     write_bench_json(args, &report)?;
+
+    // Telemetry contracts are checked against the *main* run, before
+    // any recovery waves reuse the front (which would re-mint trace
+    // ids and double up request roots in the ring).
+    let scrapes_mid_run = scrape.as_ref().map(|s| s.scrapes()).unwrap_or(0);
+    if let Some(checker) = checker {
+        // A very fast run gets a short grace window for its last poll.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while !scrape_hit.load(Ordering::Relaxed) && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        checker_stop.store(true, Ordering::Relaxed);
+        checker.join().ok();
+    }
+    if let Some(s) = &scrape {
+        anyhow::ensure!(
+            scrapes_mid_run > 0,
+            "metrics endpoint was never scraped while the run was live"
+        );
+        anyhow::ensure!(
+            scrape_hit.load(Ordering::Relaxed),
+            "the scrape endpoint never showed non-zero completion counters"
+        );
+        println!(
+            "metrics OK: {} scrapes answered ({scrapes_mid_run} mid-run), counters live",
+            s.scrapes()
+        );
+    }
+    if let Some(sink) = &sink {
+        let check = repro::telemetry::validate_coverage(&sink.snapshot())
+            .map_err(|e| anyhow::anyhow!("trace validation failed: {e}"))?;
+        let expected_roots = if stream {
+            stream_outcome
+                .as_ref()
+                .map(|o| o.images.len())
+                .unwrap_or(images)
+        } else {
+            // Shed entries never minted an id; errored ones recorded no
+            // spans. Every other request must have a complete tree.
+            report.n_requests.saturating_sub(report.n_errors)
+        };
+        anyhow::ensure!(
+            check.roots == expected_roots,
+            "trace holds {} complete span trees for {expected_roots} answered requests",
+            check.roots
+        );
+        println!(
+            "trace OK: {} complete span trees, worst per-request coverage {:.1}%",
+            check.roots,
+            check.worst_coverage * 100.0
+        );
+    }
+    write_trace_out(args, &sink)?;
+    if stream {
+        // Streaming runs must decompose latency per layer hop.
+        let layer_obs: u64 = front
+            .stage_counts()
+            .iter()
+            .filter(|(name, _)| name.starts_with("layer"))
+            .map(|&(_, c)| c)
+            .sum();
+        anyhow::ensure!(
+            layer_obs > 0,
+            "streaming run recorded no per-layer stage histograms"
+        );
+        println!("stage histograms OK: {layer_obs} per-layer observations");
+    }
     let served_remote = report
         .backend_mix
         .iter()
@@ -586,6 +762,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     front.shutdown();
     for p in peers {
         p.stop();
+    }
+    if let Some(s) = &scrape {
+        s.stop();
     }
     anyhow::ensure!(
         report.n_errors == 0,

@@ -152,6 +152,7 @@ impl ModelManifest {
             weights_id: weights_fingerprint_salted(&spec, layer.kind, layer.weights_hash),
             weights_hash: layer.weights_hash,
             wire_weights_cached: false,
+            trace: crate::coordinator::request::TraceCtx::default(),
         })
     }
 

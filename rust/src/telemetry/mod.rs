@@ -1,0 +1,557 @@
+//! Telemetry: distributed request tracing for the serving path.
+//!
+//! Every request (or streamed image) gets a non-zero trace id at
+//! admission; the front then records one [`SpanRecord`] per serving
+//! stage — admission wait, batcher/queue residency, each dispatch hop
+//! (worker-tagged, one per failover attempt), the wire round-trip and
+//! remote compute split reported by traced v4+ peers, front-side
+//! boundary transforms, and per-layer stream hops — into a bounded
+//! [`SpanSink`] ring buffer. The sink is std-only and allocation-free
+//! on the record path: each slot is a fixed set of atomics guarded by a
+//! per-slot sequence word, writers claim slots with one `fetch_add`,
+//! and the oldest spans are overwritten when the ring wraps. Snapshots
+//! export as Chrome trace-event JSON (`chrome://tracing`, Perfetto) via
+//! `--trace-out` on `serve`/`fleet`.
+//!
+//! Live scraping (Prometheus text exposition over a read-only TCP
+//! endpoint) lives in [`scrape`].
+
+pub mod scrape;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: at ~8 spans per request this holds the last
+/// ~8k requests, and the whole ring is ~3 MB of atomics.
+pub const DEFAULT_SPAN_CAPACITY: usize = 65_536;
+
+/// Tiling spans are recorded at µs granularity, so a request tree can
+/// legitimately leave a few µs of rounding gap per span; coverage
+/// validation tolerates this much absolute slack per request.
+pub const COVERAGE_SLACK_US: u64 = 100;
+
+/// The serving stage a span describes. `Layer(l)` is a whole
+/// (dispatch + boundary) hop of a streamed image's layer chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Per-request root: admission start through completion. Exactly
+    /// one per trace id; every other span nests inside it.
+    Request,
+    /// Admission-control wait (backpressure) before enqueueing.
+    Admission,
+    /// Batcher/queue residency: enqueued until a worker picked it up.
+    Queue,
+    /// One dispatch hop on one worker (one span per failover attempt).
+    Dispatch,
+    /// Wire share of a remote hop: round-trip minus the peer's own
+    /// reported queue + compute (only when the peer negotiated trace).
+    Wire,
+    /// Backend compute: the peer-reported `compute_us` on a traced
+    /// remote hop, the local backend-call duration otherwise.
+    Compute,
+    /// Front-side inter-layer boundary transform of a streamed image.
+    Boundary,
+    /// One whole layer hop of a streamed image.
+    Layer(u16),
+}
+
+impl Stage {
+    /// Pack into one atomic word: discriminant in the low byte, layer
+    /// index above it.
+    fn encode(self) -> u64 {
+        match self {
+            Stage::Request => 1,
+            Stage::Admission => 2,
+            Stage::Queue => 3,
+            Stage::Dispatch => 4,
+            Stage::Wire => 5,
+            Stage::Compute => 6,
+            Stage::Boundary => 7,
+            Stage::Layer(l) => 8 | ((l as u64) << 8),
+        }
+    }
+
+    fn decode(v: u64) -> Option<Stage> {
+        match v & 0xff {
+            1 => Some(Stage::Request),
+            2 => Some(Stage::Admission),
+            3 => Some(Stage::Queue),
+            4 => Some(Stage::Dispatch),
+            5 => Some(Stage::Wire),
+            6 => Some(Stage::Compute),
+            7 => Some(Stage::Boundary),
+            8 => Some(Stage::Layer((v >> 8) as u16)),
+            _ => None,
+        }
+    }
+
+    /// Stable stage label (Chrome trace event names and the Prometheus
+    /// `stage` label share it).
+    pub fn name(self) -> String {
+        match self {
+            Stage::Request => "request".into(),
+            Stage::Admission => "admission".into(),
+            Stage::Queue => "queue".into(),
+            Stage::Dispatch => "dispatch".into(),
+            Stage::Wire => "wire".into(),
+            Stage::Compute => "compute".into(),
+            Stage::Boundary => "boundary".into(),
+            Stage::Layer(l) => format!("layer{l}"),
+        }
+    }
+}
+
+/// One ring slot: a per-slot seqlock (`seq` odd = mid-write) over plain
+/// atomic fields, so writers never block and a reader can detect and
+/// skip a slot it raced with. No unsafe, no allocation.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    stage: AtomicU64,
+    worker: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+/// Bounded lock-free span ring: overwrite-oldest, fixed capacity,
+/// shared by every recording thread via `Arc`.
+///
+/// The record path is a `fetch_add` plus six relaxed/release stores —
+/// no locks, no allocation beyond the pre-sized ring. Worker names are
+/// interned once per pool construction ([`SpanSink::worker_tag`]), so
+/// per-span worker attribution is a plain integer store.
+pub struct SpanSink {
+    /// All span timestamps are µs offsets from this instant.
+    epoch: Instant,
+    /// Monotone ticket counter; slot = ticket % capacity.
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+    /// Interned worker names; a span's `worker` word is 1 + index
+    /// (0 = no worker).
+    workers: Mutex<Vec<String>>,
+}
+
+impl std::fmt::Debug for SpanSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanSink")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+impl Default for SpanSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpanSink {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_SPAN_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        SpanSink {
+            epoch: Instant::now(),
+            cursor: AtomicU64::new(0),
+            slots: (0..capacity.max(1)).map(|_| Slot::default()).collect(),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// µs since the sink's epoch (the timebase of every span).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// An `Instant` as a µs offset on the sink's timebase (zero for
+    /// instants predating the sink).
+    pub fn offset_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Intern `name`, returning its span tag. Called once per worker at
+    /// pool construction (or once per batch), never per span — the hot
+    /// path stores the returned integer only.
+    pub fn worker_tag(&self, name: &str) -> u64 {
+        let mut w = self.workers.lock().unwrap();
+        if let Some(i) = w.iter().position(|n| n == name) {
+            return (i + 1) as u64;
+        }
+        w.push(name.to_string());
+        w.len() as u64
+    }
+
+    /// Record one span. `trace == 0` means tracing is off for this
+    /// request and the call is a no-op; `worker == 0` means no worker
+    /// attribution.
+    pub fn record(&self, trace: u64, stage: Stage, worker: u64, start_us: u64, dur_us: u64) {
+        if trace == 0 {
+            return;
+        }
+        let ticket = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        // Odd seq marks the slot mid-write; the final even store
+        // publishes it. A reader that observes either an odd value or
+        // a seq change across its field reads skips the slot. (Two
+        // writers a full ring-wrap apart could interleave on one slot;
+        // with a 65k ring that window is vanishingly small and costs
+        // one garbled debug span, never memory safety.)
+        slot.seq.store(2 * ticket + 1, Ordering::Release);
+        slot.trace.store(trace, Ordering::Relaxed);
+        slot.stage.store(stage.encode(), Ordering::Relaxed);
+        slot.worker.store(worker, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    /// Record a span from two instants on the sink's timebase.
+    pub fn span(&self, trace: u64, stage: Stage, worker: u64, start: Instant, end: Instant) {
+        let s = self.offset_us(start);
+        let e = self.offset_us(end);
+        self.record(trace, stage, worker, s, e.saturating_sub(s));
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Consistent copy of every published span, ordered by
+    /// (trace, start). Slots mid-write or overwritten during the read
+    /// are skipped, never torn.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let names = self.workers.lock().unwrap().clone();
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 0 || seq % 2 == 1 {
+                continue;
+            }
+            let trace = slot.trace.load(Ordering::Relaxed);
+            let stage = slot.stage.load(Ordering::Relaxed);
+            let worker = slot.worker.load(Ordering::Relaxed);
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let dur_us = slot.dur_us.load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != seq {
+                continue; // overwritten mid-read
+            }
+            let Some(stage) = Stage::decode(stage) else {
+                continue;
+            };
+            let worker = (worker > 0)
+                .then(|| names.get(worker as usize - 1).cloned())
+                .flatten();
+            out.push(SpanRecord {
+                trace,
+                stage,
+                worker,
+                start_us,
+                dur_us,
+            });
+        }
+        out.sort_by(|a, b| {
+            (a.trace, a.start_us, a.dur_us, a.stage).cmp(&(b.trace, b.start_us, b.dur_us, b.stage))
+        });
+        out
+    }
+
+    /// Chrome trace-event JSON (the array form): one complete (`"X"`)
+    /// event per span, `tid` = trace id so each request renders as its
+    /// own nested track in `chrome://tracing` / Perfetto.
+    pub fn to_chrome_trace(&self) -> String {
+        let events: Vec<Json> = self
+            .snapshot()
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name", Json::str(r.stage.name())),
+                    ("ph", Json::str("X")),
+                    ("pid", Json::uint(1)),
+                    ("tid", Json::uint(r.trace)),
+                    ("ts", Json::uint(r.start_us)),
+                    ("dur", Json::uint(r.dur_us)),
+                ];
+                if let Some(w) = &r.worker {
+                    fields.push(("args", Json::obj(vec![("worker", Json::str(w.clone()))])));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::Arr(events).to_json()
+    }
+}
+
+/// One decoded span from a [`SpanSink`] snapshot.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace: u64,
+    pub stage: Stage,
+    pub worker: Option<String>,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Summary of a validated trace snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCheck {
+    /// Number of distinct request roots.
+    pub roots: usize,
+    /// The worst per-request child coverage fraction observed.
+    pub worst_coverage: f64,
+}
+
+/// Validate the span-tree contract over a snapshot: every trace id has
+/// exactly one [`Stage::Request`] root, and the union of its child
+/// spans (clipped to the root window) covers ≥ 99% of the root's wall
+/// time (with [`COVERAGE_SLACK_US`] absolute slack for µs rounding).
+pub fn validate_coverage(records: &[SpanRecord]) -> Result<TraceCheck, String> {
+    use std::collections::BTreeMap;
+    let mut by_trace: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    for r in records {
+        by_trace.entry(r.trace).or_default().push(r);
+    }
+    let mut roots = 0usize;
+    let mut worst = 1.0f64;
+    for (trace, spans) in &by_trace {
+        let n_roots = spans.iter().filter(|s| s.stage == Stage::Request).count();
+        if n_roots != 1 {
+            return Err(format!("trace {trace} has {n_roots} request roots, want 1"));
+        }
+        roots += 1;
+        let root = spans.iter().find(|s| s.stage == Stage::Request).unwrap();
+        let (lo, hi) = (root.start_us, root.start_us + root.dur_us);
+        let mut ivs: Vec<(u64, u64)> = spans
+            .iter()
+            .filter(|s| s.stage != Stage::Request)
+            .map(|s| (s.start_us.max(lo), (s.start_us + s.dur_us).min(hi)))
+            .filter(|(a, b)| b > a)
+            .collect();
+        ivs.sort_unstable();
+        let mut covered = 0u64;
+        let mut cur: Option<(u64, u64)> = None;
+        for (a, b) in ivs {
+            match &mut cur {
+                Some((_, ce)) if a <= *ce => *ce = (*ce).max(b),
+                _ => {
+                    if let Some((cs, ce)) = cur {
+                        covered += ce - cs;
+                    }
+                    cur = Some((a, b));
+                }
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            covered += ce - cs;
+        }
+        let total = hi - lo;
+        let frac = if total == 0 {
+            1.0
+        } else {
+            covered as f64 / total as f64
+        };
+        if frac < 0.99 && total.saturating_sub(covered) > COVERAGE_SLACK_US {
+            return Err(format!(
+                "trace {trace}: child spans cover {covered} of {total}us ({:.2}%) of the request root",
+                frac * 100.0
+            ));
+        }
+        worst = worst.min(frac);
+    }
+    Ok(TraceCheck {
+        roots,
+        worst_coverage: worst,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot_round_trip() {
+        let sink = SpanSink::with_capacity(16);
+        let w = sink.worker_tag("sim-ipcore-i32");
+        sink.record(7, Stage::Request, 0, 100, 50);
+        sink.record(7, Stage::Dispatch, w, 110, 30);
+        let spans = sink.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].trace, 7);
+        assert_eq!(spans[0].stage, Stage::Request);
+        assert_eq!(spans[0].worker, None);
+        assert_eq!(spans[1].stage, Stage::Dispatch);
+        assert_eq!(spans[1].worker.as_deref(), Some("sim-ipcore-i32"));
+        assert_eq!((spans[1].start_us, spans[1].dur_us), (110, 30));
+    }
+
+    #[test]
+    fn trace_zero_is_a_no_op() {
+        let sink = SpanSink::with_capacity(8);
+        sink.record(0, Stage::Queue, 0, 1, 1);
+        assert_eq!(sink.recorded(), 0);
+        assert!(sink.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let sink = SpanSink::with_capacity(4);
+        for i in 1..=10u64 {
+            sink.record(i, Stage::Queue, 0, i, 1);
+        }
+        assert_eq!(sink.recorded(), 10);
+        assert_eq!(sink.dropped(), 6);
+        let spans = sink.snapshot();
+        assert_eq!(spans.len(), 4);
+        // Only the newest four survive.
+        let ids: Vec<u64> = spans.iter().map(|s| s.trace).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn worker_tags_intern_stably() {
+        let sink = SpanSink::new();
+        let a = sink.worker_tag("a");
+        let b = sink.worker_tag("b");
+        assert_ne!(a, b);
+        assert_eq!(sink.worker_tag("a"), a);
+    }
+
+    #[test]
+    fn layer_stages_encode_their_index() {
+        for l in [0u16, 1, 15, 300] {
+            let enc = Stage::Layer(l).encode();
+            assert_eq!(Stage::decode(enc), Some(Stage::Layer(l)));
+        }
+        assert_eq!(Stage::decode(Stage::Wire.encode()), Some(Stage::Wire));
+        assert_eq!(Stage::decode(0), None);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_complete_events() {
+        let sink = SpanSink::with_capacity(8);
+        let w = sink.worker_tag("golden-cpu");
+        sink.record(1, Stage::Request, 0, 0, 100);
+        sink.record(1, Stage::Compute, w, 10, 80);
+        let parsed = Json::parse(&sink.to_chrome_trace()).expect("chrome trace parses");
+        let events = parsed.as_arr().expect("array form");
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get(&["ph"]).unwrap().as_str(), Some("X"));
+            assert!(e.get(&["ts"]).is_some() && e.get(&["dur"]).is_some());
+            assert_eq!(e.get(&["tid"]).unwrap().as_u64(), Some(1));
+        }
+        assert_eq!(
+            events[1].get(&["args", "worker"]).unwrap().as_str(),
+            Some("golden-cpu")
+        );
+    }
+
+    #[test]
+    fn validate_accepts_a_tiled_tree_and_rejects_gaps() {
+        // Tiled: admission [0,10) + queue [10,40) + dispatch [40,100).
+        let ok = vec![
+            SpanRecord {
+                trace: 1,
+                stage: Stage::Request,
+                worker: None,
+                start_us: 0,
+                dur_us: 100_000,
+            },
+            SpanRecord {
+                trace: 1,
+                stage: Stage::Admission,
+                worker: None,
+                start_us: 0,
+                dur_us: 10_000,
+            },
+            SpanRecord {
+                trace: 1,
+                stage: Stage::Queue,
+                worker: None,
+                start_us: 10_000,
+                dur_us: 30_000,
+            },
+            SpanRecord {
+                trace: 1,
+                stage: Stage::Dispatch,
+                worker: None,
+                start_us: 40_000,
+                dur_us: 60_000,
+            },
+        ];
+        let check = validate_coverage(&ok).expect("tiled tree validates");
+        assert_eq!(check.roots, 1);
+        assert!(check.worst_coverage >= 0.99);
+
+        // A 30% hole in the middle must fail.
+        let mut gappy = ok.clone();
+        gappy[2].dur_us = 1_000;
+        let err = validate_coverage(&gappy).unwrap_err();
+        assert!(err.contains("cover"), "unexpected error: {err}");
+
+        // A missing root must fail.
+        let rootless = vec![ok[1].clone()];
+        assert!(validate_coverage(&rootless).is_err());
+    }
+
+    #[test]
+    fn validate_tolerates_microsecond_rounding_slack() {
+        // 99us uncovered out of 5ms is < the absolute slack even though
+        // the fraction bar alone would pass anyway; shrink the root so
+        // the fraction fails but slack saves it.
+        let spans = vec![
+            SpanRecord {
+                trace: 3,
+                stage: Stage::Request,
+                worker: None,
+                start_us: 0,
+                dur_us: 1_000,
+            },
+            SpanRecord {
+                trace: 3,
+                stage: Stage::Dispatch,
+                worker: None,
+                start_us: 60,
+                dur_us: 940,
+            },
+        ];
+        // 60us gap of 1000us = 94% coverage, but 60 <= 100us slack.
+        let check = validate_coverage(&spans).expect("slack absorbs µs gaps");
+        assert_eq!(check.roots, 1);
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_a_published_slot() {
+        use std::sync::Arc;
+        let sink = Arc::new(SpanSink::with_capacity(64));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let sink = Arc::clone(&sink);
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        // start == dur == trace so a torn slot is
+                        // detectable in the snapshot below.
+                        let v = t * 10_000 + i + 1;
+                        sink.record(v, Stage::Queue, 0, v, v);
+                    }
+                });
+            }
+        });
+        assert_eq!(sink.recorded(), 4000);
+        for span in sink.snapshot() {
+            assert_eq!(span.start_us, span.trace);
+            assert_eq!(span.dur_us, span.trace);
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Live metrics scrape endpoint: a tiny read-only TCP server that
+//! answers any HTTP GET with a Prometheus text-exposition snapshot of
+//! the serving metrics — counters, stage-keyed latency histogram
+//! buckets and per-worker gauges — scrapeable mid-run.
+//!
+//! The endpoint binds immediately ([`ScrapeServer::bind`], so port 0
+//! resolves before the run starts and the address can be printed) and
+//! the metric sources attach later ([`ScrapeServer::attach`]), once the
+//! serving pool exists; scrapes before attach answer an empty (but
+//! valid) exposition. The server never writes anything to the serving
+//! state — it is read-only by construction.
+//!
+//! **Scrape-format stability:** the `repro_*` metric names and the
+//! `stage`/`worker` label keys rendered here are a stable interface —
+//! dashboards may depend on them. New series may be added; existing
+//! names and label keys only change with a wire-protocol-style
+//! deprecation note in the module doc.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::metrics::{LatencyHistogram, Metrics};
+
+/// Anything that can render itself as a Prometheus text exposition.
+/// The serving pool implements this (`CorePool::scrape_source`).
+pub trait ScrapeSource: Send + Sync {
+    fn render_prometheus(&self) -> String;
+}
+
+/// The read-only metrics endpoint. Bind early, attach late, scrape any
+/// time; `stop()` joins the accept thread.
+pub struct ScrapeServer {
+    addr: SocketAddr,
+    listener: Arc<TcpListener>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shutdown: Arc<AtomicBool>,
+    source: Arc<Mutex<Option<Arc<dyn ScrapeSource>>>>,
+    scrapes: Arc<AtomicU64>,
+}
+
+impl std::fmt::Debug for ScrapeServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScrapeServer")
+            .field("addr", &self.addr)
+            .field("scrapes", &self.scrapes())
+            .finish()
+    }
+}
+
+impl ScrapeServer {
+    /// Bind `addr` (port 0 for ephemeral) and start answering scrapes
+    /// immediately — with an empty exposition until [`Self::attach`].
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = Arc::new(TcpListener::bind(addr)?);
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let source: Arc<Mutex<Option<Arc<dyn ScrapeSource>>>> = Arc::new(Mutex::new(None));
+        let scrapes = Arc::new(AtomicU64::new(0));
+        let l = Arc::clone(&listener);
+        let sd = Arc::clone(&shutdown);
+        let src = Arc::clone(&source);
+        let hits = Arc::clone(&scrapes);
+        let thread = std::thread::Builder::new()
+            .name("repro-scrape".into())
+            .spawn(move || loop {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        // The stop() wake-up connection lands here.
+                        if sd.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let body = match src.lock().unwrap().clone() {
+                            Some(s) => s.render_prometheus(),
+                            // Bound before the run attached its pool:
+                            // a valid, empty exposition (not a 404) so
+                            // scrapers can poll from t=0.
+                            None => "# repro: no metric sources attached yet\n".to_string(),
+                        };
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        serve_one(stream, &body);
+                    }
+                    // Only reachable after stop() flipped the listener
+                    // non-blocking.
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if sd.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => {
+                        if sd.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            })?;
+        Ok(ScrapeServer {
+            addr: local,
+            listener,
+            thread: Mutex::new(Some(thread)),
+            shutdown,
+            source,
+            scrapes,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Scrapes answered so far (smoke runs assert the endpoint was
+    /// actually hit mid-run).
+    pub fn scrapes(&self) -> u64 {
+        self.scrapes.load(Ordering::Relaxed)
+    }
+
+    /// Attach (or replace) the metric source. Called by the serving
+    /// front once its pool exists; scrapes pick the new source up on
+    /// their next request.
+    pub fn attach(&self, source: Arc<dyn ScrapeSource>) {
+        *self.source.lock().unwrap() = Some(source);
+    }
+
+    /// Stop accepting and join the accept thread (same wake pattern as
+    /// the wire `TcpServer`: flip non-blocking, nudge with a throwaway
+    /// connection). Idempotent.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.listener.set_nonblocking(true).ok();
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Answer one HTTP connection: drain the request head (the snapshot is
+/// served whatever the path — enough HTTP for Prometheus and curl),
+/// write one `200` with the body, close.
+fn serve_one(mut stream: TcpStream, body: &str) {
+    stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(2))).ok();
+    let clone = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(clone);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line.trim().is_empty() => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+    let _ = write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// Append the counter block for one [`Metrics`] in exposition form.
+pub fn render_counters(out: &mut String, m: &Metrics) {
+    use std::fmt::Write as _;
+    let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let _ = writeln!(out, "# TYPE repro_requests_total counter");
+    let _ = writeln!(out, "repro_requests_total {}", c(&m.requests));
+    let _ = writeln!(out, "repro_completed_total {}", c(&m.completed));
+    let _ = writeln!(out, "repro_failed_total {}", c(&m.failed));
+    let _ = writeln!(out, "repro_retried_total {}", c(&m.retried));
+    let _ = writeln!(out, "repro_shed_total {}", c(&m.shed));
+    let _ = writeln!(out, "repro_psums_total {}", c(&m.psums));
+    let _ = writeln!(out, "repro_sim_cycles_total {}", c(&m.sim_cycles));
+    let _ = writeln!(out, "repro_weight_hits_total {}", c(&m.weight_hits));
+    let _ = writeln!(out, "repro_weight_misses_total {}", c(&m.weight_misses));
+    let _ = writeln!(
+        out,
+        "repro_weight_bytes_saved_total {}",
+        c(&m.weight_bytes_saved)
+    );
+    let _ = writeln!(
+        out,
+        "repro_wire_weight_bytes_total {}",
+        c(&m.wire_weight_bytes)
+    );
+}
+
+/// Append one stage histogram as a Prometheus histogram series
+/// (`repro_stage_latency_us_bucket{stage=...,le=...}` cumulative
+/// buckets plus `_sum` and `_count`). The top log2 bucket is
+/// open-ended, so it renders as the `+Inf` bucket.
+pub fn render_stage_histogram(out: &mut String, stage: &str, h: &LatencyHistogram) {
+    use std::fmt::Write as _;
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, n) in counts.iter().enumerate() {
+        cum += n;
+        let le = if i + 1 == counts.len() {
+            "+Inf".to_string()
+        } else {
+            (1u64 << (i + 1)).to_string()
+        };
+        let _ = writeln!(
+            out,
+            "repro_stage_latency_us_bucket{{stage=\"{stage}\",le=\"{le}\"}} {cum}"
+        );
+    }
+    let _ = writeln!(
+        out,
+        "repro_stage_latency_us_sum{{stage=\"{stage}\"}} {}",
+        h.sum_us()
+    );
+    let _ = writeln!(
+        out,
+        "repro_stage_latency_us_count{{stage=\"{stage}\"}} {}",
+        h.count()
+    );
+}
+
+/// Append the gauge block for one worker: instantaneous queued load,
+/// health, and the client-side weight-residency belief for its peer.
+pub fn render_worker_gauges(
+    out: &mut String,
+    name: &str,
+    load: i64,
+    healthy: bool,
+    known_weight_blobs: usize,
+) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "repro_worker_load{{worker=\"{name}\"}} {load}");
+    let _ = writeln!(
+        out,
+        "repro_worker_healthy{{worker=\"{name}\"}} {}",
+        u8::from(healthy)
+    );
+    let _ = writeln!(
+        out,
+        "repro_worker_known_weight_blobs{{worker=\"{name}\"}} {known_weight_blobs}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(&'static str);
+    impl ScrapeSource for Fixed {
+        fn render_prometheus(&self) -> String {
+            self.0.to_string()
+        }
+    }
+
+    fn http_get(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        use std::io::Read as _;
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_attached_source_and_counts_scrapes() {
+        let server = ScrapeServer::bind("127.0.0.1:0").unwrap();
+        // Pre-attach: valid empty exposition, not an error.
+        let early = http_get(server.addr());
+        assert!(early.starts_with("HTTP/1.1 200 OK"), "{early}");
+        assert!(early.contains("no metric sources attached"));
+        server.attach(Arc::new(Fixed("repro_requests_total 7\n")));
+        let body = http_get(server.addr());
+        assert!(body.contains("repro_requests_total 7"), "{body}");
+        assert!(body.contains("text/plain"));
+        assert_eq!(server.scrapes(), 2);
+        server.stop();
+    }
+
+    #[test]
+    fn stage_histogram_renders_cumulative_buckets() {
+        let h = LatencyHistogram::new();
+        h.record_us(10); // bucket [8,16)
+        h.record_us(10);
+        h.record_us(100_000); // deep bucket
+        let mut out = String::new();
+        render_stage_histogram(&mut out, "queue", &h);
+        assert!(
+            out.contains("repro_stage_latency_us_bucket{stage=\"queue\",le=\"16\"} 2"),
+            "{out}"
+        );
+        assert!(
+            out.contains("repro_stage_latency_us_bucket{stage=\"queue\",le=\"+Inf\"} 3"),
+            "{out}"
+        );
+        assert!(out.contains("repro_stage_latency_us_count{stage=\"queue\"} 3"));
+        assert!(out.contains(&format!(
+            "repro_stage_latency_us_sum{{stage=\"queue\"}} {}",
+            h.sum_us()
+        )));
+    }
+
+    #[test]
+    fn counter_and_gauge_blocks_render() {
+        let m = Metrics::new();
+        m.record_completion(10, 10, Duration::from_micros(5), false);
+        m.record_shed();
+        let mut out = String::new();
+        render_counters(&mut out, &m);
+        assert!(out.contains("repro_completed_total 1"), "{out}");
+        assert!(out.contains("repro_shed_total 1"));
+        let mut g = String::new();
+        render_worker_gauges(&mut g, "remote@1.2.3.4:5", -3, true, 9);
+        assert!(g.contains("repro_worker_load{worker=\"remote@1.2.3.4:5\"} -3"));
+        assert!(g.contains("repro_worker_healthy{worker=\"remote@1.2.3.4:5\"} 1"));
+        assert!(g.contains("repro_worker_known_weight_blobs{worker=\"remote@1.2.3.4:5\"} 9"));
+    }
+
+    #[test]
+    fn stop_is_idempotent() {
+        let server = ScrapeServer::bind("127.0.0.1:0").unwrap();
+        server.stop();
+        server.stop();
+    }
+}

@@ -178,6 +178,7 @@ fn prop_standard_jobs_agree_across_all_backends() {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} spec {spec:?}"));
         // sim + golden + im2col×2 + remote×2 (v4 + v2 fallback) at
@@ -212,6 +213,7 @@ fn prop_depthwise_jobs_agree_across_all_backends() {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed} c={c} h={h} w={w} relu={}", spec.relu));
         assert!(ran >= 6, "seed {seed}: only {ran} backends ran depthwise");
@@ -246,6 +248,7 @@ fn prop_pointwise_as_3x3_jobs_agree_across_all_backends_and_reference() {
             weights: &w3,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let ran = assert_parity(&mut fleet.backends, &payload, AccumMode::I32, &want, &format!("seed {seed}: vs direct 1x1"));
         assert!(ran >= 6, "seed {seed}: only {ran} backends ran pointwise");
@@ -279,6 +282,7 @@ fn prop_wrap8_jobs_route_only_to_wrap8_silicon_and_match_reference() {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
 
         for be in fleet.backends.iter_mut() {
@@ -335,6 +339,7 @@ fn xla_backend_agrees_when_available() {
             weights: &wts,
             bias: &bias,
             weights_resident: false,
+            trace_id: 0,
         };
         let want = golden::conv3x3_i32(&img, &wts, &bias, false);
         let from_xla = xla.run(&payload).unwrap();
@@ -478,6 +483,98 @@ fn streaming_inference_is_bit_exact_across_a_mixed_protocol_fleet() {
 }
 
 #[test]
+fn traced_traffic_stays_bit_identical_across_a_mixed_fleet() {
+    // Telemetry must be observability only. With tracing enabled end to
+    // end, every output stays bit-identical to the golden reference;
+    // the v4 peer answers traced requests with its server-side timing
+    // split, while the v2-pinned peer — which negotiated no trace flag
+    // and (per the wire tests) never receives a trace field — provably
+    // cannot serve timing back.
+    use repro::coordinator::Server;
+    use repro::registry::ModelRegistry;
+    use repro::telemetry::{validate_coverage, SpanSink};
+    use std::sync::Arc;
+
+    let v4 = TcpServer::start("127.0.0.1:0", CoordinatorConfig::default().with_cores(2))
+        .expect("v4 peer");
+    let v2 = TcpServer::start(
+        "127.0.0.1:0",
+        CoordinatorConfig::default().with_cores(2).with_wire_v2_only(),
+    )
+    .expect("v2-pinned peer");
+
+    // Direct remote legs: traced payloads, bit-exact over both framings.
+    let mut remote_v4 = RemoteBackend::connect(&v4.addr.to_string()).expect("v4 handshake");
+    let mut remote_v2 = RemoteBackend::connect(&v2.addr.to_string()).expect("v2 handshake");
+    assert!(remote_v4.peer_trace(), "v4 peer negotiates trace propagation");
+    assert!(!remote_v2.peer_trace(), "v2-pinned peer must not negotiate tracing");
+    let mut reference = GoldenBackend::new();
+    for seed in 400..420u64 {
+        let mut rng = Prng::new(seed);
+        let spec = arb_spec(&mut rng);
+        let (img, wts, bias) = arb_case(&mut rng, &spec);
+        let payload = JobPayload {
+            kind: JobKind::Standard,
+            spec: &spec,
+            img: &img,
+            weights: &wts,
+            bias: &bias,
+            weights_resident: false,
+            trace_id: seed,
+        };
+        let want = reference.run(&payload).expect("golden reference").output;
+        let got4 = remote_v4.run(&payload).expect("traced v4 remote");
+        let got2 = remote_v2.run(&payload).expect("traced v2 remote");
+        assert_eq!(got4.output.data(), want.data(), "seed {seed}: traced v4 diverges");
+        assert_eq!(got2.output.data(), want.data(), "seed {seed}: traced v2 diverges");
+        assert!(
+            got4.wire.is_some(),
+            "seed {seed}: traced v4 reply must decompose the round trip"
+        );
+        assert!(
+            got2.wire.is_none(),
+            "seed {seed}: a v2 peer never saw the id, so it cannot time it"
+        );
+    }
+    drop(remote_v4);
+    drop(remote_v2);
+
+    // Whole-fleet leg: a traced streaming front over both peers. Every
+    // image must stay bit-identical to the manifest golden while the
+    // sink collects one complete worker-tagged span tree per image.
+    let sink = Arc::new(SpanSink::new());
+    let cfg = CoordinatorConfig {
+        n_cores: 0,
+        ..CoordinatorConfig::default()
+            .with_remote_peers(vec![v4.addr.to_string(), v2.addr.to_string()])
+            .with_stream_window(3)
+            .with_trace(Arc::clone(&sink))
+    };
+    let mut front = Server::try_new(cfg).expect("front dials both peers");
+    let registry = ModelRegistry::builtin(2, 23);
+    let (report, outcome) = front.run_stream_trace(&registry, 6, 23, &mut |_| {});
+    assert_eq!(report.n_errors, 0, "{report:?}");
+    assert!(
+        outcome.all_match(),
+        "tracing changed numerics: {:?}",
+        outcome.images
+    );
+    let spans = sink.snapshot();
+    let check = validate_coverage(&spans).expect("complete traced trees over the mixed fleet");
+    assert_eq!(check.roots, 6, "one Request root per streamed image");
+    assert!(
+        spans.iter().any(|s| s
+            .worker
+            .as_deref()
+            .map_or(false, |w| w.starts_with("remote@"))),
+        "dispatch hops must be worker-tagged with the serving peer"
+    );
+    front.shutdown();
+    v4.stop();
+    v2.stop();
+}
+
+#[test]
 fn capability_masks_are_honest() {
     // A backend that claims a kind must run it; one that declines must
     // refuse at run() too (so routing bugs fail loudly, not wrongly).
@@ -492,6 +589,7 @@ fn capability_masks_are_honest() {
         weights: &dw_wts,
         bias: &bias,
         weights_resident: false,
+        trace_id: 0,
     };
 
     for mut capable in [

@@ -6,7 +6,9 @@
 //! invariance of the BRAM layout; im2col lowering / weight-flattening
 //! layout invariants; blocked-parallel GEMM ≡ naive GEMM; batcher
 //! partition/no-mixing; quant monotonicity + range; pipeline timing
-//! bounds; DMA cost monotonicity.
+//! bounds; DMA cost monotonicity; latency-histogram quantile
+//! monotonicity, merge ≡ combined recording, and count/sum agreement
+//! under concurrent writers.
 
 use repro::coordinator::batcher::Batcher;
 use repro::coordinator::config::BatchConfig;
@@ -286,6 +288,88 @@ fn prop_dma_cost_monotone_and_superadditive_free() {
             cfg.cycles_for(a + b) <= cfg.cycles_for(a) + cfg.cycles_for(b),
             "seed {seed}"
         );
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone_in_q() {
+    use repro::coordinator::metrics::LatencyHistogram;
+    for seed in 800..830u64 {
+        let mut rng = Prng::new(seed);
+        let h = LatencyHistogram::new();
+        let n = 1 + rng.below(400);
+        for _ in 0..n {
+            h.record_us(rng.below(2_000_000));
+        }
+        let mut last = 0u64;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile_us(q);
+            assert!(v >= last, "seed {seed} q={q}: quantile fell {v} < {last}");
+            last = v;
+        }
+        // The interpolated tail orders correctly even inside one bucket.
+        assert!(h.quantile_us(0.999) >= h.quantile_us(0.99), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_histogram_merge_equals_combined_recording() {
+    use repro::coordinator::metrics::LatencyHistogram;
+    for seed in 840..870u64 {
+        let mut rng = Prng::new(seed);
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let combined = LatencyHistogram::new();
+        for _ in 0..1 + rng.below(300) {
+            let v = rng.below(5_000_000);
+            if rng.f64() < 0.5 {
+                a.record_us(v);
+            } else {
+                b.record_us(v);
+            }
+            combined.record_us(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), combined.bucket_counts(), "seed {seed}");
+        assert_eq!(a.sum_us(), combined.sum_us(), "seed {seed}");
+        assert_eq!(a.count(), combined.count(), "seed {seed}");
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(
+                a.quantile_us(q),
+                combined.quantile_us(q),
+                "seed {seed} q={q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_concurrent_writers_agree_on_count_and_sum() {
+    use repro::coordinator::metrics::LatencyHistogram;
+    use std::sync::Arc;
+    for seed in 880..884u64 {
+        let h = Arc::new(LatencyHistogram::new());
+        let threads = 4u64;
+        let per = 500u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Prng::new(seed ^ (t << 32));
+                    let mut sum = 0u64;
+                    for _ in 0..per {
+                        let v = rng.below(1_000_000);
+                        sum += v;
+                        h.record_us(v);
+                    }
+                    sum
+                })
+            })
+            .collect();
+        let want_sum: u64 = handles.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(h.count(), threads * per, "seed {seed}: lost records");
+        assert_eq!(h.sum_us(), want_sum, "seed {seed}: torn sum");
     }
 }
 
